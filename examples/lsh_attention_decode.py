@@ -1,0 +1,53 @@
+"""DET-LSH-accelerated decode attention demo (paper Sec. I: LSH for LLM
+inference acceleration): index a long KV cache's keys with DE-Forests,
+retrieve top positions per decode step, compare against exact attention.
+
+  PYTHONPATH=src python examples/lsh_attention_decode.py
+"""
+
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.core import det_attention as DA
+from repro.models import layers as L
+
+
+def main():
+    rng = np.random.default_rng(0)
+    b, S, hk, g, dh = 1, 4096, 4, 4, 64
+    h = hk * g
+    print(f"cache: {S} positions x {hk} kv heads x {dh} dims")
+
+    k_cache = jnp.asarray(rng.standard_normal((b, S, hk, dh)).astype(
+        np.float32) * 0.3)
+    v_cache = jnp.asarray(rng.standard_normal((b, S, hk, dh)).astype(
+        np.float32))
+    # a query attending strongly to a planted position
+    q = np.repeat(np.asarray(k_cache[:, 777])[:, :, None, :], g, 2) * 16
+    q = jnp.asarray(q.reshape(b, 1, h, dh))
+
+    t0 = time.perf_counter()
+    index = DA.build_kv_index(k_cache, jax.random.key(0))
+    jax.block_until_ready(index.point_ids)
+    print(f"KV index built in {time.perf_counter() - t0:.2f}s")
+
+    out_full = L.decode_gqa_attention(q, k_cache, v_cache, S)
+    out_det = DA.det_decode_attention(q, k_cache, v_cache, index, S,
+                                      m_leaves=16, window=64, sinks=4)
+    a = np.asarray(out_det).reshape(-1)
+    f = np.asarray(out_full).reshape(-1)
+    cos = float(a @ f / (np.linalg.norm(a) * np.linalg.norm(f) + 1e-9))
+    scanned = 16 * index.leaf_size + 64 + 4
+    print(f"positions scanned per head: {scanned}/{S} "
+          f"({100 * scanned / S:.1f}%)")
+    print(f"cosine(det_attention, exact) = {cos:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Quickstart: build a DET-LSH index, answer c^2-k-ANN queries, check the
+theoretical guarantee.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.core import DETLSH, derive_params
+
+
+def main():
+    rng = np.random.default_rng(0)
+    n, d, nq, k = 30000, 64, 32, 10
+
+    # clustered synthetic vectors (image-descriptor-like)
+    centers = rng.standard_normal((64, d)).astype(np.float32)
+    data = centers[rng.integers(0, 64, n)] \
+        + 0.2 * rng.standard_normal((n, d)).astype(np.float32)
+    queries = data[rng.choice(n, nq, replace=False)] \
+        + 0.05 * rng.standard_normal((nq, d)).astype(np.float32)
+
+    # paper parameters: K=4, L=16 (PDET recommendation, Sec. VI-C3), c=1.5
+    params = derive_params(K=4, c=1.5, L=16, beta_override=0.1)
+    print(f"params: eps={params.epsilon:.3f} beta={params.beta:.3f} "
+          f"success_prob>={params.success_probability:.3f}")
+
+    index = DETLSH.build(jnp.asarray(data), jax.random.key(0), params)
+    print(f"index: {index.index_size_bytes() / 1e6:.1f} MB, "
+          f"L={params.L} trees, {index.forest.n_leaves} leaves each")
+
+    res = index.query(jnp.asarray(queries), k=k, M=12)
+
+    # ground truth + quality
+    d2 = ((queries[:, None, :] - data[None, :, :]) ** 2).sum(-1)
+    gt = np.argsort(d2, 1)[:, :k]
+    gt_d = np.sqrt(np.sort(d2, 1)[:, :k])
+    ids = np.asarray(res.ids)
+    recall = np.mean([len(set(ids[i]) & set(gt[i])) / k for i in range(nq)])
+    ratio = float(np.mean(np.asarray(res.dists) / np.maximum(gt_d, 1e-9)))
+    ok = np.all(np.asarray(res.dists) <= params.c ** 2 * gt_d + 1e-4, axis=1)
+    print(f"recall@{k}: {recall:.3f}   overall ratio: {ratio:.4f}")
+    print(f"c^2 guarantee held on {ok.mean() * 100:.1f}% of queries "
+          f"(bound: >={params.success_probability * 100:.1f}%)")
+    assert ok.mean() >= params.success_probability
+
+
+if __name__ == "__main__":
+    main()

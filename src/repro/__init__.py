@@ -1,0 +1,11 @@
+"""repro: PDET-LSH on TPU pods — JAX + Pallas implementation.
+
+Pillars:
+  * ``repro.core``      — the paper's contribution (DET-LSH / PDET-LSH).
+  * ``repro.kernels``   — Pallas TPU kernels for the compute hot spots.
+  * ``repro.models``    — the assigned LM architecture zoo.
+  * ``repro.train`` / ``repro.serving`` / ``repro.data`` — substrate.
+  * ``repro.launch``    — mesh construction, multi-pod dry-run, drivers.
+"""
+
+__version__ = "1.0.0"

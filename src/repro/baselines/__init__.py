@@ -1,0 +1,22 @@
+"""Baselines the paper compares against (§VI): LSH-family and non-LSH.
+
+Common API: ``build(data, key, **kw) -> index``; ``index.query(q, k) ->
+(ids, dists)`` plus ``index.size_bytes()``.  JAX implementations except HNSW
+(graph construction is inherently pointer-based; NumPy).
+
+  brute_force — exact oracle
+  e2lsh       — boundary-constraint (BC) multi-table bucket LSH [19]
+  c2lsh       — collision-counting (C2) with virtual rehashing [22]-like
+  pmlsh       — distance-metric (DM): projected-space range filter [9]-like
+  hnsw        — graph-based [44] (small-scale NumPy)
+  ivfpq       — quantization-based (IMI/OPQ-family) [45]: IVF + PQ
+"""
+
+from repro.baselines.brute_force import BruteForce
+from repro.baselines.e2lsh import E2LSH
+from repro.baselines.c2lsh import C2LSH
+from repro.baselines.pmlsh import PMLSH
+from repro.baselines.hnsw import HNSW
+from repro.baselines.ivfpq import IVFPQ
+
+__all__ = ["BruteForce", "E2LSH", "C2LSH", "PMLSH", "HNSW", "IVFPQ"]

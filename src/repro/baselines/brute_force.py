@@ -1,0 +1,28 @@
+"""Exact k-NN by full scan — the ground-truth oracle for all benchmarks."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class BruteForce:
+    data: jax.Array
+
+    @classmethod
+    def build(cls, data, key=None, **kw):
+        return cls(data=data)
+
+    def query(self, queries, k: int):
+        d2 = (jnp.sum(queries ** 2, -1, keepdims=True)
+              - 2 * queries @ self.data.T
+              + jnp.sum(self.data ** 2, -1)[None, :])
+        d2 = jnp.maximum(d2, 0.0)
+        neg, ids = jax.lax.top_k(-d2, k)
+        return ids, jnp.sqrt(-neg)
+
+    def size_bytes(self):
+        return 0

@@ -1,0 +1,93 @@
+"""E2LSH-style boundary-constraint (BC) baseline [19].
+
+L hash tables; table i hashes a point to the K-dim bucket
+floor((a.x + b) / w) per dimension.  Two points collide if they share a
+bucket in ANY table.  Query examines all points in the query's buckets and
+reranks exactly.  Bucket membership is realized TPU-style: bucket ids are
+hashed to a single int, points sorted by it, lookup via searchsorted —
+no pointer-chained hash tables.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+def _bucket_hash(codes: jax.Array) -> jax.Array:
+    """(n, K) int32 bucket coords -> (n,) int32 hashed bucket id."""
+    PRIMES = jnp.asarray([73856093, 19349663, 83492791, 32452843, 67867967,
+                          49979687, 86028121, 15485863], jnp.uint32)
+    K = codes.shape[1]
+    pr = jnp.tile(PRIMES, (K + 7) // 8)[:K]
+    h = jnp.zeros(codes.shape[0], jnp.uint32)
+    for j in range(K):
+        h = h ^ (codes[:, j].astype(jnp.uint32) * pr[j])
+    return h.astype(jnp.int32)
+
+
+@dataclasses.dataclass
+class E2LSH:
+    data: jax.Array
+    A: jax.Array            # (d, L*K)
+    B: jax.Array            # (L*K,)
+    w: float
+    K: int
+    L: int
+    order: jax.Array        # (L, n) point ids sorted by bucket hash
+    hashes: jax.Array       # (L, n) sorted bucket hashes
+    probe_cap: int
+
+    @classmethod
+    def build(cls, data, key, K: int = 8, L: int = 8, w: float = 4.0,
+              probe_cap: int = 4096):
+        n, d = data.shape
+        k1, k2 = jax.random.split(key)
+        A = jax.random.normal(k1, (d, L * K))
+        B = jax.random.uniform(k2, (L * K,)) * w
+        proj = data @ A + B
+        codes = jnp.floor(proj / w).astype(jnp.int32)       # (n, L*K)
+        order, hashes = [], []
+        for i in range(L):
+            h = _bucket_hash(codes[:, i * K:(i + 1) * K])
+            o = jnp.argsort(h)
+            order.append(o.astype(jnp.int32))
+            hashes.append(h[o])
+        return cls(data=data, A=A, B=B, w=w, K=K, L=L,
+                   order=jnp.stack(order), hashes=jnp.stack(hashes),
+                   probe_cap=probe_cap)
+
+    def query(self, queries, k: int):
+        n = self.data.shape[0]
+        out_i, out_d = [], []
+        for q in queries:
+            proj = q @ self.A + self.B
+            codes = jnp.floor(proj / self.w).astype(jnp.int32)
+            cand = []
+            for i in range(self.L):
+                h = _bucket_hash(codes[None, i * self.K:(i + 1) * self.K])[0]
+                lo = jnp.searchsorted(self.hashes[i], h, side="left")
+                idx = lo + jnp.arange(self.probe_cap // self.L)
+                ok = (idx < n) & (self.hashes[i][jnp.clip(idx, 0, n - 1)] == h)
+                ids = jnp.where(ok, self.order[i][jnp.clip(idx, 0, n - 1)], n)
+                cand.append(ids)
+            ids = jnp.concatenate(cand)
+            safe = jnp.clip(ids, 0, n - 1)
+            d = jnp.sqrt(jnp.sum((self.data[safe] - q[None, :]) ** 2, -1))
+            d = jnp.where(ids < n, d, jnp.inf)
+            # dedup by id
+            order = jnp.argsort(ids)
+            ids_s, d_s = ids[order], d[order]
+            first = jnp.concatenate([jnp.array([True]),
+                                     ids_s[1:] != ids_s[:-1]])
+            d_s = jnp.where(first, d_s, jnp.inf)
+            neg, sel = jax.lax.top_k(-d_s, k)
+            out_i.append(ids_s[sel])
+            out_d.append(-neg)
+        return jnp.stack(out_i), jnp.stack(out_d)
+
+    def size_bytes(self):
+        return int(self.order.size * 4 + self.hashes.size * 4
+                   + self.A.size * 4)

@@ -1,0 +1,119 @@
+"""HNSW baseline [44] — small-scale NumPy implementation.
+
+Graph construction is pointer-chasing by nature (no TPU-idiomatic analogue;
+the paper also treats it as a CPU competitor), so this baseline is NumPy and
+only used by the comparison benchmarks.  Standard algorithm: multi-layer
+skip-list of proximity graphs, greedy descent + beam search (efSearch).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class HNSW:
+    data: np.ndarray
+    M: int
+    ef_construction: int
+    levels: list          # per-level adjacency dict: {node: [neighbors]}
+    entry: int
+    max_level: int
+
+    @classmethod
+    def build(cls, data, key=None, M: int = 16, ef_construction: int = 64,
+              seed: int = 0):
+        data = np.asarray(data)
+        n = data.shape[0]
+        rng = np.random.default_rng(seed)
+        ml = 1.0 / math.log(M)
+        levels: list[dict] = []
+        entry, max_level = 0, -1
+        obj = cls(data=data, M=M, ef_construction=ef_construction,
+                  levels=levels, entry=entry, max_level=max_level)
+        for i in range(n):
+            lvl = int(-math.log(max(rng.random(), 1e-12)) * ml)
+            while len(levels) <= lvl:
+                levels.append({})
+            if obj.max_level < 0:
+                for l in range(lvl + 1):
+                    levels[l][i] = []
+                obj.entry, obj.max_level = i, lvl
+                continue
+            cur = obj.entry
+            for l in range(obj.max_level, lvl, -1):
+                cur = obj._greedy(data[i], cur, l)
+            for l in range(min(lvl, obj.max_level), -1, -1):
+                cands = obj._search_layer(data[i], cur, l,
+                                          obj.ef_construction)
+                nbrs = [c for _, c in sorted(cands)[:M]]
+                levels[l][i] = list(nbrs)
+                for nb in nbrs:
+                    lst = levels[l].setdefault(nb, [])
+                    lst.append(i)
+                    if len(lst) > 2 * M:        # prune by distance
+                        dd = np.linalg.norm(data[lst] - data[nb], axis=1)
+                        keep = np.argsort(dd)[:M]
+                        levels[l][nb] = [lst[j] for j in keep]
+                cur = nbrs[0] if nbrs else cur
+            if lvl > obj.max_level:
+                obj.entry, obj.max_level = i, lvl
+        return obj
+
+    def _dist(self, q, i):
+        return float(np.linalg.norm(self.data[i] - q))
+
+    def _greedy(self, q, start, level):
+        cur = start
+        cur_d = self._dist(q, cur)
+        improved = True
+        while improved:
+            improved = False
+            for nb in self.levels[level].get(cur, []):
+                d = self._dist(q, nb)
+                if d < cur_d:
+                    cur, cur_d, improved = nb, d, True
+        return cur
+
+    def _search_layer(self, q, entry, level, ef):
+        visited = {entry}
+        d0 = self._dist(q, entry)
+        cand = [(d0, entry)]              # min-heap
+        best = [(-d0, entry)]             # max-heap of size ef
+        while cand:
+            d, c = heapq.heappop(cand)
+            if d > -best[0][0]:
+                break
+            for nb in self.levels[level].get(c, []):
+                if nb in visited:
+                    continue
+                visited.add(nb)
+                dn = self._dist(q, nb)
+                if len(best) < ef or dn < -best[0][0]:
+                    heapq.heappush(cand, (dn, nb))
+                    heapq.heappush(best, (-dn, nb))
+                    if len(best) > ef:
+                        heapq.heappop(best)
+        return [(-d, c) for d, c in best]
+
+    def query(self, queries, k: int, ef_search: int = 64):
+        queries = np.asarray(queries)
+        ids = np.zeros((len(queries), k), np.int32)
+        ds = np.zeros((len(queries), k), np.float32)
+        for bi, q in enumerate(queries):
+            cur = self.entry
+            for l in range(self.max_level, 0, -1):
+                cur = self._greedy(q, cur, l)
+            found = sorted(self._search_layer(q, cur, 0,
+                                              max(ef_search, k)))[:k]
+            for j, (d, c) in enumerate(found):
+                ids[bi, j], ds[bi, j] = c, d
+        return ids, ds
+
+    def size_bytes(self):
+        return sum(4 * (len(v) + 1) for lvl in self.levels
+                   for v in lvl.values())

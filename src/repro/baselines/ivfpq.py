@@ -1,0 +1,105 @@
+"""IVF-PQ baseline (IMI/OPQ-family [45]) in JAX.
+
+k-means coarse quantizer (IVF, nlist cells) + product quantization of
+residuals (M subspaces x 256 codes).  Query: probe the nprobe nearest
+cells, score candidates by asymmetric PQ distance (lookup tables), rerank
+the top candidates exactly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+def _kmeans(key, x, k, iters=10):
+    n = x.shape[0]
+    init = jax.random.choice(key, n, (k,), replace=False)
+    cent = x[init]
+    for _ in range(iters):
+        d2 = (jnp.sum(x ** 2, -1, keepdims=True) - 2 * x @ cent.T
+              + jnp.sum(cent ** 2, -1)[None, :])
+        assign = jnp.argmin(d2, -1)
+        one = jax.nn.one_hot(assign, k, dtype=x.dtype)
+        counts = one.sum(0)
+        cent = jnp.where(counts[:, None] > 0,
+                         (one.T @ x) / jnp.maximum(counts[:, None], 1),
+                         cent)
+    return cent, assign
+
+
+@dataclasses.dataclass
+class IVFPQ:
+    data: jax.Array
+    coarse: jax.Array        # (nlist, d)
+    assign: jax.Array        # (n,)
+    codebooks: jax.Array     # (M, 256, d/M)
+    codes: jax.Array         # (n, M) int32
+    order: jax.Array         # points sorted by cell
+    cell_start: jax.Array    # (nlist+1,)
+    nprobe: int
+    rerank: int
+
+    @classmethod
+    def build(cls, data, key, nlist: int = 64, M: int = 4,
+              nprobe: int = 8, rerank: int = 256, iters: int = 8):
+        n, d = data.shape
+        assert d % M == 0
+        k1, k2 = jax.random.split(key)
+        coarse, assign = _kmeans(k1, data, nlist, iters)
+        resid = data - coarse[assign]
+        sub = resid.reshape(n, M, d // M)
+        cbs, codes = [], []
+        for m in range(M):
+            cb, code = _kmeans(jax.random.fold_in(k2, m), sub[:, m], 256,
+                               iters)
+            cbs.append(cb)
+            codes.append(code)
+        order = jnp.argsort(assign).astype(jnp.int32)
+        sorted_assign = assign[order]
+        cell_start = jnp.searchsorted(sorted_assign, jnp.arange(nlist + 1))
+        return cls(data=data, coarse=coarse, assign=assign,
+                   codebooks=jnp.stack(cbs),
+                   codes=jnp.stack(codes, 1).astype(jnp.int32),
+                   order=order, cell_start=cell_start.astype(jnp.int32),
+                   nprobe=nprobe, rerank=rerank)
+
+    def query(self, queries, k: int):
+        n, d = self.data.shape
+        M = self.codebooks.shape[0]
+        nlist = self.coarse.shape[0]
+        cap = max(self.rerank, k)
+        out_i, out_d = [], []
+        for q in queries:
+            dc = jnp.sum((self.coarse - q[None, :]) ** 2, -1)
+            _, cells = jax.lax.top_k(-dc, self.nprobe)
+            # PQ lookup tables against residual q - centroid, per probed cell
+            cand_ids, cand_score = [], []
+            for c in cells:
+                start = self.cell_start[c]
+                idx = start + jnp.arange(cap)
+                ok = idx < self.cell_start[c + 1]
+                ids = self.order[jnp.clip(idx, 0, n - 1)]
+                r = (q - self.coarse[c]).reshape(M, d // M)
+                lut = jnp.sum((self.codebooks - r[:, None, :]) ** 2, -1)
+                code = self.codes[ids]                     # (cap, M)
+                score = sum(lut[m][code[:, m]] for m in range(M))
+                cand_ids.append(jnp.where(ok, ids, n))
+                cand_score.append(jnp.where(ok, score, jnp.inf))
+            ids = jnp.concatenate(cand_ids)
+            score = jnp.concatenate(cand_score)
+            neg, sel = jax.lax.top_k(-score, min(self.rerank, ids.shape[0]))
+            top = ids[sel]
+            safe = jnp.clip(top, 0, n - 1)
+            dd = jnp.sqrt(jnp.sum((self.data[safe] - q[None, :]) ** 2, -1))
+            dd = jnp.where(top < n, dd, jnp.inf)
+            neg2, sel2 = jax.lax.top_k(-dd, k)
+            out_i.append(top[sel2])
+            out_d.append(-neg2)
+        return jnp.stack(out_i), jnp.stack(out_d)
+
+    def size_bytes(self):
+        return int(self.codes.size * 1 + self.coarse.size * 4
+                   + self.codebooks.size * 4 + self.order.size * 4)

@@ -1,0 +1,48 @@
+"""PM-LSH-style distance-metric (DM) baseline [9].
+
+Projects to a K-dim space (K ~ 15), estimates original distances from
+projected distances (chi-square relation, §II-C), selects the beta*n + k
+candidates nearest in the projected space, then reranks exactly.  PM-LSH
+uses a PM-Tree for the projected-space range query; at benchmark scale the
+projected space scan is the fair in-memory analogue (the tree is exactly
+what DET-LSH's DE-Tree replaces — that comparison is the paper's Fig. 17/18).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class PMLSH:
+    data: jax.Array
+    A: jax.Array
+    proj: jax.Array
+    beta: float
+
+    @classmethod
+    def build(cls, data, key, K: int = 15, beta: float = 0.1):
+        A = jax.random.normal(key, (data.shape[1], K))
+        return cls(data=data, A=A, proj=data @ A, beta=beta)
+
+    def query(self, queries, k: int):
+        n = self.data.shape[0]
+        ncand = min(n, int(self.beta * n) + k)
+        qp = queries @ self.A                       # (b, K)
+        d2p = (jnp.sum(qp ** 2, -1, keepdims=True) - 2 * qp @ self.proj.T
+               + jnp.sum(self.proj ** 2, -1)[None, :])
+        _, cand = jax.lax.top_k(-d2p, ncand)        # projected-space nearest
+        out_i, out_d = [], []
+        for bi in range(queries.shape[0]):
+            pts = self.data[cand[bi]]
+            d = jnp.sqrt(jnp.sum((pts - queries[bi][None, :]) ** 2, -1))
+            neg, sel = jax.lax.top_k(-d, k)
+            out_i.append(cand[bi][sel])
+            out_d.append(-neg)
+        return jnp.stack(out_i), jnp.stack(out_d)
+
+    def size_bytes(self):
+        return int(self.proj.size * 4 + self.A.size * 4)

@@ -1,0 +1,37 @@
+"""Architecture registry: ``get_config(arch_id)`` / ``list_archs()``."""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (ALL_SHAPES, LONG_500K, ModelConfig,
+                                ParallelConfig, ShapeConfig, active_param_count,
+                                param_count)
+
+_ARCHS = {
+    "whisper-base": "whisper_base",
+    "qwen3-1.7b": "qwen3_1_7b",
+    "qwen3-4b": "qwen3_4b",
+    "qwen1.5-32b": "qwen1_5_32b",
+    "deepseek-7b": "deepseek_7b",
+    "llama-3.2-vision-90b": "llama32_vision_90b",
+    "hymba-1.5b": "hymba_1_5b",
+    "arctic-480b": "arctic_480b",
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+    "mamba2-780m": "mamba2_780m",
+}
+
+
+def list_archs() -> list[str]:
+    return sorted(_ARCHS)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; known: {list_archs()}")
+    mod = importlib.import_module(f"repro.configs.{_ARCHS[arch]}")
+    return mod.get_config()
+
+
+__all__ = ["get_config", "list_archs", "ModelConfig", "ParallelConfig",
+           "ShapeConfig", "ALL_SHAPES", "param_count", "active_param_count"]

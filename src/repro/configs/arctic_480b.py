@@ -1,0 +1,28 @@
+"""arctic-480b [moe] — 128 experts top-2 + dense residual FFN.
+
+[hf:Snowflake/snowflake-arctic-base; hf]  35L d=7168 56H (kv=8)
+expert d_ff=4864 vocab=32000.
+"""
+
+from repro.configs.base import ModelConfig, ParallelConfig
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name="arctic-480b",
+        family="moe",
+        n_layers=35,
+        d_model=7168,
+        n_heads=56,
+        n_kv_heads=8,
+        d_head=128,
+        d_ff=4864,                 # dense residual path
+        d_ff_expert=4864,
+        n_experts=128,
+        moe_top_k=2,
+        dense_residual=True,
+        vocab_size=32000,
+        parallel=ParallelConfig(accum_steps=8, opt_state_dtype="int8",
+                                seq_parallel=True),
+        shape_names=("train_4k", "prefill_32k", "decode_32k"),
+    )

@@ -1,0 +1,186 @@
+"""Config system: architecture + shape + parallelism configs.
+
+Every assigned architecture is a ``ModelConfig`` in ``repro/configs/<id>.py``
+(exact public-literature hyperparameters) and is selectable via
+``--arch <id>`` in the launchers.  ``reduced()`` returns the family-preserving
+small config used by CPU smoke tests; full configs are exercised only through
+the dry-run (ShapeDtypeStruct, no allocation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                     # 'train' | 'prefill' | 'decode'
+
+
+# The assigned shape grid (LM family): seq_len x global_batch.
+TRAIN_4K = ShapeConfig("train_4k", 4096, 256, "train")
+PREFILL_32K = ShapeConfig("prefill_32k", 32768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524288, 1, "decode")
+
+ALL_SHAPES = {s.name: s for s in
+              (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelConfig:
+    """Parallelism & memory policy knobs (per arch defaults; CLI-overridable)."""
+
+    fsdp: bool = True               # shard weights over 'data' too (ZeRO-3)
+    remat: bool = True              # per-layer activation checkpointing
+    accum_steps: int = 1            # gradient accumulation microbatches
+    opt_state_dtype: str = "float32"  # 'float32' | 'int8' (compressed AdamW)
+    grad_compression: bool = False  # int8 all-reduce w/ error feedback
+    kv_cache_dtype: str = "bfloat16"
+    seq_shard_kv: bool = True       # decode: shard KV seq over 'model' (CP)
+    # Megatron-style sequence parallelism for the residual stream.  Wins
+    # when weight-gather traffic dominates activation-gather traffic
+    # (N_params*2*3*accum  >  6*tokens*d_model*2*layers roughly) — i.e. the
+    # 90B/480B class; for 2-8B dense models gradient accumulation is the
+    # cheaper memory lever (Perf iteration 12).
+    seq_parallel: bool = False
+    pipeline_stages: int = 1        # GPipe over 'pod' (demo feature)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense|moe|ssm|hybrid|encdec|vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    d_head: int = 0                # 0 -> d_model // n_heads
+    # attention options
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    pos_emb: str = "rope"          # 'rope' | 'learned'
+    max_pos: int = 0               # learned-pos table size (0 = max shape)
+    # MoE
+    n_experts: int = 0
+    moe_top_k: int = 0
+    d_ff_expert: int = 0
+    dense_residual: bool = False   # arctic: dense FFN in parallel with MoE
+    capacity_factor: float = 1.25
+    # SSM (mamba2 / hymba)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 256
+    ssm_conv: int = 4
+    # encoder-decoder (whisper)
+    enc_layers: int = 0
+    enc_len: int = 0               # stubbed frontend sequence length
+    # VLM cross-attention
+    cross_attn_every: int = 0      # 0 = none; else 1 cross per this many
+    vision_len: int = 0            # stubbed patch sequence length
+    # numerics
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    vocab_real: int = 0            # 0 = vocab_size; set when vocab is padded
+                                   # for sharding divisibility (Megatron-style)
+    # long-context capability marker (sub-quadratic mixer present)
+    sub_quadratic: bool = False
+    # dtypes
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    # parallel/memory defaults
+    parallel: ParallelConfig = ParallelConfig()
+    # shapes this arch runs (names into ALL_SHAPES); decode/long follow rules
+    shape_names: tuple = ("train_4k", "prefill_32k", "decode_32k")
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or (self.d_model // self.n_heads)
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def is_ssm_only(self) -> bool:
+        return self.family == "ssm"
+
+    def shapes(self):
+        return [ALL_SHAPES[s] for s in self.shape_names]
+
+    def reduced(self) -> "ModelConfig":
+        """Family-preserving tiny config for CPU smoke tests."""
+        return dataclasses.replace(
+            self,
+            n_layers=min(self.n_layers, 2),
+            d_model=128,
+            n_heads=max(2, min(4, self.n_heads)),
+            n_kv_heads=max(1, min(2, self.n_kv_heads)),
+            d_head=32,
+            d_ff=256,
+            d_ff_expert=64 if self.d_ff_expert else 0,
+            vocab_size=512,
+            n_experts=min(self.n_experts, 4),
+            moe_top_k=min(self.moe_top_k, 2),
+            ssm_state=min(self.ssm_state, 16),
+            ssm_head_dim=32 if self.ssm_state else 64,
+            ssm_chunk=16,
+            enc_layers=min(self.enc_layers, 2),
+            enc_len=min(self.enc_len, 24) if self.enc_len else 0,
+            cross_attn_every=min(self.cross_attn_every, 2)
+            if self.cross_attn_every else 0,
+            vision_len=min(self.vision_len, 16) if self.vision_len else 0,
+            param_dtype="float32",
+            compute_dtype="float32",
+            parallel=dataclasses.replace(self.parallel, fsdp=False,
+                                         accum_steps=1,
+                                         opt_state_dtype="float32"),
+        )
+
+
+def param_count(cfg: ModelConfig) -> int:
+    """Approximate parameter count (used for 6*N*D roofline terms)."""
+    d, dh = cfg.d_model, cfg.head_dim
+    attn = d * cfg.n_heads * dh * 2 + d * cfg.n_kv_heads * dh * 2
+    ffn = 3 * d * cfg.d_ff if cfg.d_ff else 0
+    moe = 0
+    if cfg.is_moe:
+        moe = cfg.n_experts * 3 * d * cfg.d_ff_expert
+        if not cfg.dense_residual:
+            ffn = 0
+        moe += d * cfg.n_experts  # router
+    ssm = 0
+    if cfg.ssm_state:
+        d_in = cfg.ssm_expand * d
+        nh = d_in // cfg.ssm_head_dim
+        ssm = d * (2 * d_in + 2 * cfg.ssm_state + nh) + d_in * d
+        if cfg.family == "ssm":
+            attn = 0
+            ffn = 0
+    per_layer = attn + ffn + moe + ssm
+    cross = 0
+    if cfg.cross_attn_every:
+        n_cross = cfg.n_layers // cfg.cross_attn_every
+        cross = n_cross * (d * cfg.n_heads * dh * 2
+                           + d * cfg.n_kv_heads * dh * 2)
+    enc = cfg.enc_layers * (attn + ffn)
+    embed = cfg.vocab_size * d * (1 if cfg.tie_embeddings else 2)
+    return cfg.n_layers * per_layer + cross + enc + embed
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Active parameters per token (MoE: top_k experts only)."""
+    if not cfg.is_moe:
+        return param_count(cfg)
+    full = param_count(cfg)
+    moe_all = cfg.n_layers * cfg.n_experts * 3 * cfg.d_model * cfg.d_ff_expert
+    moe_active = cfg.n_layers * cfg.moe_top_k * 3 * cfg.d_model * cfg.d_ff_expert
+    return full - moe_all + moe_active

@@ -1,0 +1,19 @@
+"""deepseek-7b [dense] — llama-arch (RoPE + SwiGLU).  [arXiv:2401.02954; hf]"""
+
+from repro.configs.base import ModelConfig, ParallelConfig
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-7b",
+        family="dense",
+        n_layers=30,
+        d_model=4096,
+        n_heads=32,
+        n_kv_heads=32,
+        d_head=128,
+        d_ff=11008,
+        vocab_size=102400,
+        parallel=ParallelConfig(accum_steps=4),
+        shape_names=("train_4k", "prefill_32k", "decode_32k"),
+    )

@@ -1,0 +1,25 @@
+"""granite-moe-1b-a400m [moe] — 32 experts top-8, pure-MoE FFN.
+
+[hf:ibm-granite/granite-3.0-1b-a400m-base; hf]  24L d=1024 16H (kv=8)
+expert d_ff=512 vocab=49155.
+"""
+
+from repro.configs.base import ModelConfig
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name="granite-moe-1b-a400m",
+        family="moe",
+        n_layers=24,
+        d_model=1024,
+        n_heads=16,
+        n_kv_heads=8,
+        d_head=64,
+        d_ff=0,                    # no dense FFN path
+        d_ff_expert=512,
+        n_experts=32,
+        moe_top_k=8,
+        vocab_size=49155,
+        shape_names=("train_4k", "prefill_32k", "decode_32k"),
+    )

@@ -1,0 +1,27 @@
+"""hymba-1.5b [hybrid] — parallel attention + mamba heads per layer.
+
+[arXiv:2411.13676; hf]  32L d=1600 25H (kv=5) d_ff=5504 vocab=32001,
+ssm_state=16.  Hybrid mixer => sub-quadratic capable => runs long_500k.
+"""
+
+from repro.configs.base import ModelConfig, ParallelConfig
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name="hymba-1.5b",
+        family="hybrid",
+        n_layers=32,
+        d_model=1600,
+        n_heads=25,
+        n_kv_heads=5,
+        d_head=64,
+        d_ff=5504,
+        vocab_size=32001,
+        ssm_state=16,
+        ssm_expand=2,
+        ssm_head_dim=64,
+        sub_quadratic=True,
+        parallel=ParallelConfig(accum_steps=4),
+        shape_names=("train_4k", "prefill_32k", "decode_32k", "long_500k"),
+    )

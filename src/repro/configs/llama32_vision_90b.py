@@ -1,0 +1,29 @@
+"""llama-3.2-vision-90b [vlm] — cross-attn image layers every 5th layer.
+
+[hf:meta-llama/Llama-3.2-11B-Vision family; unverified]  100L d=8192 64H
+(kv=8) d_ff=28672 vocab=128256.  The vision encoder is a STUB per
+assignment: ``input_specs()`` supplies precomputed patch embeddings
+(B, vision_len, d).
+"""
+
+from repro.configs.base import ModelConfig, ParallelConfig
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name="llama-3.2-vision-90b",
+        family="vlm",
+        n_layers=100,
+        d_model=8192,
+        n_heads=64,
+        n_kv_heads=8,
+        d_head=128,
+        d_ff=28672,
+        vocab_size=128256,
+        rope_theta=500_000.0,
+        cross_attn_every=5,        # 20 cross-attention layers of 100
+        vision_len=1600,           # stubbed patch-embedding length
+        parallel=ParallelConfig(accum_steps=8, opt_state_dtype="int8",
+                                seq_parallel=True),
+        shape_names=("train_4k", "prefill_32k", "decode_32k"),
+    )

@@ -1,0 +1,27 @@
+"""mamba2-780m [ssm] — pure SSD (state-space duality), attention-free.
+
+[arXiv:2405.21060; unverified]  48L d=1536 vocab=50280 ssm_state=128.
+Attention-free => the paper's KV-retrieval technique is INAPPLICABLE to the
+sequence mixer (DESIGN.md §4); sub-quadratic => runs long_500k.
+"""
+
+from repro.configs.base import ModelConfig, ParallelConfig
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-780m",
+        family="ssm",
+        n_layers=48,
+        d_model=1536,
+        n_heads=1,                 # unused (attention-free)
+        n_kv_heads=1,
+        d_ff=0,                    # mamba block includes its own expansion
+        vocab_size=50280,
+        ssm_state=128,
+        ssm_expand=2,
+        ssm_head_dim=64,
+        sub_quadratic=True,
+        parallel=ParallelConfig(accum_steps=4),
+        shape_names=("train_4k", "prefill_32k", "decode_32k", "long_500k"),
+    )

@@ -1,0 +1,25 @@
+"""qwen1.5-32b [dense] — full-MHA (kv=40) with QKV bias.
+[hf:Qwen/Qwen1.5 family; hf]"""
+
+import dataclasses
+
+from repro.configs.base import ModelConfig, ParallelConfig
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen1.5-32b",
+        family="dense",
+        n_layers=64,
+        d_model=5120,
+        n_heads=40,
+        n_kv_heads=40,
+        d_head=128,
+        d_ff=27392,
+        vocab_size=152064,
+        qkv_bias=True,
+        parallel=ParallelConfig(accum_steps=8,
+                                kv_cache_dtype="float8_e4m3fn",
+                                seq_parallel=True),
+        shape_names=("train_4k", "prefill_32k", "decode_32k"),
+    )

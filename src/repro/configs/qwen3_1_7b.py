@@ -1,0 +1,21 @@
+"""qwen3-1.7b [dense] — GQA + qk_norm.  [hf:Qwen/Qwen3-8B family; hf]"""
+
+from repro.configs.base import ModelConfig, ParallelConfig
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-1.7b",
+        family="dense",
+        n_layers=28,
+        d_model=2048,
+        n_heads=16,
+        n_kv_heads=8,
+        d_head=128,
+        d_ff=6144,
+        vocab_size=151936,
+        qk_norm=True,
+        rope_theta=1_000_000.0,
+        parallel=ParallelConfig(accum_steps=2),
+        shape_names=("train_4k", "prefill_32k", "decode_32k"),
+    )

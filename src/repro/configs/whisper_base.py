@@ -1,0 +1,29 @@
+"""whisper-base [audio] — enc-dec backbone, conv frontend stubbed.
+
+[arXiv:2212.04356; unverified]  6L (enc+dec) d_model=512 8H (kv=8)
+d_ff=2048 vocab=51865.  The audio conv frontend is a STUB per assignment:
+``input_specs()`` supplies precomputed frame embeddings (B, enc_len, d).
+"""
+
+from repro.configs.base import ModelConfig, ParallelConfig
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-base",
+        family="encdec",
+        n_layers=6,                 # decoder layers
+        enc_layers=6,               # encoder layers
+        enc_len=1536,               # stubbed frame-embedding length (~1500)
+        d_model=512,
+        n_heads=8,
+        n_kv_heads=8,
+        d_head=64,
+        d_ff=2048,
+        vocab_size=51865,
+        norm_eps=1e-5,
+        pos_emb="learned",
+        max_pos=32768,
+        parallel=ParallelConfig(fsdp=False),
+        shape_names=("train_4k", "prefill_32k", "decode_32k"),
+    )

@@ -1,0 +1,90 @@
+"""DET-LSH / PDET-LSH — the paper's primary contribution, in JAX.
+
+High-level API::
+
+    from repro.core import DETLSH, derive_params
+    index = DETLSH.build(data, key, params=derive_params(K=16, c=1.5, L=4))
+    res = index.query(queries, k=50)
+
+Submodules: theory, hashing, encoding, detree, query, distributed,
+det_attention.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.theory import LSHParams, derive_params, SUCCESS_PROBABILITY
+from repro.core import hashing, encoding, detree, query as query_mod
+from repro.core.detree import DEForest, build_forest
+from repro.core.query import QueryConfig, QueryResult, knn_query_batch
+
+
+def estimate_r_min(data: jax.Array, queries: jax.Array, k: int,
+                   c: float, *, sample: int = 2048) -> float:
+    """Pick the initial search radius (paper §V-B1, following PM-LSH [9]).
+
+    Heuristic realization of the "magic r_min": estimate the k-NN distance
+    scale on a subsample and start one c-step below it, so the first rounds
+    neither trivially satisfy T1 nor waste many enlargements.
+    """
+    ns = min(sample, data.shape[0])
+    nq = min(64, queries.shape[0])
+    sub = np.asarray(data[:ns])
+    qs = np.asarray(queries[:nq])
+    d2 = ((qs[:, None, :] - sub[None, :, :]) ** 2).sum(-1)
+    kth = np.sqrt(np.partition(d2, min(k, ns - 1), axis=1)[:, min(k, ns - 1)])
+    r = float(np.median(kth))
+    return max(r / (c * c), 1e-6)
+
+
+@dataclasses.dataclass
+class DETLSH:
+    """A built DET-LSH index (single shard; see core.distributed for pods)."""
+
+    params: LSHParams
+    A: jax.Array           # (d, L*K) projection matrix
+    forest: DEForest
+    data: jax.Array        # (n, d) — kept resident for exact rerank (paper §VI-C4)
+
+    @classmethod
+    def build(cls, data: jax.Array, key: jax.Array,
+              params: LSHParams | None = None, *,
+              Nr: int = encoding.DEFAULT_NR, leaf_size: int = 64,
+              breakpoint_method: str = "sample_sort",
+              project_impl: str = "auto",
+              encode_impl: str = "auto") -> "DETLSH":
+        params = params or derive_params()
+        d = data.shape[1]
+        kp, kb = jax.random.split(key)
+        A = hashing.sample_projections(kp, d, params.K, params.L)
+        proj = hashing.project(data, A, impl=project_impl)
+        forest = build_forest(proj, params.K, params.L, Nr=Nr,
+                              leaf_size=leaf_size,
+                              breakpoint_method=breakpoint_method, key=kb,
+                              encode_impl=encode_impl)
+        return cls(params=params, A=A, forest=forest, data=data)
+
+    def query(self, queries: jax.Array, k: int = 50, *,
+              r_min: float | None = None, M: int = 8,
+              mode: str = "leaf", max_rounds: int = 48) -> QueryResult:
+        if r_min is None:
+            r_min = estimate_r_min(self.data, queries, k, self.params.c)
+        cfg = QueryConfig(k=k, M=M, r_min=r_min, mode=mode,
+                          max_rounds=max_rounds)
+        return knn_query_batch(self.data, self.forest, self.A, self.params,
+                               queries, cfg)
+
+    def index_size_bytes(self) -> int:
+        return self.forest.size_bytes() + self.A.size * 4
+
+
+__all__ = [
+    "DETLSH", "DEForest", "LSHParams", "QueryConfig", "QueryResult",
+    "derive_params", "build_forest", "knn_query_batch", "estimate_r_min",
+    "SUCCESS_PROBABILITY",
+]

@@ -1,0 +1,161 @@
+"""DET-LSH-accelerated decode attention (beyond-paper integration).
+
+The paper motivates LSH with "LLM inference acceleration" (§I, MagicPIG
+[16]).  This module makes DET-LSH a first-class serving feature: the KV
+cache's *keys* are indexed with a DE-Forest at prefill time; each decode
+step retrieves the top-M candidate positions by (augmented-L2) range query
+and computes exact attention only over those positions plus a local window
+and attention sinks — the standard sparse-attention safety set.
+
+MIPS -> L2 reduction: argmax q.k over keys with varying norms is turned
+into nearest-neighbor search with the Shrivastava-Li augmentation
+  k_hat = [k, sqrt(R^2 - ||k||^2)],  q_hat = [q, 0]
+so  ||q_hat - k_hat||^2 = ||q||^2 + R^2 - 2 q.k  — monotone in q.k.
+
+Per (batch, kv-head) an independent forest is built (vmapped); queries from
+the g query-heads of a group are answered against their kv-head's forest.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import encoding as enc
+from repro.core import hashing
+from repro.core.detree import build_tree, leaf_bounds
+from repro.core.theory import LSHParams, derive_params
+
+
+class DETKVIndex(NamedTuple):
+    A: jax.Array            # (dh+1, L*K) projections (augmented dim)
+    point_ids: jax.Array    # (b, hk, L, n_pad)
+    leaf_lo: jax.Array      # (b, hk, L, n_leaves, K)
+    leaf_hi: jax.Array
+    leaf_valid: jax.Array   # (b, hk, L, n_leaves)
+    breakpoints: jax.Array  # (b, hk, L, K, Nr+1)
+    radius: jax.Array       # (b, hk) augmentation R per head
+    leaf_size: int
+    S: int
+
+
+def _augment_keys(keys: jax.Array):
+    """keys (S, dh) -> (S, dh+1) Shrivastava-Li augmentation + R."""
+    norms2 = jnp.sum(keys.astype(jnp.float32) ** 2, -1)
+    R2 = jnp.max(norms2) * (1.0 + 1e-6)
+    aug = jnp.sqrt(jnp.maximum(R2 - norms2, 0.0))
+    return jnp.concatenate([keys.astype(jnp.float32), aug[:, None]], -1), \
+        jnp.sqrt(R2)
+
+
+def build_kv_index(k_cache: jax.Array, key: jax.Array, *,
+                   params: LSHParams | None = None, Nr: int = 64,
+                   leaf_size: int = 32) -> DETKVIndex:
+    """Index cache keys.  k_cache (b, S, hk, dh) -> per-(b,hk) DE-Forests."""
+    b, S, hk, dh = k_cache.shape
+    params = params or derive_params(K=4, c=1.5, L=4, beta_override=0.1)
+    K, L = params.K, params.L
+    A = hashing.sample_projections(key, dh + 1, K, L)
+
+    def one(keys):                                   # (S, dh)
+        aug, R = _augment_keys(keys)
+        proj = aug @ A                               # (S, L*K)
+        bp = enc.select_breakpoints(proj, Nr, method="full_sort")
+        codes = enc.encode(proj, bp)
+        proj_t = proj.reshape(S, L, K).transpose(1, 0, 2)
+        codes_t = codes.reshape(S, L, K).transpose(1, 0, 2)
+        bp_t = bp.reshape(L, K, Nr + 1)
+        parts = jax.vmap(functools.partial(build_tree, leaf_size=leaf_size))(
+            proj_t, codes_t, bp_t)
+        return (parts["point_ids"], parts["leaf_lo"], parts["leaf_hi"],
+                parts["leaf_valid"], parts["breakpoints"], R)
+
+    flat = k_cache.transpose(0, 2, 1, 3)             # (b, hk, S, dh)
+    pid, lo, hi, lv, bp, R = jax.vmap(jax.vmap(one))(flat)
+    return DETKVIndex(A=A, point_ids=pid, leaf_lo=lo, leaf_hi=hi,
+                      leaf_valid=lv, breakpoints=bp, radius=R,
+                      leaf_size=leaf_size, S=S)
+
+
+def retrieve_topm(index: DETKVIndex, q: jax.Array, m_leaves: int):
+    """q (b, hk, g, dh) -> candidate position ids (b, hk, g, m_leaves*ls).
+
+    Ranks leaves by LB distance of the augmented query in each tree and
+    takes the best m_leaves/L per tree (the paper's optimized leaf-granularity
+    admission, ordered by LB)."""
+    b, hk, g, dh = q.shape
+    L = index.point_ids.shape[2]
+    per_tree = max(1, m_leaves // L)
+
+    def one(qv, pid, lo, hi, lv, bp):
+        qa = jnp.concatenate([qv.astype(jnp.float32), jnp.zeros((1,))])
+        qp = (qa @ index.A).reshape(L, -1)           # (L, K)
+
+        def tree(pid_l, lo_l, hi_l, lv_l, bp_l, qp_l):
+            lb, _ = leaf_bounds(qp_l, lo_l, hi_l, lv_l, bp_l)
+            _, leaf_idx = jax.lax.top_k(-lb, per_tree)
+            gidx = (leaf_idx[:, None] * index.leaf_size
+                    + jnp.arange(index.leaf_size)[None, :]).reshape(-1)
+            return pid_l[gidx]
+
+        ids = jax.vmap(tree)(pid, lo, hi, lv, bp, qp)     # (L, per*ls)
+        return ids.reshape(-1)
+
+    # vmap over (b, hk, g): forests indexed by (b, hk); g shares the forest
+    def per_head(qh, pid, lo, hi, lv, bp):
+        return jax.vmap(lambda qv: one(qv, pid, lo, hi, lv, bp))(qh)
+
+    return jax.vmap(jax.vmap(per_head))(
+        q, index.point_ids, index.leaf_lo, index.leaf_hi,
+        index.leaf_valid, index.breakpoints)
+
+
+def det_decode_attention(q: jax.Array, k_cache: jax.Array,
+                         v_cache: jax.Array, index: DETKVIndex,
+                         length, *, m_leaves: int = 16,
+                         window: int = 64, sinks: int = 4) -> jax.Array:
+    """Sparse decode attention over DET-LSH-retrieved positions.
+
+    q (b, 1, h, dh); caches (b, S, hk, dh).  Exact softmax over the union of
+    {retrieved candidates} + {last ``window`` positions} + {first ``sinks``}.
+    """
+    b, _, h, dh = q.shape
+    S, hk = k_cache.shape[1], k_cache.shape[2]
+    g = h // hk
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    qh = q.reshape(b, hk, g, dh)
+
+    cand = retrieve_topm(index, qh, m_leaves)        # (b, hk, g, mc)
+    loc = length - 1 - jnp.arange(window)            # local window
+    snk = jnp.arange(sinks)
+    fixed = jnp.concatenate([loc, snk])
+    fixed = jnp.broadcast_to(fixed, (b, hk, g, fixed.shape[0]))
+    ids = jnp.concatenate([cand, fixed], axis=-1)
+    ids = jnp.clip(ids, 0, S - 1)
+
+    def head(qv, kc, vc, idv):                       # (g,dh),(S,dh),(S,dh)
+        kg = kc[idv.reshape(-1)].reshape(*idv.shape, dh)   # (g, m, dh)
+        vg = vc[idv.reshape(-1)].reshape(*idv.shape, dh)
+        s = jnp.einsum("gd,gmd->gm", qv.astype(jnp.float32) * scale,
+                       kg.astype(jnp.float32))
+        valid = idv < length
+        # positions may repeat across sources; mask repeats per row
+        def mask_dups(row_ids, row_valid):
+            order = jnp.argsort(row_ids)
+            rs = row_ids[order]
+            first = jnp.concatenate([jnp.array([True]), rs[1:] != rs[:-1]])
+            keep = jnp.zeros_like(row_valid).at[order].set(first)
+            return row_valid & keep
+        valid = jax.vmap(mask_dups)(idv, valid)
+        s = jnp.where(valid, s, -jnp.inf)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("gm,gmd->gd", p, vg.astype(jnp.float32))
+
+    out = jax.vmap(jax.vmap(head))(
+        qh, k_cache.transpose(0, 2, 1, 3), v_cache.transpose(0, 2, 1, 3),
+        ids)                                          # (b, hk, g, dh)
+    return out.reshape(b, 1, h, dh).astype(q.dtype)

@@ -1,0 +1,203 @@
+"""DE-Tree / DE-Forest (paper §III-B, Alg. 2) — TPU-native array form.
+
+A DE-Tree organizes iSAX-encoded points so that range queries can prune via
+per-node lower/upper-bound distances (paper Fig. 5).  Pointer-based trees do
+not map to TPUs, so we store each tree as a *code-sorted array*:
+
+  * points are sorted by the bit-interleaved (MSB-first, round-robin) iSAX
+    code — exactly the order a DE-Tree's recursive binary splits induce, so a
+    contiguous block of the sorted array corresponds to a subtree;
+  * leaves are fixed-size blocks of ``leaf_size`` consecutive sorted points;
+  * each leaf stores its per-dimension region interval [lo, hi] (the node's
+    bounding iSAX prefix, tightened to the actual occupied regions).
+
+LB/UB distances computed from a leaf's [lo, hi] intervals and the breakpoint
+coordinates are identical in form to the paper's Fig. 5 bounds and remain
+admissible (LB <= true projected distance <= UB for every point in the leaf;
+property-tested), so all pruning/guarantee arguments carry over.
+
+All L trees are built in one shot (vectorized over the leading L axis) — the
+PDET-LSH parallel build (Alg. 7) falls out of data sharding: each device
+builds a complete local forest over its shard (see ``core.distributed``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import encoding as enc
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class DEForest:
+    """L DE-Trees over one (shard of a) dataset, in array form."""
+
+    point_ids: jax.Array     # (L, n_pad) int32 — original index; n = padding
+    proj_sorted: jax.Array   # (L, n_pad, K) f32 — projected coords, sorted order
+    codes_sorted: jax.Array  # (L, n_pad, K) int32 — region ids, sorted order
+    valid: jax.Array         # (L, n_pad) bool
+    leaf_lo: jax.Array       # (L, n_leaves, K) int32 — occupied region interval
+    leaf_hi: jax.Array       # (L, n_leaves, K) int32
+    leaf_valid: jax.Array    # (L, n_leaves) bool
+    breakpoints: jax.Array   # (L, K, Nr+1) f32
+    n: int = dataclasses.field(metadata=dict(static=True))
+    leaf_size: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def L(self) -> int:
+        return self.point_ids.shape[0]
+
+    @property
+    def K(self) -> int:
+        return self.breakpoints.shape[1]
+
+    @property
+    def n_leaves(self) -> int:
+        return self.leaf_lo.shape[1]
+
+    @property
+    def Nr(self) -> int:
+        return self.breakpoints.shape[2] - 1
+
+    def size_bytes(self) -> int:
+        """Index footprint (codes as 1-byte symbols on TPU; ids 4B; bounds 1B)."""
+        L, n_pad, K = self.proj_sorted.shape
+        n_leaves = self.n_leaves
+        return int(L * (n_pad * K * 1 + n_pad * 4 + n_leaves * K * 2
+                        + K * (self.Nr + 1) * 4))
+
+
+# ---------------------------------------------------------------------------
+# Build
+# ---------------------------------------------------------------------------
+
+def _interleave_keys(codes: jax.Array, K: int) -> tuple[jax.Array, jax.Array]:
+    """Bit-interleaved sort keys from (n, K) region ids in [0, 256).
+
+    Returns (key_hi, key_lo) uint32: MSB-first, round-robin over dimensions —
+    the linearization of the DE-Tree's split order ("each split performs a
+    binary refinement on a single dimension", §III-B).  Up to 64 total bits;
+    deeper bits than 64/K per dim do not affect leaf grouping materially.
+    """
+    bits_total = min(8, max(1, 64 // K))     # bits per dim that fit in 2 words
+    hi_bits = min(bits_total, max(1, 32 // K))
+    lo_bits = bits_total - hi_bits
+
+    def pack(start_bit: int, nbits: int) -> jax.Array:
+        key = jnp.zeros(codes.shape[0], dtype=jnp.uint32)
+        pos = nbits * K
+        for b in range(nbits):                # bit level (MSB first)
+            for j in range(K):                # round-robin over dims
+                pos -= 1
+                bit = (codes[:, j] >> (7 - (start_bit + b))) & 1
+                key = key | (bit.astype(jnp.uint32) << pos)
+        return key
+
+    key_hi = pack(0, hi_bits)
+    key_lo = pack(hi_bits, lo_bits) if lo_bits > 0 else jnp.zeros(
+        codes.shape[0], dtype=jnp.uint32)
+    return key_hi, key_lo
+
+
+def _sort_by_code(codes: jax.Array, K: int) -> jax.Array:
+    """Return permutation sorting points by interleaved code (lexicographic)."""
+    key_hi, key_lo = _interleave_keys(codes, K)
+    order = jnp.argsort(key_lo, stable=True)
+    order = order[jnp.argsort(key_hi[order], stable=True)]
+    return order
+
+
+def build_tree(proj: jax.Array, codes: jax.Array, breakpoints: jax.Array,
+               leaf_size: int) -> dict:
+    """Build one DE-Tree (array form) from (n, K) projections + codes."""
+    n, K = proj.shape
+    order = _sort_by_code(codes, K)
+    n_leaves = -(-n // leaf_size)
+    n_pad = n_leaves * leaf_size
+    pad = n_pad - n
+
+    ids = jnp.pad(order.astype(jnp.int32), (0, pad), constant_values=n)
+    valid = jnp.arange(n_pad) < n
+    proj_s = jnp.pad(proj[order], ((0, pad), (0, 0)), constant_values=0.0)
+    codes_s = jnp.pad(codes[order], ((0, pad), (0, 0)), constant_values=0)
+
+    blocks = codes_s.reshape(n_leaves, leaf_size, K)
+    bmask = valid.reshape(n_leaves, leaf_size)
+    big = jnp.iinfo(jnp.int32).max
+    lo = jnp.where(bmask[..., None], blocks, big).min(axis=1)
+    hi = jnp.where(bmask[..., None], blocks, -1).max(axis=1)
+    leaf_valid = bmask.any(axis=1)
+    lo = jnp.where(leaf_valid[:, None], lo, 0).astype(jnp.int32)
+    hi = jnp.where(leaf_valid[:, None], hi, 0).astype(jnp.int32)
+
+    return dict(point_ids=ids, proj_sorted=proj_s, codes_sorted=codes_s,
+                valid=valid, leaf_lo=lo, leaf_hi=hi, leaf_valid=leaf_valid,
+                breakpoints=breakpoints)
+
+
+def build_forest(proj_all: jax.Array, K: int, L: int, *,
+                 Nr: int = enc.DEFAULT_NR, leaf_size: int = 64,
+                 breakpoint_method: str = "sample_sort",
+                 key: jax.Array | None = None,
+                 encode_impl: str = "auto") -> DEForest:
+    """Build L DE-Trees from projections (n, L*K) (paper Alg. 1 + Alg. 2)."""
+    n = proj_all.shape[0]
+    assert proj_all.shape[1] == L * K, (proj_all.shape, L, K)
+    bp_all = enc.select_breakpoints(proj_all, Nr, method=breakpoint_method,
+                                    key=key)                       # (L*K, Nr+1)
+    codes_all = enc.encode(proj_all, bp_all, impl=encode_impl)     # (n, L*K)
+
+    proj_t = proj_all.reshape(n, L, K).transpose(1, 0, 2)          # (L, n, K)
+    codes_t = codes_all.reshape(n, L, K).transpose(1, 0, 2)
+    bp_t = bp_all.reshape(L, K, Nr + 1)
+
+    parts = jax.vmap(functools.partial(build_tree, leaf_size=leaf_size))(
+        proj_t, codes_t, bp_t)
+    return DEForest(n=n, leaf_size=leaf_size, **parts)
+
+
+# ---------------------------------------------------------------------------
+# Leaf LB/UB bounds (paper Fig. 5)
+# ---------------------------------------------------------------------------
+
+def leaf_bounds(q_proj: jax.Array, leaf_lo: jax.Array, leaf_hi: jax.Array,
+                leaf_valid: jax.Array, breakpoints: jax.Array, *,
+                impl: str = "auto") -> tuple[jax.Array, jax.Array]:
+    """LB/UB distances from a projected query to every leaf of one tree.
+
+    q_proj: (K,); leaf_lo/hi: (n_leaves, K); breakpoints: (K, Nr+1).
+    Returns (lb, ub), each (n_leaves,).  Invalid leaves get lb = ub = +inf.
+    """
+    if impl in ("pallas", "pallas_interpret"):
+        from repro.kernels import ops as kops
+        return kops.leaf_bounds(q_proj, leaf_lo, leaf_hi, leaf_valid,
+                                breakpoints,
+                                interpret=(impl == "pallas_interpret"))
+    # Coordinates of the leaf's bounding box edges.
+    b_lo = _gather_edges(breakpoints, leaf_lo)                     # (n_leaves, K)
+    b_hi = _gather_edges(breakpoints, leaf_hi + 1)
+    d_lo = b_lo - q_proj[None, :]
+    d_hi = q_proj[None, :] - b_hi
+    lb_dim = jnp.maximum(jnp.maximum(d_lo, d_hi), 0.0)
+    ub_dim = jnp.maximum(jnp.abs(q_proj[None, :] - b_lo),
+                         jnp.abs(q_proj[None, :] - b_hi))
+    lb = jnp.sqrt(jnp.sum(lb_dim * lb_dim, axis=1))
+    ub = jnp.sqrt(jnp.sum(ub_dim * ub_dim, axis=1))
+    inf = jnp.inf
+    lb = jnp.where(leaf_valid, lb, inf)
+    ub = jnp.where(leaf_valid, ub, inf)
+    return lb, ub
+
+
+def _gather_edges(breakpoints: jax.Array, idx: jax.Array) -> jax.Array:
+    """breakpoints (K, Nr+1), idx (n_leaves, K) -> coords (n_leaves, K)."""
+    E = breakpoints.shape[1]
+    idx = jnp.clip(idx, 0, E - 1)
+    return jax.vmap(lambda bp_k, i_k: bp_k[i_k], in_axes=(0, 1), out_axes=1)(
+        breakpoints, idx)

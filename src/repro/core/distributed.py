@@ -1,0 +1,388 @@
+"""PDET-LSH: the multi-pod distributed runtime (paper §IV, Alg. 6/7/8).
+
+CPU-thread parallelism -> TPU SPMD mapping (DESIGN.md §2):
+
+  * Alg. 6 (parallel dynamic encoding, dimension-partitioned): breakpoint
+    selection runs as *distributed histogram refinement* — per-shard
+    histograms are ``psum``-reduced so every device derives the identical,
+    globally equi-depth breakpoints.  log2(N_r) rounds of small (D, N_r)
+    collectives replace the paper's per-worker QuickSelect.
+  * Alg. 7 (parallel index construction, data-partitioned): each device
+    builds a complete DE-Forest over its own shard of the dataset.  No
+    synchronization at all (the paper needs a barrier + subtree hand-off).
+  * Alg. 8 + §IV-C (parallel query): queries are replicated; every device
+    range-queries its local forest and reranks its local candidates
+    (rerank gathers are shard-local — the dataset is sharded *with* the
+    index).  Termination conditions T1/T2 of Alg. 5 are evaluated on
+    ``psum``-ed global counts, so all devices advance the radius in
+    lockstep and the termination logic — hence Theorem 3 — is preserved.
+    The final top-k is an ``all_gather`` of per-shard top-k + a merge.
+
+Determinism/equivalence: ``serial_reference_*`` run the identical sharded
+algorithm as plain vmapped code on one device; tests assert the shard_map
+version returns exactly the same ids/distances (the PDET == DET claim,
+Fig. 20/21).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import encoding as enc
+from repro.core import hashing
+from repro.core.detree import DEForest, build_tree
+from repro.core.query import QueryConfig, _merge_candidates
+from repro.core.theory import LSHParams
+
+
+# ---------------------------------------------------------------------------
+# Distributed breakpoint selection (Alg. 6 analogue)
+# ---------------------------------------------------------------------------
+
+def distributed_breakpoints(proj_local: jax.Array, n_global: int,
+                            Nr: int, rounds: int,
+                            axes: Sequence[str] | None) -> jax.Array:
+    """Globally equi-depth breakpoints over data sharded on ``axes``.
+
+    proj_local: (n_local, D).  Inside shard_map, ``axes`` are the mesh axes
+    the data is sharded over; pass None for the serial reference.
+    """
+    def pmin(x):
+        return jax.lax.pmin(x, axes) if axes else x
+
+    def pmax(x):
+        return jax.lax.pmax(x, axes) if axes else x
+
+    def psum(x):
+        return jax.lax.psum(x, axes) if axes else x
+
+    lo = pmin(jnp.min(proj_local, axis=0))
+    hi = pmax(jnp.max(proj_local, axis=0))
+    t = jnp.arange(Nr + 1, dtype=jnp.float32) / Nr
+    edges = lo[:, None] + (hi - lo)[:, None] * t[None, :]
+
+    def body(_, edges):
+        counts = psum(enc.histogram_counts(proj_local, edges))
+        return enc.refine_breakpoints_from_counts(edges, counts, n_global)
+
+    return jax.lax.fori_loop(0, rounds, body, edges)
+
+
+# ---------------------------------------------------------------------------
+# Shard-local build (Alg. 7 analogue)
+# ---------------------------------------------------------------------------
+
+def _build_local_forest(data_local: jax.Array, A: jax.Array, K: int, L: int,
+                        Nr: int, leaf_size: int, bp_rounds: int,
+                        n_global: int,
+                        axes: Sequence[str] | None) -> DEForest:
+    n_local = data_local.shape[0]
+    proj = hashing.project(data_local, A)
+    bp_all = distributed_breakpoints(proj, n_global, Nr, bp_rounds, axes)
+    codes_all = enc.encode(proj, bp_all)
+    proj_t = proj.reshape(n_local, L, K).transpose(1, 0, 2)
+    codes_t = codes_all.reshape(n_local, L, K).transpose(1, 0, 2)
+    bp_t = bp_all.reshape(L, K, Nr + 1)
+    parts = jax.vmap(functools.partial(build_tree, leaf_size=leaf_size))(
+        proj_t, codes_t, bp_t)
+    return DEForest(n=n_local, leaf_size=leaf_size, **parts)
+
+
+# ---------------------------------------------------------------------------
+# Shard-local query with global termination (Alg. 5 + Alg. 8 analogue)
+# ---------------------------------------------------------------------------
+
+def _knn_local(data_local: jax.Array, forest: DEForest, A: jax.Array,
+               params: LSHParams, q: jax.Array, cfg: QueryConfig,
+               n_global: int, shard_offset: jax.Array,
+               axes: Sequence[str] | None):
+    """One query against the local shard, radius loop in global lockstep.
+
+    Returns per-shard top-k (ids globalized via shard_offset) — caller
+    all_gathers and merges.
+    """
+    from repro.core.query import range_query_round, exact_distances
+
+    def psum(x):
+        return jax.lax.psum(x, axes) if axes else x
+
+    n_local = data_local.shape[0]
+    K, L = params.K, params.L
+    M = min(cfg.M, forest.n_leaves)
+    round_cap = L * M * forest.leaf_size
+    # Local buffer: the global termination threshold can be met by any
+    # distribution of candidates over shards, so each shard must be able to
+    # hold everything it could contribute before termination.
+    cap = min(int(params.beta * n_global) + cfg.k + round_cap,
+              n_local + round_cap)
+    thresh = jnp.asarray(params.beta * n_global + cfg.k, jnp.float32)
+    q_proj = (q @ A).reshape(L, K)
+
+    def cond(state):
+        rnd, r, ids, d, done = state
+        return (~done) & (rnd < cfg.max_rounds)
+
+    def body(state):
+        rnd, r, ids, d, done = state
+        new_ids, ok = range_query_round(forest, q_proj, params.epsilon * r,
+                                        cfg.M, mode=cfg.mode)
+        new_d = exact_distances(data_local, q, new_ids, ok)
+        new_ids = jnp.where(ok, new_ids, n_local)
+        ids, d, count_local = _merge_candidates(n_local, ids, d, new_ids,
+                                                new_d)
+        count = psum(count_local.astype(jnp.float32))            # global |S|
+        within_local = jnp.sum(d <= params.c * r).astype(jnp.float32)
+        within = psum(within_local)                              # global T2
+        done = (count >= thresh) | (within >= cfg.k)
+        r = jnp.where(done, r, r * params.c)
+        return rnd + 1, r, ids, d, done
+
+    state0 = (jnp.asarray(0, jnp.int32), jnp.asarray(cfg.r_min, jnp.float32),
+              jnp.full((cap,), n_local, jnp.int32),
+              jnp.full((cap,), jnp.inf), jnp.asarray(False))
+    rnd, r, ids, d, done = jax.lax.while_loop(cond, body, state0)
+
+    kk = min(cfg.k, cap)
+    negd, sel = jax.lax.top_k(-d, kk)
+    local_ids = ids[sel]
+    gids = jnp.where(local_ids < n_local, local_ids + shard_offset,
+                     n_global).astype(jnp.int32)
+    return gids, -negd, rnd
+
+
+def _merge_global_topk(gids: jax.Array, gdists: jax.Array, k: int,
+                       axes: Sequence[str] | None):
+    """all_gather per-shard top-k and take the global top-k."""
+    if axes:
+        gids = jax.lax.all_gather(gids, axes, tiled=True)
+        gdists = jax.lax.all_gather(gdists, axes, tiled=True)
+    negd, sel = jax.lax.top_k(-gdists, k)
+    return gids[sel], -negd
+
+
+# ---------------------------------------------------------------------------
+# Public API: shard_map-based build & query over a mesh
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PDETLSH:
+    """A PDET-LSH index sharded over mesh ``axes`` (data-parallel)."""
+
+    params: LSHParams
+    A: jax.Array
+    forest: DEForest          # arrays sharded on their n/leaf axes
+    data: jax.Array           # (n, d) sharded on axis 0
+    mesh: Mesh
+    axes: tuple[str, ...]
+    n_global: int
+
+    def query(self, queries: jax.Array, k: int = 50, *,
+              r_min: float | None = None, M: int = 8,
+              mode: str = "leaf", max_rounds: int = 48):
+        if r_min is None:
+            from repro.core import estimate_r_min
+            r_min = estimate_r_min(
+                jax.device_get(self.data)[: min(2048, self.n_global)],
+                queries, k, self.params.c)
+        cfg = QueryConfig(k=k, M=M, r_min=r_min, mode=mode,
+                          max_rounds=max_rounds)
+        return query_pdet(self, queries, cfg)
+
+
+def _shard_spec(mesh: Mesh, axes: tuple[str, ...]):
+    data_p = P(axes)
+    forest_p = DEForest(
+        point_ids=P(None, axes), proj_sorted=P(None, axes, None),
+        codes_sorted=P(None, axes, None), valid=P(None, axes),
+        leaf_lo=P(None, axes, None), leaf_hi=P(None, axes, None),
+        leaf_valid=P(None, axes), breakpoints=P(),
+        n=0, leaf_size=0)
+    return data_p, forest_p
+
+
+def build_pdet(data: jax.Array, key: jax.Array, params: LSHParams,
+               mesh: Mesh, axes: tuple[str, ...] = ("data",), *,
+               Nr: int = enc.DEFAULT_NR, leaf_size: int = 64,
+               bp_rounds: int = 8) -> PDETLSH:
+    """Build the distributed index.  ``data`` (n, d); n divisible by the
+    product of mesh axis sizes in ``axes`` (pad upstream)."""
+    n, d = data.shape
+    n_shards = 1
+    for a in axes:
+        n_shards *= mesh.shape[a]
+    assert n % n_shards == 0, (n, n_shards)
+    A = hashing.sample_projections(key, d, params.K, params.L)
+
+    data_p, forest_p = _shard_spec(mesh, axes)
+    forest_specs = dict(point_ids=P(None, axes),
+                        proj_sorted=P(None, axes, None),
+                        codes_sorted=P(None, axes, None),
+                        valid=P(None, axes),
+                        leaf_lo=P(None, axes, None),
+                        leaf_hi=P(None, axes, None),
+                        leaf_valid=P(None, axes),
+                        breakpoints=P())
+
+    def build(data_local, A):
+        f = _build_local_forest(data_local, A, params.K, params.L, Nr,
+                                leaf_size, bp_rounds, n, axes)
+        return dict(point_ids=f.point_ids, proj_sorted=f.proj_sorted,
+                    codes_sorted=f.codes_sorted, valid=f.valid,
+                    leaf_lo=f.leaf_lo, leaf_hi=f.leaf_hi,
+                    leaf_valid=f.leaf_valid, breakpoints=f.breakpoints)
+
+    built = shard_map(
+        build, mesh=mesh, in_specs=(data_p, P()),
+        out_specs=forest_specs, check_vma=False)(data, A)
+    n_local = n // n_shards
+    forest = DEForest(n=n_local, leaf_size=leaf_size, **built)
+    return PDETLSH(params=params, A=A, forest=forest, data=data, mesh=mesh,
+                   axes=tuple(axes), n_global=n)
+
+
+def query_pdet(index: PDETLSH, queries: jax.Array, cfg: QueryConfig):
+    """Batched distributed c^2-k-ANN (queries replicated; Theorem 3 path)."""
+    mesh, axes = index.mesh, index.axes
+    n_global = index.n_global
+    n_shards = 1
+    for a in axes:
+        n_shards *= mesh.shape[a]
+    n_local = n_global // n_shards
+
+    data_p, _ = _shard_spec(mesh, axes)
+    forest_specs = DEForest(
+        point_ids=P(None, axes), proj_sorted=P(None, axes, None),
+        codes_sorted=P(None, axes, None), valid=P(None, axes),
+        leaf_lo=P(None, axes, None), leaf_hi=P(None, axes, None),
+        leaf_valid=P(None, axes), breakpoints=P(), n=index.forest.n,
+        leaf_size=index.forest.leaf_size)
+
+    def run(data_local, forest, A, queries):
+        # shard offset from the mesh position along the data axes
+        # (row-major over ``axes`` — matches jnp.reshape sharding order)
+        idx = jnp.asarray(0, jnp.int32)
+        for a in axes:
+            idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+        offset = idx * n_local
+
+        def one(q):
+            gids, gd, rnd = _knn_local(data_local, forest, A, index.params,
+                                       q, cfg, n_global, offset, axes)
+            mids, md = _merge_global_topk(gids, gd, cfg.k, axes)
+            return mids, md, rnd
+
+        return jax.vmap(one)(queries)
+
+    in_specs = (data_p, forest_specs, P(), P())
+    out_specs = (P(), P(), P())
+    gids, gdists, rounds = shard_map(
+        run, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_vma=False)(index.data, index.forest, index.A, queries)
+    return gids, gdists, rounds
+
+
+# ---------------------------------------------------------------------------
+# Serial reference: identical sharded semantics on one device (for tests)
+# ---------------------------------------------------------------------------
+
+def serial_reference_build(data: jax.Array, key: jax.Array,
+                           params: LSHParams, n_shards: int, *,
+                           Nr: int = enc.DEFAULT_NR, leaf_size: int = 64,
+                           bp_rounds: int = 8):
+    """vmap-over-shards build with summed (\"psum\") histogram counts."""
+    n, d = data.shape
+    assert n % n_shards == 0
+    A = hashing.sample_projections(key, d, params.K, params.L)
+    shards = data.reshape(n_shards, n // n_shards, d)
+    proj = jax.vmap(lambda x: hashing.project(x, A))(shards)
+
+    # distributed_breakpoints with psum == sum over the shard axis
+    lo = jnp.min(proj, axis=(0, 1))
+    hi = jnp.max(proj, axis=(0, 1))
+    t = jnp.arange(Nr + 1, dtype=jnp.float32) / Nr
+    edges = lo[:, None] + (hi - lo)[:, None] * t[None, :]
+    for _ in range(bp_rounds):
+        counts = sum(enc.histogram_counts(proj[s], edges)
+                     for s in range(n_shards))
+        edges = enc.refine_breakpoints_from_counts(edges, counts, n)
+
+    K, L = params.K, params.L
+
+    def build_one(proj_local):
+        codes = enc.encode(proj_local, edges)
+        nl = proj_local.shape[0]
+        proj_t = proj_local.reshape(nl, L, K).transpose(1, 0, 2)
+        codes_t = codes.reshape(nl, L, K).transpose(1, 0, 2)
+        bp_t = edges.reshape(L, K, Nr + 1)
+        return jax.vmap(functools.partial(build_tree, leaf_size=leaf_size))(
+            proj_t, codes_t, bp_t)
+
+    parts = jax.vmap(build_one)(proj)      # leading shard axis on everything
+    return A, parts, edges
+
+
+def serial_reference_query(data: jax.Array, A: jax.Array, parts: dict,
+                           params: LSHParams, queries: jax.Array,
+                           cfg: QueryConfig, n_shards: int, leaf_size: int):
+    """Runs _knn_local per shard with psum == sum across shards, serially."""
+    from repro.core.query import range_query_round, exact_distances
+
+    n, d = data.shape
+    n_local = n // n_shards
+    shards = data.reshape(n_shards, n_local, d)
+    forests = [
+        DEForest(n=n_local, leaf_size=leaf_size,
+                 **{k: v[s] for k, v in parts.items()})
+        for s in range(n_shards)
+    ]
+    K, L = params.K, params.L
+    out_ids, out_d = [], []
+    for q in queries:
+        q_proj = (q @ A).reshape(L, K)
+        M = min(cfg.M, forests[0].n_leaves)
+        round_cap = L * M * leaf_size
+        cap = min(int(params.beta * n) + cfg.k + round_cap,
+                  n_local + round_cap)
+        bufs = [(jnp.full((cap,), n_local, jnp.int32),
+                 jnp.full((cap,), jnp.inf)) for _ in range(n_shards)]
+        r = cfg.r_min
+        for _ in range(cfg.max_rounds):
+            counts, withins = [], []
+            for s in range(n_shards):
+                ids_b, d_b = bufs[s]
+                new_ids, ok = range_query_round(
+                    forests[s], q_proj, params.epsilon * r, cfg.M,
+                    mode=cfg.mode)
+                new_d = exact_distances(shards[s], q, new_ids, ok)
+                new_ids = jnp.where(ok, new_ids, n_local)
+                ids_b, d_b, cnt = _merge_candidates(n_local, ids_b, d_b,
+                                                    new_ids, new_d)
+                bufs[s] = (ids_b, d_b)
+                counts.append(float(cnt))
+                withins.append(float(jnp.sum(d_b <= params.c * r)))
+            if sum(counts) >= params.beta * n + cfg.k or \
+                    sum(withins) >= cfg.k:
+                break
+            r = r * params.c
+        # merge per-shard top-k
+        all_ids, all_d = [], []
+        for s in range(n_shards):
+            ids_b, d_b = bufs[s]
+            kk = min(cfg.k, cap)
+            negd, sel = jax.lax.top_k(-d_b, kk)
+            lids = ids_b[sel]
+            all_ids.append(jnp.where(lids < n_local, lids + s * n_local, n))
+            all_d.append(-negd)
+        cat_i = jnp.concatenate(all_ids)
+        cat_d = jnp.concatenate(all_d)
+        negd, sel = jax.lax.top_k(-cat_d, cfg.k)
+        out_ids.append(cat_i[sel])
+        out_d.append(-negd)
+    return jnp.stack(out_ids), jnp.stack(out_d)

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+Per kernel: ``<name>.py`` holds the ``pl.pallas_call`` + BlockSpec VMEM
+tiling; ``ops.py`` is the jit'd public wrapper (padding + impl dispatch);
+``ref.py`` the pure-jnp oracle each kernel is validated against
+(interpret mode on CPU; compiled Mosaic on TPU).
+
+  lsh_project      — hashing matmul (MXU), the indexing-phase hot spot
+  encode_bins      — iSAX region assignment (VPU compare-accumulate)
+  leaf_bounds      — DE-Tree LB/UB pruning distances (fused VPU)
+  l2_rerank        — exact-distance rerank (MXU + fused norms)
+  flash_attention  — online-softmax attention for the serving path
+"""

@@ -1,0 +1,106 @@
+"""Pallas kernel: FlashAttention forward (online softmax, VMEM-tiled).
+
+Used by the serving path (prefill/decode exact attention and the exact
+re-scoring step of DET-attention).  Never materializes the (sq, sk) score
+matrix: grid = (batch*heads, sq/block_q, sk/block_k) with the k-dimension
+iterated sequentially ("arbitrary" semantics) while running max / sum /
+accumulator tiles persist in VMEM scratch.
+
+MXU alignment: block_q/block_k default to 128; dh is padded to a multiple of
+128 by the ops.py wrapper.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            sk: int, block_q: int, block_k: int, nk: int, causal: bool,
+            scale: float):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full(m_scr.shape, NEG_INF, jnp.float32)
+        l_scr[...] = jnp.zeros(l_scr.shape, jnp.float32)
+        acc_scr[...] = jnp.zeros(acc_scr.shape, jnp.float32)
+
+    q = q_ref[0].astype(jnp.float32) * scale            # (bq, dh)
+    k = k_ref[0].astype(jnp.float32)                    # (bk, dh)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (bq, bk)
+
+    k_pos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = k_pos < sk                                    # padding
+    if causal:
+        q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        mask = mask & (k_pos <= q_pos)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                                  # (bq, 1)
+    m_cur = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur)                               # (bq, bk)
+    l_scr[...] = l_scr[...] * alpha + p.sum(axis=1, keepdims=True)
+    v = v_ref[0].astype(jnp.float32)
+    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_scr[...] = acc_scr[...] * alpha + pv
+    m_scr[...] = m_cur
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = False, scale: float | None = None,
+                    block_q: int = 128, block_k: int = 128, sk_real: int = 0,
+                    interpret: bool = False) -> jax.Array:
+    """q (bh, sq, dh), k/v (bh, sk, dh) -> (bh, sq, dh).
+
+    sq, sk, dh must be block-aligned (ops.py pads); ``sk_real`` masks key
+    padding (0 = no padding).
+    """
+    bh, sq, dh = q.shape
+    sk = k.shape[1]
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, sk)
+    nq, nk = sq // block_q, sk // block_k
+    scale = scale if scale is not None else 1.0 / (dh ** 0.5)
+    sk_real = sk_real or sk
+
+    kern = functools.partial(_kernel, sk=sk_real, block_q=block_q,
+                             block_k=block_k, nk=nk, causal=causal,
+                             scale=scale)
+    kwargs = {}
+    if not interpret:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+    return pl.pallas_call(
+        kern,
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, dh), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, dh), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dh), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, dh), jnp.float32),
+        ],
+        interpret=interpret,
+        **kwargs,
+    )(q, k, v)

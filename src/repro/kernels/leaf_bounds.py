@@ -1,0 +1,81 @@
+"""Pallas kernel: DE-Tree node LB/UB distances (paper Fig. 5).
+
+For each leaf with per-dimension occupied-region interval [lo, hi], computes
+the lower/upper bound Euclidean distances between a projected query and any
+point in the leaf.  This is the pruning hot loop of the range query: one
+evaluation per (query, leaf) pair.
+
+TPU formulation: the breakpoint-coordinate gather (bp[k, lo[i,k]]) is
+re-expressed as a select-accumulate sweep over the Nr+1 edges so the whole
+computation is dense VPU math on VMEM tiles — no scatter/gather.  The edge
+sweep, subtraction, clamp, square, row-sum and sqrt are all fused in one
+kernel pass over a (block_l, K) leaf tile.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, lo_ref, hi_ref, valid_ref, bp_ref, lb_ref, ub_ref, *,
+            E: int):
+    lo = lo_ref[...]                                   # (bl, K) int32
+    hi = hi_ref[...] + 1                               # upper edge index
+    q = q_ref[...]                                     # (1, K)
+
+    def body(b, carry):
+        b_lo, b_hi = carry
+        edge = bp_ref[:, b]                            # (K,)
+        b_lo = jnp.where(lo == b, edge[None, :], b_lo)
+        b_hi = jnp.where(hi == b, edge[None, :], b_hi)
+        return b_lo, b_hi
+
+    zeros = jnp.zeros(lo.shape, jnp.float32)
+    b_lo, b_hi = jax.lax.fori_loop(0, E, body, (zeros, zeros))
+
+    d_lo = b_lo - q
+    d_hi = q - b_hi
+    lb_dim = jnp.maximum(jnp.maximum(d_lo, d_hi), 0.0)
+    ub_dim = jnp.maximum(jnp.abs(q - b_lo), jnp.abs(q - b_hi))
+    lb = jnp.sqrt(jnp.sum(lb_dim * lb_dim, axis=1))
+    ub = jnp.sqrt(jnp.sum(ub_dim * ub_dim, axis=1))
+    valid = valid_ref[...] != 0
+    big = jnp.float32(jnp.inf)
+    lb_ref[...] = jnp.where(valid, lb, big)
+    ub_ref[...] = jnp.where(valid, ub, big)
+
+
+def leaf_bounds(q: jax.Array, leaf_lo: jax.Array, leaf_hi: jax.Array,
+                leaf_valid: jax.Array, breakpoints: jax.Array, *,
+                block_l: int = 256, interpret: bool = False
+                ) -> tuple[jax.Array, jax.Array]:
+    """q (K,), leaf_lo/hi (nl, K) int32, valid (nl,), bp (K, Nr+1)
+    -> (lb, ub) each (nl,) f32.  nl must be block-aligned (ops.py pads)."""
+    nl, K = leaf_lo.shape
+    E = breakpoints.shape[1]
+    assert nl % block_l == 0, (nl, block_l)
+    grid = (nl // block_l,)
+    lb, ub = pl.pallas_call(
+        lambda qr, lo, hi, va, bp, lbr, ubr: _kernel(
+            qr, lo, hi, va, bp, lbr, ubr, E=E),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, K), lambda i: (0, 0)),
+            pl.BlockSpec((block_l, K), lambda i: (i, 0)),
+            pl.BlockSpec((block_l, K), lambda i: (i, 0)),
+            pl.BlockSpec((block_l,), lambda i: (i,)),
+            pl.BlockSpec((K, E), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_l,), lambda i: (i,)),
+            pl.BlockSpec((block_l,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nl,), jnp.float32),
+            jax.ShapeDtypeStruct((nl,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q[None, :], leaf_lo, leaf_hi, leaf_valid.astype(jnp.int32), breakpoints)
+    return lb, ub

@@ -1,0 +1,110 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+Each wrapper pads inputs to hardware-aligned block multiples, dispatches to
+the Pallas kernel (TPU) / interpret mode (CPU tests) / the pure-jnp reference
+(dry-run lowering), and slices the padding back off.
+
+Implementation selection:
+  * explicit ``interpret=True``  -> Pallas in interpret mode (CPU-correct);
+  * backend == 'tpu'             -> compiled Pallas kernel;
+  * otherwise                    -> ``repro.kernels.ref`` oracle (pure XLA).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels import lsh_project as _proj
+from repro.kernels import encode_bins as _enc
+from repro.kernels import leaf_bounds as _lb
+from repro.kernels import l2_rerank as _l2
+from repro.kernels import flash_attention as _fa
+
+
+def _use_pallas(interpret: bool) -> bool:
+    return interpret or jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int, value=0.0) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_n"))
+def lsh_project(x, a, *, interpret: bool = False, block_n: int = 256):
+    if not _use_pallas(interpret):
+        return _ref.lsh_project(x, a)
+    n, d = x.shape
+    m = a.shape[1]
+    xp = _pad_to(_pad_to(x, 0, block_n), 1, 128)
+    ap = _pad_to(_pad_to(a, 0, 128), 1, 128)
+    out = _proj.lsh_project(xp, ap, block_n=block_n, interpret=interpret)
+    return out[:n, :m]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_n"))
+def encode_bins(coords, breakpoints, *, interpret: bool = False,
+                block_n: int = 512):
+    if not _use_pallas(interpret):
+        return _ref.encode_bins(coords, breakpoints)
+    n = coords.shape[0]
+    cp = _pad_to(coords, 0, block_n)
+    out = _enc.encode_bins(cp, breakpoints, block_n=block_n,
+                           interpret=interpret)
+    return out[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_l"))
+def leaf_bounds(q, leaf_lo, leaf_hi, leaf_valid, breakpoints, *,
+                interpret: bool = False, block_l: int = 256):
+    if not _use_pallas(interpret):
+        return _ref.leaf_bounds(q, leaf_lo, leaf_hi, leaf_valid, breakpoints)
+    nl = leaf_lo.shape[0]
+    lo = _pad_to(leaf_lo, 0, block_l)
+    hi = _pad_to(leaf_hi, 0, block_l)
+    va = _pad_to(leaf_valid, 0, block_l, value=False)
+    lb, ub = _lb.leaf_bounds(q, lo, hi, va, breakpoints, block_l=block_l,
+                             interpret=interpret)
+    return lb[:nl], ub[:nl]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_q", "block_c"))
+def l2_rerank(q, c, *, interpret: bool = False, block_q: int = 128,
+              block_c: int = 256):
+    if not _use_pallas(interpret):
+        return _ref.l2_rerank(q, c)
+    b, m = q.shape[0], c.shape[0]
+    qp = _pad_to(q, 0, block_q)
+    cp = _pad_to(c, 0, block_c)
+    out = _l2.l2_rerank(qp, cp, block_q=block_q, block_c=block_c,
+                        interpret=interpret)
+    return out[:b, :m]
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "scale", "interpret",
+                                             "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal: bool = False,
+                    scale: float | None = None, interpret: bool = False,
+                    block_q: int = 128, block_k: int = 128):
+    """q (b, h, sq, dh), k/v (b, h, sk, dh) -> (b, h, sq, dh)."""
+    if not _use_pallas(interpret):
+        return _ref.flash_attention(q, k, v, causal=causal, scale=scale)
+    b, h, sq, dh = q.shape
+    sk = k.shape[2]
+    scale = scale if scale is not None else 1.0 / (dh ** 0.5)
+    qp = _pad_to(_pad_to(q.reshape(b * h, sq, dh), 1, block_q), 2, 128)
+    kp = _pad_to(_pad_to(k.reshape(b * h, sk, dh), 1, block_k), 2, 128)
+    vp = _pad_to(_pad_to(v.reshape(b * h, sk, dh), 1, block_k), 2, 128)
+    out = _fa.flash_attention(qp, kp, vp, causal=causal, scale=scale,
+                              block_q=block_q, block_k=block_k, sk_real=sk,
+                              interpret=interpret)
+    return out[:, :sq, :dh].reshape(b, h, sq, dh)

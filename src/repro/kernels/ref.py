@@ -1,0 +1,127 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the semantics of record: each kernel's test sweeps shapes/dtypes
+and asserts allclose against the function here.  They are also the
+implementations the multi-pod dry-run lowers (the CPU backend cannot compile
+Mosaic/TPU custom calls), so they are written to be XLA-memory-sane
+(blockwise attention never materializes the full score matrix).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def lsh_project(x: jax.Array, a: jax.Array) -> jax.Array:
+    """(n, d) @ (d, m) -> (n, m) in f32 accumulation."""
+    return jnp.dot(x, a, preferred_element_type=jnp.float32)
+
+
+def encode_bins(coords: jax.Array, breakpoints: jax.Array) -> jax.Array:
+    """coords (n, D), breakpoints (D, Nr+1) -> region ids (n, D) int32.
+
+    Region b = #(internal breakpoints <= x), clipped to [0, Nr-1]; identical
+    to ``repro.core.encoding.encode``.
+    """
+    D, E = breakpoints.shape
+    Nr = E - 1
+    inner = breakpoints[:, 1:Nr]                         # (D, Nr-1)
+    ge = coords[:, :, None] >= inner[None, :, :]         # (n, D, Nr-1)
+    return jnp.clip(ge.sum(-1), 0, Nr - 1).astype(jnp.int32)
+
+
+def leaf_bounds(q: jax.Array, leaf_lo: jax.Array, leaf_hi: jax.Array,
+                leaf_valid: jax.Array,
+                breakpoints: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Fig. 5 LB/UB.  q (K,), leaf_lo/hi (nl, K) int32, bp (K, Nr+1)."""
+    E = breakpoints.shape[1]
+
+    def gather(idx):
+        idx = jnp.clip(idx, 0, E - 1)
+        return jax.vmap(lambda bk, ik: bk[ik], in_axes=(0, 1), out_axes=1)(
+            breakpoints, idx)
+
+    b_lo = gather(leaf_lo)
+    b_hi = gather(leaf_hi + 1)
+    d_lo = b_lo - q[None, :]
+    d_hi = q[None, :] - b_hi
+    lb_dim = jnp.maximum(jnp.maximum(d_lo, d_hi), 0.0)
+    ub_dim = jnp.maximum(jnp.abs(q[None, :] - b_lo), jnp.abs(q[None, :] - b_hi))
+    lb = jnp.sqrt((lb_dim * lb_dim).sum(-1))
+    ub = jnp.sqrt((ub_dim * ub_dim).sum(-1))
+    lb = jnp.where(leaf_valid, lb, jnp.inf)
+    ub = jnp.where(leaf_valid, ub, jnp.inf)
+    return lb, ub
+
+
+def l2_rerank(q: jax.Array, c: jax.Array) -> jax.Array:
+    """Exact Euclidean distances: q (b, d), c (m, d) -> (b, m)."""
+    qq = (q.astype(jnp.float32) ** 2).sum(-1, keepdims=True)      # (b, 1)
+    cc = (c.astype(jnp.float32) ** 2).sum(-1)[None, :]            # (1, m)
+    qc = jnp.dot(q, c.T, preferred_element_type=jnp.float32)
+    return jnp.sqrt(jnp.maximum(qq - 2.0 * qc + cc, 0.0))
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = False, scale: float | None = None,
+                    block_k: int = 512) -> jax.Array:
+    """Blockwise (online-softmax) attention — never materializes (sq, sk).
+
+    q (b, h, sq, dh); k/v (b, h, sk, dh).  This is both the oracle for the
+    Pallas kernel and the XLA implementation the dry-run compiles.
+    """
+    b, h, sq, dh = q.shape
+    sk = k.shape[2]
+    scale = scale if scale is not None else 1.0 / (dh ** 0.5)
+    qf = (q * scale).astype(jnp.float32)
+    nblk = -(-sk // block_k)
+    pad = nblk * block_k - sk
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kb = kp.reshape(b, h, nblk, block_k, dh)
+    vb = vp.reshape(b, h, nblk, block_k, dh)
+    kpos = jnp.arange(nblk * block_k).reshape(nblk, block_k)
+    qpos = jnp.arange(sq)
+
+    def step(carry, inp):
+        m_prev, l_prev, acc = carry
+        kblk, vblk, kp_blk = inp                     # (b,h,bk,dh) etc.
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, kblk.astype(jnp.float32))
+        mask = kp_blk[None, :] < sk                  # padding
+        if causal:
+            mask = mask & (kp_blk[None, :] <= qpos[:, None])
+        s = jnp.where(mask[None, None, :, :], s, -jnp.inf)
+        m_cur = jnp.maximum(m_prev, s.max(-1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[..., None])
+        l_cur = l_prev * alpha + p.sum(-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bhkd->bhqd", p, vblk.astype(jnp.float32))
+        return (m_cur, l_cur, acc), None
+
+    m0 = jnp.full((b, h, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    acc0 = jnp.zeros((b, h, sq, dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, acc0),
+        (kb.transpose(2, 0, 1, 3, 4), vb.transpose(2, 0, 1, 3, 4), kpos))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.astype(q.dtype)
+
+
+def attention_reference(q, k, v, *, causal=False, scale=None):
+    """Naive softmax attention (materializes scores) — oracle's oracle."""
+    b, h, sq, dh = q.shape
+    sk = k.shape[2]
+    scale = scale if scale is not None else 1.0 / (dh ** 0.5)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.arange(sk)[None, :] <= jnp.arange(sq)[:, None]
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,257 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# (dry-run only) reduced-device override for CI/tests — must happen before
+# jax initializes, hence before any other import.
+if os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["REPRO_DRYRUN_DEVICES"])
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x input-shape x mesh) cell this lowers + compiles
+the appropriate step (train_step / prefill_step / decode_step) against
+ShapeDtypeStruct inputs (no allocation), records
+
+  * memory_analysis()      — per-device bytes (args/outputs/temps/aliased),
+  * cost_analysis()        — per-device HLO FLOPs & bytes accessed
+                             (NOTE: XLA counts while-loop bodies ONCE; the
+                             roofline derivation corrects for trip counts),
+  * the collective schedule — per-kind byte totals parsed from the compiled
+    HLO, split into top-level vs while-body (body collectives execute
+    layers x accum times; see benchmarks/roofline.py),
+
+and writes one JSON record per cell (incremental; --skip-existing resumes).
+
+Usage:
+  python -m repro.launch.dryrun --arch all --shape all --mesh both \
+      --out experiments/dryrun.json
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, list_archs
+from repro.configs.base import ALL_SHAPES
+from repro.launch.mesh import (HBM_BYTES, make_mesh, make_production_mesh)
+from repro.launch.specs import (apply_mesh_padding, batch_shardings)
+from repro.sharding.rules import ShardingRules, param_shardings, use_rules
+from repro.train.train_step import (abstract_opt_state, abstract_params,
+                                    batch_specs, make_decode_step,
+                                    make_prefill_step, make_train_step)
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "c64": 8, "c128": 16}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(ty: str) -> int:
+    m = re.match(r"(\w+)\[([0-9,]*)\]", ty)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    nbytes = _DTYPE_BYTES.get(dt, 4)
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * nbytes
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-kind operand bytes, split by top-level ('entry') vs while bodies.
+
+    HLO computations appear as '%name (args) -> ty {' blocks; collectives
+    inside non-entry computations are (conservatively) attributed to loop
+    bodies.  Operand types are parsed from the call parentheses.
+    """
+    out = {k: {"entry": 0, "body": 0} for k in _COLLECTIVES}
+    current = "entry"
+    is_entry = True
+    for line in hlo_text.splitlines():
+        mm = re.match(r"\s*(ENTRY\s+)?%?([\w.\-]+)\s*\([^)]*\)\s*->.*\{", line)
+        if mm:
+            is_entry = bool(mm.group(1))
+            current = mm.group(2)
+            continue
+        for kind in _COLLECTIVES:
+            # matches: %x = ty kind(ty %a, ty %b), ...  (incl. -start ops)
+            m = re.search(kind + r"(?:-start)?\(([^)]*)\)", line)
+            if m and ("=" in line):
+                ops = re.findall(r"\w+\[[0-9,]*\]", m.group(1))
+                nbytes = sum(_shape_bytes(t) for t in ops)
+                if nbytes == 0:
+                    # operand types not printed: fall back to result type
+                    res = re.search(r"=\s*\(?([\w]+\[[0-9,]*\])", line)
+                    if res:
+                        nbytes = _shape_bytes(res.group(1))
+                out[kind]["entry" if is_entry else "body"] += nbytes
+    return out
+
+
+def _mem_record(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    rec = {}
+    for f in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        rec[f] = int(getattr(ma, f, 0) or 0)
+    rec["live_bytes"] = (rec["argument_size_in_bytes"]
+                         + rec["output_size_in_bytes"]
+                         + rec["temp_size_in_bytes"]
+                         - rec["alias_size_in_bytes"])
+    rec["fits_16GiB"] = rec["live_bytes"] <= HBM_BYTES
+    return rec
+
+
+def _cost_record(compiled) -> dict:
+    ca = compiled.cost_analysis()
+    return {"hlo_flops_once": float(ca.get("flops", 0.0)),
+            "hlo_bytes_once": float(ca.get("bytes accessed", 0.0))}
+
+
+def run_cell(arch: str, shape_name: str, mesh, mesh_tag: str) -> dict:
+    shape = ALL_SHAPES[shape_name]
+    cfg0 = get_config(arch)
+    rules = ShardingRules(mesh, {
+        "residual_seq": "model" if cfg0.parallel.seq_parallel else None})
+    cfg = apply_mesh_padding(cfg0, rules)
+    rec = {"arch": arch, "shape": shape_name, "kind": shape.kind,
+           "mesh": mesh_tag, "devices": int(mesh.size),
+           "padded_heads": cfg.n_heads != cfg0.n_heads,
+           "n_heads": cfg.n_heads, "vocab_size": cfg.vocab_size}
+
+    t0 = time.time()
+    with use_rules(rules), mesh:
+        params_sds = abstract_params(cfg)
+        p_sh = param_shardings(rules, params_sds)
+        if shape.kind == "train":
+            step = make_train_step(cfg, grad_shardings=p_sh)
+            opt_sds = abstract_opt_state(cfg)
+            o_sh = param_shardings(rules, opt_sds)
+            b_sds = batch_specs(cfg, shape)
+            b_sh = batch_shardings(rules, b_sds)
+            fn = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                         out_shardings=(p_sh, o_sh, None),
+                         donate_argnums=(0, 1))
+            lowered = fn.lower(params_sds, opt_sds, b_sds)
+        elif shape.kind == "prefill":
+            step = make_prefill_step(cfg)
+            b_sds = batch_specs(cfg, shape)
+            b_sh = batch_shardings(rules, b_sds)
+            out_sds = jax.eval_shape(step, params_sds, b_sds)
+            out_sh = (None, batch_shardings(rules, out_sds[1]), None)
+            fn = jax.jit(step, in_shardings=(p_sh, b_sh),
+                         out_shardings=out_sh)
+            lowered = fn.lower(params_sds, b_sds)
+        else:  # decode
+            step = make_decode_step(cfg)
+            d_sds = batch_specs(cfg, shape)
+            tok_sh = batch_shardings(rules, d_sds["token"])
+            cache_sh = batch_shardings(rules, d_sds["cache"])
+            fn = jax.jit(step,
+                         in_shardings=(p_sh, tok_sh, cache_sh, None),
+                         out_shardings=(None, cache_sh),
+                         donate_argnums=(2,))
+            lowered = fn.lower(params_sds, d_sds["token"], d_sds["cache"],
+                               d_sds["length"])
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+
+    rec["memory"] = _mem_record(compiled)
+    rec["cost"] = _cost_record(compiled)
+    rec["collectives"] = collective_bytes(compiled.as_text())
+    print(compiled.memory_analysis())
+    ca = compiled.cost_analysis()
+    print({k: ca[k] for k in ("flops", "bytes accessed") if k in ca})
+    return rec
+
+
+def cells_for(arch: str):
+    cfg = get_config(arch)
+    return list(cfg.shape_names)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both", "custom"])
+    ap.add_argument("--mesh-shape", default="",
+                    help="custom mesh, e.g. '4,2:data,model'")
+    ap.add_argument("--out", default="experiments/dryrun.json")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args(argv)
+
+    archs = list_archs() if args.arch == "all" else args.arch.split(",")
+    meshes = []
+    if args.mesh == "custom":
+        shp, axs = args.mesh_shape.split(":")
+        meshes.append((f"custom_{shp}",
+                       make_mesh([int(x) for x in shp.split(",")],
+                                 axs.split(","))))
+    else:
+        if args.mesh in ("single", "both"):
+            meshes.append(("pod_16x16", make_production_mesh()))
+        if args.mesh in ("multi", "both"):
+            meshes.append(("multipod_2x16x16",
+                           make_production_mesh(multi_pod=True)))
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    # always merge into an existing results file (reruns replace their own
+    # cells); --skip-existing additionally skips cells already done OK
+    results = []
+    if os.path.exists(args.out):
+        results = json.load(open(args.out))
+    done = set()
+    if args.skip_existing:
+        done = {(r["arch"], r["shape"], r["mesh"]) for r in results
+                if "error" not in r}
+
+    n_fail = 0
+    for mesh_tag, mesh in meshes:
+        for arch in archs:
+            shapes = (cells_for(arch) if args.shape == "all"
+                      else args.shape.split(","))
+            for shape_name in shapes:
+                if shape_name not in cells_for(arch):
+                    continue
+                key = (arch, shape_name, mesh_tag)
+                if key in done:
+                    continue
+                print(f"=== {arch} x {shape_name} x {mesh_tag} ===",
+                      flush=True)
+                try:
+                    rec = run_cell(arch, shape_name, mesh, mesh_tag)
+                except Exception as e:
+                    traceback.print_exc()
+                    rec = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_tag, "error": str(e)[:2000]}
+                    n_fail += 1
+                results = [r for r in results
+                           if (r["arch"], r["shape"], r["mesh"]) != key]
+                results.append(rec)
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+                print(f"--- done ({rec.get('compile_s', '?')}s compile, "
+                      f"err={'error' in rec})", flush=True)
+    print(f"dry-run complete: {len(results)} cells, {n_fail} failures")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,154 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+if os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["REPRO_DRYRUN_DEVICES"])
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+"""PDET-LSH dry-run: lower + compile the paper's own workload (distributed
+index build and batched c^2-k-ANN query) on the production meshes.
+
+Scenario sized for a 500M-point deployment (Table II scale: SPACEV500M,
+d=100) sharded over the (pod,) data axes; queries replicated; candidate
+rerank local to each shard; global top-k merge.
+
+  PYTHONPATH=src python -m repro.launch.dryrun_lsh --mesh both
+"""
+
+import argparse
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.distributed import build_pdet, query_pdet, PDETLSH, DEForest
+from repro.core.query import QueryConfig
+from repro.core.theory import derive_params
+from repro.launch.dryrun import _cost_record, _mem_record, collective_bytes
+from repro.launch.mesh import make_mesh, make_production_mesh
+
+
+def run(mesh, mesh_tag, n=500_000_000, d=100, nq=64, k=50):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    params = derive_params(K=4, c=1.5, L=16, beta_override=0.1)
+    # the index shards over every mesh axis (pure data-parallel
+    # storage; the model axis would otherwise idle)
+    axes = tuple(mesh.shape.keys())
+    n_shards = 1
+    for a in axes:
+        n_shards *= mesh.shape[a]
+    n = (n // n_shards) * n_shards
+
+    data_sds = jax.ShapeDtypeStruct((n, d), jnp.float32)
+    data_sh = NamedSharding(mesh, P(axes))
+    key_sds = jax.ShapeDtypeStruct((), jnp.uint32)
+
+    rec = {"workload": "pdet_build", "mesh": mesh_tag, "n": n, "d": d,
+           "devices": int(mesh.size)}
+    t0 = time.time()
+
+    def build_step(data):
+        idx = build_pdet(data, jax.random.key(0), params, mesh, axes=axes,
+                         leaf_size=256, bp_rounds=8)
+        return (idx.forest.point_ids, idx.forest.leaf_lo,
+                idx.forest.leaf_hi, idx.forest.breakpoints)
+
+    lowered = jax.jit(build_step, in_shardings=(data_sh,)).lower(data_sds)
+    compiled = lowered.compile()
+    rec["lower_compile_s"] = round(time.time() - t0, 2)
+    rec["memory"] = _mem_record(compiled)
+    rec["cost"] = _cost_record(compiled)
+    rec["collectives"] = collective_bytes(compiled.as_text())
+    yield rec
+
+    # query step: abstract index pieces with build-output shardings
+    forest_specs = dict(point_ids=P(None, axes),
+                        proj_sorted=P(None, axes, None),
+                        codes_sorted=P(None, axes, None),
+                        valid=P(None, axes), leaf_lo=P(None, axes, None),
+                        leaf_hi=P(None, axes, None),
+                        leaf_valid=P(None, axes), breakpoints=P())
+
+    rec2 = {"workload": "pdet_query", "mesh": mesh_tag, "n": n, "d": d,
+            "nq": nq, "k": k, "devices": int(mesh.size)}
+    cfg = QueryConfig(k=k, M=8, r_min=1.0, max_rounds=16)
+    n_local = n // n_shards
+    leaf_size = 256
+    n_leaves = -(-n_local // leaf_size)
+    n_pad = n_leaves * leaf_size
+    sds = jax.ShapeDtypeStruct
+    K, L = params.K, params.L
+    forest_sds = DEForest(
+        point_ids=sds((L, n_shards * n_pad), jnp.int32),
+        proj_sorted=sds((L, n_shards * n_pad, K), jnp.float32),
+        codes_sorted=sds((L, n_shards * n_pad, K), jnp.int32),
+        valid=sds((L, n_shards * n_pad), jnp.bool_),
+        leaf_lo=sds((L, n_shards * n_leaves, K), jnp.int32),
+        leaf_hi=sds((L, n_shards * n_leaves, K), jnp.int32),
+        leaf_valid=sds((L, n_shards * n_leaves), jnp.bool_),
+        breakpoints=sds((L, K, 257), jnp.float32),
+        n=n_local, leaf_size=leaf_size)
+    q_sds = sds((nq, d), jnp.float32)
+
+    t0 = time.time()
+
+    def query_step(data, forest, A, queries):
+        idx = PDETLSH(params=params, A=A, forest=forest, data=data,
+                      mesh=mesh, axes=axes, n_global=n)
+        return query_pdet(idx, queries, cfg)
+
+    f_sh = jax.tree.map(
+        lambda spec: NamedSharding(mesh, spec), forest_specs)
+    forest_sh = DEForest(n=n_local, leaf_size=leaf_size, **f_sh)
+    lowered = jax.jit(query_step,
+                      in_shardings=(data_sh, forest_sh,
+                                    NamedSharding(mesh, P()),
+                                    NamedSharding(mesh, P()))).lower(
+        data_sds, forest_sds, sds((d, L * K), jnp.float32), q_sds)
+    compiled = lowered.compile()
+    rec2["lower_compile_s"] = round(time.time() - t0, 2)
+    rec2["memory"] = _mem_record(compiled)
+    rec2["cost"] = _cost_record(compiled)
+    rec2["collectives"] = collective_bytes(compiled.as_text())
+    yield rec2
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both", "custom"])
+    ap.add_argument("--mesh-shape", default="",
+                    help="custom mesh, e.g. '4,2:data,model'")
+    ap.add_argument("--n", type=int, default=500_000_000)
+    ap.add_argument("--out", default="experiments/dryrun_lsh.json")
+    args = ap.parse_args(argv)
+
+    meshes = []
+    if args.mesh == "custom":
+        shp, axs = args.mesh_shape.split(":")
+        meshes.append((f"custom_{shp}",
+                       make_mesh([int(x) for x in shp.split(",")],
+                                 axs.split(","))))
+    if args.mesh in ("single", "both"):
+        meshes.append(("pod_16x16", make_production_mesh()))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multipod_2x16x16",
+                       make_production_mesh(multi_pod=True)))
+    results = []
+    for tag, mesh in meshes:
+        for rec in run(mesh, tag, n=args.n):
+            print(f"=== {rec['workload']} x {tag}: "
+                  f"{rec['memory']['live_bytes'] / 2**30:.1f} GiB/device, "
+                  f"compile {rec['lower_compile_s']}s", flush=True)
+            results.append(rec)
+            os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1)
+    print("pdet-lsh dry-run complete")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

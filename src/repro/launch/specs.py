@@ -1,0 +1,99 @@
+"""Input sharding specs + mesh-divisibility padding for the launchers."""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.sharding.rules import ShardingRules, param_shardings
+
+
+def apply_mesh_padding(cfg: ModelConfig, rules: ShardingRules) -> ModelConfig:
+    """Pad vocab (to 128-multiples) and q-heads (to model-axis multiples)
+    for sharding divisibility.  Megatron-style; padded vocab logits are
+    masked via ``vocab_real``; padded heads are real (zero-init extra) —
+    both recorded so the roofline can report padding overhead."""
+    model_size = rules.axis_size(rules.rules.get("heads"))
+    changes = {}
+    v = cfg.vocab_size
+    vpad = -(-v // 128) * 128
+    if vpad != v:
+        changes["vocab_size"] = vpad
+        changes["vocab_real"] = v
+    h = cfg.n_heads
+    if model_size > 1 and h >= model_size and h % model_size != 0:
+        h_pad = -(-h // model_size) * model_size
+        changes["n_heads"] = h_pad
+        # GQA grouping requires h' % hk' == 0: lift kv heads to the smallest
+        # divisor of h' that is >= hk (qwen1.5: 40->48 with kv 40->48;
+        # hymba: 25->32 with kv 5->8).  KV padding costs cache bytes and is
+        # reported in the roofline as padding overhead.
+        hk = cfg.n_kv_heads
+        if h_pad % hk != 0:
+            hk_pad = next(c for c in range(hk, h_pad + 1) if h_pad % c == 0)
+            changes["n_kv_heads"] = hk_pad
+    if changes:
+        cfg = dataclasses.replace(cfg, **changes)
+    return cfg
+
+
+_BATCH_SPECS = {
+    "tokens": ("batch", None),
+    "labels": ("batch", None),
+    "frames": ("batch", None, None),
+    "patches": ("batch", None, None),
+    "token": ("batch", None),
+    "length": (),
+}
+
+_CACHE_SPECS = {
+    # (layers, b, s, hk, dh)
+    "k": (None, "batch", "kv_seq", "kv_heads", None),
+    "v": (None, "batch", "kv_seq", "kv_heads", None),
+    "mem_k": (None, "batch", None, "kv_heads", None),
+    "mem_v": (None, "batch", None, "kv_heads", None),
+    # vlm: (blocks, n_self, b, s, hk, dh)
+    "vis_k": (None, "batch", None, "kv_heads", None),
+    "vis_v": (None, "batch", None, "kv_heads", None),
+    # ssm states
+    "conv": (None, "batch", None, "ssm_inner"),
+    "ssm": (None, "batch", None, None, None),
+}
+
+
+def _names_for(key: str, leaf) -> tuple:
+    if key in _CACHE_SPECS:
+        names = _CACHE_SPECS[key]
+        if leaf.ndim == len(names) + 1:      # vlm adds a leading block dim
+            names = (None,) + names
+        return names
+    if key in _BATCH_SPECS:
+        return _BATCH_SPECS[key]
+    return (None,) * leaf.ndim
+
+
+def batch_shardings(rules: ShardingRules, specs) -> object:
+    """NamedShardings for a batch/cache spec pytree (dict-keyed)."""
+    def resolve(path, leaf):
+        key = None
+        for pp in reversed(path):
+            k = getattr(pp, "key", None)
+            if isinstance(k, str):
+                key = k
+                break
+        names = _names_for(key, leaf) if key else (None,) * leaf.ndim
+        if len(names) != leaf.ndim:
+            names = (None,) * leaf.ndim
+        return NamedSharding(rules.mesh, rules.spec(names, leaf.shape))
+
+    return jax.tree_util.tree_map_with_path(resolve, specs)
+
+
+def replicated(rules: ShardingRules, tree):
+    return jax.tree.map(
+        lambda _: NamedSharding(rules.mesh, P()), tree)

@@ -1,0 +1,161 @@
+"""Training driver: config -> mesh -> sharded train loop, fault-tolerant.
+
+Features exercised end-to-end (reduced scale on CPU; production mesh via
+--mesh single/multi on a real pod):
+
+  * auto-resume from the newest committed checkpoint (crash-safe commits),
+  * periodic checkpointing + garbage collection,
+  * deterministic (seed, step)-keyed data pipeline (resume is exact),
+  * elastic restarts: --mesh may differ across runs; restore re-shards,
+  * per-step timeout watchdog (straggler/hang mitigation: on a real
+    cluster this aborts the step so the scheduler can reassign hosts).
+
+Example (CPU, reduced config):
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b --reduced \
+      --steps 30 --batch 8 --seq 64 --ckpt-dir /tmp/ckpt --ckpt-every 10
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import signal
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.base import ALL_SHAPES, ShapeConfig
+from repro.data.pipeline import make_pipeline
+from repro.launch.mesh import make_mesh, make_production_mesh
+from repro.launch.specs import apply_mesh_padding, batch_shardings
+from repro.models import transformer as T
+from repro.sharding.rules import ShardingRules, param_shardings, use_rules
+from repro.train import checkpoint as ckpt
+from repro.train.optimizer import AdamWConfig, adamw_init
+from repro.train.train_step import make_train_step
+
+
+class StepWatchdog:
+    """SIGALRM-based per-step timeout (straggler/hang mitigation hook)."""
+
+    def __init__(self, timeout_s: float | None):
+        self.timeout_s = timeout_s
+
+    def __enter__(self):
+        if self.timeout_s:
+            def handler(signum, frame):
+                raise TimeoutError(
+                    f"step exceeded {self.timeout_s}s — aborting for "
+                    "reschedule (straggler mitigation)")
+            self._prev = signal.signal(signal.SIGALRM, handler)
+            signal.setitimer(signal.ITIMER_REAL, self.timeout_s)
+        return self
+
+    def __exit__(self, *exc):
+        if self.timeout_s:
+            signal.setitimer(signal.ITIMER_REAL, 0)
+            signal.signal(signal.SIGALRM, self._prev)
+        return False
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh", default="host",
+                    choices=["host", "single", "multi"])
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--keep", type=int, default=3)
+    ap.add_argument("--step-timeout", type=float, default=0.0)
+    ap.add_argument("--metrics-out", default="")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    if args.mesh == "host":
+        n = jax.device_count()
+        mesh = make_mesh((n, 1), ("data", "model"))
+    else:
+        mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    rules = ShardingRules(mesh, {
+        "residual_seq": "model" if cfg.parallel.seq_parallel else None})
+    cfg = apply_mesh_padding(cfg, rules)
+    cfg = dataclasses.replace(cfg, parallel=dataclasses.replace(
+        cfg.parallel, accum_steps=1))
+
+    shape = ShapeConfig("cli", args.seq, args.batch, "train")
+    pipe = make_pipeline(cfg, shape, seed=args.seed)
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=5,
+                          total_steps=max(args.steps, 10),
+                          state_dtype=cfg.parallel.opt_state_dtype)
+
+    with use_rules(rules), mesh:
+        params = T.init_params(cfg, jax.random.key(args.seed))
+        opt_state = adamw_init(params, opt_cfg)
+        p_sh = param_shardings(rules, params)
+        step_fn = make_train_step(cfg, opt_cfg, grad_shardings=p_sh)
+        o_sh = param_shardings(rules, opt_state)
+        params = jax.device_put(params, p_sh)
+        opt_state = jax.device_put(opt_state, o_sh)
+
+        start = 0
+        if args.ckpt_dir:
+            latest = ckpt.latest_step(args.ckpt_dir)
+            if latest is not None:
+                (params, opt_state), extra = ckpt.restore(
+                    args.ckpt_dir, latest, (params, opt_state),
+                    shardings=(p_sh, o_sh))
+                start = int(extra.get("next_step", latest))
+                print(f"[train] resumed from step {latest} "
+                      f"(next_step={start})", flush=True)
+
+        jit_step = jax.jit(step_fn, in_shardings=(p_sh, o_sh, None),
+                           out_shardings=(p_sh, o_sh, None),
+                           donate_argnums=(0, 1))
+
+        history = []
+        for step in range(start, args.steps):
+            batch = pipe.batch_at(step)
+            t0 = time.time()
+            with StepWatchdog(args.step_timeout or None):
+                params, opt_state, metrics = jit_step(params, opt_state,
+                                                      batch)
+                loss = float(metrics["loss"])
+            dt = time.time() - t0
+            history.append({"step": step, "loss": loss, "sec": dt})
+            print(f"[train] step={step} loss={loss:.4f} "
+                  f"({dt * 1e3:.0f} ms)", flush=True)
+            if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+                ckpt.save(args.ckpt_dir, step + 1, (params, opt_state),
+                          extra={"next_step": step + 1,
+                                 "arch": args.arch, "seed": args.seed})
+                ckpt.garbage_collect(args.ckpt_dir, keep=args.keep)
+
+        if args.ckpt_dir:
+            ckpt.save(args.ckpt_dir, args.steps, (params, opt_state),
+                      extra={"next_step": args.steps, "arch": args.arch,
+                             "seed": args.seed})
+        if args.metrics_out:
+            with open(args.metrics_out, "w") as f:
+                json.dump(history, f)
+        if len(history) >= 5:
+            first = sum(h["loss"] for h in history[:3]) / 3
+            last = sum(h["loss"] for h in history[-3:]) / 3
+            print(f"[train] loss {first:.4f} -> {last:.4f}", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

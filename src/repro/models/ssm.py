@@ -1,0 +1,217 @@
+"""Mamba-2 (SSD — state-space duality) block: chunked scan + O(1) decode.
+
+Implements the SSD algorithm of arXiv:2405.21060 in pure JAX:
+  * ``ssd_chunked``    — training/prefill: quadratic within chunks (MXU
+    friendly), linear recurrence across chunks (associative over chunk
+    states), O(S * Q) compute for chunk size Q.
+  * ``ssd_decode_step``— decode: h <- h * exp(dt*A) + dt * (B outer x);
+    y = C . h + D * x.  O(1) per token — the sub-quadratic mixer that makes
+    long_500k decode feasible.
+
+Oracle: ``ssd_recurrent_reference`` (step-by-step recurrence) — tests assert
+the chunked form matches it.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, rmsnorm, rmsnorm_init
+from repro.sharding.rules import constrain
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, *, remat_body: bool = True):
+    """x (b,s,h,p); dt (b,s,h); A (h,); B,C (b,s,n) [group-broadcast].
+
+    Returns (y (b,s,h,p), final_state (b,h,p,n)).
+
+    Memory discipline: a ``lax.scan`` over chunks computes each chunk's
+    quadratic intra-block AND its state contribution inside the scan body,
+    so only one (Q, Q, h) decay block is ever live (the first version
+    materialized all of them at once — tens of GB/device at train_4k; see
+    EXPERIMENTS.md §Perf iteration 1).
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+
+    Q = chunk
+    xc = x.reshape(b, nc, Q, h, p).transpose(1, 0, 2, 3, 4)
+    dtc = dt.reshape(b, nc, Q, h).transpose(1, 0, 2, 3).astype(jnp.float32)
+    Bc = B.reshape(b, nc, Q, n).transpose(1, 0, 2, 3).astype(jnp.float32)
+    Cc = C.reshape(b, nc, Q, n).transpose(1, 0, 2, 3).astype(jnp.float32)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+
+    def body(h_prev, inp):
+        xq, dtq, Bq, Cq = inp              # (b,Q,h,p) (b,Q,h) (b,Q,n) (b,Q,n)
+        dA = dtq * A[None, None, :]                         # (b,Q,h) < 0
+        dA_cum = jnp.cumsum(dA, axis=1)
+        # intra-chunk: mask BEFORE exp (overflow poisons where() backward)
+        diff = dA_cum[:, :, None, :] - dA_cum[:, None, :, :]   # (b,Q,Q,h)
+        diff = jnp.where(causal[None, :, :, None], diff, -jnp.inf)
+        Lmat = jnp.exp(diff)
+        scores = jnp.einsum("bin,bjn->bij", Cq, Bq)            # (b,Q,Q)
+        y_intra = jnp.einsum("bij,bijh,bjh,bjhp->bihp",
+                             scores, Lmat, dtq, xq.astype(jnp.float32))
+        # inter-chunk: contribution of the carried state
+        state_decay = jnp.exp(dA_cum)                          # (b,Q,h)
+        y_inter = jnp.einsum("bqn,bqh,bhpn->bqhp", Cq, state_decay, h_prev)
+        # state update for the next chunk
+        decay_to_end = jnp.exp(dA_cum[:, -1:, :] - dA_cum)     # (b,Q,h)
+        st = jnp.einsum("bqn,bqh,bqhp->bhpn", Bq, dtq * decay_to_end,
+                        xq.astype(jnp.float32))
+        chunk_decay = jnp.exp(dA_cum[:, -1, :])                # (b,h)
+        h_new = h_prev * chunk_decay[..., None, None] + st
+        return h_new, (y_intra + y_inter).astype(x.dtype)
+
+    fn = jax.checkpoint(body) if remat_body else body
+    h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    h_final, yc = jax.lax.scan(fn, h0, (xc, dtc, Bc, Cc))
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(b, nc * Q, h, p)[:, :s]
+    return y.astype(x.dtype), h_final
+
+
+def ssd_recurrent_reference(x, dt, A, B, C):
+    """Step-by-step recurrence oracle (tests only)."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+
+    def step(hst, inp):
+        xt, dtt, Bt, Ct = inp
+        decay = jnp.exp(dtt * A)[..., None, None]              # (b,h,1,1)
+        upd = jnp.einsum("bh,bn,bhp->bhpn", dtt, Bt, xt)
+        hst = hst * decay + upd
+        y = jnp.einsum("bn,bhpn->bhp", Ct, hst)
+        return hst, y
+
+    h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    _, ys = jax.lax.scan(step, h0,
+                         (x.transpose(1, 0, 2, 3).astype(jnp.float32),
+                          dt.transpose(1, 0, 2).astype(jnp.float32),
+                          B.transpose(1, 0, 2).astype(jnp.float32),
+                          C.transpose(1, 0, 2).astype(jnp.float32)))
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype)
+
+
+def ssd_decode_step(state, x, dt, A, B, C):
+    """state (b,h,p,n); x (b,h,p); dt (b,h); B,C (b,n) -> (y, state)."""
+    decay = jnp.exp(dt * A)[..., None, None]
+    upd = jnp.einsum("bh,bn,bhp->bhpn", dt, B, x.astype(jnp.float32))
+    state = state * decay + upd
+    y = jnp.einsum("bn,bhpn->bhp", C, state)
+    return y.astype(x.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 block (in_proj -> conv -> SSD -> gate -> out_proj)
+# ---------------------------------------------------------------------------
+
+def mamba_dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nheads = d_inner // cfg.ssm_head_dim
+    n = cfg.ssm_state
+    # in_proj emits [z, x, B, C, dt]
+    d_proj = 2 * d_inner + 2 * n + nheads
+    return d_inner, nheads, n, d_proj
+
+
+def mamba_init(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    d_inner, nheads, n, d_proj = mamba_dims(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "ln": rmsnorm_init(d, dtype),
+        "in_proj": dense_init(ks[0], (d, d_proj), dtype),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv, d_inner + 2 * n), dtype,
+                             scale=1.0 / math.sqrt(cfg.ssm_conv)),
+        "out_proj": dense_init(ks[2], (d_inner, d), dtype,
+                               scale=1.0 / math.sqrt(d_inner * 2 * cfg.n_layers)),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nheads)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "ssm_d": jnp.ones((nheads,), jnp.float32),
+        "ssm_norm": rmsnorm_init(d_inner, dtype),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    d_inner, nheads, n, _ = mamba_dims(cfg)
+    z = zxbcdt[..., :d_inner]
+    xin = zxbcdt[..., d_inner:2 * d_inner]
+    Bv = zxbcdt[..., 2 * d_inner:2 * d_inner + n]
+    Cv = zxbcdt[..., 2 * d_inner + n:2 * d_inner + 2 * n]
+    dt = zxbcdt[..., 2 * d_inner + 2 * n:]
+    return z, xin, Bv, Cv, dt
+
+
+def _causal_conv(xbc, w, conv_state=None):
+    """Depthwise causal conv over (b, s, ch); w (kw, ch)."""
+    kw = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xbc.shape[0], kw - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = conv_state
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(xp[:, i:i + xbc.shape[1], :] * w[i][None, None, :]
+              for i in range(kw))
+    new_state = xp[:, -(kw - 1):, :] if kw > 1 else pad
+    return jax.nn.silu(out), new_state
+
+
+def mamba_block(params, cfg: ModelConfig, x, *, conv_state=None,
+                ssm_state=None, decode: bool = False):
+    """x (b, s, d) -> (y, (conv_state, ssm_state)).
+
+    decode=True requires s == 1 and both states; otherwise runs chunked SSD
+    (prefill/train) and returns the final states for cache handoff.
+    """
+    d_inner, nheads, n, _ = mamba_dims(cfg)
+    xn = rmsnorm(params["ln"], x, cfg.norm_eps)
+    zxbcdt = jnp.einsum("bsd,dp->bsp", xn, params["in_proj"])
+    zxbcdt = constrain(zxbcdt, ("batch", "seq", "ssm_inner"))
+    z, xin, Bv, Cv, dt = _split_proj(cfg, zxbcdt)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"][None, None, :])
+    A = -jnp.exp(params["a_log"])                          # (h,) negative
+
+    xbc = jnp.concatenate([xin, Bv, Cv], axis=-1)
+    xbc, new_conv = _causal_conv(xbc, params["conv_w"], conv_state)
+    xin = xbc[..., :d_inner]
+    Bv = xbc[..., d_inner:d_inner + n]
+    Cv = xbc[..., d_inner + n:]
+
+    b, s, _ = x.shape
+    xh = xin.reshape(b, s, nheads, cfg.ssm_head_dim)
+
+    if decode:
+        y1, new_ssm = ssd_decode_step(ssm_state, xh[:, 0], dt[:, 0],
+                                      A, Bv[:, 0], Cv[:, 0])
+        y = y1[:, None]
+    else:
+        y, new_ssm = ssd_chunked(xh, dt, A, Bv, Cv, cfg.ssm_chunk)
+
+    y = y + xh * params["ssm_d"][None, None, :, None]
+    y = y.reshape(b, s, d_inner).astype(x.dtype)
+    y = rmsnorm(params["ssm_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = jnp.einsum("bsp,pd->bsd", y, params["out_proj"]).astype(x.dtype)
+    return constrain(out, ("batch", "residual_seq", "d_model")), (new_conv, new_ssm)
+
+
+def mamba_state_shapes(cfg: ModelConfig, batch: int):
+    d_inner, nheads, n, _ = mamba_dims(cfg)
+    conv = (batch, cfg.ssm_conv - 1, d_inner + 2 * n)
+    ssm = (batch, nheads, cfg.ssm_head_dim, n)
+    return conv, ssm

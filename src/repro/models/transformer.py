@@ -1,0 +1,449 @@
+"""Model assembly for all assigned architecture families.
+
+Families:
+  dense   — [attn, mlp] x L                  (qwen3-*, qwen1.5, deepseek)
+  moe     — [attn, moe(+dense mlp)] x L      (arctic, granite)
+  ssm     — [mamba] x L                      (mamba2)
+  hybrid  — [0.5*(attn+mamba), mlp] x L      (hymba)
+  encdec  — encoder [attn, mlp] x Le + decoder [attn, cross, mlp] x L (whisper)
+  vlm     — blocks of (1 cross + N self) scanned                    (llama-vision)
+
+All stacks are ``lax.scan`` over layer-stacked parameters (HLO size is
+layer-count independent) with optional per-layer remat for training.
+
+Three entry points per model, matching the assigned shapes:
+  ``loss_fn``      (train_4k)    — causal LM loss (+ MoE aux)
+  ``prefill``      (prefill_32k) — forward building the KV/SSM cache
+  ``decode_step``  (decode_32k / long_500k) — one token against the cache
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.sharding.rules import constrain
+
+
+def _dtype(name):
+    return dict(float32=jnp.float32, bfloat16=jnp.bfloat16,
+                float8_e4m3fn=jnp.float8_e4m3fn)[name]
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _layer_init(cfg: ModelConfig, key, dtype):
+    """One decoder layer's params for the arch family."""
+    ks = jax.random.split(key, 4)
+    p = {}
+    fam = cfg.family
+    if fam in ("dense", "moe", "hybrid", "encdec", "vlm"):
+        p["attn"] = L.attention_init(ks[0], cfg, dtype)
+    if fam in ("ssm", "hybrid"):
+        p["mamba"] = S.mamba_init(ks[1], cfg, dtype)
+    if fam == "moe":
+        p["moe"] = L.moe_init(ks[2], cfg, dtype)
+        if cfg.d_ff and cfg.dense_residual:
+            p["mlp"] = L.mlp_init(ks[3], cfg, dtype)
+    elif fam != "ssm" and cfg.d_ff:
+        p["mlp"] = L.mlp_init(ks[3], cfg, dtype)
+    if fam == "encdec":
+        p["cross"] = L.attention_init(ks[2], cfg, dtype)
+    return p
+
+
+def init_params(cfg: ModelConfig, key: jax.Array):
+    dtype = _dtype(cfg.param_dtype)
+    keys = jax.random.split(key, 8)
+    params: dict = {"tok": L.embedding_init(keys[0], cfg, dtype)}
+    if cfg.pos_emb == "learned":
+        max_pos = cfg.max_pos or 32768
+        params["tok"]["pos_embed"] = L.dense_init(
+            keys[6], (max_pos, cfg.d_model), dtype, scale=0.02)
+
+    def stack(key, n, fn):
+        return jax.vmap(fn)(jax.random.split(key, n))
+
+    if cfg.family == "vlm":
+        every = cfg.cross_attn_every
+        n_blocks = cfg.n_layers // every
+        n_self = every - 1
+
+        def block_init(k):
+            kc, ks_ = jax.random.split(k)
+            return {
+                "cross": L.attention_init(kc, cfg, dtype),
+                "selfs": stack(ks_, n_self,
+                               lambda kk: _layer_init(
+                                   dataclasses.replace(cfg, family="dense"),
+                                   kk, dtype)),
+            }
+
+        params["blocks"] = stack(keys[1], n_blocks, block_init)
+    else:
+        params["layers"] = stack(keys[1], cfg.n_layers,
+                                 lambda k: _layer_init(cfg, k, dtype))
+
+    if cfg.family == "encdec":
+        enc_cfg = dataclasses.replace(cfg, family="dense")
+        params["enc_layers"] = stack(
+            keys[2], cfg.enc_layers, lambda k: _layer_init(enc_cfg, k, dtype))
+        params["enc_norm"] = L.rmsnorm_init(cfg.d_model, dtype)
+        if cfg.pos_emb == "learned":
+            params["enc_pos_embed"] = L.dense_init(
+                keys[7], (cfg.enc_len, cfg.d_model), dtype, scale=0.02)
+
+    params["final_norm"] = L.rmsnorm_init(cfg.d_model, dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Layer application (full-sequence: train / prefill)
+# ---------------------------------------------------------------------------
+
+def _apply_layer(cfg: ModelConfig, p, x, *, causal=True, memory=None,
+                 conv_state=None, ssm_state=None):
+    """Returns (x, cache_out) where cache_out carries this layer's KV/states."""
+    fam = cfg.family
+    cache = {}
+    if fam in ("dense", "moe", "encdec", "vlm"):
+        y, (k, v) = L.self_attention(p["attn"], cfg, x, causal=causal)
+        x = x + y
+        cache["k"], cache["v"] = k, v
+    if fam == "hybrid":
+        ya, (k, v) = L.self_attention(p["attn"], cfg, x, causal=causal)
+        ym, (new_conv, new_ssm) = S.mamba_block(
+            p["mamba"], cfg, x, conv_state=conv_state, ssm_state=ssm_state)
+        x = x + 0.5 * (ya + ym)
+        cache.update(k=k, v=v, conv=new_conv, ssm=new_ssm)
+    if fam == "ssm":
+        ym, (new_conv, new_ssm) = S.mamba_block(
+            p["mamba"], cfg, x, conv_state=conv_state, ssm_state=ssm_state)
+        x = x + ym
+        cache.update(conv=new_conv, ssm=new_ssm)
+    if fam == "encdec" and memory is not None:
+        y, (mk, mv) = L.cross_attention(p["cross"], cfg, x, memory)
+        x = x + y
+        cache["mem_k"], cache["mem_v"] = mk, mv
+    moe_aux = jnp.zeros((), jnp.float32)
+    if fam == "moe":
+        y, moe_aux = L.moe(p["moe"], cfg, x)
+        if "mlp" in p:
+            y = y + L.mlp(p["mlp"], cfg, x)
+        x = x + y
+    elif "mlp" in p:
+        x = x + L.mlp(p["mlp"], cfg, x)
+    x = constrain(x, ("batch", "residual_seq", "d_model"))
+    return x, cache, moe_aux
+
+
+def _scan_stack(cfg: ModelConfig, stacked, x, *, causal=True, memory=None,
+                remat=False, collect_cache=False):
+    """Scan x through layer-stacked params; optionally collect per-layer cache."""
+
+    def body(carry, p):
+        x, aux = carry
+        x, cache, moe_aux = _apply_layer(cfg, p, x, causal=causal,
+                                         memory=memory)
+        out = cache if collect_cache else None
+        return (x, aux + moe_aux), out
+
+    fn = jax.checkpoint(body) if remat else body
+    (x, aux), caches = jax.lax.scan(fn, (x, jnp.zeros((), jnp.float32)),
+                                    stacked)
+    return x, aux, caches
+
+
+def _scan_vlm(cfg: ModelConfig, blocks, x, patches, *, remat=False,
+              collect_cache=False):
+    dense_cfg = dataclasses.replace(cfg, family="dense")
+
+    def body(carry, p):
+        x, aux = carry
+        yc, (vk, vv) = L.cross_attention(p["cross"], cfg, x, patches)
+        x = x + yc
+        caches = {"vis_k": vk, "vis_v": vv} if collect_cache else None
+        ks, vs = [], []
+        n_self = cfg.cross_attn_every - 1
+        for i in range(n_self):
+            pi = jax.tree.map(lambda a: a[i], p["selfs"])
+            x, cache, _ = _apply_layer(dense_cfg, pi, x, causal=True)
+            if collect_cache:
+                ks.append(cache["k"])
+                vs.append(cache["v"])
+        if collect_cache:
+            caches["k"] = jnp.stack(ks)
+            caches["v"] = jnp.stack(vs)
+        return (x, aux), caches
+
+    fn = jax.checkpoint(body) if remat else body
+    (x, aux), caches = jax.lax.scan(fn, (x, jnp.zeros((), jnp.float32)),
+                                    blocks)
+    return x, aux, caches
+
+
+def _encode(cfg: ModelConfig, params, frames):
+    """Whisper encoder over stubbed frame embeddings (b, enc_len, d)."""
+    x = frames
+    if "enc_pos_embed" in params:
+        x = x + params["enc_pos_embed"][None, :x.shape[1]]
+    enc_cfg = dataclasses.replace(cfg, family="dense")
+    x, _, _ = _scan_stack(enc_cfg, params["enc_layers"], x, causal=False)
+    return L.rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _embed_tokens(cfg, params, tokens, offset=0):
+    x = L.embed(params["tok"], cfg, tokens)
+    if cfg.pos_emb == "learned":
+        pe = jax.lax.dynamic_slice_in_dim(params["tok"]["pos_embed"], offset,
+                                          tokens.shape[1], axis=0)
+        x = x + pe[None]
+    return x.astype(_dtype(cfg.compute_dtype))
+
+
+def forward(cfg: ModelConfig, params, batch, *, remat=False,
+            collect_cache=False):
+    """Full-sequence forward.  batch: dict(tokens[, frames | patches])."""
+    x = _embed_tokens(cfg, params, batch["tokens"])
+    memory = None
+    if cfg.family == "encdec":
+        memory = _encode(cfg, params, batch["frames"].astype(x.dtype))
+    if cfg.family == "vlm":
+        x, aux, caches = _scan_vlm(cfg, params["blocks"], x,
+                                   batch["patches"].astype(x.dtype),
+                                   remat=remat, collect_cache=collect_cache)
+    else:
+        x, aux, caches = _scan_stack(cfg, params["layers"], x, causal=True,
+                                     memory=memory, remat=remat,
+                                     collect_cache=collect_cache)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return x, aux, caches
+
+
+# ---------------------------------------------------------------------------
+# Training loss
+# ---------------------------------------------------------------------------
+
+def _chunked_xent(cfg: ModelConfig, tok_params, x, labels, *,
+                  chunk: int = 512):
+    """Cross-entropy without materializing full (B, S, V) logits.
+
+    Scans over sequence chunks with a rematerialized body: the backward pass
+    recomputes each chunk's logits, bounding live logits memory to one chunk
+    (the vocab matmul dominates otherwise: 1M tokens x 152k vocab in f32 is
+    hundreds of GB).
+    """
+    B, S, D = x.shape
+    n_chunks = max(1, S // chunk)
+    chunk = S // n_chunks if S % n_chunks == 0 else S
+    n_chunks = S // chunk
+    xc = x.reshape(B, n_chunks, chunk, D).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, n_chunks, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def body(carry, inp):
+        nll_sum, cnt = carry
+        xi, li = inp
+        lg = L.logits(tok_params, cfg, xi).astype(jnp.float32)
+        logz = jax.nn.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(
+            lg, jnp.maximum(li, 0)[..., None], axis=-1)[..., 0]
+        mask = (li >= 0).astype(jnp.float32)
+        nll_sum = nll_sum + ((logz - gold) * mask).sum()
+        cnt = cnt + mask.sum()
+        return (nll_sum, cnt), None
+
+    (nll_sum, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (xc, lc))
+    return nll_sum / jnp.maximum(cnt, 1.0)
+
+
+def loss_fn(cfg: ModelConfig, params, batch, *, aux_weight=0.01):
+    x, moe_aux, _ = forward(cfg, params, batch, remat=cfg.parallel.remat)
+    loss = _chunked_xent(cfg, params["tok"], x, batch["labels"])
+    total = loss + aux_weight * moe_aux / max(cfg.n_layers, 1)
+    return total, {"loss": loss, "moe_aux": moe_aux,
+                   "perplexity": jnp.exp(jnp.minimum(loss, 20.0))}
+
+
+# ---------------------------------------------------------------------------
+# Prefill: build the cache for decode
+# ---------------------------------------------------------------------------
+
+def prefill(cfg: ModelConfig, params, batch):
+    """Forward building the cache; returns (last-token logits, cache, length)."""
+    x, _, caches = forward(cfg, params, batch, collect_cache=True)
+    last = x[:, -1:, :]
+    lg = L.logits(params["tok"], cfg, last)
+    kv_dtype = _dtype(cfg.parallel.kv_cache_dtype)
+    cache = {}
+    if caches:
+        for k_, v_ in caches.items():
+            if k_ in ("k", "v", "mem_k", "mem_v", "vis_k", "vis_v"):
+                cache[k_] = _constrain_cache(v_.astype(kv_dtype))
+            else:
+                cache[k_] = v_
+    length = jnp.asarray(batch["tokens"].shape[1], jnp.int32)
+    return lg, cache, length
+
+
+def _constrain_cache(c):
+    # (layers, b, s, hk, dh) — batch over data, kv seq over model (CP)
+    if c.ndim == 5:
+        return constrain(c, (None, "batch", "kv_seq", "kv_heads", None))
+    return c
+
+
+# ---------------------------------------------------------------------------
+# Decode: one token against the cache
+# ---------------------------------------------------------------------------
+
+def decode_step(cfg: ModelConfig, params, token, cache, length):
+    """token (b, 1) int32; cache from ``prefill``/``cache_spec``; length ().
+
+    Returns (logits (b, 1, vocab), new cache).  The cache rides in the scan
+    *carry* (updated in place with dynamic_update_index) rather than as
+    xs->ys: a ys output cannot alias the xs input, which double-buffers the
+    entire multi-GB cache (EXPERIMENTS.md §Perf iteration 5).
+    """
+    x = _embed_tokens(cfg, params, token, offset=length)
+
+    if cfg.family == "vlm":
+        return _decode_vlm(cfg, params, x, cache, length)
+
+    nl = cfg.n_layers
+
+    def body(carry, inp):
+        x, cache = carry
+        p, l_idx = inp
+        cache_l = jax.tree.map(
+            lambda c: jax.lax.dynamic_index_in_dim(c, l_idx, 0,
+                                                   keepdims=False), cache)
+        new_cache = dict(cache_l)
+        fam = cfg.family
+        if fam in ("dense", "moe", "encdec"):
+            y, ck, cv = L.decode_self_attention(p["attn"], cfg, x,
+                                                cache_l["k"], cache_l["v"],
+                                                length)
+            x = x + y
+            new_cache.update(k=ck, v=cv)
+        if fam == "hybrid":
+            ya, ck, cv = L.decode_self_attention(p["attn"], cfg, x,
+                                                 cache_l["k"], cache_l["v"],
+                                                 length)
+            ym, (nc, ns) = S.mamba_block(p["mamba"], cfg, x,
+                                         conv_state=cache_l["conv"],
+                                         ssm_state=cache_l["ssm"],
+                                         decode=True)
+            x = x + 0.5 * (ya + ym)
+            new_cache.update(k=ck, v=cv, conv=nc, ssm=ns)
+        if fam == "ssm":
+            ym, (nc, ns) = S.mamba_block(p["mamba"], cfg, x,
+                                         conv_state=cache_l["conv"],
+                                         ssm_state=cache_l["ssm"],
+                                         decode=True)
+            x = x + ym
+            new_cache.update(conv=nc, ssm=ns)
+        if fam == "encdec":
+            y = L.decode_cross_attention(p["cross"], cfg, x,
+                                         cache_l["mem_k"], cache_l["mem_v"])
+            x = x + y
+        if fam == "moe":
+            # decode never drops tokens: full capacity (T*k per expert)
+            y, _ = L.moe(p["moe"], cfg, x,
+                         capacity_factor=float(cfg.n_experts))
+            if "mlp" in p:
+                y = y + L.mlp(p["mlp"], cfg, x)
+            x = x + y
+        elif "mlp" in p:
+            x = x + L.mlp(p["mlp"], cfg, x)
+        cache = jax.tree.map(
+            lambda c, n: jax.lax.dynamic_update_index_in_dim(
+                c, n.astype(c.dtype), l_idx, 0), cache, new_cache)
+        return (x, cache), None
+
+    (x, new_cache), _ = jax.lax.scan(
+        body, (x, cache), (params["layers"], jnp.arange(nl)))
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    lg = L.logits(params["tok"], cfg, x)
+    return lg, new_cache
+
+
+def _decode_vlm(cfg, params, x, cache, length):
+    dense_cfg = dataclasses.replace(cfg, family="dense")
+    n_self = cfg.cross_attn_every - 1
+    nb = cfg.n_layers // cfg.cross_attn_every
+
+    def body(carry, inp):
+        x, cache = carry
+        p, b_idx = inp
+        cache_b = jax.tree.map(
+            lambda c: jax.lax.dynamic_index_in_dim(c, b_idx, 0,
+                                                   keepdims=False), cache)
+        y = L.decode_cross_attention(p["cross"], cfg, x, cache_b["vis_k"],
+                                     cache_b["vis_v"])
+        x = x + y
+        ks, vs = [], []
+        for i in range(n_self):
+            pi = jax.tree.map(lambda a: a[i], p["selfs"])
+            ci_k = cache_b["k"][i]
+            ci_v = cache_b["v"][i]
+            ya, ck, cv = L.decode_self_attention(pi["attn"], dense_cfg, x,
+                                                 ci_k, ci_v, length)
+            x = x + ya
+            x = x + L.mlp(pi["mlp"], dense_cfg, x)
+            ks.append(ck)
+            vs.append(cv)
+        new_b = dict(cache_b, k=jnp.stack(ks), v=jnp.stack(vs))
+        cache = jax.tree.map(
+            lambda c, n: jax.lax.dynamic_update_index_in_dim(
+                c, n.astype(c.dtype), b_idx, 0), cache, new_b)
+        return (x, cache), None
+
+    (x, new_cache), _ = jax.lax.scan(
+        body, (x, cache), (params["blocks"], jnp.arange(nb)))
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    lg = L.logits(params["tok"], cfg, x)
+    return lg, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Cache specs (for decode dry-runs without running prefill)
+# ---------------------------------------------------------------------------
+
+def cache_spec(cfg: ModelConfig, batch: int, cache_len: int):
+    """ShapeDtypeStruct pytree of the decode cache."""
+    kv_dtype = _dtype(cfg.parallel.kv_cache_dtype)
+    hk, dh = cfg.n_kv_heads, cfg.head_dim
+    nl = cfg.n_layers
+    sds = jax.ShapeDtypeStruct
+    fam = cfg.family
+    out = {}
+    if fam in ("dense", "moe", "encdec", "hybrid"):
+        out["k"] = sds((nl, batch, cache_len, hk, dh), kv_dtype)
+        out["v"] = sds((nl, batch, cache_len, hk, dh), kv_dtype)
+    if fam in ("ssm", "hybrid"):
+        conv, ssm_ = S.mamba_state_shapes(cfg, batch)
+        out["conv"] = sds((nl,) + conv, _dtype(cfg.compute_dtype))
+        out["ssm"] = sds((nl,) + ssm_, jnp.float32)
+    if fam == "encdec":
+        out["mem_k"] = sds((nl, batch, cfg.enc_len, hk, dh), kv_dtype)
+        out["mem_v"] = sds((nl, batch, cfg.enc_len, hk, dh), kv_dtype)
+    if fam == "vlm":
+        every = cfg.cross_attn_every
+        nb, ns = cfg.n_layers // every, every - 1
+        out["k"] = sds((nb, ns, batch, cache_len, hk, dh), kv_dtype)
+        out["v"] = sds((nb, ns, batch, cache_len, hk, dh), kv_dtype)
+        out["vis_k"] = sds((nb, batch, cfg.vision_len, hk, dh), kv_dtype)
+        out["vis_v"] = sds((nb, batch, cfg.vision_len, hk, dh), kv_dtype)
+    return out

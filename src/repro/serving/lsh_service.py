@@ -1,0 +1,77 @@
+"""Batched vector-search serving on top of (P)DET-LSH.
+
+In-process model of the production service: requests arrive on a queue,
+are micro-batched up to ``max_batch``/``max_wait``, answered with one
+jitted batched c^2-k-ANN call, and latency percentiles are tracked.
+On a pod the same loop runs with the PDET (shard_map) index; here the
+single-device index keeps the example CPU-friendly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    latencies_ms: list
+    batches: int = 0
+    queries: int = 0
+
+    def percentile(self, p: float) -> float:
+        return float(np.percentile(self.latencies_ms, p)) \
+            if self.latencies_ms else float("nan")
+
+    def summary(self) -> dict:
+        return {"queries": self.queries, "batches": self.batches,
+                "p50_ms": self.percentile(50), "p99_ms": self.percentile(99)}
+
+
+class LSHService:
+    def __init__(self, index, k: int = 10, max_batch: int = 32,
+                 pad_to: int = 32):
+        self.index = index
+        self.k = k
+        self.max_batch = max_batch
+        self.pad_to = pad_to
+        self._fn = None
+        self.stats = ServiceStats(latencies_ms=[])
+
+    def _query_fn(self, queries):
+        res = self.index.query(queries, k=self.k)
+        return res.ids, res.dists
+
+    def warmup(self, d: int):
+        q = jnp.zeros((self.pad_to, d), jnp.float32)
+        jax.block_until_ready(self._query_fn(q))
+
+    def serve(self, request_stream) -> list:
+        """request_stream: iterable of (arrival_time, query vector)."""
+        out = []
+        pending: deque = deque(request_stream)
+        while pending:
+            batch = [pending.popleft()
+                     for _ in range(min(self.max_batch, len(pending)))]
+            arrivals = [b[0] for b in batch]
+            qs = np.stack([b[1] for b in batch])
+            pad = self.pad_to - len(qs) if len(qs) < self.pad_to else 0
+            if pad:
+                qs = np.concatenate([qs, np.zeros((pad, qs.shape[1]),
+                                                  qs.dtype)])
+            t0 = time.perf_counter()
+            ids, dists = self._query_fn(jnp.asarray(qs))
+            jax.block_until_ready(dists)
+            done = time.perf_counter()
+            for i, arr in enumerate(arrivals):
+                self.stats.latencies_ms.append((done - arr) * 1e3)
+                out.append((np.asarray(ids[i]), np.asarray(dists[i])))
+            self.stats.batches += 1
+            self.stats.queries += len(arrivals)
+        return out

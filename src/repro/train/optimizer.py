@@ -1,0 +1,136 @@
+"""AdamW with optional int8-quantized moments + LR schedules + clipping.
+
+The int8 state path (blockwise absmax, ``repro.train.quant``) is what lets
+arctic-480b / llama-3.2-vision-90b fit the 16 GB/chip v5e budget:
+bf16 params + bf16 grads + int8 (m, v) = 6 bytes/param instead of 16.
+Updates are always computed in f32 and cast back.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.train import quant
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    max_grad_norm: float = 1.0
+    state_dtype: str = "float32"    # 'float32' | 'int8'
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay to min_lr_frac."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def _zeros_like_state(p, state_dtype):
+    if state_dtype == "int8":
+        q, s = quant.quantize(jnp.zeros(p.shape, jnp.float32))
+        return {"q": q, "scale": s}
+    return jnp.zeros(p.shape, jnp.float32)
+
+
+def adamw_init(params, cfg: AdamWConfig):
+    mk = lambda p: _zeros_like_state(p, cfg.state_dtype)
+    return {
+        "m": jax.tree.map(mk, params),
+        "v": jax.tree.map(mk, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def _load(state_leaf, shape):
+    if isinstance(state_leaf, dict):
+        return quant.dequantize(state_leaf["q"], state_leaf["scale"])
+    return state_leaf
+
+
+def _store(x, state_dtype):
+    if state_dtype == "int8":
+        q, s = quant.quantize(x)
+        return {"q": q, "scale": s}
+    return x.astype(jnp.float32)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm):
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), gnorm
+
+
+# Leaves above this element count run their update as a lax.scan over the
+# leading (layer-stack) dim: the f32 m/v/step temporaries of a monolithic
+# update on a 100+ GB stacked expert tensor would otherwise dominate device
+# memory (EXPERIMENTS.md §Perf iteration 3 — arctic-480b train).
+CHUNKED_UPDATE_MIN_ELEMS = 1 << 28
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig):
+    """Returns (new_params, new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.max_grad_norm)
+    count = state["count"] + 1
+    lr = schedule(cfg, count)
+    b1c = 1 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, m_leaf, v_leaf, wd):
+        gf = g.astype(jnp.float32)
+        m = cfg.b1 * _load(m_leaf, p.shape) + (1 - cfg.b1) * gf
+        v = cfg.b2 * _load(v_leaf, p.shape) + (1 - cfg.b2) * gf * gf
+        mhat = m / b1c
+        vhat = v / b2c
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        new_p = p.astype(jnp.float32) * (1 - lr * wd) - lr * step
+        return (new_p.astype(p.dtype), _store(m, cfg.state_dtype),
+                _store(v, cfg.state_dtype))
+
+    def upd_leaf(p, g, m_leaf, v_leaf):
+        # decoupled weight decay on matrices only (ndim >= 2)
+        wd = cfg.weight_decay if p.ndim >= 2 else 0.0
+        if p.size >= CHUNKED_UPDATE_MIN_ELEMS and p.ndim >= 2:
+            def body(_, sl):
+                ps, gs, ms, vs = sl
+                return 0, upd(ps, gs, ms, vs, wd)
+            _, (np_, nm, nv) = jax.lax.scan(
+                body, 0, (p, g, m_leaf, v_leaf))
+            return np_, nm, nv
+        return upd(p, g, m_leaf, v_leaf, wd)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd_leaf(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    new_state = {"m": new_m, "v": new_v, "count": count}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

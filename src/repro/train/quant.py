@@ -1,0 +1,47 @@
+"""Blockwise int8 quantization — shared by the compressed AdamW states and
+the int8 gradient all-reduce (error-feedback compression).
+
+Per-block (last-dim blocks of 128) absmax scaling, bitsandbytes-style.
+Codes keep the tensor's shape (so sharding rules apply unchanged); scales
+have shape ``x.shape[:-1] + (ceil(last/128),)`` and shard on the leading
+dims.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 128
+
+
+def quantize(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """-> (int8 codes, f32 blockwise scales).  Shape-preserving."""
+    if x.ndim == 0:
+        x = x[None]
+        q, s = quantize(x)
+        return q[0], s
+    xf = x.astype(jnp.float32)
+    last = x.shape[-1]
+    nb = -(-last // BLOCK)
+    pad = nb * BLOCK - last
+    xp = jnp.pad(xf, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    blocks = xp.reshape(*x.shape[:-1], nb, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=-1) / 127.0       # (..., nb)
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale[..., None]), -127, 127)
+    q = q.reshape(*x.shape[:-1], nb * BLOCK)[..., :last]
+    return q.astype(jnp.int8), scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array, dtype=jnp.float32) -> jax.Array:
+    if q.ndim == 0:
+        return (q.astype(jnp.float32) * scale[0]).astype(dtype)
+    last = q.shape[-1]
+    nb = scale.shape[-1]
+    pad = nb * BLOCK - last
+    qp = jnp.pad(q.astype(jnp.float32),
+                 [(0, 0)] * (q.ndim - 1) + [(0, pad)])
+    blocks = qp.reshape(*q.shape[:-1], nb, BLOCK)
+    x = blocks * scale[..., None]
+    return x.reshape(*q.shape[:-1], nb * BLOCK)[..., :last].astype(dtype)

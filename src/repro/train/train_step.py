@@ -1,0 +1,131 @@
+"""The jit-able train / prefill / decode steps per architecture.
+
+``make_step(cfg, kind)`` returns (step_fn, abstract input specs builder).
+Training supports gradient accumulation (scan over microbatches — also the
+compute/comm overlap vehicle: each microbatch's reduce-scatter overlaps the
+next microbatch's compute under XLA latency hiding).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+from repro.train.optimizer import AdamWConfig, adamw_update
+
+
+def loss_and_grads(cfg: ModelConfig, params, batch):
+    def lf(p):
+        loss, metrics = T.loss_fn(cfg, p, batch)
+        return loss, metrics
+    (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(params)
+    return loss, metrics, grads
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig | None = None,
+                    grad_shardings=None):
+    """``grad_shardings``: optional NamedSharding pytree (same structure as
+    params) pinned onto per-microbatch grads and the f32 accumulator —
+    without it, grads flowing out of shard_map'd layers (MoE) lose their
+    FSDP dim and the accumulator replicates (§Perf iteration 6)."""
+    opt_cfg = opt_cfg or AdamWConfig(
+        state_dtype=cfg.parallel.opt_state_dtype)
+    accum = max(cfg.parallel.accum_steps, 1)
+
+    def pin(grads):
+        if grad_shardings is None:
+            return grads
+        return jax.tree.map(jax.lax.with_sharding_constraint, grads,
+                            grad_shardings)
+
+    def train_step(params, opt_state, batch):
+        if accum == 1:
+            loss, metrics, grads = loss_and_grads(cfg, params, batch)
+            grads = pin(grads)
+        else:
+            def micro(batch_i):
+                return jax.tree.map(
+                    lambda x: x.reshape(accum, x.shape[0] // accum,
+                                        *x.shape[1:])[batch_i], batch)
+
+            def body(carry, i):
+                gsum, lsum = carry
+                loss_i, _, g_i = loss_and_grads(cfg, params, micro(i))
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, pin(g_i))
+                return (pin(gsum), lsum + loss_i), None
+
+            g0 = pin(jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                  params))
+            (gsum, lsum), _ = jax.lax.scan(body, (g0, jnp.zeros(())),
+                                           jnp.arange(accum))
+            grads = jax.tree.map(lambda g: g / accum, gsum)
+            loss = lsum / accum
+            metrics = {"loss": loss}
+        new_params, new_opt, opt_metrics = adamw_update(params, grads,
+                                                        opt_state, opt_cfg)
+        metrics = dict(metrics, **opt_metrics)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        return T.prefill(cfg, params, batch)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, token, cache, length):
+        logits, new_cache = T.decode_step(cfg, params, token, cache, length)
+        return logits, new_cache
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Abstract input specs (ShapeDtypeStruct) per (arch, shape) — dry-run inputs
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg: ModelConfig, shape, *, kind: str | None = None):
+    """ShapeDtypeStruct stand-ins for the data batch of a shape config."""
+    kind = kind or shape.kind
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    cdt = dict(float32=jnp.float32, bfloat16=jnp.bfloat16)[cfg.compute_dtype]
+    if kind == "train":
+        batch = {"tokens": sds((B, S), jnp.int32),
+                 "labels": sds((B, S), jnp.int32)}
+    elif kind == "prefill":
+        batch = {"tokens": sds((B, S), jnp.int32)}
+    elif kind == "decode":
+        return {
+            "token": sds((B, 1), jnp.int32),
+            "cache": T.cache_spec(cfg, B, S),
+            "length": sds((), jnp.int32),
+        }
+    else:
+        raise ValueError(kind)
+    if cfg.family == "encdec":
+        batch["frames"] = sds((B, cfg.enc_len, cfg.d_model), cdt)
+    if cfg.family == "vlm":
+        batch["patches"] = sds((B, cfg.vision_len, cfg.d_model), cdt)
+    return batch
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(functools.partial(T.init_params, cfg),
+                          jax.random.key(0))
+
+
+def abstract_opt_state(cfg: ModelConfig, opt_cfg: AdamWConfig | None = None):
+    from repro.train.optimizer import adamw_init
+    opt_cfg = opt_cfg or AdamWConfig(state_dtype=cfg.parallel.opt_state_dtype)
+    params = abstract_params(cfg)
+    return jax.eval_shape(functools.partial(adamw_init, cfg=opt_cfg), params)

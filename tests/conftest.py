@@ -1,0 +1,45 @@
+import os
+
+# Tests run on the single real CPU device.  Dry-run tests that need many
+# placeholder devices spawn subprocesses with their own XLA_FLAGS (the flag
+# must be set before jax initializes, and must NOT leak into other tests).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+os.environ.setdefault("JAX_ENABLE_X64", "0")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_clustered(rng, n, d, n_clusters=32, spread=0.15):
+    """Clustered vectors — the structured regime ANN benchmarks use."""
+    centers = rng.standard_normal((n_clusters, d)).astype(np.float32)
+    assign = rng.integers(0, n_clusters, n)
+    return (centers[assign]
+            + spread * rng.standard_normal((n, d)).astype(np.float32))
+
+
+@pytest.fixture(scope="session")
+def small_dataset(rng):
+    data = make_clustered(rng, 8192, 24)
+    queries = make_clustered(rng, 16, 24)
+    return data, queries
+
+
+def make_queries_near(data, rng, nq, noise=0.1):
+    """Queries near the data manifold (the paper draws queries from the
+    dataset itself, §VI-A) — perturbed copies of random data points."""
+    sel = rng.choice(len(data), nq, replace=False)
+    return (data[sel]
+            + noise * rng.standard_normal((nq, data.shape[1]))
+            .astype(np.float32))
+
+
+def brute_force_knn(data, queries, k):
+    d2 = ((queries[:, None, :] - data[None, :, :]) ** 2).sum(-1)
+    idx = np.argsort(d2, axis=1)[:, :k]
+    return idx, np.sqrt(np.take_along_axis(d2, idx, axis=1))

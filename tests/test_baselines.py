@@ -1,0 +1,82 @@
+"""Baseline sanity: each method beats random and approaches the oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.baselines import HNSW, IVFPQ, BruteForce, C2LSH, E2LSH, PMLSH
+from tests.conftest import (brute_force_knn, make_clustered,
+                            make_queries_near)
+
+
+@pytest.fixture(scope="module")
+def ds(rng):
+    data = make_clustered(rng, 4096, 24)
+    queries = make_queries_near(data, rng, 8)
+    gt_i, gt_d = brute_force_knn(data, queries, 10)
+    return jnp.asarray(data), jnp.asarray(queries), gt_i, gt_d
+
+
+def _recall(ids, gt_i):
+    ids = np.asarray(ids)
+    return np.mean([len(set(ids[i]) & set(gt_i[i])) / gt_i.shape[1]
+                    for i in range(len(gt_i))])
+
+
+def test_brute_force_exact(ds):
+    data, queries, gt_i, gt_d = ds
+    idx = BruteForce.build(data)
+    ids, d = idx.query(queries, 10)
+    np.testing.assert_allclose(np.asarray(d), gt_d, rtol=1e-4, atol=1e-4)
+    assert _recall(ids, gt_i) == 1.0
+
+
+def test_e2lsh_recall(ds):
+    data, queries, gt_i, _ = ds
+    idx = E2LSH.build(data, jax.random.key(0), K=6, L=8, w=6.0)
+    ids, d = idx.query(queries, 10)
+    assert _recall(ids, gt_i) >= 0.4
+    assert idx.size_bytes() > 0
+
+
+def test_c2lsh_recall(ds):
+    data, queries, gt_i, _ = ds
+    idx = C2LSH.build(data, jax.random.key(1), m=24, w=2.0,
+                      threshold_frac=0.4)
+    ids, d = idx.query(queries, 10, r=1.0)
+    assert _recall(ids, gt_i) >= 0.5
+
+
+def test_pmlsh_recall(ds):
+    data, queries, gt_i, _ = ds
+    idx = PMLSH.build(data, jax.random.key(2), K=15, beta=0.1)
+    ids, d = idx.query(queries, 10)
+    assert _recall(ids, gt_i) >= 0.7
+
+
+def test_hnsw_recall(ds):
+    data, queries, gt_i, _ = ds
+    idx = HNSW.build(np.asarray(data), M=12, ef_construction=48)
+    ids, d = idx.query(np.asarray(queries), 10, ef_search=128)
+    assert _recall(ids, gt_i) >= 0.8
+
+
+def test_ivfpq_recall(ds):
+    data, queries, gt_i, _ = ds
+    idx = IVFPQ.build(data, jax.random.key(3), nlist=32, M=4, nprobe=8,
+                      rerank=256)
+    ids, d = idx.query(queries, 10)
+    assert _recall(ids, gt_i) >= 0.6
+
+
+def test_reported_distances_are_true_distances(ds):
+    data, queries, gt_i, _ = ds
+    for idx in (PMLSH.build(data, jax.random.key(2)),
+                IVFPQ.build(data, jax.random.key(3), nlist=16, M=4)):
+        ids, d = idx.query(queries, 5)
+        ids, d = np.asarray(ids), np.asarray(d)
+        ok = ids < data.shape[0]
+        true = np.sqrt((((np.asarray(data)[np.clip(ids, 0, None)]
+                          - np.asarray(queries)[:, None]) ** 2).sum(-1)))
+        np.testing.assert_allclose(d[ok], true[ok], rtol=1e-4, atol=1e-4)

@@ -1,0 +1,129 @@
+"""Tests for the DE-Forest: build invariants + LB/UB admissibility."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import detree, encoding as enc, hashing
+from repro.core.detree import build_forest, leaf_bounds
+
+
+def _build(n=2048, d=16, K=4, L=2, leaf_size=32, seed=0):
+    rng = np.random.default_rng(seed)
+    data = rng.standard_normal((n, d)).astype(np.float32)
+    A = hashing.sample_projections(jax.random.key(seed), d, K, L)
+    proj = np.asarray(data @ np.asarray(A))
+    forest = build_forest(jnp.asarray(proj), K, L, Nr=64, leaf_size=leaf_size,
+                          breakpoint_method="full_sort")
+    return data, proj, forest
+
+
+def test_forest_shapes_and_permutation():
+    n, K, L, ls = 1000, 4, 3, 32
+    data, proj, forest = _build(n=n, K=K, L=L, leaf_size=ls)
+    n_leaves = -(-n // ls)
+    assert forest.point_ids.shape == (L, n_leaves * ls)
+    assert forest.leaf_lo.shape == (L, n_leaves, K)
+    for l in range(L):
+        ids = np.asarray(forest.point_ids[l])
+        valid = np.asarray(forest.valid[l])
+        assert valid.sum() == n
+        real = np.sort(ids[valid])
+        np.testing.assert_array_equal(real, np.arange(n))
+        assert np.all(ids[~valid] == n)
+
+
+def test_sorted_projections_match_ids():
+    data, proj, forest = _build(n=500, K=4, L=2, leaf_size=16)
+    L, K = forest.L, forest.K
+    p = proj.reshape(-1, L, K)
+    for l in range(L):
+        ids = np.asarray(forest.point_ids[l])
+        valid = np.asarray(forest.valid[l])
+        got = np.asarray(forest.proj_sorted[l])[valid]
+        want = p[ids[valid], l, :]
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_leaf_intervals_cover_members():
+    """Every point's region code lies inside its leaf's [lo, hi] interval."""
+    data, proj, forest = _build(n=1500, K=4, L=2, leaf_size=64)
+    for l in range(forest.L):
+        codes = np.asarray(forest.codes_sorted[l])
+        valid = np.asarray(forest.valid[l])
+        lo = np.asarray(forest.leaf_lo[l])
+        hi = np.asarray(forest.leaf_hi[l])
+        ls = forest.leaf_size
+        for leaf in range(forest.n_leaves):
+            sl = slice(leaf * ls, (leaf + 1) * ls)
+            cm = codes[sl][valid[sl]]
+            if cm.size == 0:
+                continue
+            assert np.all(cm >= lo[leaf][None, :])
+            assert np.all(cm <= hi[leaf][None, :])
+
+
+def test_morton_sort_groups_prefixes():
+    """Code-sorted order: identical codes must be contiguous."""
+    data, proj, forest = _build(n=4096, K=2, L=1, leaf_size=16)
+    codes = np.asarray(forest.codes_sorted[0])[np.asarray(forest.valid[0])]
+    # interleave to a scalar key (K=2, 8 bits each fits 16 bits-per-level scheme)
+    seen = set()
+    prev = None
+    for c in map(tuple, codes):
+        if c != prev and c in seen:
+            pytest.fail(f"code {c} appears in two separate runs")
+        seen.add(c)
+        prev = c
+
+
+def _bounds_vs_truth(forest, q_proj, l):
+    lb, ub = leaf_bounds(jnp.asarray(q_proj), forest.leaf_lo[l],
+                         forest.leaf_hi[l], forest.leaf_valid[l],
+                         forest.breakpoints[l])
+    lb, ub = np.asarray(lb), np.asarray(ub)
+    proj_s = np.asarray(forest.proj_sorted[l])
+    valid = np.asarray(forest.valid[l])
+    d = np.sqrt(((proj_s - q_proj[None, :]) ** 2).sum(-1))
+    ls = forest.leaf_size
+    for leaf in range(forest.n_leaves):
+        sl = slice(leaf * ls, (leaf + 1) * ls)
+        dm = d[sl][valid[sl]]
+        if dm.size == 0:
+            assert np.isinf(lb[leaf])
+            continue
+        tol = 1e-4 * max(1.0, dm.max())
+        assert lb[leaf] <= dm.min() + tol, (leaf, lb[leaf], dm.min())
+        assert ub[leaf] >= dm.max() - tol, (leaf, ub[leaf], dm.max())
+
+
+def test_leaf_bounds_admissible():
+    """Paper Fig. 5: LB <= dist(q, o) <= UB for every o in the leaf."""
+    data, proj, forest = _build(n=2000, K=4, L=2, leaf_size=32, seed=3)
+    rng = np.random.default_rng(7)
+    for l in range(forest.L):
+        for _ in range(4):
+            q_proj = rng.standard_normal(forest.K).astype(np.float32) * 3
+            _bounds_vs_truth(forest, q_proj, l)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 6), st.integers(1, 3), st.integers(0, 10 ** 6))
+def test_property_leaf_bounds_admissible(K, L, seed):
+    """Property: bound admissibility holds across K, L, and data seeds."""
+    rng = np.random.default_rng(seed)
+    n = 256
+    proj = (rng.standard_normal((n, L * K)) * rng.uniform(0.5, 4)).astype(
+        np.float32)
+    forest = build_forest(jnp.asarray(proj), K, L, Nr=16, leaf_size=16,
+                          breakpoint_method="full_sort")
+    q_proj = rng.standard_normal(K).astype(np.float32) * 2
+    _bounds_vs_truth(forest, q_proj, rng.integers(0, L))
+
+
+def test_index_size_scales_linearly():
+    _, _, f1 = _build(n=1024, K=4, L=2)
+    _, _, f2 = _build(n=4096, K=4, L=2)
+    assert 3.0 < f2.size_bytes() / f1.size_bytes() < 5.0

@@ -1,0 +1,88 @@
+"""Dry-run machinery tests on a small placeholder-device mesh (subprocess,
+since XLA fixes device count at first jax init).
+
+The production 512-device sweep runs via ``python -m repro.launch.dryrun``;
+here we validate the harness end-to-end (lower+compile+memory/cost/
+collective records) at 8 devices for one representative arch per family.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ENV = dict(os.environ, REPRO_DRYRUN_DEVICES="8",
+           PYTHONPATH=os.path.join(REPO, "src"))
+
+
+def _run_dryrun(args, timeout=900):
+    cmd = [sys.executable, "-m", "repro.launch.dryrun"] + args
+    return subprocess.run(cmd, env=ENV, capture_output=True, text=True,
+                          timeout=timeout, cwd=REPO)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch,shape", [
+    ("whisper-base", "train_4k"),          # encdec
+    ("granite-moe-1b-a400m", "decode_32k"),  # moe decode
+    ("mamba2-780m", "long_500k"),          # ssm long-context decode
+])
+def test_dryrun_cell_compiles(tmp_path, arch, shape):
+    out = tmp_path / "dry.json"
+    r = _run_dryrun(["--arch", arch, "--shape", shape, "--mesh", "custom",
+                     "--mesh-shape", "4,2:data,model", "--out", str(out)])
+    assert r.returncode == 0, r.stderr[-3000:]
+    recs = json.load(open(out))
+    assert len(recs) == 1
+    rec = recs[0]
+    assert "error" not in rec, rec.get("error")
+    assert rec["cost"]["hlo_flops_once"] > 0
+    assert rec["memory"]["live_bytes"] > 0
+    assert any(v["entry"] + v["body"] > 0
+               for v in rec["collectives"].values()), \
+        "expected at least one collective on a 2-way model mesh"
+
+
+@pytest.mark.slow
+def test_dryrun_lsh_compiles(tmp_path):
+    out = tmp_path / "lsh.json"
+    cmd = [sys.executable, "-m", "repro.launch.dryrun_lsh", "--mesh",
+           "custom", "--mesh-shape", "4,2:data,model", "--n", "200000",
+           "--out", str(out)]
+    r = subprocess.run(cmd, env=ENV, capture_output=True, text=True,
+                       timeout=900, cwd=REPO)
+    assert r.returncode == 0, r.stderr[-3000:]
+    recs = json.load(open(out))
+    assert {x["workload"] for x in recs} == {"pdet_build", "pdet_query"}
+    for rec in recs:
+        assert rec["memory"]["live_bytes"] > 0
+
+
+def test_collective_parser():
+    from repro.launch.dryrun import collective_bytes
+    hlo = """
+ENTRY %main (p0: f32[8,16]) -> f32[8,16] {
+  %ar = f32[8,16]{1,0} all-reduce(f32[8,16]{1,0} %p0), replica_groups={}
+}
+%body_1 (p: f32[4]) -> f32[4] {
+  %ag = f32[16]{0} all-gather(f32[4]{0} %p), dimensions={0}
+}
+"""
+    out = collective_bytes(hlo)
+    assert out["all-reduce"]["entry"] == 8 * 16 * 4
+    assert out["all-gather"]["body"] == 4 * 4
+
+
+def test_roofline_derivation_runs():
+    from benchmarks.roofline import derive
+    path = os.path.join(REPO, "experiments", "dryrun.json")
+    if not os.path.exists(path):
+        pytest.skip("production dry-run artifact not present")
+    rows = derive(json.load(open(path)))
+    assert len(rows) >= 40
+    for r in rows:
+        assert r["bottleneck"] in ("compute", "memory", "collective")
+        assert r["compute_s"] > 0

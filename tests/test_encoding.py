@@ -1,0 +1,118 @@
+"""Tests for dynamic encoding: breakpoint selection + iSAX encoding."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import encoding as enc
+
+
+def _equi_depth_error(coords, bp):
+    """Max deviation of per-bucket occupancy from n/Nr, as a fraction."""
+    n, D = coords.shape
+    Nr = bp.shape[1] - 1
+    errs = []
+    for d in range(D):
+        counts, _ = np.histogram(coords[:, d], bins=np.asarray(bp[d]))
+        errs.append(np.abs(counts - n / Nr).max() / (n / Nr))
+    return max(errs)
+
+
+def test_full_sort_breakpoints_are_equi_depth():
+    rng = np.random.default_rng(1)
+    coords = rng.standard_normal((8192, 3)).astype(np.float32)
+    bp = np.asarray(enc.select_breakpoints(jnp.asarray(coords), 64,
+                                           method="full_sort"))
+    assert bp.shape == (3, 65)
+    assert _equi_depth_error(coords, bp) < 0.25
+
+
+def test_sample_sort_breakpoints_cover_and_balance():
+    rng = np.random.default_rng(2)
+    coords = np.concatenate([rng.standard_normal((20000, 2)),
+                             5 + 2 * rng.standard_normal((20000, 2))],
+                            axis=0).astype(np.float32)  # bimodal
+    bp = np.asarray(enc.select_breakpoints(
+        jnp.asarray(coords), 256, method="sample_sort",
+        key=jax.random.key(0), sample_fraction=0.1))
+    # endpoints must cover the full data range
+    assert np.all(bp[:, 0] <= coords.min(0) + 1e-6)
+    assert np.all(bp[:, -1] >= coords.max(0) - 1e-6)
+    assert np.all(np.diff(bp, axis=1) >= -1e-7)  # monotone
+    # sample-level accuracy: ~n_s/Nr = 15 samples per bucket -> max deviation
+    # over 512 buckets is a few sigma of 1/sqrt(15)
+    assert _equi_depth_error(coords, bp) < 1.6
+
+
+def test_histogram_refine_converges_to_equi_depth():
+    rng = np.random.default_rng(3)
+    # heavy-tailed + shifted — hard case for uniform binning
+    coords = (rng.standard_t(3, size=(30000, 2)) + 2).astype(np.float32)
+    bp = np.asarray(enc.breakpoints_histogram_refine(jnp.asarray(coords), 64,
+                                                     rounds=8))
+    assert _equi_depth_error(coords, bp) < 0.35
+    # more rounds must not be worse (convergence)
+    bp12 = np.asarray(enc.breakpoints_histogram_refine(jnp.asarray(coords), 64,
+                                                       rounds=12))
+    assert _equi_depth_error(coords, bp12) <= _equi_depth_error(coords, bp) + 0.05
+
+
+def test_encode_region_bracket_invariant():
+    """B[d, b] <= x <= B[d, b+1] for the assigned region b (Alg. 1 line 7)."""
+    rng = np.random.default_rng(4)
+    coords = rng.standard_normal((4096, 5)).astype(np.float32)
+    bp = enc.select_breakpoints(jnp.asarray(coords), 32, method="full_sort")
+    codes = np.asarray(enc.encode(jnp.asarray(coords), bp))
+    bp = np.asarray(bp)
+    assert codes.min() >= 0 and codes.max() <= 31
+    for d in range(5):
+        lo = bp[d][codes[:, d]]
+        hi = bp[d][codes[:, d] + 1]
+        eps = 1e-5
+        assert np.all(coords[:, d] >= lo - eps)
+        assert np.all(coords[:, d] <= hi + eps)
+
+
+def test_encode_monotone_in_coordinate():
+    """Larger coordinate never gets a smaller region id (order preserving)."""
+    rng = np.random.default_rng(5)
+    coords = rng.standard_normal((2048, 1)).astype(np.float32)
+    bp = enc.select_breakpoints(jnp.asarray(coords), 256, method="full_sort")
+    codes = np.asarray(enc.encode(jnp.asarray(coords), bp))[:, 0]
+    order = np.argsort(coords[:, 0])
+    assert np.all(np.diff(codes[order]) >= 0)
+
+
+def test_distributed_equivalence_of_histogram_counts():
+    """Counts over shards sum to global counts — the psum invariant that
+    makes multi-pod global breakpoints exact."""
+    rng = np.random.default_rng(6)
+    coords = rng.standard_normal((4000, 3)).astype(np.float32)
+    edges = enc.select_breakpoints(jnp.asarray(coords), 16, method="full_sort")
+    full = np.asarray(enc.histogram_counts(jnp.asarray(coords), edges))
+    parts = sum(
+        np.asarray(enc.histogram_counts(jnp.asarray(coords[i::4]), edges))
+        for i in range(4))
+    np.testing.assert_array_equal(full, parts)
+    assert full.sum() == 4000 * 3
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(8, 64), st.integers(1, 4), st.integers(0, 2 ** 31 - 1))
+def test_property_encode_bracket_random(nr, d, seed):
+    """Property: encode() always lands coords inside their region bracket."""
+    rng = np.random.default_rng(seed)
+    n = 512
+    coords = (rng.standard_normal((n, d)) * rng.uniform(0.1, 10)).astype(
+        np.float32)
+    bp = enc.select_breakpoints(jnp.asarray(coords), nr, method="full_sort")
+    codes = np.asarray(enc.encode(jnp.asarray(coords), bp))
+    bpn = np.asarray(bp)
+    for j in range(d):
+        lo = bpn[j][codes[:, j]]
+        hi = bpn[j][codes[:, j] + 1]
+        tol = 1e-5 * max(1.0, np.abs(coords[:, j]).max())
+        assert np.all(coords[:, j] >= lo - tol)
+        assert np.all(coords[:, j] <= hi + tol)

@@ -1,0 +1,148 @@
+"""Per-kernel interpret-mode validation against the ref.py oracles.
+
+Every kernel is swept over shapes (including非 block-aligned ones exercising
+the ops.py padding path) and dtypes, asserting allclose vs the pure-jnp
+oracle — which itself is validated against a naive formulation where one
+exists (attention).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _rand(rng, shape, dtype=np.float32, scale=1.0):
+    return jnp.asarray((rng.standard_normal(shape) * scale).astype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# lsh_project
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,d,m", [(256, 128, 128), (300, 100, 64),
+                                   (512, 960, 64), (1, 17, 3)])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_lsh_project_matches_ref(rng, n, d, m, dtype):
+    x = _rand(rng, (n, d)).astype(dtype)
+    a = _rand(rng, (d, m)).astype(dtype)
+    got = ops.lsh_project(x, a, interpret=True)
+    want = ref.lsh_project(x, a)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol * 8)
+
+
+# ---------------------------------------------------------------------------
+# encode_bins
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,D,Nr", [(512, 64, 256), (700, 16, 64),
+                                    (64, 4, 16), (1024, 128, 256)])
+def test_encode_bins_matches_ref(rng, n, D, Nr):
+    coords = _rand(rng, (n, D), scale=3.0)
+    bp = jnp.sort(_rand(rng, (D, Nr + 1), scale=3.0), axis=1)
+    got = ops.encode_bins(coords, bp, interpret=True)
+    want = ref.encode_bins(coords, bp)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_encode_bins_matches_core_encoding(rng):
+    from repro.core import encoding as enc
+    coords = _rand(rng, (512, 8), scale=2.0)
+    bp = enc.select_breakpoints(coords, 32, method="full_sort")
+    got = ops.encode_bins(coords, bp, interpret=True)
+    want = enc.encode(coords, bp)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# leaf_bounds
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("nl,K,Nr", [(256, 4, 256), (300, 16, 64),
+                                     (17, 2, 16), (512, 8, 128)])
+def test_leaf_bounds_matches_ref(rng, nl, K, Nr):
+    bp = jnp.sort(_rand(rng, (K, Nr + 1), scale=3.0), axis=1)
+    lo = jnp.asarray(rng.integers(0, Nr, (nl, K)), jnp.int32)
+    hi = jnp.clip(lo + jnp.asarray(rng.integers(0, 8, (nl, K)), jnp.int32),
+                  0, Nr - 1)
+    valid = jnp.asarray(rng.random(nl) > 0.1)
+    q = _rand(rng, (K,), scale=2.0)
+    lb_g, ub_g = ops.leaf_bounds(q, lo, hi, valid, bp, interpret=True)
+    lb_w, ub_w = ref.leaf_bounds(q, lo, hi, valid, bp)
+    np.testing.assert_allclose(np.asarray(lb_g), np.asarray(lb_w), rtol=1e-5,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(ub_g), np.asarray(ub_w), rtol=1e-5,
+                               atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# l2_rerank
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,m,d", [(128, 256, 128), (1, 1000, 64),
+                                   (20, 300, 420), (128, 256, 96)])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_l2_rerank_matches_ref(rng, b, m, d, dtype):
+    q = _rand(rng, (b, d)).astype(dtype)
+    c = _rand(rng, (m, d)).astype(dtype)
+    got = ops.l2_rerank(q, c, interpret=True)
+    want = ref.l2_rerank(q, c)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=tol,
+                               atol=tol)
+
+
+def test_l2_rerank_is_euclidean(rng):
+    q = _rand(rng, (4, 32))
+    c = _rand(rng, (64, 32))
+    got = np.asarray(ops.l2_rerank(q, c, interpret=True))
+    want = np.sqrt(((np.asarray(q)[:, None] - np.asarray(c)[None]) ** 2
+                    ).sum(-1))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("causal", [False, True])
+@pytest.mark.parametrize("b,h,sq,sk,dh", [(1, 2, 128, 128, 64),
+                                          (2, 1, 100, 260, 32),
+                                          (1, 1, 128, 384, 128)])
+def test_flash_attention_matches_naive(rng, b, h, sq, sk, dh, causal):
+    if causal and sq != sk:
+        pytest.skip("causal assumes aligned positions")
+    q = _rand(rng, (b, h, sq, dh), scale=0.5)
+    k = _rand(rng, (b, h, sk, dh), scale=0.5)
+    v = _rand(rng, (b, h, sk, dh))
+    got = ops.flash_attention(q, k, v, causal=causal, interpret=True)
+    want = ref.attention_reference(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-3,
+                               atol=2e-3)
+
+
+@pytest.mark.parametrize("causal", [False, True])
+def test_blockwise_ref_matches_naive(rng, causal):
+    """The XLA blockwise oracle (used in dry-run lowering) is itself exact."""
+    q = _rand(rng, (2, 2, 64, 32), scale=0.5)
+    k = _rand(rng, (2, 2, 64, 32), scale=0.5)
+    v = _rand(rng, (2, 2, 64, 32))
+    got = ref.flash_attention(q, k, v, causal=causal, block_k=16)
+    want = ref.attention_reference(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5,
+                               atol=2e-5)
+
+
+def test_flash_attention_bf16(rng):
+    q = _rand(rng, (1, 2, 128, 64), scale=0.5).astype(jnp.bfloat16)
+    k = _rand(rng, (1, 2, 128, 64), scale=0.5).astype(jnp.bfloat16)
+    v = _rand(rng, (1, 2, 128, 64)).astype(jnp.bfloat16)
+    got = ops.flash_attention(q, k, v, causal=True, interpret=True)
+    want = ref.attention_reference(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=5e-2,
+                               atol=5e-2)

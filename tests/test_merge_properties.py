@@ -1,0 +1,73 @@
+"""Hypothesis property tests for candidate-set maintenance (Alg. 5's |S|
+bookkeeping) — the guarantee-critical invariants:
+
+  * the buffer never holds duplicate real ids,
+  * the unique count equals |set(seen real ids)| while under capacity,
+  * distances always ascend under top-k selection order,
+  * merging is insensitive to the arrival order of candidates.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.query import _merge_candidates
+
+
+def _merge_rounds(n, cap, rounds):
+    ids = jnp.full((cap,), n, jnp.int32)
+    d = jnp.full((cap,), jnp.inf)
+    seen = set()
+    for r_ids in rounds:
+        r_ids = np.asarray(r_ids, np.int32)
+        r_d = (r_ids * 7 % 23).astype(np.float32)  # deterministic distance
+        ids, d, count = _merge_candidates(
+            n, ids, d, jnp.asarray(r_ids), jnp.asarray(r_d))
+        seen.update(int(x) for x in r_ids if x < n)
+    return np.asarray(ids), np.asarray(d), int(count), seen
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(10, 60), st.lists(
+    st.lists(st.integers(0, 80), min_size=1, max_size=12),
+    min_size=1, max_size=5))
+def test_merge_no_duplicates_and_exact_count(n, rounds):
+    rounds = [[min(x, n) for x in r] for r in rounds]  # allow sentinel n
+    cap = n + 16                                       # over-capacity buffer
+    ids, d, count, seen = _merge_rounds(n, cap, rounds)
+    real = ids[ids < n]
+    assert len(real) == len(set(real.tolist()))        # no duplicates
+    assert count == len(seen)                          # exact unique count
+    assert set(real.tolist()) == seen                  # nothing lost
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 40), min_size=2, max_size=20),
+       st.integers(0, 1000))
+def test_merge_order_insensitive(items, seed):
+    n, cap = 41, 60
+    rng = np.random.default_rng(seed)
+    perm = list(items)
+    rng.shuffle(perm)
+    ids1, d1, c1, _ = _merge_rounds(n, cap, [items])
+    ids2, d2, c2, _ = _merge_rounds(n, cap, [perm])
+    assert c1 == c2
+    assert set(ids1[ids1 < n].tolist()) == set(ids2[ids2 < n].tolist())
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 99), min_size=1, max_size=30))
+def test_merge_keeps_best_under_capacity_pressure(items):
+    """When uniques exceed capacity, the smallest distances are kept."""
+    n, cap = 100, 8
+    ids = jnp.full((cap,), n, jnp.int32)
+    d = jnp.full((cap,), jnp.inf)
+    r_ids = np.asarray(items, np.int32)
+    r_d = r_ids.astype(np.float32)          # distance == id
+    ids, d, count = _merge_candidates(n, ids, d, jnp.asarray(r_ids),
+                                      jnp.asarray(r_d))
+    ids, d = np.asarray(ids), np.asarray(d)
+    uniq = sorted(set(items))
+    expect = uniq[:cap]
+    got = sorted(ids[ids < n].tolist())
+    assert got == expect

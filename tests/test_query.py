@@ -1,0 +1,159 @@
+"""Tests for the query phase: Alg. 3/4/5 semantics + quality guarantees."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import DETLSH, derive_params, estimate_r_min
+from repro.core.query import QueryConfig, knn_query, rc_ann_query
+from tests.conftest import brute_force_knn, make_clustered
+
+
+@pytest.fixture(scope="module")
+def built(small_dataset):
+    data, queries = small_dataset
+    p = derive_params(K=4, c=1.5, L=16, beta_override=0.1)
+    idx = DETLSH.build(jnp.asarray(data), jax.random.key(0), p, leaf_size=64)
+    return idx, data, queries
+
+
+def test_knn_returns_valid_sorted(built):
+    idx, data, queries = built
+    k = 10
+    res = idx.query(jnp.asarray(queries), k=k)
+    ids = np.asarray(res.ids)
+    dd = np.asarray(res.dists)
+    n = data.shape[0]
+    assert ids.shape == (len(queries), k)
+    assert np.all((ids >= 0) & (ids < n))          # all valid
+    assert np.all(np.diff(dd, axis=1) >= -1e-5)    # ascending distances
+    # reported distances must equal true distances of returned ids
+    true = np.sqrt(((data[ids] - queries[:, None, :]) ** 2).sum(-1))
+    np.testing.assert_allclose(dd, true, rtol=1e-4, atol=1e-4)
+
+
+def test_c2_ratio_guarantee(built):
+    """Theorem 2: each returned o_i has ||q,o_i|| <= c^2 ||q,o_i*|| for at
+    least a (1/2 - 1/e) fraction — empirically it holds for nearly all."""
+    idx, data, queries = built
+    k = 10
+    res = idx.query(jnp.asarray(queries), k=k)
+    dd = np.asarray(res.dists)
+    _, gt_d = brute_force_knn(data, queries, k)
+    c2 = idx.params.c ** 2
+    ok = np.all(dd <= c2 * gt_d + 1e-4, axis=1)
+    assert ok.mean() >= idx.params.success_probability, ok.mean()
+
+
+def test_recall_reasonable_on_clustered(built):
+    idx, data, queries = built
+    k = 10
+    res = idx.query(jnp.asarray(queries), k=k, M=16)
+    gt_i, _ = brute_force_knn(data, queries, k)
+    ids = np.asarray(res.ids)
+    recall = np.mean([len(set(ids[i]) & set(gt_i[i])) / k
+                      for i in range(len(queries))])
+    assert recall >= 0.5, recall
+
+
+def test_termination_conditions(built):
+    """T1: |S| stops at >= beta*n + k (within one round's cap)."""
+    idx, data, queries = built
+    n = data.shape[0]
+    k = 10
+    res = idx.query(jnp.asarray(queries), k=k)
+    count = np.asarray(res.n_candidates)
+    rounds = np.asarray(res.rounds)
+    cap_round = idx.params.L * 8 * idx.forest.leaf_size
+    assert np.all(rounds >= 1)
+    t1_bound = idx.params.beta * n + k + cap_round
+    assert np.all(count <= t1_bound)
+
+
+def test_strict_mode_subset_of_leaf_mode(built):
+    """Unoptimized Alg. 3 (strict) examines a subset of the optimized
+    leaf-granularity candidates -> its |S| can only be smaller."""
+    idx, data, queries = built
+    q = jnp.asarray(queries[0])
+    r0 = estimate_r_min(idx.data, jnp.asarray(queries), 10, idx.params.c)
+    for mode, counts in (("strict", []), ("leaf", [])):
+        pass
+    cfg_leaf = QueryConfig(k=10, M=8, r_min=r0, mode="leaf")
+    cfg_strict = QueryConfig(k=10, M=8, r_min=r0, mode="strict")
+    res_l = knn_query(idx.data, idx.forest, idx.A, idx.params, q, cfg_leaf)
+    res_s = knn_query(idx.data, idx.forest, idx.A, idx.params, q, cfg_strict)
+    assert int(res_s.n_candidates) <= int(res_l.n_candidates) + 1
+
+
+def test_rc_ann_query_contract(built):
+    """Definition 3: if it returns a point o', then ||q,o'|| <= c*r when a
+    point within r exists."""
+    idx, data, queries = built
+    n = data.shape[0]
+    c = idx.params.c
+    gt_i, gt_d = brute_force_knn(data, queries[:4], 1)
+    cfg = QueryConfig(k=1, M=16)
+    hits = 0
+    for qi in range(4):
+        r = float(gt_d[qi, 0]) * 1.05     # a point within r exists
+        res = rc_ann_query(idx.data, idx.forest, idx.A, idx.params,
+                           jnp.asarray(queries[qi]), r, cfg)
+        oid = int(res.ids[0])
+        if oid < n:
+            assert float(res.dists[0]) <= c * r + 1e-4
+            hits += 1
+    # constant success probability: with 4 easy queries expect >= 1 hit
+    assert hits >= 1
+
+
+def test_increasing_M_does_not_reduce_candidates(built):
+    idx, data, queries = built
+    q = jnp.asarray(queries[1])
+    r0 = estimate_r_min(idx.data, jnp.asarray(queries), 10, idx.params.c)
+    counts = []
+    for M in (2, 8, 24):
+        cfg = QueryConfig(k=10, M=M, r_min=r0)
+        res = knn_query(idx.data, idx.forest, idx.A, idx.params, q, cfg)
+        counts.append(int(res.n_candidates))
+    assert counts[0] <= counts[1] + 1 and counts[1] <= counts[2] + 1
+
+
+def test_full_budget_quality_on_tiny_dataset():
+    """With a candidate budget >= n, every returned point must satisfy the
+    per-point c^2 bound (T2 may still stop the scan early — the contract is
+    the ratio, not exactness) and recall should be near-perfect."""
+    rng = np.random.default_rng(11)
+    data = make_clustered(rng, 512, 8)
+    queries = make_clustered(rng, 4, 8)
+    p = derive_params(K=4, c=1.5, L=4, beta_override=1.0)  # beta*n = n
+    idx = DETLSH.build(jnp.asarray(data), jax.random.key(1), p, leaf_size=16)
+    res = idx.query(jnp.asarray(queries), k=5, M=32, max_rounds=64)
+    gt_i, gt_d = brute_force_knn(data, queries, 5)
+    dd = np.asarray(res.dists)
+    assert np.all(dd <= p.c ** 2 * gt_d + 1e-4)
+    ids = np.asarray(res.ids)
+    recall = np.mean([len(set(ids[i]) & set(gt_i[i])) / 5 for i in range(4)])
+    assert recall >= 0.8, recall
+
+
+from hypothesis import given, settings, strategies as st
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10 ** 6), st.sampled_from([(4, 8), (8, 4)]),
+       st.floats(1.2, 2.0))
+def test_property_c2_guarantee_across_datasets(seed, KL, c):
+    """Property: the per-point c^2 bound holds at >= the Theorem-2 rate
+    across data seeds, (K, L) settings, and approximation ratios."""
+    K, L = KL
+    rng = np.random.default_rng(seed)
+    data = make_clustered(rng, 2048, 12)
+    queries = make_clustered(rng, 6, 12)
+    p = derive_params(K=K, c=float(c), L=L, beta_override=0.1)
+    idx = DETLSH.build(jnp.asarray(data), jax.random.key(seed % 997), p,
+                       leaf_size=32)
+    res = idx.query(jnp.asarray(queries), k=5, M=8)
+    _, gt_d = brute_force_knn(data, queries, 5)
+    ok = np.all(np.asarray(res.dists) <= p.c ** 2 * gt_d + 1e-4, axis=1)
+    assert ok.mean() >= p.success_probability, (ok.mean(), seed, K, L, c)

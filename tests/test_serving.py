@@ -1,0 +1,34 @@
+"""Batched LSH serving loop tests."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DETLSH, derive_params
+from repro.serving.lsh_service import LSHService
+from tests.conftest import brute_force_knn, make_clustered, make_queries_near
+
+
+def test_service_batches_and_answers(rng):
+    data = make_clustered(rng, 4096, 16)
+    p = derive_params(K=4, c=1.5, L=8, beta_override=0.1)
+    idx = DETLSH.build(jnp.asarray(data), jax.random.key(0), p,
+                       leaf_size=32)
+    svc = LSHService(idx, k=5, max_batch=8, pad_to=8)
+    svc.warmup(16)
+
+    queries = make_queries_near(data, rng, 20)
+    now = time.perf_counter()
+    results = svc.serve([(now, q) for q in queries])
+    assert len(results) == 20
+    assert svc.stats.batches == 3          # 8 + 8 + 4
+    assert svc.stats.queries == 20
+    s = svc.stats.summary()
+    assert s["p99_ms"] >= s["p50_ms"] > 0
+
+    gt_i, _ = brute_force_knn(data, queries, 5)
+    recall = np.mean([len(set(np.asarray(results[i][0])) & set(gt_i[i])) / 5
+                      for i in range(20)])
+    assert recall >= 0.6, recall

@@ -1,0 +1,95 @@
+"""Sharding rules unit tests (no multi-device needed: AbstractMesh-free,
+1-device mesh behaves as size-1 axes; divisibility logic is pure)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.launch.specs import apply_mesh_padding
+from repro.sharding import rules as R
+
+
+class FakeMesh:
+    """Duck-typed mesh exposing .shape for rule resolution tests."""
+
+    def __init__(self, shape):
+        self.shape = dict(shape)
+
+
+def _rules(shape):
+    r = R.ShardingRules.__new__(R.ShardingRules)
+    r.mesh = FakeMesh(shape)
+    r.rules = dict(R.DEFAULT_RULES)
+    for k, v in list(r.rules.items()):
+        r.rules[k] = r._filter_axes(v)
+    return r
+
+
+def test_spec_divisibility_fallback():
+    r = _rules({"data": 16, "model": 16})
+    # vocab 51865 not divisible by 16 -> replicated; 51968 is -> sharded
+    assert r.spec(("vocab",), (51865,)) == P(None)
+    assert r.spec(("vocab",), (51968,)) == P("model")
+
+
+def test_spec_no_axis_reuse():
+    r = _rules({"data": 4, "model": 4})
+    # heads and d_ff both map to 'model': second one must fall back
+    spec = r.spec(("heads", "d_ff"), (8, 16))
+    assert spec == P("model", None)
+
+
+def test_missing_axes_are_dropped():
+    r = _rules({"data": 8})        # no 'model', no 'pod'
+    assert r.rules["d_ff"] is None
+    assert r.rules["batch"] == "data"
+    assert r.spec(("batch", "d_ff"), (16, 64)) == P("data", None)
+
+
+def test_param_logical_axes_matches_nested_opt_state():
+    w = jnp.zeros((4, 128, 256))   # stacked-by-layer w_gate
+    path = (jax.tree_util.DictKey("m"), jax.tree_util.DictKey("layers"),
+            jax.tree_util.DictKey("mlp"), jax.tree_util.DictKey("w_gate"))
+    axes = R.param_logical_axes(path, w)
+    assert axes == (None, "fsdp", "d_ff")
+    # int8 code leaf keeps the param rank
+    path_q = path + (jax.tree_util.DictKey("q"),)
+    assert R.param_logical_axes(path_q, w) == (None, "fsdp", "d_ff")
+
+
+def test_head_padding_policy():
+    r = _rules({"data": 16, "model": 16})
+    # qwen1.5-32b: 40 q heads -> 48, kv 40 -> 48 (divides 48)
+    cfg = apply_mesh_padding(get_config("qwen1.5-32b"), r)
+    assert cfg.n_heads == 48 and cfg.n_kv_heads == 48
+    # hymba: 25 -> 32, kv 5 -> 8
+    cfg = apply_mesh_padding(get_config("hymba-1.5b"), r)
+    assert cfg.n_heads == 32 and cfg.n_kv_heads == 8
+    assert cfg.n_heads % cfg.n_kv_heads == 0
+    # whisper: 8 heads < 16 -> unpadded (attention replicated)
+    cfg = apply_mesh_padding(get_config("whisper-base"), r)
+    assert cfg.n_heads == 8
+    # vocab padded to a 128 multiple, original kept in vocab_real
+    assert cfg.vocab_size % 128 == 0
+    assert cfg.vocab_real == 51865
+
+
+def test_all_archs_padding_invariants():
+    r = _rules({"pod": 2, "data": 16, "model": 16})
+    from repro.configs import list_archs
+    for arch in list_archs():
+        cfg = apply_mesh_padding(get_config(arch), r)
+        assert cfg.n_heads % cfg.n_kv_heads == 0, arch
+        assert cfg.vocab_size % 128 == 0 or cfg.vocab_size == \
+            get_config(arch).vocab_size, arch
+        if cfg.n_heads >= 16:
+            assert cfg.n_heads % 16 == 0, arch
+
+
+def test_constrain_noop_without_rules():
+    x = jnp.ones((4, 4))
+    y = R.constrain(x, ("batch", None))
+    assert y is x

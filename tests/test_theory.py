@@ -1,0 +1,67 @@
+"""Tests for the Lemma 3 / Theorem 1-3 parameter machinery."""
+
+import math
+
+import numpy as np
+import pytest
+from scipy.stats import chi2
+
+from repro.core import theory
+
+
+def test_chi2_upper_quantile_roundtrip():
+    for k in (1, 4, 16, 64):
+        for a in (0.05, 0.3, 0.7788):
+            y = theory.chi2_upper_quantile(a, k)
+            assert math.isclose(chi2.sf(y, k), a, rel_tol=1e-9)
+
+
+def test_chi2_cdf_jax_matches_scipy():
+    ys = np.linspace(0.1, 60.0, 23)
+    for k in (4, 16):
+        got = np.asarray(theory.chi2_cdf_jax(ys, k))
+        want = chi2.cdf(ys, k)
+        np.testing.assert_allclose(got, want, atol=2e-6)
+
+
+def test_lemma3_coupling():
+    """eps^2 = chi2_{a1}(K) = c^2 chi2_{a2}(K) must hold simultaneously."""
+    for K, c, L in [(16, 1.5, 4), (4, 1.5, 16), (16, 2.0, 2), (8, 1.2, 8)]:
+        p = theory.derive_params(K=K, c=c, L=L)
+        assert math.isclose(p.alpha1, math.exp(-1.0 / L), rel_tol=1e-12)
+        assert math.isclose(p.epsilon ** 2,
+                            theory.chi2_upper_quantile(p.alpha1, K),
+                            rel_tol=1e-9)
+        assert math.isclose(p.epsilon ** 2 / c ** 2,
+                            theory.chi2_upper_quantile(p.alpha2, K),
+                            rel_tol=1e-6)
+        assert math.isclose(p.beta, 2 - 2 * p.alpha2 ** L, rel_tol=1e-9)
+
+
+def test_event_probability_bounds():
+    """Lemma 3: Pr[E1] >= 1 - 1/e and Pr[E3] >= 1/2 (with theoretical beta)."""
+    for K, c, L in [(16, 1.5, 4), (4, 1.5, 16)]:
+        p = theory.derive_params(K=K, c=c, L=L)
+        ev = theory.event_probabilities(p)
+        assert ev["pr_E1"] >= 1 - 1 / math.e - 1e-9
+        assert ev["pr_E3"] >= 0.5 - 1e-9
+        assert p.success_probability == pytest.approx(0.5 - 1 / math.e)
+
+
+def test_beta_monotone_decreasing_in_L():
+    """Paper Fig. 6: beta drops with L (rapidly until L=4)."""
+    betas = theory.beta_of_L(16, 1.5, np.arange(1, 13))
+    assert np.all(np.diff(betas) < 0)
+    # "beta drops rapidly until L=4, then slowly"
+    drop_early = betas[0] - betas[3]
+    drop_late = betas[3] - betas[7]
+    assert drop_early > drop_late
+
+
+def test_derive_params_validates():
+    with pytest.raises(ValueError):
+        theory.derive_params(K=0)
+    with pytest.raises(ValueError):
+        theory.derive_params(c=1.0)
+    with pytest.raises(ValueError):
+        theory.chi2_upper_quantile(0.0, 4)
