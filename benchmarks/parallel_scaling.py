@@ -29,7 +29,7 @@ _SCRIPT = textwrap.dedent("""
     import json, sys, time
     import jax, jax.numpy as jnp, numpy as np
     sys.path.insert(0, {src!r}); sys.path.insert(0, {root!r})
-    from jax.sharding import AxisType
+    from repro.launch.mesh import make_mesh
     from repro.core import derive_params
     from repro.core.distributed import build_pdet
     from repro.core.query import QueryConfig
@@ -39,8 +39,7 @@ _SCRIPT = textwrap.dedent("""
     data = jnp.asarray(make_dataset("deep-like", n))
     queries = jnp.asarray(make_queries(np.asarray(data), nq))
     p = derive_params(K=4, c=1.5, L=8, beta_override=0.05)
-    mesh = jax.make_mesh(({nw},), ("data",),
-                         axis_types=(AxisType.Auto,))
+    mesh = make_mesh(({nw},), ("data",))
     t0 = time.perf_counter()
     idx = build_pdet(data, jax.random.key(0), p, mesh, axes=("data",),
                      leaf_size=64)

@@ -1,0 +1,100 @@
+"""Query-phase throughput: fused batched engine vs the seed vmap baseline.
+
+Measures steady-state batched c^2-k-ANN throughput (queries/second, post
+warm-up) for both engines over a sweep of batch sizes, and records the
+trajectory in BENCH_query.json at the repo root (plus the usual CSV under
+benchmarks/out/).  The acceptance gate for the fused engine is >= 2x the
+vmap baseline at batch >= 32 on the default synthetic workload.
+
+  PYTHONPATH=src python -m benchmarks.run --only query_throughput
+  PYTHONPATH=src python -m benchmarks.run --smoke       # small + JSON only
+"""
+
+from __future__ import annotations
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (Table, ground_truth, make_dataset,
+                               make_queries, recall, timed)
+
+# Default workload: clustered "deep-like" vectors (d=96), index sized so the
+# candidate buffer (beta*n + k + round) dominates the vmap engine's per-round
+# sort — the regime the paper's query-phase numbers live in.
+DEFAULT = dict(n=8192, dataset="deep-like", K=4, L=8, c=1.5, beta=0.1,
+               leaf_size=64, k=10, batches=(1, 8, 32, 64), repeat=3)
+SMOKE = dict(n=4096, dataset="deep-like", K=4, L=8, c=1.5, beta=0.1,
+             leaf_size=64, k=10, batches=(32,), repeat=1)
+
+
+def _build(cfg):
+    from repro.core import DETLSH, derive_params, estimate_r_min
+    data = make_dataset(cfg["dataset"], cfg["n"], seed=0)
+    queries = make_queries(data, max(cfg["batches"]), seed=1)
+    p = derive_params(K=cfg["K"], c=cfg["c"], L=cfg["L"],
+                      beta_override=cfg["beta"])
+    idx = DETLSH.build(jnp.asarray(data), jax.random.key(0), p,
+                       leaf_size=cfg["leaf_size"])
+    r0 = estimate_r_min(idx.data, jnp.asarray(queries), cfg["k"], p.c)
+    return idx, data, queries, r0
+
+
+def run_query_throughput(cfg=None, json_path: str = "BENCH_query.json",
+                         out_dir: str | None = "benchmarks/out") -> Table:
+    from repro.core.query import QueryConfig, knn_query_batch
+    cfg = dict(DEFAULT, **(cfg or {}))
+    idx, data, queries, r0 = _build(cfg)
+    gt_i, _ = ground_truth(data, queries, cfg["k"])
+    plan = idx.fused_plan()
+
+    table = Table("query_throughput",
+                  ["batch", "engine", "ms_per_batch", "qps", "recall"])
+    rows = []
+    for b in cfg["batches"]:
+        qb = jnp.asarray(queries[:b])
+        per_engine = {}
+        for engine in ("vmap", "fused"):
+            qcfg = QueryConfig(k=cfg["k"], M=8, r_min=r0, engine=engine)
+            fn = jax.jit(lambda q, c=qcfg: knn_query_batch(
+                idx.data, idx.forest, idx.A, idx.params, q, c,
+                plan=plan if engine == "fused" else None))
+            res, sec = timed(fn, qb, repeat=cfg["repeat"])
+            rec = recall(np.asarray(res.ids), gt_i[:b])
+            qps = b / sec
+            per_engine[engine] = qps
+            table.add(b, engine, sec * 1e3, qps, rec)
+            rows.append(dict(batch=b, engine=engine, ms_per_batch=sec * 1e3,
+                             qps=qps, recall=rec))
+        speedup = per_engine["fused"] / per_engine["vmap"]
+        table.add(b, "speedup", float("nan"), speedup, float("nan"))
+        rows.append(dict(batch=b, engine="speedup", qps=speedup))
+
+    payload = dict(
+        bench="query_throughput",
+        workload={k: v for k, v in cfg.items() if k != "batches"},
+        batches=list(cfg["batches"]),
+        backend=jax.default_backend(),
+        rows=rows,
+        speedup_fused_over_vmap={
+            str(b): next(r["qps"] for r in rows
+                         if r["batch"] == b and r["engine"] == "speedup")
+            for b in cfg["batches"]},
+    )
+    with open(json_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    if out_dir:
+        table.emit(out_dir)
+    return table
+
+
+def query_throughput() -> Table:
+    """run.py figure entry point (full sweep)."""
+    return run_query_throughput()
+
+
+def query_throughput_smoke() -> Table:
+    """CI smoke: one batch size, small index, still writes BENCH_query.json."""
+    return run_query_throughput(SMOKE)

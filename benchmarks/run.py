@@ -6,6 +6,9 @@ and writes per-figure CSVs under benchmarks/out/.
   PYTHONPATH=src python -m benchmarks.run            # all LSH figures
   PYTHONPATH=src python -m benchmarks.run --fast     # skip slow subprocess
   PYTHONPATH=src python -m benchmarks.run --only fig08_query_opt
+  PYTHONPATH=src python -m benchmarks.run --smoke    # CI: query throughput
+                                                     # only, writes
+                                                     # BENCH_query.json
 """
 
 from __future__ import annotations
@@ -17,7 +20,9 @@ import time
 
 def _figures(fast: bool):
     from benchmarks import lsh_figures as F
+    from benchmarks import query_throughput as Q
     figs = [
+        Q.query_throughput,
         F.fig02_breakpoints,
         F.fig06_beta_L,
         F.fig07_index_breakdown,
@@ -40,12 +45,21 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="skip multi-process scaling benchmarks")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: only the query-throughput bench on a "
+                         "small index; writes BENCH_query.json")
     ap.add_argument("--only", default="")
     ap.add_argument("--out-dir", default="benchmarks/out")
     args = ap.parse_args(argv)
 
+    if args.smoke:
+        from benchmarks import query_throughput as Q
+        figures = [Q.query_throughput_smoke]
+    else:
+        figures = _figures(args.fast)
+
     summary = ["name,us_per_call,derived"]
-    for fig in _figures(args.fast):
+    for fig in figures:
         if args.only and fig.__name__ != args.only:
             continue
         t0 = time.perf_counter()

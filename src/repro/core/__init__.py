@@ -18,10 +18,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from typing import Optional
+
 from repro.core.theory import LSHParams, derive_params, SUCCESS_PROBABILITY
 from repro.core import hashing, encoding, detree, query as query_mod
 from repro.core.detree import DEForest, build_forest
-from repro.core.query import QueryConfig, QueryResult, knn_query_batch
+from repro.core.query import (FusedPlan, QueryConfig, QueryResult,
+                              knn_query_batch, make_fused_plan)
 
 
 def estimate_r_min(data: jax.Array, queries: jax.Array, k: int,
@@ -50,6 +53,10 @@ class DETLSH:
     A: jax.Array           # (d, L*K) projection matrix
     forest: DEForest
     data: jax.Array        # (n, d) — kept resident for exact rerank (paper §VI-C4)
+    # Fused-engine constants (code-sorted points + inverse permutations),
+    # built lazily once per index and reused across query batches.
+    _plan: Optional[FusedPlan] = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     @classmethod
     def build(cls, data: jax.Array, key: jax.Array,
@@ -69,22 +76,30 @@ class DETLSH:
                               encode_impl=encode_impl)
         return cls(params=params, A=A, forest=forest, data=data)
 
+    def fused_plan(self) -> FusedPlan:
+        if self._plan is None:
+            self._plan = make_fused_plan(self.data, self.forest)
+        return self._plan
+
     def query(self, queries: jax.Array, k: int = 50, *,
               r_min: float | None = None, M: int = 8,
-              mode: str = "leaf", max_rounds: int = 48) -> QueryResult:
+              mode: str = "leaf", max_rounds: int = 48,
+              engine: str = "auto") -> QueryResult:
         if r_min is None:
             r_min = estimate_r_min(self.data, queries, k, self.params.c)
         cfg = QueryConfig(k=k, M=M, r_min=r_min, mode=mode,
-                          max_rounds=max_rounds)
+                          max_rounds=max_rounds, engine=engine)
+        engine_used = query_mod._pick_engine(cfg, queries.shape[0])
+        plan = self.fused_plan() if engine_used == "fused" else None
         return knn_query_batch(self.data, self.forest, self.A, self.params,
-                               queries, cfg)
+                               queries, cfg, plan=plan)
 
     def index_size_bytes(self) -> int:
         return self.forest.size_bytes() + self.A.size * 4
 
 
 __all__ = [
-    "DETLSH", "DEForest", "LSHParams", "QueryConfig", "QueryResult",
-    "derive_params", "build_forest", "knn_query_batch", "estimate_r_min",
-    "SUCCESS_PROBABILITY",
+    "DETLSH", "DEForest", "FusedPlan", "LSHParams", "QueryConfig",
+    "QueryResult", "derive_params", "build_forest", "knn_query_batch",
+    "make_fused_plan", "estimate_r_min", "SUCCESS_PROBABILITY",
 ]

@@ -1,0 +1,120 @@
+"""Incremental candidate-set maintenance for the c^2-k-ANN rounds (Alg. 5).
+
+The seed implementation (``query._merge_candidates``) re-sorted the whole
+``cap``-sized buffer every round: an O(cap log cap) argsort + top_k per round
+*per query*, with cap = beta*n + k + round_cap.  This module replaces it with
+an incremental scheme whose per-round cost scales with the *round's*
+candidate count m, not the buffer:
+
+  * a packed-uint32 **seen-bitmap** (one bit per dataset point) answers
+    "was this id already counted in S?" with one gather + bit test — O(m);
+  * the round batch is deduped in-round with one m-sized stable sort and
+    compacted with a cumsum — O(m log m);
+  * surviving (first-seen) candidates are **appended at a cursor** into the
+    fixed-size buffer with a bounded scatter — O(m).  No eviction is ever
+    needed: Alg. 5 terminates as soon as the unique count reaches
+    beta*n + k, and every round adds at most ``round_cap`` candidates, so
+    with cap >= beta*n + k + round_cap the cursor can never pass ``cap``
+    (see docs/DESIGN.md §2) — which is exactly the capacity the seed path
+    already allocated.
+
+The cursor *is* the unique count |S| (the quantity Theorems 1-3 see), so the
+Alg. 5 line-7 termination test is a scalar compare.  The buffer is no longer
+kept distance-sorted between rounds — nothing in the round loop needs order:
+the T2 test is a masked reduction and the final top-k selection happens once
+per query, not once per round.
+
+Equivalence with the seed merge (same kept ids/distances/unique count, after
+canonical (distance, id) ordering) holds whenever (a) the capacity invariant
+above is respected and (b) duplicate ids carry equal distances — both true
+by construction in the query engine, where a candidate's distance is its
+deterministic exact distance.  Property-tested in
+``tests/test_merge_properties.py``.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CandidateState(NamedTuple):
+    """Per-query Alg. 5 candidate set S in incremental form."""
+
+    ids: jax.Array      # (cap,) int32 — appended unique ids; n = empty slot
+    dists: jax.Array    # (cap,) f32  — exact distances; +inf in empty slots
+    seen: jax.Array     # (ceil(n/32),) uint32 — membership bitmap over ids
+    count: jax.Array    # () int32 — cursor == |S| (unique candidates)
+
+
+def bitmap_words(n: int) -> int:
+    return (n + 31) // 32
+
+
+def init_state(n: int, cap: int) -> CandidateState:
+    return CandidateState(
+        ids=jnp.full((cap,), n, jnp.int32),
+        dists=jnp.full((cap,), jnp.inf, jnp.float32),
+        seen=jnp.zeros((bitmap_words(n),), jnp.uint32),
+        count=jnp.asarray(0, jnp.int32),
+    )
+
+
+def bitmap_test(seen: jax.Array, ids: jax.Array, n: int) -> jax.Array:
+    """True where ``ids`` (int32, may contain the sentinel n) is already set."""
+    safe = jnp.clip(ids, 0, n - 1)
+    word = seen[safe >> 5]
+    bit = (safe & 31).astype(jnp.uint32)
+    return ((word >> bit) & 1).astype(jnp.bool_)
+
+
+def merge_round(n: int, state: CandidateState, new_ids: jax.Array,
+                new_d: jax.Array) -> CandidateState:
+    """Fold one round's candidates into S.  new_ids/new_d: (m,), id n = invalid.
+
+    Cost: one stable m-sort + O(m) scatters.  Requires the capacity invariant
+    in the module docstring; overflowing appends are dropped (mode='drop'),
+    which the invariant proves unreachable before termination.
+    """
+    cap = state.ids.shape[0]
+    m = new_ids.shape[0]
+
+    fresh = (new_ids < n) & ~bitmap_test(state.seen, new_ids, n)
+    # In-round dedup: stable sort by (masked) id puts duplicates adjacent and
+    # invalid entries last; keep first occurrences only.
+    ids_m = jnp.where(fresh, new_ids, n)
+    order = jnp.argsort(ids_m, stable=True)
+    ids_s = ids_m[order]
+    d_s = jnp.where(fresh, new_d, jnp.inf)[order]
+    first = jnp.concatenate(
+        [jnp.ones((1,), jnp.bool_), ids_s[1:] != ids_s[:-1]])
+    keep = first & (ids_s < n)
+
+    # Append kept entries at the cursor (cumsum assigns dense slots).
+    pos = state.count + jnp.cumsum(keep.astype(jnp.int32)) - 1
+    pos = jnp.where(keep, pos, cap)                      # 'drop' sentinel
+    ids_out = state.ids.at[pos].set(ids_s, mode="drop")
+    d_out = state.dists.at[pos].set(d_s, mode="drop")
+
+    # Set bitmap bits.  Kept ids are unique, so bits within a shared word
+    # never collide and scatter-add equals scatter-or.
+    safe = jnp.clip(ids_s, 0, n - 1)
+    word_idx = jnp.where(keep, safe >> 5, state.seen.shape[0])
+    bits = jnp.left_shift(jnp.uint32(1), (safe & 31).astype(jnp.uint32))
+    seen_out = state.seen.at[word_idx].add(
+        jnp.where(keep, bits, jnp.uint32(0)), mode="drop")
+
+    count_out = state.count + jnp.sum(keep).astype(jnp.int32)
+    return CandidateState(ids=ids_out, dists=d_out, seen=seen_out,
+                          count=count_out)
+
+
+def canonicalize(n: int, ids: jax.Array, dists: jax.Array
+                 ) -> tuple[jax.Array, jax.Array]:
+    """Sort a buffer ascending by (distance, id) — the seed merge's output
+    order (its top_k tie-broke equal distances by position in id-sorted
+    order).  Used for the final extraction and the equivalence tests."""
+    d_s, ids_s = jax.lax.sort((dists, ids), num_keys=2)
+    return ids_s, d_s

@@ -32,8 +32,9 @@ from typing import Sequence
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.sharding.compat import shard_map
 
 from repro.core import encoding as enc
 from repro.core import hashing

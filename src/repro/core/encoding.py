@@ -61,14 +61,24 @@ def breakpoints_sample_sort(coords: jax.Array, Nr: int = DEFAULT_NR, *,
                             key: jax.Array | None = None,
                             sample_fraction: float = 0.1,
                             min_sample: int = 4096) -> jax.Array:
-    """Breakpoints via sorting a sample.  coords: (n, D) -> (D, Nr+1)."""
+    """Breakpoints via sorting a sample.  coords: (n, D) -> (D, Nr+1).
+
+    Determinism contract: with ``key=None`` the sample is the first ``n_s``
+    rows of the fixed-stride subsequence ``coords[::max(1, n//n_s)]`` —
+    exactly (n_s, D), deterministic for a given input, and unbiased for
+    *any* row order (a prefix slice, the previous behavior, is a biased
+    sample when rows arrive sorted or clustered: quantiles of the first 10%
+    are not quantiles of the data).  Pass ``key`` for an i.i.d. random
+    sample of the same shape.
+    """
     n, D = coords.shape
     n_s = min(n, max(min_sample, int(n * sample_fraction)))
     if key is not None and n_s < n:
         sel = jax.random.choice(key, n, (n_s,), replace=False)
         sample = coords[sel, :]
     else:
-        sample = coords[:n_s, :]
+        stride = max(1, n // n_s)                 # floor: >= n_s rows remain
+        sample = coords[::stride][:n_s, :]
     sample_sorted = jnp.sort(sample, axis=0)
     bp = _order_statistic_breakpoints(sample_sorted, Nr)
     # True min/max must come from the full data so every point is coverable.

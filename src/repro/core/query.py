@@ -22,18 +22,38 @@ TPU adaptation of the range query (Alg. 3 + the §VI-B2 optimizations):
 
 The round structure checks termination after each round of L trees rather
 than after every tree; this can only make S larger at return time, which
-preserves the guarantee (see DESIGN.md §2).
+preserves the guarantee (see docs/DESIGN.md §2).
+
+Two query engines (docs/DESIGN.md §3):
+
+  * ``engine='fused'`` (default for batches in ``mode='leaf'``) — the whole
+    batch advances through radius rounds together.  Each round is ONE fused
+    ``range_rerank`` kernel pass (leaf LB + radius admission + candidate
+    gather + exact rerank, tiled query-block x leaf-block over all L trees),
+    and the candidate set is maintained as a per-query dense
+    best-exact-distance table, so merging a round costs one gather + min —
+    no per-round sort.  Done lanes carry a -1 radius and admit nothing
+    (active-lane masking).  Admission is leaf-granular without the top-M
+    cut: a superset of the vmap engine's candidates, so Theorems 1-3 still
+    apply.
+  * ``engine='vmap'`` — the seed per-query ``while_loop``, vmapped.  Kept
+    for ``mode='strict'``, single queries, and as the benchmark baseline.
+    Its per-round candidate merge is the incremental bitmap+cursor scheme
+    of ``core.candidates`` (the seed's O(cap log cap) argsort-per-round,
+    ``_merge_candidates``, is retained below as the semantics-of-record
+    oracle for the property tests).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import candidates as cand
 from repro.core.detree import DEForest, leaf_bounds
 from repro.core.theory import LSHParams
 
@@ -88,9 +108,16 @@ def range_query_round(forest: DEForest, q_proj: jax.Array, r_proj: jax.Array,
 def _merge_candidates(n: int, buf_ids: jax.Array, buf_d: jax.Array,
                       new_ids: jax.Array, new_d: jax.Array) -> tuple[
                           jax.Array, jax.Array, jax.Array]:
-    """Merge new candidates into the fixed-size buffer, dedup by id.
+    """Seed sort-based merge — kept as the semantics-of-record oracle.
 
-    Buffer keeps the ``cap`` smallest-distance unique candidates; returns
+    The query engines now use ``core.candidates.merge_round`` (per-round cost
+    scales with the round size, not the buffer; see that module).  This
+    function re-sorts the whole buffer every call and remains only as the
+    reference the incremental scheme is property-tested against, and for the
+    distributed (multi-shard) path.
+
+    Merges new candidates into the fixed-size buffer, dedup by id.  Buffer
+    keeps the ``cap`` smallest-distance unique candidates; returns
     (ids, dists, unique_count_in_buffer).  Invalid slots carry id = n and
     dist = +inf.  Because the loop terminates as soon as the unique count
     reaches beta*n + k and cap >= beta*n + k + round_cap, no unique candidate
@@ -138,13 +165,16 @@ def exact_distances(data: jax.Array, q: jax.Array, ids: jax.Array,
 @dataclasses.dataclass(frozen=True)
 class QueryConfig:
     k: int = 50
-    M: int = 8                 # leaves fetched per tree per round
+    M: int = 8                 # leaves fetched per tree per round (vmap engine)
     cap: int = 0               # candidate buffer (0 = auto: beta*n + k + round)
     r_min: float = 1.0
     max_rounds: int = 48
     mode: str = "leaf"         # 'leaf' (optimized, default) | 'strict'
     dist_impl: str = "auto"
     bounds_impl: str = "auto"
+    engine: str = "auto"       # batch engine: 'auto' | 'fused' | 'vmap'
+    block_q: int = 8           # fused kernel query-tile
+    block_l: int = 8           # fused kernel leaf-tile
 
 
 def _auto_cap(n: int, params: LSHParams, cfg: QueryConfig,
@@ -165,38 +195,164 @@ def knn_query(data: jax.Array, forest: DEForest, A: jax.Array,
     thresh = jnp.asarray(params.beta * n + cfg.k, jnp.float32)
 
     def cond(state):
-        rnd, r, ids, d, count, done = state
+        rnd, r, cs, done = state
         return (~done) & (rnd < cfg.max_rounds)
 
     def body(state):
-        rnd, r, ids, d, count, done = state
+        rnd, r, cs, done = state
         new_ids, ok = range_query_round(
             forest, q_proj, params.epsilon * r, cfg.M, mode=cfg.mode,
             bounds_impl=cfg.bounds_impl)                        # line 5
         new_d = exact_distances(data, q, new_ids, ok, impl=cfg.dist_impl)
         new_ids = jnp.where(ok, new_ids, n)
-        ids, d, count = _merge_candidates(n, ids, d, new_ids, new_d)
-        t1 = count.astype(jnp.float32) >= thresh                # line 7
-        within = jnp.sum(d <= params.c * r).astype(jnp.int32)
+        cs = cand.merge_round(n, cs, new_ids, new_d)
+        t1 = cs.count.astype(jnp.float32) >= thresh             # line 7
+        within = jnp.sum(cs.dists <= params.c * r).astype(jnp.int32)
         t2 = within >= cfg.k                                    # line 9
         done = t1 | t2
         r = jnp.where(done, r, r * params.c)                    # line 11
-        return rnd + 1, r, ids, d, count, done
+        return rnd + 1, r, cs, done
 
     state0 = (jnp.asarray(0, jnp.int32), jnp.asarray(cfg.r_min, jnp.float32),
-              jnp.full((cap,), n, jnp.int32), jnp.full((cap,), jnp.inf),
-              jnp.asarray(0, jnp.int32), jnp.asarray(False))
-    rnd, r, ids, d, count, done = jax.lax.while_loop(cond, body, state0)
+              cand.init_state(n, cap), jnp.asarray(False))
+    rnd, r, cs, done = jax.lax.while_loop(cond, body, state0)
 
-    negd, sel = jax.lax.top_k(-d, cfg.k)                        # final rerank
-    return QueryResult(ids=ids[sel], dists=-negd, rounds=rnd,
+    negd, sel = jax.lax.top_k(-cs.dists, cfg.k)                 # final rerank
+    return QueryResult(ids=cs.ids[sel], dists=-negd, rounds=rnd,
+                       n_candidates=cs.count, final_r=r)
+
+
+# ---------------------------------------------------------------------------
+# Fused batched engine (docs/DESIGN.md §3)
+# ---------------------------------------------------------------------------
+
+class FusedPlan(NamedTuple):
+    """Per-index constants of the fused engine, computed once per forest.
+
+    points_sorted: (L, n_pad, d) original-space points in each tree's
+        code-sorted order — turns the candidate gather into contiguous
+        streaming (a leaf is a contiguous block).
+    inv_perm: (L, n) int32 — position of point i in tree l's sorted order;
+        lets a round's per-tree distance rows fold into the id-indexed
+        candidate table with a gather instead of a scatter.
+    """
+    points_sorted: jax.Array
+    inv_perm: jax.Array
+
+
+def make_fused_plan(data: jax.Array, forest: DEForest) -> FusedPlan:
+    n = forest.n
+    safe = jnp.clip(forest.point_ids, 0, n - 1)                  # (L, n_pad)
+    pts = jnp.take(data, safe, axis=0)                           # (L, n_pad, d)
+    pts = pts * forest.valid[..., None].astype(pts.dtype)
+    positions = jnp.arange(forest.point_ids.shape[1], dtype=jnp.int32)
+
+    def inv_one(ids_l, valid_l):
+        tgt = jnp.where(valid_l, ids_l, n)
+        return jnp.zeros((n,), jnp.int32).at[tgt].set(positions, mode="drop")
+
+    inv = jax.vmap(inv_one)(forest.point_ids, forest.valid)      # (L, n)
+    return FusedPlan(points_sorted=pts, inv_perm=inv)
+
+
+def fused_query_batch(data: jax.Array, forest: DEForest, A: jax.Array,
+                      params: LSHParams, queries: jax.Array,
+                      cfg: QueryConfig,
+                      plan: Optional[FusedPlan] = None) -> QueryResult:
+    """Batched c^2-k-ANN: all lanes advance through radius rounds together.
+
+    Per round: ONE fused range_rerank pass over (L trees x query blocks x
+    leaf blocks) returns exact distances for every point whose leaf is
+    admitted at each lane's current radius (-1 for done lanes => no work),
+    then the round folds into a per-query dense best-distance table with a
+    gather + elementwise min.  |S| is the table's finite count — the same
+    unique-candidate count Alg. 5 tracks, so T1/T2 and Theorems 1-3 are
+    unchanged (the admitted set is a superset of the vmap engine's;
+    docs/DESIGN.md §3).
+    """
+    n = data.shape[0]
+    B = queries.shape[0]
+    K, L = params.K, params.L
+    if plan is None:
+        plan = make_fused_plan(data, forest)
+    q_proj = (queries @ A).reshape(B, L, K).transpose(1, 0, 2)   # (L, B, K)
+    thresh = jnp.asarray(params.beta * n + cfg.k, jnp.float32)
+    interpret = cfg.dist_impl == "pallas_interpret"
+
+    from repro.kernels import ops as kops
+
+    def cond(state):
+        rnd, rounds, r, done, best = state
+        return jnp.any(~done) & (rnd < cfg.max_rounds)
+
+    def body(state):
+        rnd, rounds, r, done, best = state
+        r_eff = jnp.where(done, -1.0, params.epsilon * r)        # lane mask
+        dmat = kops.range_rerank(
+            queries, q_proj, r_eff, forest.leaf_lo, forest.leaf_hi,
+            forest.leaf_valid, forest.breakpoints, plan.points_sorted,
+            forest.valid, leaf_size=forest.leaf_size, interpret=interpret,
+            block_q=cfg.block_q, block_l=cfg.block_l)            # (L, B, n_pad)
+        # Fold the round into the id-indexed table: inv_perm turns each
+        # tree's sorted-order row into id order (gather, not scatter).
+        by_id = jnp.min(
+            jnp.take_along_axis(dmat, plan.inv_perm[:, None, :], axis=2),
+            axis=0)                                              # (B, n)
+        best = jnp.minimum(best, by_id)
+        count = jnp.sum(best < jnp.inf, axis=1).astype(jnp.int32)
+        t1 = count.astype(jnp.float32) >= thresh                 # line 7
+        within = jnp.sum(best <= params.c * r[:, None], axis=1)
+        t2 = within >= cfg.k                                     # line 9
+        rounds = jnp.where(done, rounds, rnd + 1)                # per lane
+        done = done | t1 | t2
+        r = jnp.where(done, r, r * params.c)                     # line 11
+        return rnd + 1, rounds, r, done, best
+
+    state0 = (jnp.asarray(0, jnp.int32),
+              jnp.zeros((B,), jnp.int32),
+              jnp.full((B,), cfg.r_min, jnp.float32),
+              jnp.zeros((B,), jnp.bool_),
+              jnp.full((B, n), jnp.inf, jnp.float32))
+    rnd, rounds, r, done, best = jax.lax.while_loop(cond, body, state0)
+
+    negd, sel = jax.lax.top_k(-best, cfg.k)
+    dists = -negd
+    ids = jnp.where(jnp.isfinite(dists), sel.astype(jnp.int32), n)
+    count = jnp.sum(best < jnp.inf, axis=1).astype(jnp.int32)
+    return QueryResult(ids=ids, dists=dists, rounds=rounds,
                        n_candidates=count, final_r=r)
+
+
+# Below this batch size the fused engine's full-forest streaming pass is not
+# amortized and the per-query vmap path wins (measured in BENCH_query.json).
+_FUSED_MIN_BATCH = 8
+
+
+def _pick_engine(cfg: QueryConfig, batch: int | None = None) -> str:
+    if cfg.engine not in ("auto", "fused", "vmap"):
+        raise ValueError(f"unknown engine: {cfg.engine}")
+    if cfg.mode == "strict":
+        # Strict Alg. 3 filters by per-point projected distance, which the
+        # fused kernel (leaf-granular admission) does not reproduce.
+        return "vmap"
+    if cfg.engine == "auto" and batch is not None and batch < _FUSED_MIN_BATCH:
+        return "vmap"
+    return "fused" if cfg.engine in ("auto", "fused") else "vmap"
 
 
 def knn_query_batch(data: jax.Array, forest: DEForest, A: jax.Array,
                     params: LSHParams, queries: jax.Array,
-                    cfg: QueryConfig) -> QueryResult:
-    """vmapped c^2-k-ANN over a (b, d) query batch."""
+                    cfg: QueryConfig,
+                    plan: Optional[FusedPlan] = None) -> QueryResult:
+    """Batched c^2-k-ANN over a (b, d) query batch.
+
+    Dispatches to the fused batched engine (default at batch >= 8) or the
+    per-query vmap baseline according to ``cfg.engine`` / ``cfg.mode`` and
+    the (static) batch size.
+    """
+    if _pick_engine(cfg, queries.shape[0]) == "fused":
+        return fused_query_batch(data, forest, A, params, queries, cfg,
+                                 plan=plan)
     fn = functools.partial(knn_query, data, forest, A, params, cfg=cfg)
     return jax.vmap(fn)(queries)
 
@@ -218,14 +374,13 @@ def rc_ann_query(data: jax.Array, forest: DEForest, A: jax.Array,
                                 mode=cfg.mode, bounds_impl=cfg.bounds_impl)
     d = exact_distances(data, q, ids, ok, impl=cfg.dist_impl)
     ids = jnp.where(ok, ids, n)
-    buf_ids, buf_d, count = _merge_candidates(
-        n, jnp.full((cap,), n, jnp.int32), jnp.full((cap,), jnp.inf), ids, d)
-    best = jnp.argmin(buf_d)
-    t1 = count >= jnp.asarray(params.beta * n + 1, jnp.int32)   # line 6
-    t2 = jnp.sum(buf_d <= params.c * r) >= 1                    # line 8
+    cs = cand.merge_round(n, cand.init_state(n, cap), ids, d)
+    best = jnp.argmin(cs.dists)
+    t1 = cs.count >= jnp.asarray(params.beta * n + 1, jnp.int32)  # line 6
+    t2 = jnp.sum(cs.dists <= params.c * r) >= 1                   # line 8
     give = t1 | t2
-    out_id = jnp.where(give, buf_ids[best], n).astype(jnp.int32)
-    out_d = jnp.where(give, buf_d[best], jnp.inf)
+    out_id = jnp.where(give, cs.ids[best], n).astype(jnp.int32)
+    out_d = jnp.where(give, cs.dists[best], jnp.inf)
     return QueryResult(ids=out_id[None], dists=out_d[None],
-                       rounds=jnp.asarray(1, jnp.int32), n_candidates=count,
+                       rounds=jnp.asarray(1, jnp.int32), n_candidates=cs.count,
                        final_r=jnp.asarray(r, jnp.float32))

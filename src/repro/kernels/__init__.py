@@ -9,5 +9,8 @@ tiling; ``ops.py`` is the jit'd public wrapper (padding + impl dispatch);
   encode_bins      — iSAX region assignment (VPU compare-accumulate)
   leaf_bounds      — DE-Tree LB/UB pruning distances (fused VPU)
   l2_rerank        — exact-distance rerank (MXU + fused norms)
+  range_rerank     — fused batched range query: leaf LB + radius admission +
+                     candidate gather + exact rerank in one grid pass (the
+                     query-phase engine; grid carries the tree axis)
   flash_attention  — online-softmax attention for the serving path
 """

@@ -23,6 +23,7 @@ from repro.kernels import encode_bins as _enc
 from repro.kernels import leaf_bounds as _lb
 from repro.kernels import l2_rerank as _l2
 from repro.kernels import flash_attention as _fa
+from repro.kernels import range_rerank as _rr
 
 
 def _use_pallas(interpret: bool) -> bool:
@@ -88,6 +89,40 @@ def l2_rerank(q, c, *, interpret: bool = False, block_q: int = 128,
     out = _l2.l2_rerank(qp, cp, block_q=block_q, block_c=block_c,
                         interpret=interpret)
     return out[:b, :m]
+
+
+@functools.partial(jax.jit, static_argnames=("leaf_size", "interpret",
+                                             "block_q", "block_l"))
+def range_rerank(q, q_proj, r_eff, leaf_lo, leaf_hi, leaf_valid, breakpoints,
+                 points, point_valid, *, leaf_size: int,
+                 interpret: bool = False, block_q: int = 8,
+                 block_l: int = 8):
+    """Fused batched range query + rerank; see kernels/range_rerank.py.
+
+    Pads the query batch to ``block_q`` (padded lanes get r_eff = -1 so they
+    admit nothing), the leaf axis to ``block_l`` (padded leaves invalid) and
+    the feature dim to the 128-lane MXU width (zero padding preserves
+    distances).  Returns (L, B, nl*leaf_size).
+    """
+    if not _use_pallas(interpret):
+        return _ref.range_rerank(q, q_proj, r_eff, leaf_lo, leaf_hi,
+                                 leaf_valid, breakpoints, points, point_valid,
+                                 leaf_size=leaf_size)
+    L, B, K = q_proj.shape
+    nl = leaf_lo.shape[1]
+    npts = nl * leaf_size
+    qp_b = _pad_to(_pad_to(q, 0, block_q), 1, 128)
+    qproj_b = _pad_to(q_proj, 1, block_q)
+    r_b = _pad_to(r_eff, 0, block_q, value=-1.0)
+    lo_b = _pad_to(leaf_lo, 1, block_l)
+    hi_b = _pad_to(leaf_hi, 1, block_l)
+    lv_b = _pad_to(leaf_valid.astype(jnp.int32), 1, block_l)
+    pts_b = _pad_to(_pad_to(points, 1, block_l * leaf_size), 2, 128)
+    pv_b = _pad_to(point_valid.astype(jnp.int32), 1, block_l * leaf_size)
+    out = _rr.range_rerank(qp_b, qproj_b, r_b, lo_b, hi_b, lv_b, breakpoints,
+                           pts_b, pv_b, leaf_size=leaf_size, block_q=block_q,
+                           block_l=block_l, interpret=interpret)
+    return out[:, :B, :npts]
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "scale", "interpret",

@@ -1,0 +1,135 @@
+"""Pallas kernel: fused batched range query + exact rerank (one-pass).
+
+The seed query round was three HBM round-trips per query per tree: leaf LB
+pruning (``leaf_bounds``), candidate gather, then exact rerank
+(``l2_rerank``).  This kernel fuses all of them into one grid pass per
+(query-block, leaf-block) tile:
+
+  1. leaf LB distances from the (block_l, K) leaf-summary tile (edge sweep,
+     VPU — same formulation as ``leaf_bounds``);
+  2. radius admission  LB <= r_eff[q]  (per-lane radii; a *done* query lane
+     carries r_eff = -1 and admits nothing — the active-lane mask costs no
+     extra input);
+  3. the "gather" is free: leaves are contiguous blocks of the code-sorted
+     point array, so the leaf-block grid index *is* the candidate gather;
+  4. exact original-space distances of the (block_q, d) query tile against
+     the (block_l*leaf_size, d) point tile on the MXU, masked to +inf
+     outside admitted leaves.
+
+Leaf summaries and sorted points therefore stream through VMEM once per
+query *block* instead of once per query.  Admission is leaf-granular
+(paper §VI-B2 optimization #1) without the seed's top-M truncation: every
+leaf whose LB passes the radius contributes, which admits a superset of the
+strict Alg. 3 rule and preserves the quality guarantees
+(docs/DESIGN.md §3).
+
+Grid: (L, B/block_q, nl/block_l) — the tree axis rides the grid, so one
+pallas_call serves the whole forest.  When every lane of a query tile is
+inactive (or no leaf is admitted) the MXU work is skipped via ``pl.when``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, qp_ref, r_ref, lo_ref, hi_ref, lv_ref, bp_ref, pts_ref,
+            pv_ref, o_ref, *, E: int, K: int, leaf_size: int):
+    lo = lo_ref[0]                                     # (bl, K) int32
+    hi = hi_ref[0] + 1                                 # upper edge index
+    qp = qp_ref[0]                                     # (bq, K) f32
+    r_eff = r_ref[...]                                 # (bq,) f32; -1 = done
+
+    # Edge sweep: materialize the leaf bounding-box edge coordinates without
+    # a gather (bp[k, lo[j,k]] expressed as select-accumulate over E edges).
+    def body(b, carry):
+        b_lo, b_hi = carry
+        edge = bp_ref[0, :, b]                         # (K,)
+        b_lo = jnp.where(lo == b, edge[None, :], b_lo)
+        b_hi = jnp.where(hi == b, edge[None, :], b_hi)
+        return b_lo, b_hi
+
+    zeros = jnp.zeros(lo.shape, jnp.float32)
+    b_lo, b_hi = jax.lax.fori_loop(0, E, body, (zeros, zeros))
+
+    # LB distance per (query, leaf): accumulate per-dimension clamped gaps.
+    # K is small and static — unrolled 2D VPU ops, no (bq, bl, K) tensor.
+    acc = jnp.zeros((qp.shape[0], lo.shape[0]), jnp.float32)
+    for k in range(K):
+        d_lo = b_lo[:, k][None, :] - qp[:, k][:, None]     # (bq, bl)
+        d_hi = qp[:, k][:, None] - b_hi[:, k][None, :]
+        t = jnp.maximum(jnp.maximum(d_lo, d_hi), 0.0)
+        acc = acc + t * t
+    lb = jnp.sqrt(acc)
+
+    valid = lv_ref[0] != 0                             # (bl,)
+    admit = (lb <= r_eff[:, None]) & valid[None, :]    # (bq, bl)
+
+    inf = jnp.float32(jnp.inf)
+
+    @pl.when(jnp.any(admit))
+    def _compute():
+        q = q_ref[...].astype(jnp.float32)             # (bq, d)
+        pts = pts_ref[0].astype(jnp.float32)           # (bl*ls, d)
+        qq = jnp.sum(q * q, axis=1, keepdims=True)
+        pp = jnp.sum(pts * pts, axis=1)[None, :]
+        qc = jax.lax.dot_general(q, pts, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        dist = jnp.sqrt(jnp.maximum(qq - 2.0 * qc + pp, 0.0))
+        mask = jnp.repeat(admit, leaf_size, axis=1)    # (bq, bl*ls)
+        mask = mask & (pv_ref[0] != 0)[None, :]
+        o_ref[0] = jnp.where(mask, dist, inf)
+
+    @pl.when(~jnp.any(admit))
+    def _skip():
+        o_ref[0] = jnp.full(o_ref.shape[1:], inf, jnp.float32)
+
+
+def range_rerank(q: jax.Array, q_proj: jax.Array, r_eff: jax.Array,
+                 leaf_lo: jax.Array, leaf_hi: jax.Array,
+                 leaf_valid: jax.Array, breakpoints: jax.Array,
+                 points: jax.Array, point_valid: jax.Array, *,
+                 leaf_size: int, block_q: int = 8, block_l: int = 8,
+                 interpret: bool = False) -> jax.Array:
+    """Fused range query + rerank over all L trees.
+
+    q (B, d) original-space queries; q_proj (L, B, K); r_eff (B,) projected
+    radii (eps*r, or -1 for done lanes); leaf_lo/hi (L, nl, K) int32;
+    leaf_valid (L, nl) int32; breakpoints (L, K, E); points (L, nl*ls, d)
+    code-sorted original-space points; point_valid (L, nl*ls) int32.
+
+    Returns (L, B, nl*ls) f32: exact distance where the covering leaf is
+    admitted at radius r_eff, +inf elsewhere.  B and nl must be block
+    multiples (ops.py pads).
+    """
+    L, B, K = q_proj.shape
+    d = q.shape[1]
+    nl = leaf_lo.shape[1]
+    E = breakpoints.shape[2]
+    npts = nl * leaf_size
+    assert B % block_q == 0 and nl % block_l == 0, (B, nl, block_q, block_l)
+    assert points.shape == (L, npts, d), (points.shape, L, npts, d)
+    grid = (L, B // block_q, nl // block_l)
+    return pl.pallas_call(
+        lambda *refs: _kernel(*refs, E=E, K=K, leaf_size=leaf_size),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda l, i, j: (i, 0)),
+            pl.BlockSpec((1, block_q, K), lambda l, i, j: (l, i, 0)),
+            pl.BlockSpec((block_q,), lambda l, i, j: (i,)),
+            pl.BlockSpec((1, block_l, K), lambda l, i, j: (l, j, 0)),
+            pl.BlockSpec((1, block_l, K), lambda l, i, j: (l, j, 0)),
+            pl.BlockSpec((1, block_l), lambda l, i, j: (l, j)),
+            pl.BlockSpec((1, K, E), lambda l, i, j: (l, 0, 0)),
+            pl.BlockSpec((1, block_l * leaf_size, d),
+                         lambda l, i, j: (l, j, 0)),
+            pl.BlockSpec((1, block_l * leaf_size), lambda l, i, j: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, block_l * leaf_size),
+                               lambda l, i, j: (l, i, j)),
+        out_shape=jax.ShapeDtypeStruct((L, B, npts), jnp.float32),
+        interpret=interpret,
+    )(q, q_proj, r_eff, leaf_lo, leaf_hi, leaf_valid.astype(jnp.int32),
+      breakpoints, points, point_valid.astype(jnp.int32))

@@ -115,8 +115,17 @@ def _mem_record(compiled) -> dict:
     return rec
 
 
-def _cost_record(compiled) -> dict:
+def _cost_dict(compiled) -> dict:
+    """compiled.cost_analysis() returns a dict on current jax, a one-element
+    list of dicts on older versions — normalize to a dict."""
     ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
+def _cost_record(compiled) -> dict:
+    ca = _cost_dict(compiled)
     return {"hlo_flops_once": float(ca.get("flops", 0.0)),
             "hlo_bytes_once": float(ca.get("bytes accessed", 0.0))}
 
@@ -175,7 +184,7 @@ def run_cell(arch: str, shape_name: str, mesh, mesh_tag: str) -> dict:
     rec["cost"] = _cost_record(compiled)
     rec["collectives"] = collective_bytes(compiled.as_text())
     print(compiled.memory_analysis())
-    ca = compiled.cost_analysis()
+    ca = _cost_dict(compiled)
     print({k: ca[k] for k in ("flops", "bytes accessed") if k in ca})
     return rec
 

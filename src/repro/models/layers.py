@@ -308,8 +308,9 @@ def _decode_attention_cp(q, k_cache, v_cache, length, rules):
     the cache across ranks (observed as 'involuntary full rematerialization'
     — §Perf iteration 11); shard_map pins the local-compute + tiny-merge
     structure explicitly."""
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
+
+    from repro.sharding.compat import shard_map
 
     b, _, h, dh = q.shape
     S, hk = k_cache.shape[1], k_cache.shape[2]
@@ -644,8 +645,9 @@ def _moe_sharded(params, cfg: ModelConfig, x, rules, cf):
     GSPMD-propagated global scatter they were the dominant memory term at
     train_4k (EXPERIMENTS.md §Perf iteration 2).
     """
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
+
+    from repro.sharding.compat import shard_map
 
     mesh = rules.mesh
     b, s, d = x.shape

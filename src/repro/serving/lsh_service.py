@@ -48,9 +48,21 @@ class LSHService:
         res = self.index.query(queries, k=self.k)
         return res.ids, res.dists
 
+    def _bucket(self, size: int) -> int:
+        """Pad-bucket for a partial batch: the next multiple of ``pad_to``.
+
+        Every batch shape the jitted query fn ever sees is one of the
+        ceil(max_batch / pad_to) bucket sizes, so steady-state serving pays
+        at most that many compilations — not one per distinct batch size.
+        """
+        return min(self.max_batch, -(-size // self.pad_to) * self.pad_to)
+
     def warmup(self, d: int):
-        q = jnp.zeros((self.pad_to, d), jnp.float32)
-        jax.block_until_ready(self._query_fn(q))
+        buckets = sorted({self._bucket(s)
+                          for s in range(1, self.max_batch + 1)})
+        for size in buckets:
+            q = jnp.zeros((size, d), jnp.float32)
+            jax.block_until_ready(self._query_fn(q))
 
     def serve(self, request_stream) -> list:
         """request_stream: iterable of (arrival_time, query vector)."""
@@ -61,7 +73,7 @@ class LSHService:
                      for _ in range(min(self.max_batch, len(pending)))]
             arrivals = [b[0] for b in batch]
             qs = np.stack([b[1] for b in batch])
-            pad = self.pad_to - len(qs) if len(qs) < self.pad_to else 0
+            pad = self._bucket(len(qs)) - len(qs)
             if pad:
                 qs = np.concatenate([qs, np.zeros((pad, qs.shape[1]),
                                                   qs.dtype)])

@@ -1,0 +1,28 @@
+"""jax cross-version compatibility for shard_map.
+
+The codebase targets the current jax API (top-level ``jax.shard_map`` with
+``check_vma=``); older jaxlibs ship it as ``jax.experimental.shard_map`` with
+the kwarg spelled ``check_rep=``.  Import ``shard_map`` from here so every
+call site stays on the new spelling.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+
+try:  # jax >= 0.5 re-exports shard_map at top level
+    from jax import shard_map as _shard_map
+except ImportError:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+if "check_vma" in inspect.signature(_shard_map).parameters:
+    shard_map = _shard_map
+else:
+    @functools.wraps(_shard_map)
+    def shard_map(*args, **kwargs):
+        if "check_vma" in kwargs:
+            kwargs["check_rep"] = kwargs.pop("check_vma")
+        return _shard_map(*args, **kwargs)
+
+__all__ = ["shard_map"]

@@ -17,8 +17,9 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.sharding.compat import shard_map
 
 
 def pipeline_apply(stage_params, x_micro, stage_fn, mesh: Mesh,

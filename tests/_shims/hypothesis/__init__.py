@@ -1,0 +1,107 @@
+"""Minimal, dependency-free stand-in for the ``hypothesis`` package.
+
+Only loaded when the real ``hypothesis`` distribution is not installed (see
+``tests/conftest.py``: the shim directory is appended to ``sys.path`` behind
+an ``import hypothesis`` guard, so a real install always wins).
+
+Implements the subset this repo's property tests use:
+
+  * ``@given(*strategies)`` — draws ``max_examples`` pseudo-random examples
+    from each strategy and calls the test once per example;
+  * ``@settings(max_examples=..., deadline=...)`` — composes with ``given``
+    in either decorator order;
+  * ``assume(cond)`` — skips the current example;
+  * strategies: ``integers``, ``floats``, ``booleans``, ``sampled_from``,
+    ``lists``, ``tuples``, ``just``.
+
+Example generation is deterministic: the RNG is seeded from the test's
+qualified name, so failures reproduce across runs.  Shrinking, the example
+database, and health checks are intentionally not implemented — on failure
+the offending example is attached to the raised exception instead.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+
+
+class _Unsatisfied(Exception):
+    """Raised by assume(False) — the example is discarded, not failed."""
+
+
+def assume(condition) -> bool:
+    if not condition:
+        raise _Unsatisfied()
+    return True
+
+
+class HealthCheck:  # accepted and ignored (API compatibility)
+    all = staticmethod(lambda: [])
+    too_slow = "too_slow"
+    filter_too_much = "filter_too_much"
+    data_too_large = "data_too_large"
+
+
+_DEFAULT_MAX_EXAMPLES = 100
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    """Decorator recording run settings; order-independent wrt ``given``."""
+
+    def deco(f):
+        f._shim_settings = {"max_examples": max_examples}
+        return f
+
+    return deco
+
+
+def given(*strategies, **kw_strategies):
+    def deco(f):
+        @functools.wraps(f)
+        def wrapper(*args, **kwargs):
+            conf = getattr(wrapper, "_shim_settings", None) or getattr(
+                f, "_shim_settings", {"max_examples": _DEFAULT_MAX_EXAMPLES})
+            max_examples = conf["max_examples"]
+            seed = zlib.crc32(
+                f"{f.__module__}.{f.__qualname__}".encode()) & 0x7FFFFFFF
+            import numpy as np
+            rng = np.random.default_rng(seed)
+            produced = 0
+            attempts = 0
+            while produced < max_examples and attempts < max_examples * 20:
+                attempts += 1
+                ex_args = tuple(s.example(rng) for s in strategies)
+                ex_kw = {k: s.example(rng) for k, s in kw_strategies.items()}
+                try:
+                    f(*args, *ex_args, **kwargs, **ex_kw)
+                except _Unsatisfied:
+                    continue
+                except Exception as e:
+                    e.args = (f"{e.args[0] if e.args else e!r}\n"
+                              f"[hypothesis-shim] falsifying example: "
+                              f"args={ex_args!r} kwargs={ex_kw!r}",
+                              *e.args[1:])
+                    raise
+                produced += 1
+            return None
+
+        # Strategy-bound params fill the *rightmost* positions (hypothesis
+        # semantics).  Hide them from the exposed signature so pytest does
+        # not look for same-named fixtures; leading params stay visible and
+        # keep working as fixtures.
+        params = list(inspect.signature(f).parameters.values())
+        n_bound = len(strategies)
+        keep = params[:len(params) - n_bound]
+        keep = [p for p in keep if p.name not in kw_strategies]
+        wrapper.__signature__ = inspect.Signature(keep)
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco
+
+
+from . import strategies  # noqa: E402,F401
+
+__all__ = ["given", "settings", "assume", "strategies", "HealthCheck"]

@@ -1,0 +1,89 @@
+"""Strategy objects for the hypothesis shim (see package docstring).
+
+Each strategy exposes ``example(rng) -> value`` drawing one pseudo-random
+value from a ``numpy.random.Generator``.  Bounds are inclusive, matching
+real hypothesis semantics for ``integers``/``floats``.
+"""
+
+from __future__ import annotations
+
+
+class SearchStrategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng):
+        return self._draw(rng)
+
+    def map(self, fn):
+        return SearchStrategy(lambda rng: fn(self._draw(rng)))
+
+    def filter(self, pred):
+        def draw(rng):
+            from . import _Unsatisfied
+            for _ in range(100):
+                v = self._draw(rng)
+                if pred(v):
+                    return v
+            raise _Unsatisfied()
+
+        return SearchStrategy(draw)
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    assert min_value <= max_value
+    # Mix boundary values in (real hypothesis is heavily boundary-biased).
+    def draw(rng):
+        if rng.random() < 0.1:
+            return int(rng.choice([min_value, max_value]))
+        return int(rng.integers(min_value, max_value + 1))
+
+    return SearchStrategy(draw)
+
+
+def floats(min_value: float, max_value: float, **_kw) -> SearchStrategy:
+    assert min_value <= max_value
+    def draw(rng):
+        if rng.random() < 0.1:
+            return float(rng.choice([min_value, max_value]))
+        return float(min_value + (max_value - min_value) * rng.random())
+
+    return SearchStrategy(draw)
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rng: bool(rng.integers(0, 2)))
+
+
+def just(value) -> SearchStrategy:
+    return SearchStrategy(lambda rng: value)
+
+
+def sampled_from(seq) -> SearchStrategy:
+    seq = list(seq)
+    return SearchStrategy(lambda rng: seq[int(rng.integers(0, len(seq)))])
+
+
+def lists(elements: SearchStrategy, *, min_size: int = 0,
+          max_size: int | None = None, unique: bool = False
+          ) -> SearchStrategy:
+    max_size = max_size if max_size is not None else min_size + 10
+
+    def draw(rng):
+        size = int(rng.integers(min_size, max_size + 1))
+        out = []
+        tries = 0
+        while len(out) < size and tries < size * 50 + 50:
+            tries += 1
+            v = elements.example(rng)
+            if unique and v in out:
+                continue
+            out.append(v)
+        return out
+
+    return SearchStrategy(draw)
+
+
+def tuples(*strategies: SearchStrategy) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: tuple(s.example(rng) for s in strategies))

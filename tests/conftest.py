@@ -1,10 +1,18 @@
 import os
+import sys
 
 # Tests run on the single real CPU device.  Dry-run tests that need many
 # placeholder devices spawn subprocesses with their own XLA_FLAGS (the flag
 # must be set before jax initializes, and must NOT leak into other tests).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 os.environ.setdefault("JAX_ENABLE_X64", "0")
+
+# Property tests use hypothesis when installed; otherwise fall back to the
+# deterministic shim in tests/_shims (same API subset, no pip dependency).
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "_shims"))
 
 import numpy as np
 import pytest

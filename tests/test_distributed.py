@@ -75,7 +75,7 @@ _SUBPROCESS = textwrap.dedent("""
     import json, sys
     import jax, jax.numpy as jnp, numpy as np
     sys.path.insert(0, {repo_src!r}); sys.path.insert(0, {repo!r})
-    from jax.sharding import AxisType
+    from repro.launch.mesh import make_mesh
     from repro.core import derive_params
     from repro.core.distributed import build_pdet
     from repro.core.query import QueryConfig
@@ -85,8 +85,7 @@ _SUBPROCESS = textwrap.dedent("""
     data = make_clustered(rng, {n}, {d})
     queries = make_clustered(rng, {nq}, {d})
     p = derive_params(K=4, c=1.5, L=8, beta_override=0.1)
-    mesh = jax.make_mesh({mesh_shape}, {mesh_axes},
-                         axis_types=(AxisType.Auto,) * len({mesh_axes}))
+    mesh = make_mesh({mesh_shape}, {mesh_axes})
     idx = build_pdet(jnp.asarray(data), jax.random.key(0), p, mesh,
                      axes={data_axes}, leaf_size=32)
     res = idx.query(jnp.asarray(queries), k={k}, M=8, r_min=0.5)
@@ -133,7 +132,7 @@ _CP_DECODE = textwrap.dedent("""
     import json, sys
     import jax, jax.numpy as jnp, numpy as np
     sys.path.insert(0, {repo_src!r}); sys.path.insert(0, {repo!r})
-    from jax.sharding import AxisType
+    from repro.launch.mesh import make_mesh
     from repro.models import layers as L
     from repro.sharding.rules import ShardingRules, use_rules
 
@@ -145,8 +144,7 @@ _CP_DECODE = textwrap.dedent("""
     v = jnp.asarray(rng.standard_normal((b, S, hk, dh)).astype(np.float32))
     ref = np.asarray(L.decode_gqa_attention(q, k, v, 50))
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    mesh = make_mesh((2, 4), ("data", "model"))
     rules = ShardingRules(mesh)
     with use_rules(rules), mesh:
         got = np.asarray(jax.jit(

@@ -23,10 +23,11 @@ _SAVE = textwrap.dedent("""
     import json, sys
     import jax, jax.numpy as jnp, numpy as np
     sys.path.insert(0, {src!r})
-    from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.launch.mesh import make_mesh
     from repro.train import checkpoint as ckpt
 
-    mesh = jax.make_mesh({shape}, {axes}, axis_types=(AxisType.Auto,) * {nax})
+    mesh = make_mesh({shape}, {axes})
     w = jnp.arange(64 * 32, dtype=jnp.float32).reshape(64, 32)
     sh = NamedSharding(mesh, P({spec}))
     tree = {{"w": jax.device_put(w, sh),

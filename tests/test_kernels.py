@@ -106,6 +106,61 @@ def test_l2_rerank_is_euclidean(rng):
 
 
 # ---------------------------------------------------------------------------
+# range_rerank (fused batched range query + exact rerank)
+# ---------------------------------------------------------------------------
+
+def _range_rerank_inputs(rng, L, B, K, nl, ls, d, E):
+    q = _rand(rng, (B, d))
+    qp = _rand(rng, (L, B, K))
+    r = jnp.asarray(np.abs(rng.standard_normal(B)).astype(np.float32) * 2.0)
+    r = r.at[0].set(-1.0)                      # an inactive (done) lane
+    bp = jnp.sort(_rand(rng, (L, K, E), scale=3.0), axis=2)
+    lo = jnp.asarray(rng.integers(0, E - 1, (L, nl, K)), jnp.int32)
+    hi = jnp.clip(lo + jnp.asarray(rng.integers(0, 4, (L, nl, K)), jnp.int32),
+                  0, E - 2)
+    lv = jnp.asarray(rng.random((L, nl)) > 0.15)
+    pts = _rand(rng, (L, nl * ls, d))
+    pv = jnp.asarray(rng.random((L, nl * ls)) > 0.1)
+    return q, qp, r, lo, hi, lv, bp, pts, pv
+
+
+@pytest.mark.parametrize("L,B,K,nl,ls,d,E",
+                         [(2, 8, 4, 16, 8, 32, 17),
+                          (3, 5, 4, 10, 8, 24, 9),      # non-aligned B/nl
+                          (1, 16, 8, 8, 16, 64, 33),
+                          (4, 3, 2, 24, 4, 16, 5)])
+def test_range_rerank_matches_ref(rng, L, B, K, nl, ls, d, E):
+    args = _range_rerank_inputs(rng, L, B, K, nl, ls, d, E)
+    got = ops.range_rerank(*args, leaf_size=ls, interpret=True)
+    want = ref.range_rerank(*args, leaf_size=ls)
+    assert got.shape == (L, B, nl * ls)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_range_rerank_admission_semantics(rng):
+    """Finite entries are exactly the points of valid leaves with LB <= r,
+    and carry the exact original-space distance."""
+    L, B, K, nl, ls, d, E = 2, 4, 4, 12, 8, 16, 9
+    q, qp, r, lo, hi, lv, bp, pts, pv = _range_rerank_inputs(
+        rng, L, B, K, nl, ls, d, E)
+    out = np.asarray(ops.range_rerank(q, qp, r, lo, hi, lv, bp, pts, pv,
+                                      leaf_size=ls, interpret=True))
+    for l in range(L):
+        lb_all = np.stack([
+            np.asarray(ref.leaf_bounds(qp[l, b], lo[l], hi[l], lv[l],
+                                       bp[l])[0]) for b in range(B)])
+        admit = (lb_all <= np.asarray(r)[:, None]) & np.asarray(lv[l])[None]
+        admit_pts = np.repeat(admit, ls, axis=1) & np.asarray(pv[l])[None]
+        np.testing.assert_array_equal(np.isfinite(out[l]), admit_pts)
+        exact = np.sqrt((((np.asarray(q)[:, None, :]
+                           - np.asarray(pts[l])[None, :, :]) ** 2).sum(-1)))
+        np.testing.assert_allclose(out[l][admit_pts], exact[admit_pts],
+                                   rtol=1e-4, atol=1e-4)
+    assert not np.isfinite(out[:, 0]).any()    # the r=-1 lane admits nothing
+
+
+# ---------------------------------------------------------------------------
 # flash_attention
 # ---------------------------------------------------------------------------
 

@@ -4,13 +4,18 @@ bookkeeping) — the guarantee-critical invariants:
   * the buffer never holds duplicate real ids,
   * the unique count equals |set(seen real ids)| while under capacity,
   * distances always ascend under top-k selection order,
-  * merging is insensitive to the arrival order of candidates.
+  * merging is insensitive to the arrival order of candidates,
+  * the incremental bitmap+cursor merge (``core.candidates``) is exactly
+    equivalent to the seed sort-based merge (``query._merge_candidates``)
+    under the engine's invariants (capacity never exceeded before
+    termination; duplicate ids carry equal — exact — distances).
 """
 
 import jax.numpy as jnp
 import numpy as np
 from hypothesis import given, settings, strategies as st
 
+from repro.core import candidates as cand
 from repro.core.query import _merge_candidates
 
 
@@ -71,3 +76,66 @@ def test_merge_keeps_best_under_capacity_pressure(items):
     expect = uniq[:cap]
     got = sorted(ids[ids < n].tolist())
     assert got == expect
+
+
+# ---------------------------------------------------------------------------
+# Incremental (bitmap + cursor) merge == seed sort-based merge
+# ---------------------------------------------------------------------------
+
+def _dist_of(ids, n):
+    """Id-consistent distances with deliberate cross-id ties (the engine's
+    distances are deterministic exact distances, so equal ids always carry
+    equal distances; distinct ids may tie)."""
+    ids = np.asarray(ids, np.int32)
+    return np.where(ids < n, (ids * 7 % 5).astype(np.float32), np.inf)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(10, 80),
+       st.lists(st.lists(st.integers(0, 100), min_size=1, max_size=16),
+                min_size=1, max_size=6))
+def test_incremental_merge_matches_seed_merge(n, rounds):
+    """Identical (ids, dists, unique-count) after every round, in canonical
+    (distance, id) order — the seed merge's output order."""
+    rounds = [[min(x, n) for x in r] for r in rounds]      # allow sentinel n
+    cap = n + 32                                           # capacity invariant
+    old_ids = jnp.full((cap,), n, jnp.int32)
+    old_d = jnp.full((cap,), jnp.inf)
+    state = cand.init_state(n, cap)
+    for r_ids in rounds:
+        r_ids = np.asarray(r_ids, np.int32)
+        r_d = _dist_of(r_ids, n)
+        old_ids, old_d, old_count = _merge_candidates(
+            n, old_ids, old_d, jnp.asarray(r_ids), jnp.asarray(r_d))
+        state = cand.merge_round(n, state, jnp.asarray(r_ids),
+                                 jnp.asarray(r_d))
+        new_ids, new_d = cand.canonicalize(n, state.ids, state.dists)
+        np.testing.assert_array_equal(np.asarray(old_ids),
+                                      np.asarray(new_ids))
+        np.testing.assert_array_equal(np.asarray(old_d), np.asarray(new_d))
+        assert int(old_count) == int(state.count)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(16, 64),
+       st.lists(st.lists(st.integers(0, 120), min_size=1, max_size=12),
+                min_size=1, max_size=5))
+def test_incremental_merge_bitmap_and_count(n, rounds):
+    """The seen-bitmap holds exactly the set of merged real ids and the
+    cursor equals the exact unique count."""
+    rounds = [[min(x, n) for x in r] for r in rounds]
+    state = cand.init_state(n, n + 16)
+    seen = set()
+    for r_ids in rounds:
+        r_ids = np.asarray(r_ids, np.int32)
+        state = cand.merge_round(n, state, jnp.asarray(r_ids),
+                                 jnp.asarray(_dist_of(r_ids, n)))
+        seen.update(int(x) for x in r_ids if x < n)
+    assert int(state.count) == len(seen)
+    ids = np.asarray(state.ids)
+    real = ids[ids < n]
+    assert len(real) == len(set(real.tolist()))
+    assert set(real.tolist()) == seen
+    got_bits = {i for i in range(n)
+                if (int(state.seen[i >> 5]) >> (i & 31)) & 1}
+    assert got_bits == seen

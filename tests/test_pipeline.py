@@ -17,12 +17,12 @@ _SCRIPT = textwrap.dedent("""
     import json, sys
     import jax, jax.numpy as jnp, numpy as np
     sys.path.insert(0, {src!r})
-    from jax.sharding import AxisType
+    from repro.launch.mesh import make_mesh
     from repro.train.pipeline import pipeline_apply, sequential_reference
 
     rng = np.random.default_rng(0)
     S, M, mb, d = 4, 6, 2, 8
-    mesh = jax.make_mesh((S,), ("stage",), axis_types=(AxisType.Auto,))
+    mesh = make_mesh((S,), ("stage",))
     params = {{"w": jnp.asarray(rng.standard_normal((S, d, d)).astype(
         np.float32) * 0.3)}}
     x = jnp.asarray(rng.standard_normal((M, mb, d)).astype(np.float32))
