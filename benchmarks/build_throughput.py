@@ -1,0 +1,148 @@
+"""Indexing-time benchmark: static build vs streaming ingest (BENCH_build.json).
+
+The paper's headline claim is indexing speed, but only the query-phase
+trajectory (BENCH_query.json) was recorded.  This benchmark times
+
+  * the static one-shot build (``DETLSH.build``) — cold (includes trace +
+    compile) and warm (steady-state rebuild, the paper's regime);
+  * streaming ingest of the *same* points: base build on half the data,
+    the other half upserted through the delta buffer (seals included),
+    plus the final compaction — i.e. the full cost of arriving at the same
+    live point set incrementally;
+  * query-QPS parity: batched fused queries against the compacted
+    streaming index vs a static index over the identical live point set.
+    The acceptance gate is streaming QPS >= 0.75x static at batch 32.
+
+  PYTHONPATH=src python -m benchmarks.run --only build_throughput
+  PYTHONPATH=src python -m benchmarks.run --smoke       # small + JSON only
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Table, make_dataset, make_queries, timed, \
+    timed_once
+
+DEFAULT = dict(n=16384, dataset="deep-like", K=4, L=8, c=1.5, beta=0.1,
+               leaf_size=64, delta_capacity=2048, batch=32, k=10, repeat=3)
+# repeat=5: the QPS-parity ratio is a hard CI gate, and single-shot timings
+# on shared runners flake; five repeats average out scheduler noise for
+# pennies (each call is ~10 ms).
+SMOKE = dict(n=4096, dataset="deep-like", K=4, L=8, c=1.5, beta=0.1,
+             leaf_size=64, delta_capacity=1024, batch=32, k=10, repeat=5)
+
+
+def run_build_throughput(cfg=None, json_path: str = "BENCH_build.json",
+                         out_dir: str | None = "benchmarks/out") -> Table:
+    from repro.core import DETLSH, derive_params, estimate_r_min
+    from repro.core.query import QueryConfig, knn_query_batch
+    from repro.streaming import StreamingDETLSH
+
+    cfg = dict(DEFAULT, **(cfg or {}))
+    n, dc = cfg["n"], cfg["delta_capacity"]
+    assert (n // 2) % dc == 0, "delta_capacity must divide n/2"
+    data = make_dataset(cfg["dataset"], n, seed=0)
+    p = derive_params(K=cfg["K"], c=cfg["c"], L=cfg["L"],
+                      beta_override=cfg["beta"])
+    data_dev = jnp.asarray(data)
+
+    def static_build():
+        idx = DETLSH.build(data_dev, jax.random.key(0), p,
+                           leaf_size=cfg["leaf_size"])
+        jax.block_until_ready(idx.forest.point_ids)
+        return idx
+
+    sidx_static, t_cold = timed_once(static_build)
+    _, t_warm = timed_once(static_build)
+
+    # Streaming ingest of the same points: base on the first half, the
+    # second half upserted in delta-sized chunks (sealing as it goes).
+    def ingest():
+        idx = StreamingDETLSH.build(data_dev[:n // 2], jax.random.key(0), p,
+                                    leaf_size=cfg["leaf_size"],
+                                    delta_capacity=dc,
+                                    max_segments=1 + n // (2 * dc))
+        jax.block_until_ready(idx.manifest.segments[0].forest.point_ids)
+        t0 = time.perf_counter()
+        for start in range(n // 2, n, dc):
+            idx.upsert(data[start:start + dc])
+        for seg in idx.manifest.segments:
+            jax.block_until_ready(seg.forest.point_ids)
+        t_ing = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        idx.compact()
+        jax.block_until_ready(idx.manifest.segments[0].forest.point_ids)
+        return idx, t_ing, time.perf_counter() - t0
+
+    sidx, t_ingest, t_compact = ingest()
+    assert sidx.n_live == n, (sidx.n_live, n)
+
+    # Query-QPS parity at equal live point count, batch `batch`, fused.
+    b, k = cfg["batch"], cfg["k"]
+    queries = jnp.asarray(make_queries(data, b, seed=1))
+    r0 = estimate_r_min(data_dev, queries, k, p.c)
+    qcfg = QueryConfig(k=k, r_min=r0, engine="fused")
+    plan = sidx_static.fused_plan()
+    sidx.warmup_query_caches()
+    fn_static = jax.jit(lambda q: knn_query_batch(
+        sidx_static.data, sidx_static.forest, sidx_static.A, p, q, qcfg,
+        plan=plan).ids)
+    fn_stream = jax.jit(lambda q: sidx.query(
+        q, k=k, r_min=r0, engine="fused").ids)
+    _, sec_static = timed(fn_static, queries, repeat=cfg["repeat"])
+    _, sec_stream = timed(fn_stream, queries, repeat=cfg["repeat"])
+    qps_static = b / sec_static
+    qps_stream = b / sec_stream
+    ratio = qps_stream / qps_static
+
+    table = Table("build_throughput", ["phase", "seconds", "points_per_sec"])
+    rows = []
+    for phase, sec, pts in (
+            ("static_build_cold", t_cold, n),
+            ("static_build_warm", t_warm, n),
+            ("streaming_ingest", t_ingest, n // 2),
+            ("compaction", t_compact, n),
+            ("ingest_plus_compact", t_ingest + t_compact, n // 2)):
+        pps = pts / sec
+        table.add(phase, sec, pps)
+        rows.append(dict(phase=phase, seconds=sec, points_per_sec=pps))
+    table.add("query_qps_static_b%d" % b, sec_static, qps_static)
+    table.add("query_qps_stream_b%d" % b, sec_stream, qps_stream)
+    table.add("qps_ratio_stream_over_static", float("nan"), ratio)
+    rows += [dict(phase="query_qps_static", seconds=sec_static,
+                  qps=qps_static),
+             dict(phase="query_qps_stream", seconds=sec_stream,
+                  qps=qps_stream)]
+
+    payload = dict(
+        bench="build_throughput",
+        workload={kk: v for kk, v in cfg.items()},
+        backend=jax.default_backend(),
+        rows=rows,
+        static_build_warm_pps=n / t_warm,
+        streaming_ingest_pps=(n // 2) / (t_ingest + t_compact),
+        query_qps={"static": qps_static, "stream": qps_stream,
+                   "ratio_stream_over_static": ratio},
+        segments_after_compact=len(sidx.manifest.segments),
+    )
+    with open(json_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    if out_dir:
+        table.emit(out_dir)
+    return table
+
+
+def build_throughput() -> Table:
+    """run.py figure entry point (full size)."""
+    return run_build_throughput()
+
+
+def build_throughput_smoke() -> Table:
+    """CI smoke: small index, still writes BENCH_build.json."""
+    return run_build_throughput(SMOKE)

@@ -6,9 +6,10 @@ and writes per-figure CSVs under benchmarks/out/.
   PYTHONPATH=src python -m benchmarks.run            # all LSH figures
   PYTHONPATH=src python -m benchmarks.run --fast     # skip slow subprocess
   PYTHONPATH=src python -m benchmarks.run --only fig08_query_opt
-  PYTHONPATH=src python -m benchmarks.run --smoke    # CI: query throughput
-                                                     # only, writes
-                                                     # BENCH_query.json
+  PYTHONPATH=src python -m benchmarks.run --smoke    # CI: query + build
+                                                     # throughput, writes
+                                                     # BENCH_query.json and
+                                                     # BENCH_build.json
 """
 
 from __future__ import annotations
@@ -19,10 +20,12 @@ import time
 
 
 def _figures(fast: bool):
+    from benchmarks import build_throughput as B
     from benchmarks import lsh_figures as F
     from benchmarks import query_throughput as Q
     figs = [
         Q.query_throughput,
+        B.build_throughput,
         F.fig02_breakpoints,
         F.fig06_beta_L,
         F.fig07_index_breakdown,
@@ -53,8 +56,9 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     if args.smoke:
+        from benchmarks import build_throughput as B
         from benchmarks import query_throughput as Q
-        figures = [Q.query_throughput_smoke]
+        figures = [Q.query_throughput_smoke, B.build_throughput_smoke]
     else:
         figures = _figures(args.fast)
 

@@ -1,5 +1,7 @@
-"""End-to-end serving driver: batched ANN requests against a DET-LSH index
-(the paper's deployment scenario — rapid index build, immediate serving).
+"""End-to-end serving driver: batched ANN requests against a *mutable*
+DET-LSH index — the paper's deployment scenario (rapid index build,
+immediate serving) extended with live traffic: points arrive and disappear
+while queries run, sealing delta segments and triggering compaction.
 
   PYTHONPATH=src python examples/vector_search_service.py
 """
@@ -13,8 +15,9 @@ import numpy as np
 
 sys.path.insert(0, "src")
 
-from repro.core import DETLSH, derive_params
+from repro.core import derive_params
 from repro.serving.lsh_service import LSHService
+from repro.streaming import StreamingDETLSH
 
 
 def main():
@@ -22,27 +25,63 @@ def main():
     n, d, n_requests = 20000, 48, 96
 
     centers = rng.standard_normal((32, d)).astype(np.float32)
-    data = centers[rng.integers(0, 32, n)] \
-        + 0.25 * rng.standard_normal((n, d)).astype(np.float32)
+
+    def draw(m):
+        return (centers[rng.integers(0, 32, m)]
+                + 0.25 * rng.standard_normal((m, d)).astype(np.float32))
+
+    data = draw(n)
 
     t0 = time.perf_counter()
     params = derive_params(K=4, c=1.5, L=8, beta_override=0.05)
-    index = DETLSH.build(jnp.asarray(data), jax.random.key(0), params)
-    jax.block_until_ready(index.forest.point_ids)
+    index = StreamingDETLSH.build(jnp.asarray(data), jax.random.key(0),
+                                  params, delta_capacity=1024,
+                                  max_segments=3)
+    jax.block_until_ready(index.manifest.segments[0].forest.point_ids)
     print(f"index built in {time.perf_counter() - t0:.2f}s "
-          f"({index.index_size_bytes() / 1e6:.1f} MB)")
+          f"({index.index_size_bytes() / 1e6:.1f} MB, "
+          f"{index.n_live} live points)")
 
     svc = LSHService(index, k=10, max_batch=32, pad_to=32)
     svc.warmup(d)
 
-    now = time.perf_counter()
-    stream = [(now, data[rng.integers(0, n)]
-               + 0.05 * rng.standard_normal(d).astype(np.float32))
-              for _ in range(n_requests)]
-    results = svc.serve(stream)
-    print(f"served {len(results)} requests: {svc.stats.summary()}")
-    ids0, d0 = results[0]
-    print(f"first result ids={ids0[:5]} dists={np.round(d0[:5], 3)}")
+    def queries(m):
+        now = time.perf_counter()
+        return [(now, data[rng.integers(0, n)]
+                 + 0.05 * rng.standard_normal(d).astype(np.float32))
+                for _ in range(m)]
+
+    # Phase 1: read-only traffic against the base build.
+    results = svc.serve(queries(n_requests))
+    print(f"phase 1 (static): served {len(results)}: {svc.stats.summary()}")
+
+    # Phase 2: live traffic — interleave upserts/deletes with query bursts.
+    # Upserts land in the delta (served exactly, immediately); seals happen
+    # at delta capacity and compaction fires via the service trigger.
+    t0 = time.perf_counter()
+    for round_ in range(4):
+        fresh = draw(800)
+        gids = svc.upsert(fresh)
+        svc.delete(gids[::7])                      # churn: drop every 7th
+        svc.delete(rng.integers(0, n, 100))        # and some base points
+        burst = svc.serve(queries(32))
+        assert len(burst) == 32
+    print(f"phase 2 (live churn, {time.perf_counter() - t0:.2f}s): "
+          f"{svc.stats.summary()}")
+    print(f"index now: {index.stats()}")
+
+    # A just-upserted point must be findable right away.
+    probe = draw(1)[0]
+    [gid] = svc.upsert(probe)
+    (ids, dists), = svc.serve([(time.perf_counter(), probe)])
+    assert int(ids[0]) == int(gid) and dists[0] < 1e-3, (ids[0], gid)
+    print(f"fresh upsert gid={int(gid)} served with dist={dists[0]:.2g}")
+
+    svc.delete([gid])
+    (ids, _), = svc.serve([(time.perf_counter(), probe)])
+    assert int(ids[0]) != int(gid)
+    print(f"...and invisible immediately after delete "
+          f"(top hit now gid={int(ids[0])})")
 
 
 if __name__ == "__main__":

@@ -84,7 +84,10 @@ class DETLSH:
     def query(self, queries: jax.Array, k: int = 50, *,
               r_min: float | None = None, M: int = 8,
               mode: str = "leaf", max_rounds: int = 48,
-              engine: str = "auto") -> QueryResult:
+              engine: str = "auto",
+              n_active: int | None = None) -> QueryResult:
+        """``n_active``: number of leading real lanes in a padded batch —
+        trailing pad lanes are marked done from round 0 and cost ~nothing."""
         if r_min is None:
             r_min = estimate_r_min(self.data, queries, k, self.params.c)
         cfg = QueryConfig(k=k, M=M, r_min=r_min, mode=mode,
@@ -92,7 +95,7 @@ class DETLSH:
         engine_used = query_mod._pick_engine(cfg, queries.shape[0])
         plan = self.fused_plan() if engine_used == "fused" else None
         return knn_query_batch(self.data, self.forest, self.A, self.params,
-                               queries, cfg, plan=plan)
+                               queries, cfg, plan=plan, n_active=n_active)
 
     def index_size_bytes(self) -> int:
         return self.forest.size_bytes() + self.A.size * 4

@@ -145,12 +145,24 @@ def build_forest(proj_all: jax.Array, K: int, L: int, *,
                  Nr: int = enc.DEFAULT_NR, leaf_size: int = 64,
                  breakpoint_method: str = "sample_sort",
                  key: jax.Array | None = None,
-                 encode_impl: str = "auto") -> DEForest:
-    """Build L DE-Trees from projections (n, L*K) (paper Alg. 1 + Alg. 2)."""
+                 encode_impl: str = "auto",
+                 breakpoints: jax.Array | None = None) -> DEForest:
+    """Build L DE-Trees from projections (n, L*K) (paper Alg. 1 + Alg. 2).
+
+    ``breakpoints`` ((L*K, Nr+1), optional) bypasses breakpoint selection
+    and encodes with the given *frozen* edges — the streaming index's seal
+    path, which must encode new points into the base build's quantization so
+    segment codes stay mutually comparable (docs/DESIGN.md §5).
+    """
     n = proj_all.shape[0]
     assert proj_all.shape[1] == L * K, (proj_all.shape, L, K)
-    bp_all = enc.select_breakpoints(proj_all, Nr, method=breakpoint_method,
-                                    key=key)                       # (L*K, Nr+1)
+    if breakpoints is None:
+        bp_all = enc.select_breakpoints(proj_all, Nr,
+                                        method=breakpoint_method,
+                                        key=key)                   # (L*K, Nr+1)
+    else:
+        bp_all = breakpoints
+        assert bp_all.shape == (L * K, Nr + 1), (bp_all.shape, L * K, Nr)
     codes_all = enc.encode(proj_all, bp_all, impl=encode_impl)     # (n, L*K)
 
     proj_t = proj_all.reshape(n, L, K).transpose(1, 0, 2)          # (L, n, K)

@@ -72,10 +72,14 @@ class QueryResult(NamedTuple):
 
 def range_query_round(forest: DEForest, q_proj: jax.Array, r_proj: jax.Array,
                       M: int, *, mode: str = "leaf",
-                      bounds_impl: str = "auto") -> tuple[jax.Array, jax.Array]:
+                      bounds_impl: str = "auto",
+                      live: Optional[jax.Array] = None
+                      ) -> tuple[jax.Array, jax.Array]:
     """Range query with projected radius ``r_proj`` in all L trees.
 
-    q_proj: (L, K) projected query.  Returns (ids, ok):
+    q_proj: (L, K) projected query.  ``live`` is an optional (n,) bool
+    tombstone mask in point-id order (None = all live); dead points are
+    rejected at admission, before the exact rerank.  Returns (ids, ok):
     ids (L*M*leaf_size,) int32 candidate point ids, ok bool mask.
     """
     leaf_size = forest.leaf_size
@@ -89,6 +93,8 @@ def range_query_round(forest: DEForest, q_proj: jax.Array, r_proj: jax.Array,
         gidx = gidx.reshape(-1)                               # (M*leaf_size,)
         ids = pids[gidx]
         ok = jnp.repeat(leaf_ok, leaf_size) & (ids < forest.n)
+        if live is not None:
+            ok = ok & live[jnp.clip(ids, 0, forest.n - 1)]
         if mode == "strict":
             pts = proj_s[gidx]                                # (M*ls, K)
             d = jnp.sqrt(jnp.sum((pts - qp[None, :]) ** 2, axis=1))
@@ -186,8 +192,14 @@ def _auto_cap(n: int, params: LSHParams, cfg: QueryConfig,
 
 def knn_query(data: jax.Array, forest: DEForest, A: jax.Array,
               params: LSHParams, q: jax.Array,
-              cfg: QueryConfig) -> QueryResult:
-    """Answer one c^2-k-ANN query (Alg. 5).  q: (d,)."""
+              cfg: QueryConfig, *, live: Optional[jax.Array] = None,
+              active: jax.Array | bool = True) -> QueryResult:
+    """Answer one c^2-k-ANN query (Alg. 5).  q: (d,).
+
+    ``live`` is an optional (n,) bool tombstone mask (streaming index
+    deletes); ``active=False`` marks the lane done from round 0 (used for
+    pad lanes in partial batches — the radius loop never runs for them).
+    """
     n = data.shape[0]
     K, L = params.K, params.L
     cap = _auto_cap(n, params, cfg, forest)
@@ -202,7 +214,7 @@ def knn_query(data: jax.Array, forest: DEForest, A: jax.Array,
         rnd, r, cs, done = state
         new_ids, ok = range_query_round(
             forest, q_proj, params.epsilon * r, cfg.M, mode=cfg.mode,
-            bounds_impl=cfg.bounds_impl)                        # line 5
+            bounds_impl=cfg.bounds_impl, live=live)             # line 5
         new_d = exact_distances(data, q, new_ids, ok, impl=cfg.dist_impl)
         new_ids = jnp.where(ok, new_ids, n)
         cs = cand.merge_round(n, cs, new_ids, new_d)
@@ -214,7 +226,7 @@ def knn_query(data: jax.Array, forest: DEForest, A: jax.Array,
         return rnd + 1, r, cs, done
 
     state0 = (jnp.asarray(0, jnp.int32), jnp.asarray(cfg.r_min, jnp.float32),
-              cand.init_state(n, cap), jnp.asarray(False))
+              cand.init_state(n, cap), ~jnp.asarray(active))
     rnd, r, cs, done = jax.lax.while_loop(cond, body, state0)
 
     negd, sel = jax.lax.top_k(-cs.dists, cfg.k)                 # final rerank
@@ -258,7 +270,10 @@ def make_fused_plan(data: jax.Array, forest: DEForest) -> FusedPlan:
 def fused_query_batch(data: jax.Array, forest: DEForest, A: jax.Array,
                       params: LSHParams, queries: jax.Array,
                       cfg: QueryConfig,
-                      plan: Optional[FusedPlan] = None) -> QueryResult:
+                      plan: Optional[FusedPlan] = None, *,
+                      live_sorted: Optional[jax.Array] = None,
+                      n_active: Optional[jax.Array | int] = None
+                      ) -> QueryResult:
     """Batched c^2-k-ANN: all lanes advance through radius rounds together.
 
     Per round: ONE fused range_rerank pass over (L trees x query blocks x
@@ -269,6 +284,13 @@ def fused_query_batch(data: jax.Array, forest: DEForest, A: jax.Array,
     unique-candidate count Alg. 5 tracks, so T1/T2 and Theorems 1-3 are
     unchanged (the admitted set is a superset of the vmap engine's;
     docs/DESIGN.md §3).
+
+    ``live_sorted`` is an optional (L, n_pad) bool tombstone mask in each
+    tree's code-sorted order (the streaming index's delete path): dead
+    points emit +inf inside the kernel and never become candidates.
+    ``n_active`` (int or scalar array) marks lanes >= n_active done from
+    round 0 with r_eff = -1 — pad lanes of a partial batch admit nothing
+    and skip all MXU work (see serving/lsh_service.py).
     """
     n = data.shape[0]
     B = queries.shape[0]
@@ -291,7 +313,8 @@ def fused_query_batch(data: jax.Array, forest: DEForest, A: jax.Array,
         dmat = kops.range_rerank(
             queries, q_proj, r_eff, forest.leaf_lo, forest.leaf_hi,
             forest.leaf_valid, forest.breakpoints, plan.points_sorted,
-            forest.valid, leaf_size=forest.leaf_size, interpret=interpret,
+            forest.valid, live_sorted,
+            leaf_size=forest.leaf_size, interpret=interpret,
             block_q=cfg.block_q, block_l=cfg.block_l)            # (L, B, n_pad)
         # Fold the round into the id-indexed table: inv_perm turns each
         # tree's sorted-order row into id order (gather, not scatter).
@@ -308,10 +331,12 @@ def fused_query_batch(data: jax.Array, forest: DEForest, A: jax.Array,
         r = jnp.where(done, r, r * params.c)                     # line 11
         return rnd + 1, rounds, r, done, best
 
+    done0 = (jnp.zeros((B,), jnp.bool_) if n_active is None
+             else jnp.arange(B) >= jnp.asarray(n_active))
     state0 = (jnp.asarray(0, jnp.int32),
               jnp.zeros((B,), jnp.int32),
               jnp.full((B,), cfg.r_min, jnp.float32),
-              jnp.zeros((B,), jnp.bool_),
+              done0,
               jnp.full((B, n), jnp.inf, jnp.float32))
     rnd, rounds, r, done, best = jax.lax.while_loop(cond, body, state0)
 
@@ -340,21 +365,46 @@ def _pick_engine(cfg: QueryConfig, batch: int | None = None) -> str:
     return "fused" if cfg.engine in ("auto", "fused") else "vmap"
 
 
+def live_in_sorted_order(forest: DEForest,
+                         live: jax.Array) -> jax.Array:
+    """Translate an (n,) id-order tombstone mask to each tree's code-sorted
+    order: (L, n_pad) bool, padding rows dead.  This is the layout the fused
+    kernel's per-tile live mask consumes."""
+    safe = jnp.clip(forest.point_ids, 0, forest.n - 1)
+    return live[safe] & forest.valid
+
+
 def knn_query_batch(data: jax.Array, forest: DEForest, A: jax.Array,
                     params: LSHParams, queries: jax.Array,
                     cfg: QueryConfig,
-                    plan: Optional[FusedPlan] = None) -> QueryResult:
+                    plan: Optional[FusedPlan] = None, *,
+                    live: Optional[jax.Array] = None,
+                    live_sorted: Optional[jax.Array] = None,
+                    n_active: Optional[jax.Array | int] = None
+                    ) -> QueryResult:
     """Batched c^2-k-ANN over a (b, d) query batch.
 
     Dispatches to the fused batched engine (default at batch >= 8) or the
     per-query vmap baseline according to ``cfg.engine`` / ``cfg.mode`` and
     the (static) batch size.
+
+    ``live`` ((n,) bool, id order) / ``live_sorted`` ((L, n_pad) bool,
+    code-sorted order) carry the streaming index's tombstones — pass either
+    (the other is derived); None means every point is live.  ``n_active``
+    marks trailing pad lanes of a partial batch done from round 0.
     """
-    if _pick_engine(cfg, queries.shape[0]) == "fused":
+    B = queries.shape[0]
+    if _pick_engine(cfg, B) == "fused":
+        if live_sorted is None and live is not None:
+            live_sorted = live_in_sorted_order(forest, live)
         return fused_query_batch(data, forest, A, params, queries, cfg,
-                                 plan=plan)
-    fn = functools.partial(knn_query, data, forest, A, params, cfg=cfg)
-    return jax.vmap(fn)(queries)
+                                 plan=plan, live_sorted=live_sorted,
+                                 n_active=n_active)
+    active = (jnp.ones((B,), jnp.bool_) if n_active is None
+              else jnp.arange(B) < jnp.asarray(n_active))
+    fn = functools.partial(knn_query, data, forest, A, params, cfg=cfg,
+                           live=live)
+    return jax.vmap(lambda q, a: fn(q, active=a))(queries, active)
 
 
 # ---------------------------------------------------------------------------

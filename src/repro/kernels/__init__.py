@@ -11,6 +11,8 @@ tiling; ``ops.py`` is the jit'd public wrapper (padding + impl dispatch);
   l2_rerank        — exact-distance rerank (MXU + fused norms)
   range_rerank     — fused batched range query: leaf LB + radius admission +
                      candidate gather + exact rerank in one grid pass (the
-                     query-phase engine; grid carries the tree axis)
+                     query-phase engine; grid carries the tree axis), with a
+                     per-tile point validity/tombstone mask (streaming
+                     deletes cost no extra pass)
   flash_attention  — online-softmax attention for the serving path
 """

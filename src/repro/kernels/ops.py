@@ -94,7 +94,7 @@ def l2_rerank(q, c, *, interpret: bool = False, block_q: int = 128,
 @functools.partial(jax.jit, static_argnames=("leaf_size", "interpret",
                                              "block_q", "block_l"))
 def range_rerank(q, q_proj, r_eff, leaf_lo, leaf_hi, leaf_valid, breakpoints,
-                 points, point_valid, *, leaf_size: int,
+                 points, point_valid, live=None, *, leaf_size: int,
                  interpret: bool = False, block_q: int = 8,
                  block_l: int = 8):
     """Fused batched range query + rerank; see kernels/range_rerank.py.
@@ -102,12 +102,19 @@ def range_rerank(q, q_proj, r_eff, leaf_lo, leaf_hi, leaf_valid, breakpoints,
     Pads the query batch to ``block_q`` (padded lanes get r_eff = -1 so they
     admit nothing), the leaf axis to ``block_l`` (padded leaves invalid) and
     the feature dim to the 128-lane MXU width (zero padding preserves
-    distances).  Returns (L, B, nl*leaf_size).
+    distances).  ``live`` is the optional (L, nl*leaf_size) per-point
+    tombstone mask in sorted order (None = all live); dead points emit +inf
+    inside the kernel tile, so deletes cost no extra pass.  Returns
+    (L, B, nl*leaf_size).
     """
+    if live is None:
+        # pv & pv == pv: reusing the validity buffer as the live operand
+        # keeps the all-live case allocation-free (no ones tensor).
+        live = point_valid
     if not _use_pallas(interpret):
         return _ref.range_rerank(q, q_proj, r_eff, leaf_lo, leaf_hi,
                                  leaf_valid, breakpoints, points, point_valid,
-                                 leaf_size=leaf_size)
+                                 live, leaf_size=leaf_size)
     L, B, K = q_proj.shape
     nl = leaf_lo.shape[1]
     npts = nl * leaf_size
@@ -119,9 +126,11 @@ def range_rerank(q, q_proj, r_eff, leaf_lo, leaf_hi, leaf_valid, breakpoints,
     lv_b = _pad_to(leaf_valid.astype(jnp.int32), 1, block_l)
     pts_b = _pad_to(_pad_to(points, 1, block_l * leaf_size), 2, 128)
     pv_b = _pad_to(point_valid.astype(jnp.int32), 1, block_l * leaf_size)
+    lm_b = _pad_to(live.astype(jnp.int32), 1, block_l * leaf_size)
     out = _rr.range_rerank(qp_b, qproj_b, r_b, lo_b, hi_b, lv_b, breakpoints,
-                           pts_b, pv_b, leaf_size=leaf_size, block_q=block_q,
-                           block_l=block_l, interpret=interpret)
+                           pts_b, pv_b, lm_b, leaf_size=leaf_size,
+                           block_q=block_q, block_l=block_l,
+                           interpret=interpret)
     return out[:, :B, :npts]
 
 

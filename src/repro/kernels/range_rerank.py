@@ -36,7 +36,7 @@ from jax.experimental import pallas as pl
 
 
 def _kernel(q_ref, qp_ref, r_ref, lo_ref, hi_ref, lv_ref, bp_ref, pts_ref,
-            pv_ref, o_ref, *, E: int, K: int, leaf_size: int):
+            pv_ref, live_ref, o_ref, *, E: int, K: int, leaf_size: int):
     lo = lo_ref[0]                                     # (bl, K) int32
     hi = hi_ref[0] + 1                                 # upper edge index
     qp = qp_ref[0]                                     # (bq, K) f32
@@ -79,7 +79,7 @@ def _kernel(q_ref, qp_ref, r_ref, lo_ref, hi_ref, lv_ref, bp_ref, pts_ref,
                                  preferred_element_type=jnp.float32)
         dist = jnp.sqrt(jnp.maximum(qq - 2.0 * qc + pp, 0.0))
         mask = jnp.repeat(admit, leaf_size, axis=1)    # (bq, bl*ls)
-        mask = mask & (pv_ref[0] != 0)[None, :]
+        mask = mask & ((pv_ref[0] != 0) & (live_ref[0] != 0))[None, :]
         o_ref[0] = jnp.where(mask, dist, inf)
 
     @pl.when(~jnp.any(admit))
@@ -90,7 +90,8 @@ def _kernel(q_ref, qp_ref, r_ref, lo_ref, hi_ref, lv_ref, bp_ref, pts_ref,
 def range_rerank(q: jax.Array, q_proj: jax.Array, r_eff: jax.Array,
                  leaf_lo: jax.Array, leaf_hi: jax.Array,
                  leaf_valid: jax.Array, breakpoints: jax.Array,
-                 points: jax.Array, point_valid: jax.Array, *,
+                 points: jax.Array, point_valid: jax.Array,
+                 live: jax.Array, *,
                  leaf_size: int, block_q: int = 8, block_l: int = 8,
                  interpret: bool = False) -> jax.Array:
     """Fused range query + rerank over all L trees.
@@ -98,11 +99,13 @@ def range_rerank(q: jax.Array, q_proj: jax.Array, r_eff: jax.Array,
     q (B, d) original-space queries; q_proj (L, B, K); r_eff (B,) projected
     radii (eps*r, or -1 for done lanes); leaf_lo/hi (L, nl, K) int32;
     leaf_valid (L, nl) int32; breakpoints (L, K, E); points (L, nl*ls, d)
-    code-sorted original-space points; point_valid (L, nl*ls) int32.
+    code-sorted original-space points; point_valid (L, nl*ls) int32;
+    live (L, nl*ls) int32 — per-point tombstone mask in sorted order (0 =
+    deleted; the streaming index's delete path, same tiling as point_valid).
 
     Returns (L, B, nl*ls) f32: exact distance where the covering leaf is
-    admitted at radius r_eff, +inf elsewhere.  B and nl must be block
-    multiples (ops.py pads).
+    admitted at radius r_eff and the point is valid and live, +inf
+    elsewhere.  B and nl must be block multiples (ops.py pads).
     """
     L, B, K = q_proj.shape
     d = q.shape[1]
@@ -126,10 +129,12 @@ def range_rerank(q: jax.Array, q_proj: jax.Array, r_eff: jax.Array,
             pl.BlockSpec((1, block_l * leaf_size, d),
                          lambda l, i, j: (l, j, 0)),
             pl.BlockSpec((1, block_l * leaf_size), lambda l, i, j: (l, j)),
+            pl.BlockSpec((1, block_l * leaf_size), lambda l, i, j: (l, j)),
         ],
         out_specs=pl.BlockSpec((1, block_q, block_l * leaf_size),
                                lambda l, i, j: (l, i, j)),
         out_shape=jax.ShapeDtypeStruct((L, B, npts), jnp.float32),
         interpret=interpret,
     )(q, q_proj, r_eff, leaf_lo, leaf_hi, leaf_valid.astype(jnp.int32),
-      breakpoints, points, point_valid.astype(jnp.int32))
+      breakpoints, points, point_valid.astype(jnp.int32),
+      live.astype(jnp.int32))

@@ -68,30 +68,36 @@ def l2_rerank(q: jax.Array, c: jax.Array) -> jax.Array:
 def range_rerank(q: jax.Array, q_proj: jax.Array, r_eff: jax.Array,
                  leaf_lo: jax.Array, leaf_hi: jax.Array,
                  leaf_valid: jax.Array, breakpoints: jax.Array,
-                 points: jax.Array, point_valid: jax.Array, *,
+                 points: jax.Array, point_valid: jax.Array,
+                 live: jax.Array | None = None, *,
                  leaf_size: int) -> jax.Array:
     """Fused batched range query + exact rerank (semantics of record).
 
     q (B, d); q_proj (L, B, K); r_eff (B,) projected radii (-1 = inactive
     lane); leaf_lo/hi (L, nl, K); leaf_valid (L, nl); breakpoints (L, K, E);
     points (L, nl*leaf_size, d) code-sorted original-space points;
-    point_valid (L, nl*leaf_size).
+    point_valid (L, nl*leaf_size); live (L, nl*leaf_size) per-point
+    tombstone mask in sorted order (None = all live).
 
     Returns (L, B, nl*leaf_size) f32: the exact original-space distance for
-    every point whose covering leaf has LB <= r_eff (leaf-granular
+    every live point whose covering leaf has LB <= r_eff (leaf-granular
     admission, paper §VI-B2 opt. #1, *without* a top-M cut), +inf elsewhere.
     """
-    def per_tree(qp_t, lo_t, hi_t, lv_t, bp_t, pts_t, pv_t):
+    if live is None:
+        live = jnp.ones_like(point_valid)
+
+    def per_tree(qp_t, lo_t, hi_t, lv_t, bp_t, pts_t, pv_t, lm_t):
         lb, _ = jax.vmap(
             lambda qp: leaf_bounds(qp, lo_t, hi_t, lv_t, bp_t))(qp_t)
         admit = (lb <= r_eff[:, None]) & lv_t[None, :]       # (B, nl)
         dist = l2_rerank(q, pts_t)                           # (B, nl*ls)
-        mask = jnp.repeat(admit, leaf_size, axis=1) & pv_t[None, :]
+        mask = jnp.repeat(admit, leaf_size, axis=1) & (pv_t & lm_t)[None, :]
         return jnp.where(mask, dist, jnp.inf)
 
     return jax.vmap(per_tree)(q_proj, leaf_lo, leaf_hi,
                               leaf_valid.astype(jnp.bool_), breakpoints,
-                              points, point_valid.astype(jnp.bool_))
+                              points, point_valid.astype(jnp.bool_),
+                              live.astype(jnp.bool_))
 
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,

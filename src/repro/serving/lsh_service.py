@@ -5,6 +5,17 @@ are micro-batched up to ``max_batch``/``max_wait``, answered with one
 jitted batched c^2-k-ANN call, and latency percentiles are tracked.
 On a pod the same loop runs with the PDET (shard_map) index; here the
 single-device index keeps the example CPU-friendly.
+
+Partial batches are padded up to the next ``pad_to`` bucket so the jitted
+query fn sees a bounded set of shapes, and the pad lanes are passed as
+``n_active`` so both engines mark them done from round 0 (r_eff = -1 in
+the fused kernel: they admit nothing and skip all MXU work).  Pad lanes
+are tracked in ``stats.pad_queries`` and never counted as served queries.
+
+With a mutable index (``streaming.StreamingDETLSH``) the service also
+exposes ``upsert()``/``delete()``; every mutation runs the index's
+compaction trigger (``maybe_compact``), the in-process stand-in for the
+background compactor thread.
 """
 
 from __future__ import annotations
@@ -23,7 +34,11 @@ import numpy as np
 class ServiceStats:
     latencies_ms: list
     batches: int = 0
-    queries: int = 0
+    queries: int = 0          # real served queries only — never pad lanes
+    pad_queries: int = 0      # pad lanes issued across all partial batches
+    upserts: int = 0
+    deletes: int = 0
+    compactions: int = 0
 
     def percentile(self, p: float) -> float:
         return float(np.percentile(self.latencies_ms, p)) \
@@ -31,6 +46,9 @@ class ServiceStats:
 
     def summary(self) -> dict:
         return {"queries": self.queries, "batches": self.batches,
+                "pad_queries": self.pad_queries,
+                "upserts": self.upserts, "deletes": self.deletes,
+                "compactions": self.compactions,
                 "p50_ms": self.percentile(50), "p99_ms": self.percentile(99)}
 
 
@@ -43,9 +61,21 @@ class LSHService:
         self.pad_to = pad_to
         self._fn = None
         self.stats = ServiceStats(latencies_ms=[])
+        # Pad-lane masking is an optimization, not a requirement: indexes
+        # without an n_active kwarg (PDET shard_map, baselines) still serve,
+        # they just run the radius loop on the zero-vector pad lanes.
+        import inspect
+        try:
+            params = inspect.signature(index.query).parameters
+            self._supports_n_active = "n_active" in params
+        except (TypeError, ValueError):
+            self._supports_n_active = False
 
-    def _query_fn(self, queries):
-        res = self.index.query(queries, k=self.k)
+    def _query_fn(self, queries, n_valid: int):
+        if self._supports_n_active:
+            res = self.index.query(queries, k=self.k, n_active=n_valid)
+        else:
+            res = self.index.query(queries, k=self.k)
         return res.ids, res.dists
 
     def _bucket(self, size: int) -> int:
@@ -62,7 +92,41 @@ class LSHService:
                           for s in range(1, self.max_batch + 1)})
         for size in buckets:
             q = jnp.zeros((size, d), jnp.float32)
-            jax.block_until_ready(self._query_fn(q))
+            jax.block_until_ready(self._query_fn(q, size))
+
+    # ------------------------------------------------------------------
+    # Mutation path (streaming index only)
+    # ------------------------------------------------------------------
+
+    def _mutable_index(self):
+        if not hasattr(self.index, "upsert"):
+            raise TypeError(
+                f"{type(self.index).__name__} is immutable — serve a "
+                f"streaming.StreamingDETLSH for upsert/delete")
+        return self.index
+
+    def upsert(self, vectors, ids=None) -> np.ndarray:
+        """Insert/overwrite points in the live index; returns global ids.
+        Triggers compaction when the segment fan-out exceeds the index's
+        ``max_segments``."""
+        idx = self._mutable_index()
+        out = idx.upsert(vectors, ids)
+        self.stats.upserts += len(out)
+        if idx.maybe_compact():
+            self.stats.compactions += 1
+        return out
+
+    def delete(self, ids) -> int:
+        idx = self._mutable_index()
+        removed = idx.delete(ids)
+        self.stats.deletes += removed
+        if idx.maybe_compact():
+            self.stats.compactions += 1
+        return removed
+
+    # ------------------------------------------------------------------
+    # Query loop
+    # ------------------------------------------------------------------
 
     def serve(self, request_stream) -> list:
         """request_stream: iterable of (arrival_time, query vector)."""
@@ -78,7 +142,7 @@ class LSHService:
                 qs = np.concatenate([qs, np.zeros((pad, qs.shape[1]),
                                                   qs.dtype)])
             t0 = time.perf_counter()
-            ids, dists = self._query_fn(jnp.asarray(qs))
+            ids, dists = self._query_fn(jnp.asarray(qs), len(arrivals))
             jax.block_until_ready(dists)
             done = time.perf_counter()
             for i, arr in enumerate(arrivals):
@@ -86,4 +150,5 @@ class LSHService:
                 out.append((np.asarray(ids[i]), np.asarray(dists[i])))
             self.stats.batches += 1
             self.stats.queries += len(arrivals)
+            self.stats.pad_queries += pad
         return out

@@ -1,0 +1,32 @@
+"""Streaming mutable DET-LSH: an LSM-style segmented index (docs/DESIGN.md §5).
+
+The paper's DE-Tree is *Dynamic* by construction — cheap incremental
+maintenance is its selling point — but the static reproduction could only
+build once over a frozen dataset.  This package adds the live-traffic
+workload:
+
+  * inserts land in a bounded delta buffer (``Memtable``) that is answered
+    exactly (brute-force over <= capacity rows) until it fills, then is
+    hashed + encoded with the base build's **frozen breakpoints** (no
+    re-quantiling) and sealed into an immutable code-sorted ``Segment``;
+  * deletes are tombstone bitmaps, honored by both query engines before
+    compaction ever runs (the fused Pallas kernel masks per tile, the vmap
+    engine masks at admission);
+  * a compactor merges sealed segments by *merging* their already
+    code-sorted arrays (O(n) stable merge on the interleaved iSAX keys —
+    never a re-projection/re-encode/re-sort) and drops tombstoned rows;
+  * queries fan out over {sealed segments + delta} and combine through the
+    existing ``core/candidates.py`` incremental merge.
+
+``StreamingDETLSH`` is the user-facing index; ``serving.LSHService`` wires
+it to ``upsert()``/``delete()`` with a compaction trigger.
+"""
+
+from repro.streaming.segment import Segment, build_segment
+from repro.streaming.memtable import Memtable
+from repro.streaming.manifest import Manifest
+from repro.streaming.compactor import merge_segments
+from repro.streaming.index import StreamingDETLSH
+
+__all__ = ["StreamingDETLSH", "Segment", "build_segment", "Memtable",
+           "Manifest", "merge_segments"]

@@ -1,0 +1,169 @@
+"""Compaction: merge sealed segments without rebuilding anything.
+
+Every segment's per-tree arrays are already sorted by the bit-interleaved
+iSAX key, and all segments share the same *inner* breakpoint edges (frozen
+at the base build), so their key spaces are directly comparable.  Merging
+two segments is therefore a stable **merge of sorted arrays** — positions
+come from two ``searchsorted`` calls, O(n log n) comparisons and O(n)
+moves, with no re-projection, no re-encoding, and no re-sort.  Tombstoned
+rows are dropped before the merge, leaf summaries (lo/hi boxes) are
+recomputed from the merged codes in one O(n) blockwise pass, and the outer
+breakpoint edges of the merged forest are the union (min/max) of the
+inputs' — which, as in ``segment.build_segment``, changes no code.
+
+Runs on the host (numpy): compaction is the background maintenance path,
+and host-side merging keeps dynamic result shapes out of the jitted query
+graph entirely — the query path only ever sees the swapped-in segment.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.detree import DEForest, _interleave_keys
+from repro.streaming.segment import Segment
+
+
+def interleave_keys64(codes: np.ndarray, K: int) -> np.ndarray:
+    """(m, K) region ids -> uint64 interleaved sort keys (detree's order)."""
+    hi, lo = _interleave_keys(jnp.asarray(codes), K)
+    return ((np.asarray(hi).astype(np.uint64) << np.uint64(32))
+            | np.asarray(lo).astype(np.uint64))
+
+
+def stable_merge_positions(keys_a: np.ndarray,
+                           keys_b: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Output positions of two key-sorted runs in their stable merge
+    (ties: all of A before B).  pos_a[i] = i + #{b < a_i}; pos_b[j] =
+    j + #{a <= b_j}.  Disjoint and complete by construction."""
+    pos_a = np.arange(len(keys_a)) + np.searchsorted(keys_b, keys_a, "left")
+    pos_b = np.arange(len(keys_b)) + np.searchsorted(keys_a, keys_b, "right")
+    return pos_a, pos_b
+
+
+def _merge_two(a: dict, b: dict) -> dict:
+    """Merge two per-tree runs of (keys, gids, proj, codes)."""
+    pos_a, pos_b = stable_merge_positions(a["keys"], b["keys"])
+    m = len(pos_a) + len(pos_b)
+    out = {}
+    for name in ("keys", "gids", "proj", "codes"):
+        arr = np.empty((m,) + a[name].shape[1:], a[name].dtype)
+        arr[pos_a] = a[name]
+        arr[pos_b] = b[name]
+        out[name] = arr
+    return out
+
+
+def _tree_run(seg: Segment, l: int, K: int) -> dict:
+    """Extract tree l's surviving rows in sorted order (tombstones dropped)."""
+    f = seg.forest
+    pid = np.asarray(f.point_ids[l])
+    sel = np.asarray(f.valid[l]).copy()
+    sel[sel] = seg.live[pid[sel]]
+    rows = pid[sel]
+    codes = np.asarray(f.codes_sorted[l])[sel]
+    return dict(keys=interleave_keys64(codes, K),
+                gids=seg.gids[rows].astype(np.int64),
+                proj=np.asarray(f.proj_sorted[l])[sel],
+                codes=codes)
+
+
+def _leaf_summaries(codes_pad: np.ndarray, valid: np.ndarray,
+                    leaf_size: int) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Numpy mirror of detree.build_tree's blockwise lo/hi computation."""
+    n_pad, K = codes_pad.shape
+    n_leaves = n_pad // leaf_size
+    blocks = codes_pad.reshape(n_leaves, leaf_size, K)
+    bmask = valid.reshape(n_leaves, leaf_size)
+    big = np.iinfo(np.int32).max
+    lo = np.where(bmask[..., None], blocks, big).min(axis=1)
+    hi = np.where(bmask[..., None], blocks, -1).max(axis=1)
+    leaf_valid = bmask.any(axis=1)
+    lo = np.where(leaf_valid[:, None], lo, 0).astype(np.int32)
+    hi = np.where(leaf_valid[:, None], hi, 0).astype(np.int32)
+    return lo, hi, leaf_valid
+
+
+def merge_segments(segments: List[Segment], *, leaf_size: int,
+                   seg_id: int) -> Optional[Segment]:
+    """Merge sealed segments into one, dropping tombstoned rows.
+
+    Returns the merged Segment, or None when no row survives (the caller
+    then just drops the inputs).  Correctness invariant: for every tree,
+    the merged array is the stable key-sorted interleaving of the inputs'
+    surviving rows — exactly what ``build_forest`` would produce for the
+    surviving union encoded with the same (frozen-inner-edge) breakpoints,
+    up to equal-key orderings, which the leaf bounds never depend on.
+    """
+    assert segments
+    f0 = segments[0].forest
+    L, K = f0.L, f0.K
+    bps = [np.asarray(s.forest.breakpoints) for s in segments]
+    for bp in bps[1:]:   # shared key space: inner edges must be identical
+        np.testing.assert_allclose(bp[..., 1:-1], bps[0][..., 1:-1],
+                                   rtol=0, atol=0)
+
+    # Survivor rows in segment-list order define the merged local id space.
+    datas = [np.asarray(s.data)[s.live] for s in segments]
+    gid_parts = [s.gids[s.live].astype(np.int64) for s in segments]
+    data_m = (np.concatenate(datas) if datas else
+              np.zeros((0, np.asarray(segments[0].data).shape[1]), np.float32))
+    gids_m = np.concatenate(gid_parts) if gid_parts else np.zeros(0, np.int64)
+    m = len(gids_m)
+    if m == 0:
+        return None
+    order = np.argsort(gids_m, kind="stable")
+    gids_sorted = gids_m[order]
+
+    def local_ids(tree_gids: np.ndarray) -> np.ndarray:
+        return order[np.searchsorted(gids_sorted, tree_gids)].astype(np.int32)
+
+    n_leaves = -(-m // leaf_size)
+    n_pad = n_leaves * leaf_size
+    pad = n_pad - m
+    valid = np.arange(n_pad) < m
+
+    pids, projs, codess = [], [], []
+    leaf_los, leaf_his, leaf_vs = [], [], []
+    for l in range(L):
+        run = _tree_run(segments[0], l, K)
+        for seg in segments[1:]:
+            run = _merge_two(run, _tree_run(seg, l, K))
+        assert len(run["gids"]) == m, (l, len(run["gids"]), m)
+        pids.append(np.concatenate(
+            [local_ids(run["gids"]), np.full(pad, m, np.int32)]))
+        projs.append(np.concatenate(
+            [run["proj"], np.zeros((pad, K), np.float32)]))
+        codes_pad = np.concatenate(
+            [run["codes"], np.zeros((pad, K), np.int32)]).astype(np.int32)
+        codess.append(codes_pad)
+        lo, hi, lv = _leaf_summaries(codes_pad, valid, leaf_size)
+        leaf_los.append(lo)
+        leaf_his.append(hi)
+        leaf_vs.append(lv)
+
+    bp_stack = np.stack(bps)                       # (S, L, K, Nr+1)
+    bp_m = bps[0].copy()
+    bp_m[..., 0] = bp_stack[..., 0].min(axis=0)    # widened union outer edges
+    bp_m[..., -1] = bp_stack[..., -1].max(axis=0)
+
+    forest = DEForest(
+        point_ids=jnp.asarray(np.stack(pids)),
+        proj_sorted=jnp.asarray(np.stack(projs), jnp.float32),
+        codes_sorted=jnp.asarray(np.stack(codess)),
+        valid=jnp.asarray(np.tile(valid, (L, 1))),
+        leaf_lo=jnp.asarray(np.stack(leaf_los)),
+        leaf_hi=jnp.asarray(np.stack(leaf_his)),
+        leaf_valid=jnp.asarray(np.stack(leaf_vs)),
+        breakpoints=jnp.asarray(bp_m, jnp.float32),
+        n=m, leaf_size=leaf_size)
+
+    live_rows = sum(int(s.n_live) for s in segments)
+    clip = (sum(s.clip_fraction * max(s.n_live, 1) for s in segments)
+            / max(live_rows, 1))
+    return Segment(seg_id=seg_id, data=jnp.asarray(data_m),
+                   gids=gids_m.astype(np.int32), live=np.ones(m, bool),
+                   forest=forest, clip_fraction=clip)

@@ -1,0 +1,443 @@
+"""StreamingDETLSH: the mutable, segmented DET-LSH index.
+
+Structure (docs/DESIGN.md §5): a ``Manifest`` of sealed ``Segment``s plus
+one mutable ``Memtable`` delta.  Inserts append to the delta (answered
+exactly until sealed); deletes tombstone wherever the point lives; sealing
+encodes the delta with the base build's frozen breakpoints; compaction
+merges sealed segments on the host and atomically swaps the result in.
+
+Queries fan out over {segments + delta}: each sealed segment runs the
+ordinary batched c^2-k-ANN (fused or vmap engine) over its own forest with
+its tombstone mask, the delta is answered by exact brute force over its
+<= capacity rows, and the per-source top-k lists — in *global* id space —
+are combined through ``core/candidates.py`` (merge_round dedup +
+canonicalize), so the cross-source merge is the same property-tested
+machinery the round loop uses.
+
+Guarantee argument (docs/DESIGN.md §5): each segment query is a standard
+DET-LSH query over that segment's live points (T1 uses the segment's total
+row count n_seg >= n_live, which only delays termination — a superset, safe
+by the §2 argument), the delta is exact, and the final k is the best-of-
+union — so recall over the surviving union is bounded below by the paper's
+per-segment guarantee.
+
+Note on jit: ``query`` is trace-compatible (pure jnp on device state) when
+``r_min`` is passed explicitly; the default estimates r_min host-side.
+Mutations change device buffers, so re-trace after upsert/seal/compact if
+you wrapped ``query`` in ``jax.jit``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import estimate_r_min, hashing
+from repro.core import candidates as cand
+from repro.core import encoding as enc
+from repro.core.query import QueryConfig, QueryResult, _pick_engine, \
+    knn_query_batch
+from repro.core.theory import LSHParams, derive_params
+from repro.streaming.compactor import merge_segments
+from repro.streaming.manifest import Manifest
+from repro.streaming.memtable import Memtable
+from repro.streaming.segment import Segment, build_segment
+
+_DELTA = "delta"     # locator tag for rows still in the memtable
+
+
+class StreamingDETLSH:
+    """Mutable segmented DET-LSH index with upsert / delete / compaction."""
+
+    def __init__(self, params: LSHParams, A: jax.Array, bp_all: jax.Array,
+                 base: Optional[Segment], *, Nr: int, leaf_size: int,
+                 delta_capacity: int = 512, max_segments: int = 4,
+                 id_capacity: int = 1 << 20):
+        self.params = params
+        self.A = A
+        self.bp_all = bp_all              # (L*K, Nr+1) frozen breakpoints
+        self.Nr = Nr
+        self.leaf_size = leaf_size
+        self.max_segments = max_segments
+        self.id_capacity = int(id_capacity)
+        self.manifest = Manifest()
+        self.locator: Dict[int, Tuple] = {}   # gid -> (_DELTA, slot) | (seg_id, row)
+        self.next_gid = 0
+        self._next_seg_id = 0
+        d = A.shape[0]
+        self.memtable = Memtable(delta_capacity, d)
+        self._delta_cache = None          # (memtable.version, device arrays)
+        if base is not None:
+            self.manifest.add(base)
+            self._next_seg_id = base.seg_id + 1
+            for row, gid in enumerate(base.gids):
+                self.locator[int(gid)] = (base.seg_id, row)
+            self.next_gid = int(base.gids.max()) + 1 if base.m else 0
+
+    # ------------------------------------------------------------------
+    # Build
+    # ------------------------------------------------------------------
+
+    @classmethod
+    def build(cls, data: jax.Array, key: jax.Array,
+              params: LSHParams | None = None, *,
+              Nr: int = enc.DEFAULT_NR, leaf_size: int = 64,
+              delta_capacity: int = 512, max_segments: int = 4,
+              id_capacity: int | None = None,
+              breakpoint_method: str = "sample_sort",
+              project_impl: str = "auto",
+              encode_impl: str = "auto") -> "StreamingDETLSH":
+        """Static base build (Alg. 1 + 2) that also freezes the breakpoints
+        every later seal will encode with."""
+        params = params or derive_params()
+        data = jnp.asarray(data, jnp.float32)
+        n, d = data.shape
+        kp, kb = jax.random.split(key)
+        A = hashing.sample_projections(kp, d, params.K, params.L)
+        proj = hashing.project(data, A, impl=project_impl)
+        bp_all = enc.select_breakpoints(proj, Nr, method=breakpoint_method,
+                                        key=kb)
+        base = build_segment(data, np.arange(n, dtype=np.int64), A, params,
+                             bp_all, Nr=Nr, leaf_size=leaf_size, seg_id=0,
+                             proj=proj, encode_impl=encode_impl)
+        if id_capacity is None:
+            id_capacity = max(2 * n, n + 16 * delta_capacity, 1024)
+        return cls(params, A, bp_all, base, Nr=Nr, leaf_size=leaf_size,
+                   delta_capacity=delta_capacity, max_segments=max_segments,
+                   id_capacity=id_capacity)
+
+    # ------------------------------------------------------------------
+    # Mutation
+    # ------------------------------------------------------------------
+
+    def upsert(self, vectors, gids=None) -> np.ndarray:
+        """Insert (or overwrite) rows; returns their global ids (int32).
+
+        Overwrite semantics: an existing gid is tombstoned wherever it
+        lives and re-inserted into the delta.  Sealing triggers itself when
+        the delta fills; compaction is the caller's trigger
+        (``maybe_compact``, wired into serving.LSHService).
+        """
+        vecs = np.asarray(vectors, np.float32)
+        if vecs.ndim == 1:
+            vecs = vecs[None, :]
+        m = len(vecs)
+        if gids is None:
+            gids = np.arange(self.next_gid, self.next_gid + m, dtype=np.int64)
+        else:
+            gids = np.asarray(gids, np.int64).reshape(-1)
+            assert len(gids) == m, (len(gids), m)
+        if m == 0:
+            return gids.astype(np.int32)
+        # Validate before mutating any state so the caller can recover.
+        if gids.min() < 0:
+            raise ValueError(f"gids must be non-negative, got {gids.min()}")
+        new_next = max(self.next_gid, int(gids.max()) + 1)
+        if new_next > self.id_capacity:
+            raise ValueError(
+                f"gid space exhausted ({new_next} > id_capacity="
+                f"{self.id_capacity}); call grow_id_capacity() (one-time "
+                f"recompile of the combine step) or build a larger index")
+        self.next_gid = new_next
+
+        # Last write wins within one call: keep only each gid's final row.
+        _, last_rev = np.unique(gids[::-1], return_index=True)
+        keep = np.sort(m - 1 - last_rev)
+        ins_gids, ins_vecs = gids[keep], vecs[keep]
+        for gid in ins_gids:                       # overwrite semantics
+            if int(gid) in self.locator:
+                self._tombstone(int(gid))
+        # Bulk-copy into the delta in capacity-sized blocks (the per-row
+        # Python loop made ingest interpreter-bound), sealing at each fill.
+        pos = 0
+        while pos < len(ins_gids):
+            if self.memtable.full:
+                self.seal()
+            take = min(self.memtable.capacity - self.memtable.count,
+                       len(ins_gids) - pos)
+            slots = self.memtable.add_block(ins_gids[pos:pos + take],
+                                            ins_vecs[pos:pos + take])
+            self.locator.update(
+                (int(g), (_DELTA, int(s)))
+                for g, s in zip(ins_gids[pos:pos + take], slots))
+            pos += take
+        if self.memtable.full:
+            self.seal()
+        return gids.astype(np.int32)
+
+    def delete(self, gids) -> int:
+        """Tombstone points by global id; returns how many existed."""
+        return sum(self._tombstone(int(g)) for g in np.atleast_1d(gids))
+
+    def _tombstone(self, gid: int) -> bool:
+        loc = self.locator.pop(gid, None)
+        if loc is None:
+            return False
+        where, pos = loc
+        if where == _DELTA:
+            self.memtable.kill(pos)
+        else:
+            self._segment(where).mark_dead(pos)
+        return True
+
+    def _segment(self, seg_id: int) -> Segment:
+        for s in self.manifest.segments:
+            if s.seg_id == seg_id:
+                return s
+        raise KeyError(seg_id)
+
+    def seal(self) -> Optional[Segment]:
+        """Freeze the delta into a sealed segment (frozen-breakpoint encode).
+
+        All ``capacity`` slots seal — already-dead slots become tombstoned
+        rows (compaction drops them) — so every sealed-from-delta segment
+        has identical shapes and reuses the same compiled query kernels.
+        """
+        mt = self.memtable
+        if mt.count == 0:
+            return None
+        seg = build_segment(mt.vecs, mt.gids, self.A, self.params,
+                            self.bp_all, Nr=self.Nr,
+                            leaf_size=self.leaf_size,
+                            seg_id=self._next_seg_id, live=mt.live)
+        self._next_seg_id += 1
+        self.manifest.add(seg)
+        for slot in range(mt.count):
+            if mt.live[slot]:
+                self.locator[int(mt.gids[slot])] = (seg.seg_id, slot)
+        mt.reset()
+        return seg
+
+    flush = seal
+
+    def compact(self) -> bool:
+        """Merge all sealed segments into one, dropping tombstones (O(n)
+        sorted-array merge on the host; see streaming/compactor.py)."""
+        segs = self.manifest.segments
+        if len(segs) <= 1 and not any(s.has_tombstones for s in segs):
+            return False
+        merged = merge_segments(segs, leaf_size=self.leaf_size,
+                                seg_id=self._next_seg_id)
+        self._next_seg_id += 1
+        self.manifest.swap([s.seg_id for s in segs],
+                           [merged] if merged is not None else [])
+        if merged is not None:
+            for row, gid in enumerate(merged.gids):
+                self.locator[int(gid)] = (merged.seg_id, row)
+        return True
+
+    def grow_id_capacity(self, new_capacity: int) -> None:
+        """Enlarge the global id space (the combine step's bitmap width and
+        invalid-id sentinel).  Existing gids are untouched; the next query
+        recompiles once for the new shapes."""
+        if new_capacity < self.id_capacity:
+            raise ValueError(f"cannot shrink id_capacity "
+                             f"({new_capacity} < {self.id_capacity})")
+        self.id_capacity = int(new_capacity)
+        self._delta_cache = None          # gmap sentinel baked the old value
+
+    def maybe_compact(self) -> bool:
+        """The service's compaction trigger: compact when the fan-out width
+        exceeds ``max_segments`` (in production this runs on a background
+        thread; the swap itself is atomic either way)."""
+        if len(self.manifest.segments) > self.max_segments:
+            return self.compact()
+        return False
+
+    def requantile(self, key: jax.Array | None = None) -> None:
+        """Full rebuild with fresh breakpoints over the surviving points —
+        the escape hatch when ``clip_fraction()`` says the frozen
+        quantization has drifted too far (docs/DESIGN.md §5)."""
+        vecs, gids = self._survivors()
+        if len(gids) == 0:
+            raise ValueError("cannot requantile an empty index")
+        data = jnp.asarray(vecs)
+        proj = hashing.project(data, self.A)
+        self.bp_all = enc.select_breakpoints(
+            proj, self.Nr, key=key)
+        base = build_segment(data, gids, self.A, self.params, self.bp_all,
+                             Nr=self.Nr, leaf_size=self.leaf_size,
+                             seg_id=self._next_seg_id, proj=proj)
+        self._next_seg_id += 1
+        self.manifest = Manifest()
+        self.manifest.add(base)
+        self.memtable.reset()
+        self._delta_cache = None
+        self.locator = {int(g): (base.seg_id, row)
+                        for row, g in enumerate(base.gids)}
+
+    def _survivors(self) -> tuple[np.ndarray, np.ndarray]:
+        vecs = [np.asarray(s.data)[s.live] for s in self.manifest.segments]
+        gids = [s.gids[s.live].astype(np.int64)
+                for s in self.manifest.segments]
+        mt = self.memtable
+        if mt.n_live:
+            vecs.append(mt.vecs[mt.live])
+            gids.append(mt.gids[mt.live])
+        if not vecs:
+            return (np.zeros((0, self.A.shape[0]), np.float32),
+                    np.zeros(0, np.int64))
+        return np.concatenate(vecs), np.concatenate(gids)
+
+    # ------------------------------------------------------------------
+    # Query
+    # ------------------------------------------------------------------
+
+    def _delta_device(self):
+        mt = self.memtable
+        if self._delta_cache is None or self._delta_cache[0] != mt.version:
+            gmap = np.where(mt.live, mt.gids,
+                            self.id_capacity).astype(np.int32)
+            # jnp.array copies: the memtable buffers mutate in place and the
+            # CPU backend may otherwise alias them zero-copy.
+            self._delta_cache = (mt.version,
+                                 (jnp.array(mt.vecs), jnp.array(mt.live),
+                                  jnp.asarray(gmap)))
+        return self._delta_cache[1]
+
+    def _query_delta(self, queries: jax.Array, k: int,
+                     n_active: Optional[jax.Array | int] = None):
+        """Exact top-k over the delta rows (bounded, one stable shape).
+
+        Direct (q - v)^2 differences, not the qq - 2qc + pp expansion: the
+        delta is small enough that the O(B*cap*d) intermediate is cheap, and
+        the direct form avoids the expansion's cancellation error (the delta
+        is the 'exact' tier of the index — keep it exact).  Pad lanes
+        (>= n_active) admit nothing, matching the segment engines."""
+        vecs, live, gmap = self._delta_device()
+        diff = queries[:, None, :] - vecs[None, :, :]
+        dist = jnp.sqrt(jnp.sum(diff * diff, axis=-1))
+        dist = jnp.where(live[None, :], dist, jnp.inf)
+        if n_active is not None:
+            lane_ok = jnp.arange(queries.shape[0]) < jnp.asarray(n_active)
+            dist = jnp.where(lane_ok[:, None], dist, jnp.inf)
+        kk = min(k, self.memtable.capacity)
+        negd, sel = jax.lax.top_k(-dist, kk)
+        # +inf slots (dead rows, masked pad lanes) must not leak their gid.
+        ids = jnp.where(jnp.isfinite(negd), gmap[sel], self.id_capacity)
+        return ids, -negd
+
+    def _combine(self, sources: List[Tuple[jax.Array, jax.Array]],
+                 k: int, B: int):
+        """Fold per-source (global ids, exact dists) top-k lists into the
+        overall top-k via the incremental candidate merge."""
+        cap = sum(int(ids.shape[1]) for ids, _ in sources)
+        nid = self.id_capacity
+        state = cand.CandidateState(
+            ids=jnp.full((B, cap), nid, jnp.int32),
+            dists=jnp.full((B, cap), jnp.inf, jnp.float32),
+            seen=jnp.zeros((B, cand.bitmap_words(nid)), jnp.uint32),
+            count=jnp.zeros((B,), jnp.int32))
+        mr = jax.vmap(functools.partial(cand.merge_round, nid))
+        for ids_s, d_s in sources:
+            state = mr(state, ids_s.astype(jnp.int32), d_s)
+        ids_c, d_c = jax.vmap(functools.partial(cand.canonicalize, nid))(
+            state.ids, state.dists)
+        if cap < k:
+            ids_c = jnp.pad(ids_c, ((0, 0), (0, k - cap)),
+                            constant_values=nid)
+            d_c = jnp.pad(d_c, ((0, 0), (0, k - cap)),
+                          constant_values=jnp.inf)
+        return ids_c[:, :k], d_c[:, :k]
+
+    def query(self, queries: jax.Array, k: int = 10, *,
+              r_min: float | None = None, M: int = 8, mode: str = "leaf",
+              max_rounds: int = 48, engine: str = "auto",
+              n_active: int | None = None) -> QueryResult:
+        """Batched c^2-k-ANN over the live point set.  Returned ids are
+        *global* ids; invalid slots carry ``id_capacity`` and +inf."""
+        queries = jnp.asarray(queries, jnp.float32)
+        B = queries.shape[0]
+        segs = [s for s in self.manifest.segments if s.n_live > 0]
+        if r_min is None:
+            ref_data = (segs[0].data if segs else
+                        jnp.asarray(self.memtable.vecs))
+            r_min = estimate_r_min(ref_data, queries, k, self.params.c)
+
+        sources, rounds, n_cands, final_r = [], [], [], []
+        for seg in segs:
+            k_seg = min(k, seg.m)
+            cfg = QueryConfig(k=k_seg, M=M, r_min=r_min, mode=mode,
+                              max_rounds=max_rounds, engine=engine)
+            fused = _pick_engine(cfg, B) == "fused"
+            res = knn_query_batch(
+                seg.data, seg.forest, self.A, self.params, queries, cfg,
+                plan=seg.plan() if fused else None, live=seg.live_dev(),
+                live_sorted=seg.live_sorted_dev(), n_active=n_active)
+            gmap = seg.gid_map_dev(self.id_capacity)
+            sources.append((gmap[res.ids], res.dists))
+            rounds.append(res.rounds)
+            n_cands.append(res.n_candidates)
+            final_r.append(res.final_r)
+        if self.memtable.n_live > 0:
+            ids_d, d_d = self._query_delta(queries, k, n_active)
+            sources.append((ids_d, d_d))
+            delta_cand = jnp.full((B,), self.memtable.n_live, jnp.int32)
+            if n_active is not None:
+                delta_cand = jnp.where(jnp.arange(B) < jnp.asarray(n_active),
+                                       delta_cand, 0)
+            n_cands.append(delta_cand)
+
+        if not sources:
+            return QueryResult(
+                ids=jnp.full((B, k), self.id_capacity, jnp.int32),
+                dists=jnp.full((B, k), jnp.inf, jnp.float32),
+                rounds=jnp.zeros((B,), jnp.int32),
+                n_candidates=jnp.zeros((B,), jnp.int32),
+                final_r=jnp.full((B,), r_min, jnp.float32))
+
+        ids, dists = self._combine(sources, k, B)
+        zero = jnp.zeros((B,), jnp.int32)
+        return QueryResult(
+            ids=ids, dists=dists,
+            rounds=functools.reduce(jnp.maximum, rounds, zero),
+            n_candidates=functools.reduce(jnp.add, n_cands, zero),
+            final_r=functools.reduce(
+                jnp.maximum, final_r, jnp.full((B,), r_min, jnp.float32)))
+
+    def warmup_query_caches(self) -> None:
+        """Eagerly materialize per-segment device caches (fused plans,
+        tombstone masks, gid maps) and the delta snapshot.  Call after
+        mutations and before jitting ``query`` so the trace captures
+        concrete arrays rather than re-staging them as constants."""
+        for seg in self.manifest.segments:
+            seg.warm_caches(self.id_capacity)
+        self._delta_device()
+
+    # ------------------------------------------------------------------
+    # Introspection
+    # ------------------------------------------------------------------
+
+    @property
+    def n_live(self) -> int:
+        return self.manifest.n_live + self.memtable.n_live
+
+    @property
+    def n_total(self) -> int:
+        return self.manifest.n_rows + self.memtable.count
+
+    def clip_fraction(self) -> float:
+        """Rows-weighted breakpoint-drift signal over sealed segments
+        (coords of sealed inserts outside the frozen outer edges)."""
+        total = sum(s.m for s in self.manifest.segments)
+        if total == 0:
+            return 0.0
+        return sum(s.clip_fraction * s.m
+                   for s in self.manifest.segments) / total
+
+    def index_size_bytes(self) -> int:
+        return (sum(s.forest.size_bytes() for s in self.manifest.segments)
+                + self.A.size * 4)
+
+    def stats(self) -> dict:
+        return {
+            "n_live": self.n_live, "n_total": self.n_total,
+            "delta_rows": self.memtable.count,
+            "delta_live": self.memtable.n_live,
+            "clip_fraction": round(self.clip_fraction(), 6),
+            "manifest": self.manifest.describe(),
+        }

@@ -1,0 +1,50 @@
+"""Manifest: the versioned catalog of sealed segments.
+
+The query path reads ``segments`` (fan-out order: oldest first); mutators
+go through ``add`` / ``swap`` so every structural change bumps ``version``
+— the invalidation key for anything derived from the segment list (jit
+caches, warmed shapes).  ``swap`` is the compactor's atomic install: the
+replacement segment appears in the same pass that removes its inputs, so a
+reader never sees a point twice or not at all.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+from repro.streaming.segment import Segment
+
+
+@dataclasses.dataclass
+class Manifest:
+    segments: List[Segment] = dataclasses.field(default_factory=list)
+    version: int = 0
+
+    def add(self, seg: Segment) -> None:
+        self.segments.append(seg)
+        self.version += 1
+
+    def swap(self, remove_ids, add: List[Segment]) -> None:
+        """Atomically replace segments ``remove_ids`` with ``add``."""
+        remove_ids = set(remove_ids)
+        kept = [s for s in self.segments if s.seg_id not in remove_ids]
+        self.segments = kept + list(add)
+        self.version += 1
+
+    @property
+    def n_rows(self) -> int:
+        return sum(s.m for s in self.segments)
+
+    @property
+    def n_live(self) -> int:
+        return sum(s.n_live for s in self.segments)
+
+    def describe(self) -> dict:
+        return {
+            "version": self.version,
+            "segments": [
+                {"seg_id": s.seg_id, "rows": s.m, "live": s.n_live,
+                 "clip_fraction": round(s.clip_fraction, 6)}
+                for s in self.segments],
+        }

@@ -1,0 +1,161 @@
+"""Immutable sealed segment: one DE-Forest over a batch of accepted points.
+
+A segment is the unit of the streaming index's LSM structure.  Its rows are
+frozen at seal time; the only mutable state is the tombstone bitmap
+(``live``), which both query engines honor (docs/DESIGN.md §5).
+
+Frozen-breakpoint encoding.  New points are encoded with the *base build's*
+breakpoints so codes stay comparable across segments (the compactor's O(n)
+merge depends on a shared key space).  ``encode`` reads only the Nr-1
+*inner* edges, so per-segment **outer-edge widening** — stretching edge 0 /
+edge Nr to cover the segment's actual projected min/max — changes no code
+but keeps every point inside its leaf's bounding box, which is what the
+Fig. 5 LB admissibility (and hence Theorems 1-3) needs.  The fraction of
+coordinates that needed widening is recorded as ``clip_fraction`` — the
+breakpoint-drift signal that tells the operator when a re-quantile
+(``StreamingDETLSH.requantile``) is worth it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashing
+from repro.core.detree import DEForest, build_forest
+from repro.core.query import FusedPlan, live_in_sorted_order, make_fused_plan
+from repro.core.theory import LSHParams
+
+
+@dataclasses.dataclass
+class Segment:
+    """One sealed, code-sorted segment (rows immutable, tombstones mutable)."""
+
+    seg_id: int
+    data: jax.Array            # (m, d) f32 — segment rows, local order
+    gids: np.ndarray           # (m,) int32 — global point ids (host truth)
+    live: np.ndarray           # (m,) bool — tombstone bitmap (host truth)
+    forest: DEForest           # DE-Forest over local row ids 0..m-1
+    clip_fraction: float       # coords outside the frozen outer edges at seal
+
+    # Device-side caches, invalidated on delete (None = stale).  Caches are
+    # only populated OUTSIDE a jax trace (see _cacheable): populating them
+    # while a caller jits query() would store tracers and leak them.
+    _plan: Optional[FusedPlan] = dataclasses.field(
+        default=None, repr=False, compare=False)
+    _live_dev: Optional[jax.Array] = dataclasses.field(
+        default=None, repr=False, compare=False)
+    _live_sorted_dev: Optional[jax.Array] = dataclasses.field(
+        default=None, repr=False, compare=False)
+    _gid_map: Optional[tuple] = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    @property
+    def m(self) -> int:
+        return int(self.data.shape[0])
+
+    @property
+    def n_live(self) -> int:
+        return int(self.live.sum())
+
+    @property
+    def has_tombstones(self) -> bool:
+        return bool((~self.live).any())
+
+    def mark_dead(self, local_rows) -> None:
+        self.live[np.asarray(local_rows)] = False
+        self._live_dev = None
+        self._live_sorted_dev = None
+        self._gid_map = None
+
+    @staticmethod
+    def _cacheable(x) -> bool:
+        leaves = jax.tree_util.tree_leaves(x)
+        return not any(isinstance(v, jax.core.Tracer) for v in leaves)
+
+    def plan(self) -> FusedPlan:
+        if self._plan is None:
+            plan = make_fused_plan(self.data, self.forest)
+            if not self._cacheable(plan):
+                return plan
+            self._plan = plan
+        return self._plan
+
+    def live_dev(self) -> Optional[jax.Array]:
+        """(m,) bool device mask, or None when every row is live."""
+        if not self.has_tombstones:
+            return None
+        if self._live_dev is None:
+            self._live_dev = jnp.array(self.live)    # copy: host bitmap mutates
+        return self._live_dev
+
+    def live_sorted_dev(self) -> Optional[jax.Array]:
+        """(L, n_pad) bool mask in code-sorted order for the fused kernel."""
+        live = self.live_dev()
+        if live is None:
+            return None
+        if self._live_sorted_dev is None:
+            sorted_mask = live_in_sorted_order(self.forest, live)
+            if not self._cacheable(sorted_mask):
+                return sorted_mask
+            self._live_sorted_dev = sorted_mask
+        return self._live_sorted_dev
+
+    def gid_map_dev(self, sentinel: int) -> jax.Array:
+        """(m+1,) int32: local id -> global id; dead rows and the local
+        sentinel m map to ``sentinel`` (the combine step's invalid id)."""
+        if self._gid_map is None or self._gid_map[0] != sentinel:
+            gids = np.where(self.live, self.gids, sentinel).astype(np.int32)
+            self._gid_map = (sentinel, jnp.asarray(
+                np.concatenate([gids, [sentinel]]).astype(np.int32)))
+        return self._gid_map[1]
+
+    def warm_caches(self, sentinel: int) -> None:
+        """Materialize all device caches eagerly (call before jitting a
+        query closure over this segment, so the closure captures concrete
+        arrays instead of re-staging them as graph constants)."""
+        self.plan()
+        self.live_dev()
+        self.live_sorted_dev()
+        self.gid_map_dev(sentinel)
+
+
+def build_segment(data: jax.Array, gids: np.ndarray, A: jax.Array,
+                  params: LSHParams, bp_all: jax.Array, *,
+                  Nr: int, leaf_size: int, seg_id: int,
+                  live: np.ndarray | None = None,
+                  proj: jax.Array | None = None,
+                  project_impl: str = "auto",
+                  encode_impl: str = "auto") -> Segment:
+    """Seal rows into a Segment, encoding with the frozen breakpoints.
+
+    bp_all: (L*K, Nr+1) — the base build's breakpoints.  Outer edges are
+    widened per dimension to the segment's projected min/max (no code
+    changes; restores Fig. 5 box containment for out-of-range inserts).
+    ``proj`` skips re-projection when the caller already has it.
+    """
+    # jnp.array (not asarray): the CPU backend may zero-copy alias a numpy
+    # buffer, and seal() hands us the memtable's arrays which are zeroed
+    # right after — the segment must own its rows.
+    data = jnp.array(data, jnp.float32)
+    if proj is None:
+        proj = hashing.project(data, A, impl=project_impl)  # (m, L*K)
+    out_lo = proj < bp_all[:, 0][None, :]
+    out_hi = proj > bp_all[:, -1][None, :]
+    clip_fraction = float(jnp.mean((out_lo | out_hi).astype(jnp.float32)))
+    bp_seg = bp_all.at[:, 0].set(jnp.minimum(bp_all[:, 0],
+                                             jnp.min(proj, axis=0)))
+    bp_seg = bp_seg.at[:, -1].set(jnp.maximum(bp_all[:, -1],
+                                              jnp.max(proj, axis=0)))
+    forest = build_forest(proj, params.K, params.L, Nr=Nr,
+                          leaf_size=leaf_size, breakpoints=bp_seg,
+                          encode_impl=encode_impl)
+    m = data.shape[0]
+    live = np.ones(m, bool) if live is None else np.asarray(live, bool).copy()
+    return Segment(seg_id=seg_id, data=data,
+                   gids=np.asarray(gids, np.int32).copy(), live=live,
+                   forest=forest, clip_fraction=clip_fraction)

@@ -32,3 +32,98 @@ def test_service_batches_and_answers(rng):
     recall = np.mean([len(set(np.asarray(results[i][0])) & set(gt_i[i])) / 5
                       for i in range(20)])
     assert recall >= 0.6, recall
+
+
+def test_pad_lanes_done_from_round_zero(rng):
+    """Pad lanes of a partial batch carry r_eff = -1 from round 0: they run
+    zero radius rounds and admit zero candidates, for both engines."""
+    data = make_clustered(rng, 2048, 16)
+    p = derive_params(K=4, c=1.5, L=8, beta_override=0.1)
+    idx = DETLSH.build(jnp.asarray(data), jax.random.key(0), p, leaf_size=32)
+    queries = make_queries_near(data, rng, 3)
+    padded = np.concatenate([queries, np.zeros((13, 16), np.float32)])
+    for engine in ("fused", "vmap"):
+        res = idx.query(jnp.asarray(padded), k=5, engine=engine, n_active=3)
+        rounds = np.asarray(res.rounds)
+        assert np.all(rounds[3:] == 0), (engine, rounds)
+        assert np.all(rounds[:3] >= 1), (engine, rounds)
+        assert np.all(np.asarray(res.n_candidates)[3:] == 0), engine
+        # real lanes are unaffected by the padding
+        ref = idx.query(jnp.asarray(padded), k=5, engine=engine)
+        np.testing.assert_array_equal(np.asarray(res.ids)[:3],
+                                      np.asarray(ref.ids)[:3])
+
+
+def test_stats_do_not_count_pad_lanes(rng):
+    """The regression gate for the serving satellite: a 20-request stream
+    over max_batch=8 issues one 4-real/4-pad batch; pad lanes appear in
+    stats.pad_queries only — never in queries or the latency samples."""
+    data = make_clustered(rng, 2048, 16)
+    p = derive_params(K=4, c=1.5, L=8, beta_override=0.1)
+    idx = DETLSH.build(jnp.asarray(data), jax.random.key(0), p, leaf_size=32)
+    svc = LSHService(idx, k=5, max_batch=8, pad_to=8)
+    queries = make_queries_near(data, rng, 20)
+    svc.serve([(time.perf_counter(), q) for q in queries])
+    assert svc.stats.queries == 20
+    assert svc.stats.batches == 3
+    assert svc.stats.pad_queries == 4
+    assert len(svc.stats.latencies_ms) == 20
+    assert svc.stats.summary()["pad_queries"] == 4
+
+
+def test_service_upsert_delete_with_compaction(rng):
+    """The mutable service loop: upsert/delete hit the streaming index and
+    the compaction trigger fires once the segment fan-out grows."""
+    from repro.streaming import StreamingDETLSH
+
+    data = make_clustered(rng, 1024, 16)
+    p = derive_params(K=4, c=1.5, L=4, beta_override=0.1)
+    idx = StreamingDETLSH.build(jnp.asarray(data), jax.random.key(0), p,
+                                Nr=32, leaf_size=16, delta_capacity=32,
+                                max_segments=2)
+    svc = LSHService(idx, k=5, max_batch=8, pad_to=8)
+
+    probe = (data[0] + 40.0).astype(np.float32)
+    [gid] = svc.upsert(probe)
+    res = svc.serve([(time.perf_counter(), probe)])
+    assert int(res[0][0][0]) == int(gid)          # fresh insert served
+
+    svc.delete([gid])
+    res = svc.serve([(time.perf_counter(), probe)])
+    assert int(res[0][0][0]) != int(gid)          # tombstone honored
+
+    svc.upsert(make_clustered(rng, 128, 16))      # 4 seals -> compaction
+    assert svc.stats.compactions >= 1
+    assert len(idx.manifest.segments) <= 2
+    assert svc.stats.upserts == 129 and svc.stats.deletes == 1
+
+
+def test_service_works_without_n_active_support(rng):
+    """Indexes whose query() lacks the n_active kwarg (PDET shard_map,
+    baselines) must still serve — pad-lane masking is an optimization."""
+    class LegacyIndex:
+        def __init__(self, idx):
+            self._idx = idx
+
+        def query(self, queries, k=10):
+            return self._idx.query(queries, k=k)
+
+    data = make_clustered(rng, 512, 8)
+    p = derive_params(K=2, c=1.5, L=2, beta_override=0.1)
+    idx = DETLSH.build(jnp.asarray(data), jax.random.key(0), p, leaf_size=16)
+    svc = LSHService(LegacyIndex(idx), k=3, max_batch=4, pad_to=4)
+    assert not svc._supports_n_active
+    results = svc.serve([(time.perf_counter(), q)
+                         for q in make_queries_near(data, rng, 6)])
+    assert len(results) == 6
+    assert svc.stats.queries == 6 and svc.stats.pad_queries == 2
+
+
+def test_static_index_rejects_mutation(rng):
+    data = make_clustered(rng, 256, 8)
+    p = derive_params(K=2, c=1.5, L=2, beta_override=0.1)
+    idx = DETLSH.build(jnp.asarray(data), jax.random.key(0), p, leaf_size=16)
+    svc = LSHService(idx, k=3)
+    import pytest
+    with pytest.raises(TypeError):
+        svc.upsert(np.zeros((1, 8), np.float32))

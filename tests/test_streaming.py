@@ -1,0 +1,288 @@
+"""Streaming segmented index: inserts, tombstone deletes, compaction.
+
+The load-bearing contract (ISSUE acceptance): after any sequence of
+inserts/deletes/seals/compactions, querying at a *saturating* configuration
+(radius large enough to admit every leaf, M >= n_leaves) returns the exact
+top-k of the surviving point set — identical to a from-scratch static build
+on the surviving union — for both engines, and deleted ids are never
+returned even before compaction runs.  At saturation both indexes rerank
+every live point exactly, so equality is deterministic, not statistical;
+the randomized version lives in tests/test_streaming_properties.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import DETLSH, derive_params
+from repro.streaming import StreamingDETLSH, merge_segments
+from repro.streaming.compactor import interleave_keys64, \
+    stable_merge_positions
+from tests.conftest import brute_force_knn, make_clustered
+
+D = 16
+SAT = dict(r_min=1e6, M=10**6)         # saturating query: admit everything
+
+
+def make_index(rng, n=600, **kw):
+    data = make_clustered(rng, n, D)
+    p = derive_params(K=4, c=1.5, L=4, beta_override=0.1)
+    kw.setdefault("Nr", 32)
+    kw.setdefault("leaf_size", 16)
+    kw.setdefault("delta_capacity", 64)
+    kw.setdefault("max_segments", 3)
+    idx = StreamingDETLSH.build(jnp.asarray(data), jax.random.key(0), p, **kw)
+    return idx, data
+
+
+def survivors_bf(idx, queries, k):
+    """Brute-force exact top-k (gids, dists) over the surviving union."""
+    vecs, gids = idx._survivors()
+    d2 = ((queries[:, None, :] - vecs[None, :, :]) ** 2).sum(-1)
+    sel = np.argsort(d2, axis=1)[:, :k]
+    return gids[sel], np.sqrt(np.take_along_axis(d2, sel, axis=1))
+
+
+@pytest.fixture(scope="module")
+def idx_and_data():
+    rng = np.random.default_rng(11)
+    idx, data = make_index(rng)
+    new = make_clustered(rng, 150, D)
+    gids_new = idx.upsert(new)
+    idx.delete(np.arange(0, 40))           # base deletes (sealed segment)
+    idx.delete(gids_new[:10])              # delta + sealed-delta deletes
+    queries = make_clustered(rng, 8, D)
+    return idx, data, new, gids_new, queries
+
+
+@pytest.mark.parametrize("engine", ["fused", "vmap"])
+def test_saturating_equals_fresh_static_build(idx_and_data, engine):
+    """Segmented top-k == from-scratch static build on the surviving union
+    (both saturate => both are the exact k-NN of the survivors)."""
+    idx, data, new, gids_new, queries = idx_and_data
+    k = 10
+    res = idx.query(jnp.asarray(queries), k=k, engine=engine, **SAT)
+
+    vecs, gids = idx._survivors()
+    p = idx.params
+    static = DETLSH.build(jnp.asarray(vecs), jax.random.key(7), p,
+                          leaf_size=16, Nr=32)
+    sres = static.query(jnp.asarray(queries), k=k, engine=engine, **SAT)
+    static_gids = gids[np.asarray(sres.ids)]
+
+    gt_g, gt_d = survivors_bf(idx, queries, k)
+    np.testing.assert_allclose(np.asarray(res.dists), gt_d, rtol=1e-4,
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(sres.dists), gt_d, rtol=1e-4,
+                               atol=1e-4)
+    for b in range(len(queries)):          # same ids up to distance ties
+        assert set(np.asarray(res.ids)[b]) == set(static_gids[b]) \
+            == set(gt_g[b])
+
+
+@pytest.mark.parametrize("engine", ["fused", "vmap"])
+def test_deleted_never_returned_before_compaction(idx_and_data, engine):
+    idx, data, new, gids_new, queries = idx_and_data
+    assert any(s.has_tombstones for s in idx.manifest.segments)
+    res = idx.query(jnp.asarray(queries), k=20, engine=engine, **SAT)
+    dead = set(range(40)) | set(int(g) for g in gids_new[:10])
+    assert not (set(np.asarray(res.ids).ravel()) & dead)
+
+
+def test_upsert_visible_immediately():
+    """A point still in the delta buffer is served (exactly) right away."""
+    rng = np.random.default_rng(3)
+    idx, data = make_index(rng, n=300)
+    probe = (data[0] + 50.0).astype(np.float32)   # far from everything
+    [gid] = idx.upsert(probe)
+    assert idx.memtable.n_live == 1               # not sealed yet
+    res = idx.query(jnp.asarray(probe[None, :]), k=1, r_min=1.0)
+    assert int(np.asarray(res.ids)[0, 0]) == int(gid)
+    assert float(np.asarray(res.dists)[0, 0]) < 1e-3
+
+
+def test_upsert_overwrites_existing_gid():
+    rng = np.random.default_rng(4)
+    idx, data = make_index(rng, n=300)
+    moved = (data[5] + 100.0).astype(np.float32)
+    idx.upsert(moved, gids=[5])
+    assert idx.n_live == 300                      # moved, not added
+    res = idx.query(jnp.asarray(moved[None, :]), k=1, **SAT)
+    assert int(np.asarray(res.ids)[0, 0]) == 5
+    assert float(np.asarray(res.dists)[0, 0]) < 1e-3
+    # the old location must not resurface near its former coordinates
+    res_old = idx.query(jnp.asarray(data[5][None, :]), k=300, **SAT)
+    old_ids = np.asarray(res_old.ids)[0]
+    old_d = np.asarray(res_old.dists)[0]
+    assert old_d[old_ids == 5] > 90.0
+
+
+def test_seal_fixed_shape_and_locator():
+    rng = np.random.default_rng(5)
+    idx, data = make_index(rng, n=200, delta_capacity=32)
+    new = make_clustered(rng, 70, D)
+    gids = idx.upsert(new)                        # 2 seals + 6 in delta
+    sealed = idx.manifest.segments[1:]
+    assert [s.m for s in sealed] == [32, 32]
+    assert idx.memtable.count == 6
+    for g in gids:
+        where, pos = idx.locator[int(g)]
+        if where == "delta":
+            assert idx.memtable.gids[pos] == g
+        else:
+            seg = idx._segment(where)
+            assert seg.gids[pos] == g
+
+
+def test_compaction_merges_sorted_and_drops_tombstones():
+    rng = np.random.default_rng(6)
+    idx, data = make_index(rng, n=200, delta_capacity=32, max_segments=1)
+    gids = idx.upsert(make_clustered(rng, 64, D))
+    idx.delete(gids[:16])
+    idx.delete(np.arange(10))
+    n_live = idx.n_live
+    assert idx.compact()
+    [seg] = idx.manifest.segments
+    assert seg.m == n_live - idx.memtable.n_live
+    assert not seg.has_tombstones
+    assert idx.n_live == n_live
+    # merged per-tree arrays really are key-sorted (the merge invariant)
+    for l in range(seg.forest.L):
+        valid = np.asarray(seg.forest.valid[l])
+        codes = np.asarray(seg.forest.codes_sorted[l])[valid]
+        keys = interleave_keys64(codes, seg.forest.K)
+        assert np.all(np.diff(keys.astype(np.int64)) >= 0)
+    # dropped gids are really gone
+    assert not (set(seg.gids.tolist()) & set(int(g) for g in gids[:16]))
+
+
+def test_stable_merge_positions_is_a_permutation():
+    rng = np.random.default_rng(7)
+    for _ in range(20):
+        a = np.sort(rng.integers(0, 40, rng.integers(0, 30)).astype(np.uint64))
+        b = np.sort(rng.integers(0, 40, rng.integers(0, 30)).astype(np.uint64))
+        pa, pb = stable_merge_positions(a, b)
+        merged = np.empty(len(a) + len(b), np.uint64)
+        merged[pa] = a
+        merged[pb] = b
+        ref = np.sort(np.concatenate([a, b]), kind="stable")
+        np.testing.assert_array_equal(merged, ref)
+
+
+def test_merge_segments_equals_survivor_union():
+    """Compacted forest == a frozen-breakpoint rebuild of the survivors:
+    same leaf summaries and the same (id, code) multiset per tree."""
+    rng = np.random.default_rng(8)
+    idx, _ = make_index(rng, n=120, delta_capacity=32, leaf_size=8)
+    gids = idx.upsert(make_clustered(rng, 64, D))
+    idx.delete(gids[5:25])
+    segs = idx.manifest.segments
+    merged = merge_segments(segs, leaf_size=8, seg_id=99)
+    from repro.streaming.segment import build_segment
+    vecs, sg = idx._survivors()
+    mt_live = idx.memtable.n_live
+    assert merged.m == idx.n_live - mt_live
+    rebuilt = build_segment(jnp.asarray(vecs[:merged.m]), sg[:merged.m],
+                            idx.A, idx.params, idx.bp_all, Nr=idx.Nr,
+                            leaf_size=8, seg_id=100)
+    for l in range(merged.forest.L):
+        va, vb = (np.asarray(merged.forest.valid[l]),
+                  np.asarray(rebuilt.forest.valid[l]))
+        ka = interleave_keys64(
+            np.asarray(merged.forest.codes_sorted[l])[va], merged.forest.K)
+        kb = interleave_keys64(
+            np.asarray(rebuilt.forest.codes_sorted[l])[vb], merged.forest.K)
+        np.testing.assert_array_equal(ka, kb)      # same sorted key sequence
+        ga = merged.gids[np.asarray(merged.forest.point_ids[l])[va]]
+        gb = rebuilt.gids[np.asarray(rebuilt.forest.point_ids[l])[vb]]
+        np.testing.assert_array_equal(np.sort(ga), np.sort(gb))
+
+
+def test_clip_fraction_and_requantile():
+    rng = np.random.default_rng(9)
+    idx, data = make_index(rng, n=300, delta_capacity=32)
+    assert idx.clip_fraction() == 0.0             # base covers itself
+    far = (make_clustered(rng, 64, D) * 20.0).astype(np.float32)
+    idx.upsert(far)                               # way outside the quantiles
+    assert idx.clip_fraction() > 0.0
+    n_live = idx.n_live
+    idx.requantile(jax.random.key(1))
+    assert idx.clip_fraction() == 0.0
+    assert idx.n_live == n_live
+    assert len(idx.manifest.segments) == 1
+    res = idx.query(jnp.asarray(far[:2]), k=1, **SAT)
+    assert float(np.asarray(res.dists)[0, 0]) < 1e-3
+
+
+def test_gid_exhaustion_raises_clean_and_capacity_grows():
+    """Exhausting the gid space must raise *before* mutating any state, and
+    grow_id_capacity() must actually unblock further upserts."""
+    rng = np.random.default_rng(12)
+    idx, data = make_index(rng, n=64, delta_capacity=8, id_capacity=80)
+    next_before = idx.next_gid
+    n_live = idx.n_live
+    with pytest.raises(ValueError, match="gid space exhausted"):
+        idx.upsert(make_clustered(rng, 20, D))
+    assert idx.next_gid == next_before and idx.n_live == n_live
+    idx.grow_id_capacity(256)
+    gids = idx.upsert(make_clustered(rng, 20, D))
+    res = idx.query(jnp.asarray(data[:2]), k=idx.n_live, **SAT)
+    assert set(int(g) for g in gids) <= set(np.asarray(res.ids).ravel())
+    with pytest.raises(ValueError, match="shrink"):
+        idx.grow_id_capacity(10)
+
+
+def test_upsert_rejects_negative_gids_and_dedups_within_call():
+    rng = np.random.default_rng(13)
+    idx, data = make_index(rng, n=64, delta_capacity=8)
+    with pytest.raises(ValueError, match="non-negative"):
+        idx.upsert(np.zeros((1, D), np.float32), gids=[-1])
+    assert idx.n_live == 64                       # nothing mutated
+    # duplicate gid within one call: last write wins, no ghost duplicate
+    v1 = np.full((1, D), 1.0, np.float32)
+    v2 = np.full((1, D), 2.0, np.float32)
+    idx.upsert(np.concatenate([v1, v2]), gids=[999, 999])
+    assert idx.n_live == 65
+    res = idx.query(jnp.asarray(v2), k=2, **SAT)
+    assert int(np.asarray(res.ids)[0, 0]) == 999
+    assert float(np.asarray(res.dists)[0, 0]) < 1e-4
+    assert int(np.asarray(res.ids)[0, 1]) != 999  # old row really gone
+
+
+def test_pad_lanes_admit_nothing_from_delta():
+    """The pad-lane contract holds for the streaming index's delta tier
+    too: lanes >= n_active see zero candidates from any source."""
+    rng = np.random.default_rng(14)
+    idx, data = make_index(rng, n=128, delta_capacity=32)
+    idx.upsert(make_clustered(rng, 5, D))         # non-empty memtable
+    qs = np.concatenate([data[:2], np.zeros((3, D), np.float32)])
+    for engine in ("fused", "vmap"):
+        res = idx.query(jnp.asarray(qs), k=4, engine=engine, n_active=2,
+                        r_min=1.0)
+        assert np.all(np.asarray(res.n_candidates)[2:] == 0), engine
+        assert np.all(np.asarray(res.ids)[2:] == idx.id_capacity), engine
+
+
+def test_recall_parity_with_static_at_default_radius():
+    """Sanity at a realistic (non-saturating) radius: the segmented index's
+    recall stays close to a static build over the same live set."""
+    rng = np.random.default_rng(10)
+    idx, data = make_index(rng, n=500, delta_capacity=64, max_segments=1)
+    idx.upsert(make_clustered(rng, 128, D))
+    idx.compact()
+    queries = make_clustered(rng, 8, D)
+    vecs, gids = idx._survivors()
+    k = 10
+    gt_g, _ = survivors_bf(idx, queries, k)
+    static = DETLSH.build(jnp.asarray(vecs), jax.random.key(2), idx.params,
+                          leaf_size=16, Nr=32)
+
+    ids_s = np.asarray(idx.query(jnp.asarray(queries), k=k).ids)
+    ids_f = gids[np.asarray(static.query(jnp.asarray(queries), k=k).ids)]
+    rec = {"stream": np.mean([len(set(ids_s[i]) & set(gt_g[i])) / k
+                              for i in range(len(queries))]),
+           "static": np.mean([len(set(ids_f[i]) & set(gt_g[i])) / k
+                              for i in range(len(queries))])}
+    assert rec["stream"] >= rec["static"] - 0.15, rec
+    assert rec["stream"] >= 0.5, rec

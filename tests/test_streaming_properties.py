@@ -1,0 +1,85 @@
+"""Property test: streaming mutations never change what a query can see.
+
+For a generated sequence of {insert-batch, delete, flush, compact} ops, a
+saturating query (every leaf admitted, exact rerank) over the segmented
+index must return exactly the brute-force top-k of the surviving union —
+which is precisely what a from-scratch ``build_forest`` on the survivors
+returns at the same configuration (every point reranked exactly), so this
+is the "identical to a fresh static build" equivalence, made deterministic.
+Checked for both engines; deleted ids must never surface, including before
+any compaction runs.
+
+Uses hypothesis when installed; otherwise the deterministic shim in
+tests/_shims supplies the same API.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import derive_params
+from repro.streaming import StreamingDETLSH
+
+D = 8
+SAT = dict(r_min=1e6, M=10**6)
+PARAMS = derive_params(K=2, c=1.5, L=2, beta_override=0.1)
+# One fixed geometry => one compile per (engine, shape) across all examples.
+KW = dict(Nr=8, leaf_size=8, delta_capacity=16, max_segments=2)
+
+
+def _apply_ops(idx, rng, ops):
+    deleted = set()
+    for kind, arg in ops:
+        if kind == "insert":
+            vecs = rng.standard_normal((arg, D)).astype(np.float32)
+            idx.upsert(vecs)
+        elif kind == "delete":
+            alive = sorted(idx.locator.keys())
+            if alive:
+                kill = rng.choice(alive, size=min(arg, len(alive)),
+                                  replace=False)
+                idx.delete(kill)
+                deleted.update(int(g) for g in kill)
+        elif kind == "flush":
+            idx.flush()
+        elif kind == "compact":
+            idx.compact()
+        idx.maybe_compact()
+    return deleted
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(min_value=0, max_value=2 ** 31 - 1),
+       st.lists(st.tuples(st.sampled_from(["insert", "delete", "flush",
+                                           "compact"]),
+                          st.integers(min_value=1, max_value=24)),
+                min_size=2, max_size=6))
+def test_mutation_sequence_equals_fresh_build(seed, ops):
+    rng = np.random.default_rng(seed)
+    data = rng.standard_normal((48, D)).astype(np.float32)
+    idx = StreamingDETLSH.build(jnp.asarray(data), jax.random.key(0),
+                                PARAMS, **KW)
+    deleted = _apply_ops(idx, rng, ops)
+
+    queries = rng.standard_normal((4, D)).astype(np.float32)
+    vecs, gids = idx._survivors()
+    assert len(gids) == idx.n_live == 48 + sum(
+        a for k, a in ops if k == "insert") - len(deleted)
+    if len(gids) == 0:
+        return
+    k = min(5, len(gids))
+    d2 = ((queries[:, None, :] - vecs[None, :, :]) ** 2).sum(-1)
+    sel = np.argsort(d2, axis=1)[:, :k]
+    gt_gids = gids[sel]
+    gt_d = np.sqrt(np.take_along_axis(d2, sel, axis=1))
+
+    for engine in ("fused", "vmap"):
+        res = idx.query(jnp.asarray(queries), k=k, engine=engine, **SAT)
+        ids = np.asarray(res.ids)[:, :k]
+        np.testing.assert_allclose(np.asarray(res.dists)[:, :k], gt_d,
+                                   rtol=1e-4, atol=1e-4, err_msg=engine)
+        for b in range(len(queries)):      # same ids up to distance ties
+            assert set(ids[b]) == set(gt_gids[b]), (engine, b)
+        assert not (set(ids.ravel()) & deleted), engine
