@@ -49,8 +49,10 @@ def main(argv=None) -> None:
     ap.add_argument("--fast", action="store_true",
                     help="skip multi-process scaling benchmarks")
     ap.add_argument("--smoke", action="store_true",
-                    help="CI smoke: only the query-throughput bench on a "
-                         "small index; writes BENCH_query.json")
+                    help="CI smoke: query/build throughput + snapshot "
+                         "round-trip on small indexes; writes "
+                         "BENCH_{query,build,snapshot}.json and the "
+                         "benchmarks/out/smoke_snapshot artifact")
     ap.add_argument("--only", default="")
     ap.add_argument("--out-dir", default="benchmarks/out")
     args = ap.parse_args(argv)
@@ -58,7 +60,9 @@ def main(argv=None) -> None:
     if args.smoke:
         from benchmarks import build_throughput as B
         from benchmarks import query_throughput as Q
-        figures = [Q.query_throughput_smoke, B.build_throughput_smoke]
+        from benchmarks import snapshot_smoke as S
+        figures = [Q.query_throughput_smoke, B.build_throughput_smoke,
+                   S.snapshot_smoke]
     else:
         figures = _figures(args.fast)
 

@@ -1,0 +1,106 @@
+"""Snapshot persistence smoke: save -> load -> query equality (CI artifact).
+
+Builds a small static and a small streaming index (the streaming one with
+un-sealed delta rows and pre-compaction tombstones), snapshots both under
+``benchmarks/out/smoke_snapshot/``, reloads them, and verifies the reloaded
+indexes answer bit-identically on both engines.  Writes BENCH_snapshot.json
+(sizes, per-kind ok flags) at the repo root; CI uploads the JSON and the
+snapshot directories as the restart-without-rebuild artifact.
+
+  PYTHONPATH=src python -m benchmarks.run --smoke
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Table, make_dataset, make_queries
+
+SMOKE = dict(n=2048, k=10, batch=32)
+
+
+def _dir_bytes(path: str) -> int:
+    return sum(os.path.getsize(os.path.join(dp, f))
+               for dp, _, fs in os.walk(path) for f in fs)
+
+
+def _roundtrip(index, queries, k: int, path: str) -> dict:
+    """Save + load + assert per-engine bit-identical answers."""
+    import repro
+    from repro.api import SearchRequest
+
+    t0 = time.perf_counter()
+    index.save(path)
+    t_save = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    loaded = repro.api.load(path)
+    t_load = time.perf_counter() - t0
+
+    identical = True
+    for engine in ("fused", "vmap"):
+        req = SearchRequest(k=k, engine=engine)
+        a = index.search(queries, req)
+        b = loaded.search(queries, req)
+        identical &= bool(np.array_equal(np.asarray(a.ids),
+                                         np.asarray(b.ids)))
+        identical &= bool(np.array_equal(np.asarray(a.dists),
+                                         np.asarray(b.dists)))
+    return dict(path=path, bytes=_dir_bytes(path), save_s=t_save,
+                load_s=t_load, identical=identical)
+
+
+def run_snapshot_smoke(cfg=None, json_path: str = "BENCH_snapshot.json",
+                       out_dir: str = "benchmarks/out") -> Table:
+    import repro
+    from repro.api import IndexSpec
+
+    cfg = dict(SMOKE, **(cfg or {}))
+    data = make_dataset("deep-like", cfg["n"], seed=0)
+    queries = jnp.asarray(make_queries(data, cfg["batch"], seed=1))
+    root = os.path.join(out_dir, "smoke_snapshot")
+
+    static = repro.api.build(
+        jnp.asarray(data), jax.random.key(0),
+        IndexSpec(kind="static", K=4, L=4, c=1.5, beta_override=0.1,
+                  Nr=64, leaf_size=32))
+    static.fused_plan()              # snapshot the fused-plan constants too
+    rec_static = _roundtrip(static, queries, cfg["k"],
+                            os.path.join(root, "static"))
+
+    stream = repro.api.build(
+        jnp.asarray(data[: cfg["n"] // 2]), jax.random.key(0),
+        IndexSpec(kind="streaming", K=4, L=4, c=1.5, beta_override=0.1,
+                  Nr=64, leaf_size=32, delta_capacity=256, max_segments=4))
+    gids = stream.upsert(data[cfg["n"] // 2: cfg["n"] // 2 + 600])
+    stream.delete(gids[::5])         # pre-compaction tombstones + live delta
+    stream.delete(np.arange(0, 64))
+    rec_stream = _roundtrip(stream, queries, cfg["k"],
+                            os.path.join(root, "streaming"))
+
+    table = Table("snapshot_smoke",
+                  ["kind", "bytes", "save_s", "load_s", "identical"])
+    for kind, rec in (("static", rec_static), ("streaming", rec_stream)):
+        table.add(kind, rec["bytes"], rec["save_s"], rec["load_s"],
+                  rec["identical"])
+
+    payload = dict(bench="snapshot_smoke", workload=cfg,
+                   backend=jax.default_backend(),
+                   static=rec_static, streaming=rec_stream)
+    with open(json_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    if not (rec_static["identical"] and rec_stream["identical"]):
+        raise AssertionError(
+            f"snapshot round-trip not bit-identical: {payload}")
+    table.emit(out_dir)
+    return table
+
+
+def snapshot_smoke() -> Table:
+    """run.py --smoke entry point."""
+    return run_snapshot_smoke()

@@ -1,10 +1,12 @@
-"""Quickstart: build a DET-LSH index, answer c^2-k-ANN queries, check the
-theoretical guarantee.
+"""Quickstart against the unified ``repro.api`` surface: declare an
+IndexSpec, build, answer typed c^2-k-ANN searches, check the theoretical
+guarantee, then snapshot and reload the index without a rebuild.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 
 import sys
+import tempfile
 
 import jax
 import jax.numpy as jnp
@@ -12,7 +14,8 @@ import numpy as np
 
 sys.path.insert(0, "src")
 
-from repro.core import DETLSH, derive_params
+import repro
+from repro.api import IndexSpec, SearchRequest
 
 
 def main():
@@ -26,16 +29,23 @@ def main():
     queries = data[rng.choice(n, nq, replace=False)] \
         + 0.05 * rng.standard_normal((nq, d)).astype(np.float32)
 
-    # paper parameters: K=4, L=16 (PDET recommendation, Sec. VI-C3), c=1.5
-    params = derive_params(K=4, c=1.5, L=16, beta_override=0.1)
-    print(f"params: eps={params.epsilon:.3f} beta={params.beta:.3f} "
+    # one declarative build config — paper parameters: K=4, L=16
+    # (PDET recommendation, Sec. VI-C3), c=1.5
+    spec = IndexSpec(kind="static", K=4, L=16, c=1.5, beta_override=0.1)
+    params = spec.derive_params()
+    print(f"spec: {spec.kind} K={spec.K} L={spec.L} c={spec.c} -> "
+          f"eps={params.epsilon:.3f} beta={params.beta:.3f} "
           f"success_prob>={params.success_probability:.3f}")
 
-    index = DETLSH.build(jnp.asarray(data), jax.random.key(0), params)
+    index = repro.api.build(jnp.asarray(data), jax.random.key(0), spec)
     print(f"index: {index.index_size_bytes() / 1e6:.1f} MB, "
-          f"L={params.L} trees, {index.forest.n_leaves} leaves each")
+          f"L={params.L} trees, {index.forest.n_leaves} leaves each, "
+          f"n_points={index.n_points}")
 
-    res = index.query(jnp.asarray(queries), k=k, M=12)
+    # typed per-request overrides; r_min=None uses the per-(index, k) cache
+    res = index.search(jnp.asarray(queries), SearchRequest(k=k, M=12))
+    print(f"search: engine={res.stats.engine} "
+          f"r_min={res.stats.r_min:.3f} (cached={res.stats.r_min_cached})")
 
     # ground truth + quality
     d2 = ((queries[:, None, :] - data[None, :, :]) ** 2).sum(-1)
@@ -49,6 +59,16 @@ def main():
     print(f"c^2 guarantee held on {ok.mean() * 100:.1f}% of queries "
           f"(bound: >={params.success_probability * 100:.1f}%)")
     assert ok.mean() >= params.success_probability
+
+    # snapshot persistence: a service restart skips the rebuild entirely
+    with tempfile.TemporaryDirectory() as tmp:
+        index.save(tmp)
+        reloaded = repro.api.load(tmp)
+        res2 = reloaded.search(jnp.asarray(queries), SearchRequest(k=k, M=12))
+        assert np.array_equal(np.asarray(res.ids), np.asarray(res2.ids))
+        assert np.array_equal(np.asarray(res.dists), np.asarray(res2.dists))
+        print("snapshot: save -> load -> search is bit-identical "
+              "(no rebuild)")
 
 
 if __name__ == "__main__":

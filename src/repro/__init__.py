@@ -1,11 +1,47 @@
 """repro: PDET-LSH on TPU pods — JAX + Pallas implementation.
 
 Pillars:
+  * ``repro.api``       — the unified index surface (AnnIndex protocol,
+    IndexSpec, SearchRequest/SearchResult, engine registry, snapshots).
   * ``repro.core``      — the paper's contribution (DET-LSH / PDET-LSH).
+  * ``repro.streaming`` — the mutable LSM-style segmented index.
   * ``repro.kernels``   — Pallas TPU kernels for the compute hot spots.
   * ``repro.models``    — the assigned LM architecture zoo.
   * ``repro.train`` / ``repro.serving`` / ``repro.data`` — substrate.
   * ``repro.launch``    — mesh construction, multi-pod dry-run, drivers.
+
+Top-level re-exports resolve lazily (PEP 562), so ``import repro`` stays
+cheap and ``repro.api.load(...)``, ``repro.DETLSH``,
+``repro.StreamingDETLSH``, and ``repro.derive_params`` all work as
+documented without eagerly importing the kernel stack.
 """
 
+from __future__ import annotations
+
+import importlib
+
 __version__ = "1.0.0"
+
+__all__ = ["__version__", "api", "DETLSH", "StreamingDETLSH",
+           "derive_params"]
+
+_LAZY = {
+    "api": ("repro.api", None),
+    "DETLSH": ("repro.core", "DETLSH"),
+    "StreamingDETLSH": ("repro.streaming", "StreamingDETLSH"),
+    "derive_params": ("repro.core.theory", "derive_params"),
+}
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        module, attr = _LAZY[name]
+        mod = importlib.import_module(module)
+        value = mod if attr is None else getattr(mod, attr)
+        globals()[name] = value       # cache: resolve once per process
+        return value
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(__all__) | set(globals()))

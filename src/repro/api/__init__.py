@@ -1,0 +1,93 @@
+"""repro.api — the unified index surface (docs/DESIGN.md §6).
+
+One protocol (``AnnIndex`` / ``MutableAnnIndex``), one build config
+(``IndexSpec``), one typed request/result pair (``SearchRequest`` /
+``SearchResult``), one engine registry, and snapshot persistence::
+
+    import repro
+
+    spec = repro.api.IndexSpec(kind="static", K=4, L=16, c=1.5)
+    index = repro.api.build(data, jax.random.key(0), spec)
+    res = index.search(queries, repro.api.SearchRequest(k=10))
+    index.save("snapshots/my-index")
+    ...
+    index = repro.api.load("snapshots/my-index")   # no rebuild
+
+Deprecation policy: the pre-protocol kwarg surfaces
+(``DETLSH.query`` / ``StreamingDETLSH.query``) remain as thin shims that
+emit ``DeprecationWarning`` and delegate to ``search``; they will be
+removed once nothing in-tree calls them.
+
+Submodules import lazily (PEP 562) so ``repro.api`` itself stays cheap and
+free of import cycles with ``repro.core``.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+__all__ = [
+    "AnnIndex",
+    "MutableAnnIndex",
+    "LegacyIndexAdapter",
+    "as_ann_index",
+    "IndexSpec",
+    "SearchRequest",
+    "SearchResult",
+    "SearchStats",
+    "EngineSpec",
+    "register_engine",
+    "resolve_engine",
+    "available_engines",
+    "get_engine",
+    "build",
+    "load",
+    "save",
+    "SnapshotFormatError",
+    "FORMAT_VERSION",
+]
+
+_EXPORTS = {
+    "AnnIndex": "repro.api.protocol",
+    "MutableAnnIndex": "repro.api.protocol",
+    "LegacyIndexAdapter": "repro.api.protocol",
+    "as_ann_index": "repro.api.protocol",
+    "IndexSpec": "repro.api.spec",
+    "SearchRequest": "repro.api.request",
+    "SearchResult": "repro.api.request",
+    "SearchStats": "repro.api.request",
+    "EngineSpec": "repro.api.registry",
+    "register_engine": "repro.api.registry",
+    "resolve_engine": "repro.api.registry",
+    "available_engines": "repro.api.registry",
+    "get_engine": "repro.api.registry",
+    "load": "repro.api.persist",
+    "save": "repro.api.persist",
+    "SnapshotFormatError": "repro.api.persist",
+    "FORMAT_VERSION": "repro.api.persist",
+}
+
+
+def build(data, key, spec=None):
+    """Build an index from an ``IndexSpec`` (the one declarative config).
+
+    Dispatches on ``spec.kind``: 'static' -> ``core.DETLSH.from_spec``,
+    'streaming' -> ``streaming.StreamingDETLSH.from_spec``.
+    """
+    from repro.api.spec import IndexSpec
+    spec = spec or IndexSpec()
+    if spec.kind == "static":
+        from repro.core import DETLSH
+        return DETLSH.from_spec(data, key, spec)
+    from repro.streaming import StreamingDETLSH
+    return StreamingDETLSH.from_spec(data, key, spec)
+
+
+def __getattr__(name):
+    if name in _EXPORTS:
+        return getattr(importlib.import_module(_EXPORTS[name]), name)
+    raise AttributeError(f"module 'repro.api' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(__all__) | set(globals()))

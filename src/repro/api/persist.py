@@ -1,0 +1,313 @@
+"""Snapshot persistence: ``index.save(path)`` / ``repro.api.load(path)``.
+
+A snapshot is a versioned *directory* (docs/DESIGN.md §6):
+
+    <path>/
+      MANIFEST.json            format + version, kind, LSHParams, IndexSpec,
+                               static shapes, per-segment catalog, cached
+                               r_min estimates
+      arrays.npz               (static) A, data, DE-Forest arrays
+      plan.npz                 (static, optional) fused-plan constants
+      common.npz               (streaming) A, frozen breakpoints bp_all
+      segment_<id>.npz         (streaming) rows, gids, tombstones, forest
+                               [+ fused-plan constants when materialized]
+      memtable.npz             (streaming) delta rows / gids / live bitmap
+
+The contract is *loaded-index ≡ original*: a reloaded index answers every
+search with bit-identical ids and distances on both engines (enforced by
+``tests/test_persistence.py``), including pre-compaction tombstones and
+un-sealed delta rows for the streaming index.  Everything derivable is
+rebuilt deterministically on load (locators, gid maps); everything that is
+state (tombstones, memtable cursor, next_gid, cached radius estimates) is
+persisted.
+
+``load`` refuses snapshots whose ``format_version`` it does not understand
+(``SnapshotFormatError``), so a format change can never be silently
+misread as garbage arrays.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any, Optional
+
+import numpy as np
+
+FORMAT_NAME = "repro-ann-snapshot"
+FORMAT_VERSION = 1
+
+
+class SnapshotFormatError(ValueError):
+    """The directory is not a snapshot this build can read."""
+
+
+# ---------------------------------------------------------------------------
+# Helpers
+# ---------------------------------------------------------------------------
+
+_FOREST_KEYS = ("point_ids", "proj_sorted", "codes_sorted", "valid",
+                "leaf_lo", "leaf_hi", "leaf_valid", "breakpoints")
+
+
+def _forest_arrays(forest, prefix: str = "forest.") -> dict:
+    return {prefix + k: np.asarray(getattr(forest, k))
+            for k in _FOREST_KEYS}
+
+
+def _forest_from(arrays, n: int, leaf_size: int, prefix: str = "forest."):
+    import jax.numpy as jnp
+    from repro.core.detree import DEForest
+    return DEForest(n=int(n), leaf_size=int(leaf_size),
+                    **{k: jnp.asarray(arrays[prefix + k])
+                       for k in _FOREST_KEYS})
+
+
+def _plan_arrays(plan, prefix: str = "plan.") -> dict:
+    return {prefix + "points_sorted": np.asarray(plan.points_sorted),
+            prefix + "inv_perm": np.asarray(plan.inv_perm)}
+
+
+def _plan_from(arrays, prefix: str = "plan."):
+    import jax.numpy as jnp
+    from repro.core.query import FusedPlan
+    return FusedPlan(points_sorted=jnp.asarray(arrays[prefix +
+                                                      "points_sorted"]),
+                     inv_perm=jnp.asarray(arrays[prefix + "inv_perm"]))
+
+
+def _spec_dict(index) -> Optional[dict]:
+    spec = getattr(index, "spec", None)
+    return spec.to_dict() if spec is not None else None
+
+
+def _rmin_dump(cache: dict) -> dict:
+    return {str(k): float(v) for k, v in cache.items()}
+
+
+def _rmin_load(d: dict) -> dict:
+    return {int(k): float(v) for k, v in (d or {}).items()}
+
+
+def _write_manifest(path: str, manifest: dict) -> None:
+    with open(os.path.join(path, "MANIFEST.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+
+
+def _drop_stale_npz(path: str, keep: set) -> None:
+    """Re-saving into an existing snapshot directory must not leave .npz
+    files a previous save wrote but the new manifest no longer references
+    (e.g. pre-compaction segments, a dropped plan.npz) — the directory
+    would grow without bound and mislead readers."""
+    for fname in os.listdir(path):
+        if fname.endswith(".npz") and fname not in keep:
+            os.remove(os.path.join(path, fname))
+
+
+def _read_manifest(path: str) -> dict:
+    mpath = os.path.join(path, "MANIFEST.json")
+    if not os.path.isfile(mpath):
+        raise SnapshotFormatError(f"{path!r} is not a snapshot directory "
+                                  f"(no MANIFEST.json)")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    if manifest.get("format") != FORMAT_NAME:
+        raise SnapshotFormatError(
+            f"{path!r}: manifest format {manifest.get('format')!r} is not "
+            f"{FORMAT_NAME!r}")
+    ver = manifest.get("format_version")
+    if ver != FORMAT_VERSION:
+        raise SnapshotFormatError(
+            f"{path!r}: snapshot format_version {ver!r} is not supported "
+            f"by this build (wants {FORMAT_VERSION}); re-save the index "
+            f"with a matching version of repro")
+    return manifest
+
+
+def _params_from(d: dict):
+    from repro.core.theory import LSHParams
+    return LSHParams(**d)
+
+
+def _spec_from(d: Optional[dict]):
+    from repro.api.spec import IndexSpec
+    return IndexSpec.from_dict(d) if d is not None else None
+
+
+# ---------------------------------------------------------------------------
+# Static index
+# ---------------------------------------------------------------------------
+
+def save_static(index, path: str) -> None:
+    """Snapshot a ``core.DETLSH``: A, data, forest, fused-plan constants."""
+    os.makedirs(path, exist_ok=True)
+    arrays = {"A": np.asarray(index.A), "data": np.asarray(index.data)}
+    arrays.update(_forest_arrays(index.forest))
+    np.savez(os.path.join(path, "arrays.npz"), **arrays)
+    has_plan = index._plan is not None
+    if has_plan:
+        np.savez(os.path.join(path, "plan.npz"),
+                 **_plan_arrays(index._plan))
+    _drop_stale_npz(path, {"arrays.npz"} | ({"plan.npz"} if has_plan
+                                            else set()))
+    _write_manifest(path, {
+        "format": FORMAT_NAME, "format_version": FORMAT_VERSION,
+        "kind": "static",
+        "params": dataclasses.asdict(index.params),
+        "forest": {"n": index.forest.n,
+                   "leaf_size": index.forest.leaf_size},
+        "spec": _spec_dict(index),
+        "has_plan": has_plan,
+        "r_min_cache": _rmin_dump(index._r_min_cache),
+    })
+
+
+def _load_static(path: str, manifest: dict):
+    from repro.core import DETLSH
+    arrays = np.load(os.path.join(path, "arrays.npz"))
+    import jax.numpy as jnp
+    forest = _forest_from(arrays, **manifest["forest"])
+    index = DETLSH(params=_params_from(manifest["params"]),
+                   A=jnp.asarray(arrays["A"]),
+                   forest=forest,
+                   data=jnp.asarray(arrays["data"]),
+                   spec=_spec_from(manifest.get("spec")))
+    if manifest.get("has_plan"):
+        index._plan = _plan_from(np.load(os.path.join(path, "plan.npz")))
+    index._r_min_cache.update(_rmin_load(manifest.get("r_min_cache")))
+    return index
+
+
+# ---------------------------------------------------------------------------
+# Streaming index
+# ---------------------------------------------------------------------------
+
+def save_streaming(index, path: str) -> None:
+    """Snapshot a ``streaming.StreamingDETLSH``: segments (with tombstone
+    bitmaps), memtable survivors, frozen breakpoints, and the manifest —
+    a restart resumes serving (and mutating) exactly where it left off."""
+    os.makedirs(path, exist_ok=True)
+    np.savez(os.path.join(path, "common.npz"),
+             A=np.asarray(index.A), bp_all=np.asarray(index.bp_all))
+    seg_entries = []
+    for seg in index.manifest.segments:
+        fname = f"segment_{seg.seg_id:06d}.npz"
+        arrays = {"data": np.asarray(seg.data),
+                  "gids": np.asarray(seg.gids),
+                  "live": np.asarray(seg.live)}
+        arrays.update(_forest_arrays(seg.forest))
+        has_plan = seg._plan is not None
+        if has_plan:
+            arrays.update(_plan_arrays(seg._plan))
+        np.savez(os.path.join(path, fname), **arrays)
+        seg_entries.append({
+            "seg_id": seg.seg_id, "file": fname,
+            "clip_fraction": seg.clip_fraction,
+            "forest": {"n": seg.forest.n,
+                       "leaf_size": seg.forest.leaf_size},
+            "has_plan": has_plan,
+        })
+    mt = index.memtable
+    np.savez(os.path.join(path, "memtable.npz"),
+             vecs=mt.vecs, gids=mt.gids, live=mt.live)
+    _drop_stale_npz(path, {"common.npz", "memtable.npz"}
+                    | {e["file"] for e in seg_entries})
+    # Only persist the r_min cache when it is current for this structure —
+    # a stale (pre-mutation) cache must not be resurrected as fresh.
+    rmin_tag, rmin_entries = index._rmin_cache
+    if rmin_tag != (index.manifest.version, mt.version):
+        rmin_entries = {}
+    _write_manifest(path, {
+        "format": FORMAT_NAME, "format_version": FORMAT_VERSION,
+        "kind": "streaming",
+        "params": dataclasses.asdict(index.params),
+        "Nr": index.Nr, "leaf_size": index.leaf_size,
+        "max_segments": index.max_segments,
+        "id_capacity": index.id_capacity,
+        "next_gid": index.next_gid,
+        "next_seg_id": index._next_seg_id,
+        "segments": seg_entries,
+        "memtable": {"capacity": mt.capacity, "d": mt.d,
+                     "count": mt.count},
+        "spec": _spec_dict(index),
+        "r_min_cache": _rmin_dump(rmin_entries),
+    })
+
+
+def _load_streaming(path: str, manifest: dict):
+    import jax.numpy as jnp
+    from repro.streaming.index import StreamingDETLSH, _DELTA
+    from repro.streaming.segment import Segment
+
+    common = np.load(os.path.join(path, "common.npz"))
+    mt_meta = manifest["memtable"]
+    index = StreamingDETLSH(
+        params=_params_from(manifest["params"]),
+        A=jnp.asarray(common["A"]),
+        bp_all=jnp.asarray(common["bp_all"]),
+        base=None,
+        Nr=int(manifest["Nr"]), leaf_size=int(manifest["leaf_size"]),
+        delta_capacity=int(mt_meta["capacity"]),
+        max_segments=int(manifest["max_segments"]),
+        id_capacity=int(manifest["id_capacity"]))
+    index.spec = _spec_from(manifest.get("spec"))
+
+    for entry in manifest["segments"]:
+        arrays = np.load(os.path.join(path, entry["file"]))
+        seg = Segment(seg_id=int(entry["seg_id"]),
+                      data=jnp.asarray(arrays["data"]),
+                      gids=np.asarray(arrays["gids"]),
+                      live=np.asarray(arrays["live"]).copy(),
+                      forest=_forest_from(arrays, **entry["forest"]),
+                      clip_fraction=float(entry["clip_fraction"]))
+        if entry.get("has_plan"):
+            seg._plan = _plan_from(arrays)
+        index.manifest.add(seg)
+        live_rows = np.flatnonzero(seg.live)
+        index.locator.update(
+            (int(g), (seg.seg_id, int(r)))
+            for g, r in zip(seg.gids[live_rows], live_rows))
+
+    mt = index.memtable
+    saved = np.load(os.path.join(path, "memtable.npz"))
+    mt.vecs[:] = saved["vecs"]
+    mt.gids[:] = saved["gids"]
+    mt.live[:] = saved["live"]
+    mt.count = int(mt_meta["count"])
+    mt.version += 1
+    live_slots = np.flatnonzero(mt.live[: mt.count])
+    index.locator.update((int(mt.gids[s]), (_DELTA, int(s)))
+                         for s in live_slots)
+
+    index.next_gid = int(manifest["next_gid"])
+    index._next_seg_id = int(manifest["next_seg_id"])
+    index._rmin_cache = ((index.manifest.version, mt.version),
+                         _rmin_load(manifest.get("r_min_cache")))
+    return index
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+def save(index, path: str) -> None:
+    """Snapshot any AnnIndex (dispatch lives on the index: calls
+    ``index.save``)."""
+    index.save(path)
+
+
+def load(path: str) -> Any:
+    """Read a snapshot directory back into a live index.
+
+    Returns a ``core.DETLSH`` or ``streaming.StreamingDETLSH`` according
+    to the manifest's ``kind``; raises ``SnapshotFormatError`` on any
+    format/version mismatch.
+    """
+    manifest = _read_manifest(path)
+    kind = manifest.get("kind")
+    if kind == "static":
+        return _load_static(path, manifest)
+    if kind == "streaming":
+        return _load_streaming(path, manifest)
+    raise SnapshotFormatError(f"{path!r}: unknown snapshot kind {kind!r}")

@@ -1,0 +1,110 @@
+"""Typed search requests and results — the one query surface (DESIGN.md §6).
+
+``SearchRequest`` carries every per-request override the engines accept
+(k, r_min, M, mode, engine, n_active, ...), eagerly validated so a typo'd
+engine or a non-positive k fails at construction with an actionable message
+instead of silently misbehaving deep in the radius-round loop.
+
+``SearchResult`` is what every ``AnnIndex.search`` returns: ids + exact
+distances plus a ``SearchStats`` record (which engine actually ran, the
+r_min used and whether it came from the per-index cache, per-lane round /
+candidate counts).  ``raw`` retains the engine-level ``QueryResult`` for
+the deprecation shims and for callers that need the untyped tuple.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+from repro.api import registry
+
+MODES = ("leaf", "strict")
+IMPLS = ("auto", "xla", "pallas", "pallas_interpret")
+
+
+def _check_positive(name: str, value, minimum=1) -> None:
+    if value < minimum:
+        raise ValueError(
+            f"{name} must be >= {minimum}, got {value!r} — a non-positive "
+            f"{name} would make the round loop return empty/garbage results")
+
+
+def _check_choice(name: str, value: str, choices) -> None:
+    if value not in choices:
+        raise ValueError(f"unknown {name} {value!r}; valid: {choices}")
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchRequest:
+    """Per-request overrides for one batched c^2-k-ANN search.
+
+    ``engine=None`` means "use the index's default" (its ``IndexSpec``
+    engine, itself defaulting to 'auto'); ``r_min=None`` means "use the
+    index's cached per-k estimate" (see ``AnnIndex.r_min_for``).
+    ``n_active`` marks trailing pad lanes of a partial batch done from
+    round 0 (the serving path's padding contract).
+    """
+
+    k: int = 10
+    r_min: Optional[float] = None
+    M: int = 8
+    mode: str = "leaf"
+    engine: Optional[str] = None
+    n_active: Optional[int] = None
+    max_rounds: int = 48
+    dist_impl: str = "auto"
+    bounds_impl: str = "auto"
+
+    def __post_init__(self):
+        _check_positive("k", self.k)
+        _check_positive("M", self.M)
+        _check_positive("max_rounds", self.max_rounds)
+        if self.r_min is not None and not self.r_min > 0.0:
+            raise ValueError(f"r_min must be positive, got {self.r_min!r} "
+                             f"(radii only grow by factors of c)")
+        if self.n_active is not None:
+            _check_positive("n_active", self.n_active, minimum=0)
+        _check_choice("mode", self.mode, MODES)
+        _check_choice("dist_impl", self.dist_impl, IMPLS)
+        _check_choice("bounds_impl", self.bounds_impl, IMPLS)
+        registry.validate_engine_name(self.engine)
+
+    def to_query_config(self, *, default_engine: str = "auto",
+                        r_min: Optional[float] = None,
+                        k: Optional[int] = None,
+                        block_q: int = 8, block_l: int = 8):
+        """Lower to the engine-level ``core.query.QueryConfig``.
+
+        ``r_min`` / ``k`` override the request's values — the index fills
+        in its cached radius estimate and per-segment k clamps here.
+        """
+        from repro.core.query import QueryConfig
+        rm = self.r_min if r_min is None else r_min
+        if rm is None:
+            raise ValueError("r_min unresolved: pass r_min= or set it on "
+                             "the request")
+        return QueryConfig(
+            k=self.k if k is None else k, M=self.M, r_min=float(rm),
+            mode=self.mode, max_rounds=self.max_rounds,
+            engine=self.engine or default_engine,
+            dist_impl=self.dist_impl, bounds_impl=self.bounds_impl,
+            block_q=block_q, block_l=block_l)
+
+
+class SearchStats(NamedTuple):
+    """Per-search diagnostics surfaced by every ``AnnIndex.search``."""
+
+    engine: str              # concrete engine that ran ('fused' | 'vmap')
+    r_min: float             # starting radius actually used
+    r_min_cached: bool       # True when it came from the per-(index,k) cache
+    rounds: Any              # (B,) int32 — radius enlargements + 1 per lane
+    n_candidates: Any        # (B,) int32 — |S| at termination
+    final_r: Any             # (B,) f32
+
+
+class SearchResult(NamedTuple):
+    ids: Any                 # (B, k) int32 — point / global ids
+    dists: Any               # (B, k) f32  — exact distances
+    stats: SearchStats
+    raw: Any = None          # engine-level core.query.QueryResult

@@ -1,0 +1,101 @@
+"""IndexSpec: one declarative, validated build configuration (DESIGN.md §6).
+
+Replaces the scattered build kwargs (`K/L/c` through ``derive_params``,
+``Nr/leaf_size/breakpoint_method/*_impl`` through ``DETLSH.build``, the
+streaming knobs through ``StreamingDETLSH.build``) with a single frozen
+record that validates eagerly, lowers to ``LSHParams`` via
+``derive_params``, and round-trips through the snapshot manifest
+(``to_dict``/``from_dict``), so a persisted index remembers exactly how it
+was built.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.api import registry
+from repro.api.request import IMPLS, _check_choice, _check_positive
+
+KINDS = ("static", "streaming")
+BREAKPOINT_METHODS = ("sample_sort", "full_sort", "histogram_refine")
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexSpec:
+    """Everything needed to build (and rebuild) an index.
+
+    Theory knobs (K/L/c/beta_override) feed ``derive_params`` (Lemma 3);
+    layout knobs (Nr/leaf_size/breakpoint_method) shape the DE-Forest;
+    impl knobs pick kernel implementations; ``engine``/``block_*`` set the
+    search-time defaults; the ``delta_capacity``/``max_segments``/
+    ``id_capacity`` group applies to ``kind='streaming'`` only.
+    """
+
+    kind: str = "static"                 # 'static' | 'streaming'
+    # --- theory (Lemma 3 inputs) ---
+    K: int = 16
+    L: int = 4
+    c: float = 1.5
+    beta_override: Optional[float] = None
+    # --- DE-Forest layout ---
+    Nr: int = 256
+    leaf_size: int = 64
+    breakpoint_method: str = "sample_sort"
+    # --- kernel implementations ---
+    project_impl: str = "auto"
+    encode_impl: str = "auto"
+    # --- search-time defaults ---
+    engine: str = "auto"
+    block_q: int = 8
+    block_l: int = 8
+    # --- streaming only ---
+    delta_capacity: int = 512
+    max_segments: int = 4
+    id_capacity: Optional[int] = None
+
+    def __post_init__(self):
+        _check_choice("kind", self.kind, KINDS)
+        _check_positive("K", self.K)
+        _check_positive("L", self.L)
+        if not self.c > 1.0:
+            raise ValueError(f"approximation ratio c must be > 1, got "
+                             f"{self.c!r} (Lemma 3 needs c > 1)")
+        if self.beta_override is not None and not 0.0 < self.beta_override:
+            raise ValueError(f"beta_override must be positive, got "
+                             f"{self.beta_override!r}")
+        _check_positive("Nr", self.Nr, minimum=2)
+        _check_positive("leaf_size", self.leaf_size)
+        _check_choice("breakpoint_method", self.breakpoint_method,
+                      BREAKPOINT_METHODS)
+        _check_choice("project_impl", self.project_impl, IMPLS)
+        _check_choice("encode_impl", self.encode_impl, IMPLS)
+        _check_positive("block_q", self.block_q)
+        _check_positive("block_l", self.block_l)
+        registry.validate_engine_name(self.engine)
+        _check_positive("delta_capacity", self.delta_capacity)
+        _check_positive("max_segments", self.max_segments)
+        if self.id_capacity is not None:
+            _check_positive("id_capacity", self.id_capacity)
+
+    def derive_params(self):
+        """Solve the Lemma 3 system for this spec -> ``LSHParams``."""
+        from repro.core.theory import derive_params
+        return derive_params(K=self.K, c=self.c, L=self.L,
+                             beta_override=self.beta_override)
+
+    # ------------------------------------------------------------------
+    # Snapshot round-trip
+    # ------------------------------------------------------------------
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "IndexSpec":
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"unknown IndexSpec fields in snapshot: "
+                             f"{sorted(unknown)} (format drift?)")
+        return cls(**d)

@@ -53,6 +53,7 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.api import registry as engine_registry
 from repro.core import candidates as cand
 from repro.core.detree import DEForest, leaf_bounds
 from repro.core.theory import LSHParams
@@ -178,9 +179,28 @@ class QueryConfig:
     mode: str = "leaf"         # 'leaf' (optimized, default) | 'strict'
     dist_impl: str = "auto"
     bounds_impl: str = "auto"
-    engine: str = "auto"       # batch engine: 'auto' | 'fused' | 'vmap'
+    engine: str = "auto"       # batch engine: 'auto' or a registered name
     block_q: int = 8           # fused kernel query-tile
     block_l: int = 8           # fused kernel leaf-tile
+
+    def __post_init__(self):
+        # Eager validation: a typo'd engine/mode/impl or a non-positive
+        # count must fail here with the valid choices, not silently
+        # misbehave deep in the radius-round loop.
+        from repro.api.request import IMPLS, MODES, _check_choice, \
+            _check_positive
+        _check_positive("k", self.k)
+        _check_positive("M", self.M)
+        _check_positive("max_rounds", self.max_rounds)
+        _check_positive("cap", self.cap, minimum=0)
+        _check_positive("block_q", self.block_q)
+        _check_positive("block_l", self.block_l)
+        if not self.r_min > 0.0:
+            raise ValueError(f"r_min must be positive, got {self.r_min!r}")
+        _check_choice("mode", self.mode, MODES)
+        _check_choice("dist_impl", self.dist_impl, IMPLS)
+        _check_choice("bounds_impl", self.bounds_impl, IMPLS)
+        engine_registry.validate_engine_name(self.engine)
 
 
 def _auto_cap(n: int, params: LSHParams, cfg: QueryConfig,
@@ -354,15 +374,11 @@ _FUSED_MIN_BATCH = 8
 
 
 def _pick_engine(cfg: QueryConfig, batch: int | None = None) -> str:
-    if cfg.engine not in ("auto", "fused", "vmap"):
-        raise ValueError(f"unknown engine: {cfg.engine}")
-    if cfg.mode == "strict":
-        # Strict Alg. 3 filters by per-point projected distance, which the
-        # fused kernel (leaf-granular admission) does not reproduce.
-        return "vmap"
-    if cfg.engine == "auto" and batch is not None and batch < _FUSED_MIN_BATCH:
-        return "vmap"
-    return "fused" if cfg.engine in ("auto", "fused") else "vmap"
+    """Compat shim over ``repro.api.registry.resolve_engine`` (the engine
+    picker now lives in the registry; see its module docstring for the
+    resolution rules, including the explicit strict-mode fallback)."""
+    return engine_registry.resolve_engine(cfg.engine, mode=cfg.mode,
+                                          batch=batch)
 
 
 def live_in_sorted_order(forest: DEForest,
@@ -372,6 +388,42 @@ def live_in_sorted_order(forest: DEForest,
     kernel's per-tile live mask consumes."""
     safe = jnp.clip(forest.point_ids, 0, forest.n - 1)
     return live[safe] & forest.valid
+
+
+def _run_vmap_engine(data, forest, A, params, queries, cfg, *,
+                     plan=None, live=None, live_sorted=None,
+                     n_active=None) -> QueryResult:
+    """Registry entry point for engine='vmap' (ignores plan/live_sorted)."""
+    del plan, live_sorted
+    B = queries.shape[0]
+    active = (jnp.ones((B,), jnp.bool_) if n_active is None
+              else jnp.arange(B) < jnp.asarray(n_active))
+    fn = functools.partial(knn_query, data, forest, A, params, cfg=cfg,
+                           live=live)
+    return jax.vmap(lambda q, a: fn(q, active=a))(queries, active)
+
+
+def _run_fused_engine(data, forest, A, params, queries, cfg, *,
+                      plan=None, live=None, live_sorted=None,
+                      n_active=None) -> QueryResult:
+    """Registry entry point for engine='fused' (derives live_sorted)."""
+    if live_sorted is None and live is not None:
+        live_sorted = live_in_sorted_order(forest, live)
+    return fused_query_batch(data, forest, A, params, queries, cfg,
+                             plan=plan, live_sorted=live_sorted,
+                             n_active=n_active)
+
+
+engine_registry.register_engine(
+    "vmap", _run_vmap_engine, modes=("leaf", "strict"), min_batch=1,
+    priority=0,
+    doc="per-query while_loop, vmapped; the only engine reproducing the "
+        "unoptimized strict Alg. 3 per-point filter")
+engine_registry.register_engine(
+    "fused", _run_fused_engine, modes=("leaf",),
+    min_batch=_FUSED_MIN_BATCH, priority=10,
+    doc="one-pass Pallas range_rerank over all L trees; leaf-granular "
+        "admission (a superset of vmap's — Theorems 1-3 unchanged)")
 
 
 def knn_query_batch(data: jax.Array, forest: DEForest, A: jax.Array,
@@ -384,27 +436,20 @@ def knn_query_batch(data: jax.Array, forest: DEForest, A: jax.Array,
                     ) -> QueryResult:
     """Batched c^2-k-ANN over a (b, d) query batch.
 
-    Dispatches to the fused batched engine (default at batch >= 8) or the
-    per-query vmap baseline according to ``cfg.engine`` / ``cfg.mode`` and
-    the (static) batch size.
+    Dispatches through the ``repro.api.registry`` engine registry (fused
+    by default at batch >= 8, vmap otherwise / for 'strict') according to
+    ``cfg.engine`` / ``cfg.mode`` and the (static) batch size.
 
     ``live`` ((n,) bool, id order) / ``live_sorted`` ((L, n_pad) bool,
     code-sorted order) carry the streaming index's tombstones — pass either
     (the other is derived); None means every point is live.  ``n_active``
     marks trailing pad lanes of a partial batch done from round 0.
     """
-    B = queries.shape[0]
-    if _pick_engine(cfg, B) == "fused":
-        if live_sorted is None and live is not None:
-            live_sorted = live_in_sorted_order(forest, live)
-        return fused_query_batch(data, forest, A, params, queries, cfg,
-                                 plan=plan, live_sorted=live_sorted,
-                                 n_active=n_active)
-    active = (jnp.ones((B,), jnp.bool_) if n_active is None
-              else jnp.arange(B) < jnp.asarray(n_active))
-    fn = functools.partial(knn_query, data, forest, A, params, cfg=cfg,
-                           live=live)
-    return jax.vmap(lambda q, a: fn(q, active=a))(queries, active)
+    engine = engine_registry.get_engine(
+        engine_registry.resolve_engine(cfg.engine, mode=cfg.mode,
+                                       batch=queries.shape[0]))
+    return engine.run(data, forest, A, params, queries, cfg, plan=plan,
+                      live=live, live_sorted=live_sorted, n_active=n_active)
 
 
 # ---------------------------------------------------------------------------

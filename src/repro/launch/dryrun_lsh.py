@@ -23,8 +23,8 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.api import SearchRequest
 from repro.core.distributed import build_pdet, query_pdet, PDETLSH, DEForest
-from repro.core.query import QueryConfig
 from repro.core.theory import derive_params
 from repro.launch.dryrun import _cost_record, _mem_record, collective_bytes
 from repro.launch.mesh import make_mesh, make_production_mesh
@@ -73,7 +73,10 @@ def run(mesh, mesh_tag, n=500_000_000, d=100, nq=64, k=50):
 
     rec2 = {"workload": "pdet_query", "mesh": mesh_tag, "n": n, "d": d,
             "nq": nq, "k": k, "devices": int(mesh.size)}
-    cfg = QueryConfig(k=k, M=8, r_min=1.0, max_rounds=16)
+    # Typed request surface; the PDET query step consumes the lowered
+    # engine-level config (the shard_map path predates the registry).
+    cfg = SearchRequest(k=k, M=8, r_min=1.0,
+                        max_rounds=16).to_query_config()
     n_local = n // n_shards
     leaf_size = 256
     n_leaves = -(-n_local // leaf_size)

@@ -12,10 +12,12 @@ query fn sees a bounded set of shapes, and the pad lanes are passed as
 the fused kernel: they admit nothing and skip all MXU work).  Pad lanes
 are tracked in ``stats.pad_queries`` and never counted as served queries.
 
-With a mutable index (``streaming.StreamingDETLSH``) the service also
-exposes ``upsert()``/``delete()``; every mutation runs the index's
-compaction trigger (``maybe_compact``), the in-process stand-in for the
-background compactor thread.
+The service talks only to the ``repro.api`` protocols: searches go through
+``AnnIndex.search`` with a typed ``SearchRequest``, and the mutation path
+(``upsert()``/``delete()``, with the ``maybe_compact`` compaction trigger —
+the in-process stand-in for the background compactor thread) is gated by an
+``isinstance`` check against ``MutableAnnIndex`` — no ``hasattr`` duck
+typing.  Pre-protocol indexes are adapted by ``repro.api.as_ann_index``.
 """
 
 from __future__ import annotations
@@ -23,11 +25,14 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import deque
-from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.api.protocol import LegacyIndexAdapter, MutableAnnIndex, \
+    as_ann_index
+from repro.api.request import SearchRequest
 
 
 @dataclasses.dataclass
@@ -56,26 +61,27 @@ class LSHService:
     def __init__(self, index, k: int = 10, max_batch: int = 32,
                  pad_to: int = 32):
         self.index = index
+        # The service talks only to the repro.api.AnnIndex protocol.
+        # Pre-protocol indexes (PDET shard_map, baselines, user duck types)
+        # are wrapped once here — pad-lane masking stays an optimization
+        # the adapter drops when the legacy query() can't accept it.
+        self._index = as_ann_index(index)
         self.k = k
         self.max_batch = max_batch
         self.pad_to = pad_to
         self._fn = None
         self.stats = ServiceStats(latencies_ms=[])
-        # Pad-lane masking is an optimization, not a requirement: indexes
-        # without an n_active kwarg (PDET shard_map, baselines) still serve,
-        # they just run the radius loop on the zero-vector pad lanes.
-        import inspect
-        try:
-            params = inspect.signature(index.query).parameters
-            self._supports_n_active = "n_active" in params
-        except (TypeError, ValueError):
-            self._supports_n_active = False
+
+    @property
+    def _supports_n_active(self) -> bool:
+        """Whether pad-lane masking reaches the index (always, for protocol
+        indexes; the adapter decides for legacy ones)."""
+        return (self._index.supports_n_active
+                if isinstance(self._index, LegacyIndexAdapter) else True)
 
     def _query_fn(self, queries, n_valid: int):
-        if self._supports_n_active:
-            res = self.index.query(queries, k=self.k, n_active=n_valid)
-        else:
-            res = self.index.query(queries, k=self.k)
+        res = self._index.search(
+            queries, SearchRequest(k=self.k, n_active=n_valid))
         return res.ids, res.dists
 
     def _bucket(self, size: int) -> int:
@@ -88,6 +94,11 @@ class LSHService:
         return min(self.max_batch, -(-size // self.pad_to) * self.pad_to)
 
     def warmup(self, d: int):
+        # Pre-populate the per-(index, k) radius cache from the index's own
+        # data probes first: the zero-vector warmup batches below must
+        # compile the query shapes, not seed r_min with origin distances.
+        if not isinstance(self._index, LegacyIndexAdapter):
+            self._index.r_min_for(self.k)
         buckets = sorted({self._bucket(s)
                           for s in range(1, self.max_batch + 1)})
         for size in buckets:
@@ -99,11 +110,11 @@ class LSHService:
     # ------------------------------------------------------------------
 
     def _mutable_index(self):
-        if not hasattr(self.index, "upsert"):
+        if not isinstance(self._index, MutableAnnIndex):
             raise TypeError(
                 f"{type(self.index).__name__} is immutable — serve a "
                 f"streaming.StreamingDETLSH for upsert/delete")
-        return self.index
+        return self._index
 
     def upsert(self, vectors, ids=None) -> np.ndarray:
         """Insert/overwrite points in the live index; returns global ids.

@@ -29,18 +29,20 @@ you wrapped ``query`` in ``jax.jit``.
 
 from __future__ import annotations
 
+import dataclasses
 import functools
+import warnings
 from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import registry as engine_registry
 from repro.core import estimate_r_min, hashing
 from repro.core import candidates as cand
 from repro.core import encoding as enc
-from repro.core.query import QueryConfig, QueryResult, _pick_engine, \
-    knn_query_batch
+from repro.core.query import QueryConfig, QueryResult, knn_query_batch
 from repro.core.theory import LSHParams, derive_params
 from repro.streaming.compactor import merge_segments
 from repro.streaming.manifest import Manifest
@@ -51,7 +53,11 @@ _DELTA = "delta"     # locator tag for rows still in the memtable
 
 
 class StreamingDETLSH:
-    """Mutable segmented DET-LSH index with upsert / delete / compaction."""
+    """Mutable segmented DET-LSH index with upsert / delete / compaction.
+
+    Satisfies ``repro.api.MutableAnnIndex``: the typed ``search`` surface
+    plus ``upsert``/``delete``/``maybe_compact`` and snapshot ``save``.
+    """
 
     def __init__(self, params: LSHParams, A: jax.Array, bp_all: jax.Array,
                  base: Optional[Segment], *, Nr: int, leaf_size: int,
@@ -71,6 +77,11 @@ class StreamingDETLSH:
         d = A.shape[0]
         self.memtable = Memtable(delta_capacity, d)
         self._delta_cache = None          # (memtable.version, device arrays)
+        self.spec = None                  # IndexSpec when built via from_spec
+        # ((manifest.version, memtable.version), {k: r_min}) — the per-k
+        # radius-estimate cache, invalidated by structural mutation.
+        self._rmin_cache: Tuple[Tuple[int, int], Dict[int, float]] = \
+            ((-1, -1), {})
         if base is not None:
             self.manifest.add(base)
             self._next_seg_id = base.seg_id + 1
@@ -109,6 +120,25 @@ class StreamingDETLSH:
         return cls(params, A, bp_all, base, Nr=Nr, leaf_size=leaf_size,
                    delta_capacity=delta_capacity, max_segments=max_segments,
                    id_capacity=id_capacity)
+
+    @classmethod
+    def from_spec(cls, data: jax.Array, key: jax.Array,
+                  spec) -> "StreamingDETLSH":
+        """Build from one declarative ``repro.api.IndexSpec``."""
+        if spec.kind != "streaming":
+            raise ValueError(f"StreamingDETLSH.from_spec needs "
+                             f"kind='streaming', got {spec.kind!r} "
+                             f"(use repro.api.build)")
+        idx = cls.build(data, key, spec.derive_params(), Nr=spec.Nr,
+                        leaf_size=spec.leaf_size,
+                        delta_capacity=spec.delta_capacity,
+                        max_segments=spec.max_segments,
+                        id_capacity=spec.id_capacity,
+                        breakpoint_method=spec.breakpoint_method,
+                        project_impl=spec.project_impl,
+                        encode_impl=spec.encode_impl)
+        idx.spec = spec
+        return idx
 
     # ------------------------------------------------------------------
     # Mutation
@@ -344,26 +374,57 @@ class StreamingDETLSH:
                           constant_values=jnp.inf)
         return ids_c[:, :k], d_c[:, :k]
 
-    def query(self, queries: jax.Array, k: int = 10, *,
-              r_min: float | None = None, M: int = 8, mode: str = "leaf",
-              max_rounds: int = 48, engine: str = "auto",
-              n_active: int | None = None) -> QueryResult:
-        """Batched c^2-k-ANN over the live point set.  Returned ids are
-        *global* ids; invalid slots carry ``id_capacity`` and +inf."""
+    def _rmin_entries(self) -> Dict[int, float]:
+        """The per-k radius cache for the *current* structure version —
+        the single place the (manifest, memtable) cache key lives.
+        Resets the cache when the tag is stale."""
+        tag = (self.manifest.version, self.memtable.version)
+        if self._rmin_cache[0] != tag:
+            self._rmin_cache = (tag, {})
+        return self._rmin_cache[1]
+
+    def _rmin_hit(self, k: int) -> bool:
+        """Whether ``r_min_for(k)`` would be a cache hit right now."""
+        return k in self._rmin_entries()
+
+    def r_min_for(self, k: int, queries: jax.Array | None = None) -> float:
+        """Cached per-(index, k) starting radius over the current structure.
+
+        Estimated once per (index state, k) — on the first ``r_min=None``
+        search, from that batch's queries (segment rows stand in as probes
+        when no queries are given) — and keyed by (manifest, memtable)
+        versions so structural mutations invalidate it.  Segment-internal
+        tombstones don't bump a version — a slightly stale estimate only
+        shifts the starting radius, never correctness (the guarantee holds
+        for any r_min)."""
+        cache = self._rmin_entries()
+        if k not in cache:
+            segs = [s for s in self.manifest.segments if s.n_live > 0]
+            ref = (segs[0].data if segs else jnp.asarray(self.memtable.vecs))
+            probes = (queries if queries is not None
+                      else ref[: min(64, ref.shape[0])])
+            cache[k] = estimate_r_min(ref, probes, k, self.params.c)
+        return cache[k]
+
+    def _fanout_query(self, queries: jax.Array, req,
+                      r_min: float) -> QueryResult:
+        """Batched c^2-k-ANN over the live point set (fan-out + combine).
+        Returned ids are *global* ids; invalid slots carry ``id_capacity``
+        and +inf."""
         queries = jnp.asarray(queries, jnp.float32)
         B = queries.shape[0]
+        k, n_active = req.k, req.n_active
         segs = [s for s in self.manifest.segments if s.n_live > 0]
-        if r_min is None:
-            ref_data = (segs[0].data if segs else
-                        jnp.asarray(self.memtable.vecs))
-            r_min = estimate_r_min(ref_data, queries, k, self.params.c)
 
+        spec = self.spec
+        block_q = spec.block_q if spec is not None else 8
+        block_l = spec.block_l if spec is not None else 8
         sources, rounds, n_cands, final_r = [], [], [], []
         for seg in segs:
-            k_seg = min(k, seg.m)
-            cfg = QueryConfig(k=k_seg, M=M, r_min=r_min, mode=mode,
-                              max_rounds=max_rounds, engine=engine)
-            fused = _pick_engine(cfg, B) == "fused"
+            cfg = req.to_query_config(k=min(k, seg.m), r_min=r_min,
+                                      block_q=block_q, block_l=block_l)
+            fused = engine_registry.resolve_engine(
+                cfg.engine, mode=cfg.mode, batch=B) == "fused"
             res = knn_query_batch(
                 seg.data, seg.forest, self.A, self.params, queries, cfg,
                 plan=seg.plan() if fused else None, live=seg.live_dev(),
@@ -399,6 +460,57 @@ class StreamingDETLSH:
             final_r=functools.reduce(
                 jnp.maximum, final_r, jnp.full((B,), r_min, jnp.float32)))
 
+    def search(self, queries: jax.Array, request=None):
+        """Typed batched search over the live point set
+        (``repro.api.SearchRequest`` in, ``repro.api.SearchResult`` out).
+        Trace-compatible when the request carries an explicit ``r_min``."""
+        from repro.api.request import SearchRequest, SearchResult, \
+            SearchStats
+        req = request or SearchRequest()
+        if req.engine is None and self.spec is not None:
+            req = dataclasses.replace(req, engine=self.spec.engine)
+        r_min, cached = req.r_min, False
+        if r_min is None:
+            cached = self._rmin_hit(req.k)            # hit vs first estimate
+            # Zero-vector pad lanes must not skew the cached estimate
+            # (n_active == 0 keeps the full batch: no real lanes to probe).
+            probes = queries[: req.n_active] if req.n_active else queries
+            r_min = self.r_min_for(req.k, probes)
+        res = self._fanout_query(queries, req, float(r_min))
+        engine = engine_registry.resolve_engine(
+            req.engine, mode=req.mode, batch=jnp.asarray(queries).shape[0])
+        return SearchResult(
+            ids=res.ids, dists=res.dists,
+            stats=SearchStats(engine=engine, r_min=float(r_min),
+                              r_min_cached=cached, rounds=res.rounds,
+                              n_candidates=res.n_candidates,
+                              final_r=res.final_r),
+            raw=res)
+
+    def query(self, queries: jax.Array, k: int = 10, *,
+              r_min: float | None = None, M: int = 8, mode: str = "leaf",
+              max_rounds: int = 48, engine: str = "auto",
+              n_active: int | None = None) -> QueryResult:
+        """Deprecated kwarg surface — use ``search(queries,
+        repro.api.SearchRequest(...))``.  Kept as a thin shim for the
+        seed-era callers; returns the engine-level ``QueryResult``."""
+        warnings.warn(
+            "StreamingDETLSH.query(**kwargs) is deprecated; use "
+            "StreamingDETLSH.search(queries, repro.api.SearchRequest(...))",
+            DeprecationWarning, stacklevel=2)
+        from repro.api.request import SearchRequest
+        req = SearchRequest(k=k, r_min=r_min, M=M, mode=mode,
+                            max_rounds=max_rounds, engine=engine,
+                            n_active=n_active)
+        return self.search(queries, req).raw
+
+    def save(self, path) -> None:
+        """Write a versioned snapshot directory (``repro.api.load``):
+        segments (rows, gids, tombstones, forests), memtable survivors,
+        frozen breakpoints, and the manifest."""
+        from repro.api import persist
+        persist.save_streaming(self, path)
+
     def warmup_query_caches(self) -> None:
         """Eagerly materialize per-segment device caches (fused plans,
         tombstone masks, gid maps) and the delta snapshot.  Call after
@@ -415,6 +527,11 @@ class StreamingDETLSH:
     @property
     def n_live(self) -> int:
         return self.manifest.n_live + self.memtable.n_live
+
+    @property
+    def n_points(self) -> int:
+        """AnnIndex protocol: the live point count."""
+        return self.n_live
 
     @property
     def n_total(self) -> int:

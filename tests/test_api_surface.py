@@ -1,0 +1,105 @@
+"""API-surface snapshot: the exported names and signatures of ``repro.api``.
+
+An accidental rename, removal, or signature change in the public surface
+must fail tier-1 — this is the compatibility gate for everything
+downstream of the protocol (serving, benchmarks, examples, user code).
+Extending the surface (new exports, new defaulted fields *appended* after
+the existing ones) is allowed; changing what exists is a breaking change
+and needs a deliberate update here plus a deprecation note in CHANGES.md.
+"""
+
+import dataclasses
+import inspect
+
+import pytest
+
+import repro
+import repro.api
+
+
+EXPECTED_API_EXPORTS = {
+    "AnnIndex", "MutableAnnIndex", "LegacyIndexAdapter", "as_ann_index",
+    "IndexSpec", "SearchRequest", "SearchResult", "SearchStats",
+    "EngineSpec", "register_engine", "resolve_engine", "available_engines",
+    "get_engine", "build", "load", "save",
+    "SnapshotFormatError", "FORMAT_VERSION",
+}
+
+# Field ORDER is part of the surface (positional construction).
+EXPECTED_SEARCH_REQUEST_FIELDS = (
+    "k", "r_min", "M", "mode", "engine", "n_active", "max_rounds",
+    "dist_impl", "bounds_impl",
+)
+
+EXPECTED_INDEX_SPEC_FIELDS = (
+    "kind", "K", "L", "c", "beta_override", "Nr", "leaf_size",
+    "breakpoint_method", "project_impl", "encode_impl", "engine",
+    "block_q", "block_l", "delta_capacity", "max_segments", "id_capacity",
+)
+
+EXPECTED_PROTOCOL_MEMBERS = {
+    "AnnIndex": {"n_points", "search", "r_min_for", "save",
+                 "index_size_bytes"},
+    "MutableAnnIndex": {"n_points", "search", "r_min_for", "save",
+                        "index_size_bytes", "upsert", "delete",
+                        "maybe_compact"},
+}
+
+
+def test_api_exports_snapshot():
+    assert set(repro.api.__all__) == EXPECTED_API_EXPORTS
+    for name in EXPECTED_API_EXPORTS:      # every name actually resolves
+        assert getattr(repro.api, name) is not None
+    assert EXPECTED_API_EXPORTS <= set(dir(repro.api))
+
+
+def test_top_level_exports_snapshot():
+    assert set(repro.__all__) == {"__version__", "api", "DETLSH",
+                                  "StreamingDETLSH", "derive_params"}
+    assert repro.DETLSH is not None
+    assert repro.StreamingDETLSH is not None
+    assert callable(repro.derive_params)
+    assert repro.api.load is not None
+
+
+def test_search_request_fields_snapshot():
+    fields = tuple(f.name for f in dataclasses.fields(repro.api.SearchRequest))
+    assert fields == EXPECTED_SEARCH_REQUEST_FIELDS
+    # all defaulted: SearchRequest() must stay constructible bare
+    repro.api.SearchRequest()
+
+
+def test_index_spec_fields_snapshot():
+    fields = tuple(f.name for f in dataclasses.fields(repro.api.IndexSpec))
+    assert fields == EXPECTED_INDEX_SPEC_FIELDS
+    repro.api.IndexSpec()
+
+
+def test_callable_signatures_snapshot():
+    assert list(inspect.signature(repro.api.load).parameters) == ["path"]
+    assert [p for p in inspect.signature(repro.api.build).parameters] == \
+        ["data", "key", "spec"]
+    assert [p for p in
+            inspect.signature(repro.api.resolve_engine).parameters] == \
+        ["requested", "mode", "batch"]
+    sr = inspect.signature(repro.api.SearchResult)
+    assert list(sr.parameters) == ["ids", "dists", "stats", "raw"]
+
+
+@pytest.mark.parametrize("proto_name", sorted(EXPECTED_PROTOCOL_MEMBERS))
+def test_protocol_members_snapshot(proto_name):
+    import typing
+    proto = getattr(repro.api, proto_name)
+    if hasattr(typing, "get_protocol_members"):          # 3.12+
+        members = set(typing.get_protocol_members(proto))
+    elif hasattr(proto, "__protocol_attrs__"):           # 3.12 internal
+        members = set(proto.__protocol_attrs__)
+    else:                                                # 3.10/3.11
+        members = set(typing._get_protocol_attrs(proto))
+    assert members == EXPECTED_PROTOCOL_MEMBERS[proto_name]
+
+
+def test_builtin_engines_registered():
+    names = repro.api.available_engines()
+    assert set(names) >= {"fused", "vmap"}
+    assert names[0] == "fused"             # priority order is the surface

@@ -1,0 +1,198 @@
+"""Snapshot persistence: save -> load -> search equality (repro.api).
+
+The contract (docs/DESIGN.md §6): a reloaded index answers every search
+with bit-identical ids and distances, on both engines, for both index
+kinds — including a streaming index carrying pre-compaction tombstones
+and un-sealed delta rows.  Plus the format-version gate: a snapshot from
+an incompatible format version is rejected, never misread.
+"""
+
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.api import (AnnIndex, IndexSpec, MutableAnnIndex, SearchRequest,
+                       SnapshotFormatError)
+from tests.conftest import make_clustered, make_queries_near
+
+D = 16
+
+
+def _assert_identical_answers(a, b, queries, k):
+    for engine in ("fused", "vmap"):
+        req = SearchRequest(k=k, engine=engine)
+        ra = a.search(queries, req)
+        rb = b.search(queries, req)
+        np.testing.assert_array_equal(np.asarray(ra.ids),
+                                      np.asarray(rb.ids), err_msg=engine)
+        np.testing.assert_array_equal(np.asarray(ra.dists),
+                                      np.asarray(rb.dists), err_msg=engine)
+
+
+@pytest.fixture(scope="module")
+def static_index():
+    rng = np.random.default_rng(0)
+    data = make_clustered(rng, 2048, D)
+    spec = IndexSpec(kind="static", K=4, L=8, c=1.5, beta_override=0.1,
+                     Nr=32, leaf_size=32)
+    idx = repro.api.build(jnp.asarray(data), jax.random.key(0), spec)
+    queries = jnp.asarray(make_queries_near(data, rng, 12))
+    return idx, queries
+
+
+@pytest.fixture(scope="module")
+def streaming_index():
+    rng = np.random.default_rng(1)
+    data = make_clustered(rng, 800, D)
+    spec = IndexSpec(kind="streaming", K=4, L=4, c=1.5, beta_override=0.1,
+                     Nr=32, leaf_size=16, delta_capacity=64, max_segments=4)
+    idx = repro.api.build(jnp.asarray(data), jax.random.key(0), spec)
+    gids = idx.upsert(make_clustered(rng, 150, D))  # 2 seals + live delta
+    idx.delete(np.arange(0, 40))                    # base tombstones
+    idx.delete(gids[:10])                           # sealed-delta + delta
+    assert idx.memtable.n_live > 0                  # un-sealed rows persist
+    assert any(s.has_tombstones for s in idx.manifest.segments)
+    queries = jnp.asarray(make_queries_near(data, rng, 12))
+    return idx, queries
+
+
+def test_static_roundtrip_bit_identical(static_index, tmp_path):
+    idx, queries = static_index
+    idx.fused_plan()                   # snapshot the plan constants too
+    idx.save(tmp_path / "static")
+    loaded = repro.api.load(tmp_path / "static")
+    assert isinstance(loaded, AnnIndex)
+    assert not isinstance(loaded, MutableAnnIndex)
+    assert loaded.n_points == idx.n_points
+    assert loaded.params == idx.params
+    assert loaded.spec == idx.spec
+    assert loaded._plan is not None    # fused-plan constants round-trip
+    _assert_identical_answers(idx, loaded, queries, k=10)
+
+
+def test_static_rmin_cache_roundtrip(static_index, tmp_path):
+    """The cached per-k radius estimates persist, so a restarted service
+    answers r_min=None requests identically without re-estimating."""
+    idx, queries = static_index
+    idx.search(queries, SearchRequest(k=7))        # populate cache for k=7
+    idx.save(tmp_path / "s2")
+    loaded = repro.api.load(tmp_path / "s2")
+    assert loaded._r_min_cache[7] == idx._r_min_cache[7]
+    ra = idx.search(queries, SearchRequest(k=7))
+    rb = loaded.search(queries, SearchRequest(k=7))
+    assert rb.stats.r_min == ra.stats.r_min and rb.stats.r_min_cached
+    np.testing.assert_array_equal(np.asarray(ra.ids), np.asarray(rb.ids))
+
+
+def test_streaming_roundtrip_bit_identical(streaming_index, tmp_path):
+    """Pre-compaction tombstones, sealed segments, and un-sealed delta
+    rows all survive the round trip; answers are bit-identical."""
+    idx, queries = streaming_index
+    idx.save(tmp_path / "stream")
+    loaded = repro.api.load(tmp_path / "stream")
+    assert isinstance(loaded, MutableAnnIndex)
+    assert loaded.n_live == idx.n_live
+    assert loaded.n_total == idx.n_total
+    assert loaded.next_gid == idx.next_gid
+    assert loaded.locator == idx.locator
+    assert loaded.memtable.count == idx.memtable.count
+    _assert_identical_answers(idx, loaded, queries, k=10)
+
+
+def test_streaming_loaded_index_still_mutable(streaming_index, tmp_path):
+    """A restored index is not a read-only replica: upsert/delete/seal/
+    compact continue exactly where the snapshot left off."""
+    idx, queries = streaming_index
+    idx.save(tmp_path / "stream2")
+    loaded = repro.api.load(tmp_path / "stream2")
+    rng = np.random.default_rng(7)
+    probe = (make_clustered(rng, 1, D)[0] + 60.0).astype(np.float32)
+    [gid] = loaded.upsert(probe)
+    assert int(gid) == idx.next_gid    # gid allocation resumes, no clashes
+    res = loaded.search(jnp.asarray(probe[None, :]),
+                        SearchRequest(k=1, r_min=1.0))
+    assert int(np.asarray(res.ids)[0, 0]) == int(gid)
+    loaded.delete([gid])
+    loaded.flush()
+    assert loaded.compact()
+    assert loaded.n_live == idx.n_live
+
+
+def test_stale_streaming_rmin_cache_not_persisted(tmp_path):
+    """A radius cache invalidated by mutation must not be resurrected as
+    fresh by save -> load (loaded must re-estimate, like the original)."""
+    rng = np.random.default_rng(5)
+    data = make_clustered(rng, 256, D)
+    idx = repro.api.build(
+        jnp.asarray(data), jax.random.key(0),
+        IndexSpec(kind="streaming", K=4, L=4, c=1.5, beta_override=0.1,
+                  Nr=32, leaf_size=16, delta_capacity=32))
+    q = jnp.asarray(make_queries_near(data, rng, 4))
+    idx.search(q, SearchRequest(k=5))              # populate cache
+    idx.upsert(make_clustered(rng, 3, D))          # invalidate it
+    idx.save(tmp_path / "stale")
+    loaded = repro.api.load(tmp_path / "stale")
+    assert loaded._rmin_cache[1] == {}             # stale entries dropped
+    ra = idx.search(q, SearchRequest(k=5))
+    rb = loaded.search(q, SearchRequest(k=5))
+    assert not ra.stats.r_min_cached and not rb.stats.r_min_cached
+    assert ra.stats.r_min == rb.stats.r_min
+    np.testing.assert_array_equal(np.asarray(ra.ids), np.asarray(rb.ids))
+
+
+def test_resave_after_compaction_drops_stale_segment_files(tmp_path):
+    """Re-saving into the same directory must not leave .npz files the
+    new manifest no longer references (pre-compaction segments)."""
+    rng = np.random.default_rng(6)
+    data = make_clustered(rng, 256, D)
+    idx = repro.api.build(
+        jnp.asarray(data), jax.random.key(0),
+        IndexSpec(kind="streaming", K=4, L=4, c=1.5, beta_override=0.1,
+                  Nr=32, leaf_size=16, delta_capacity=32, max_segments=8))
+    idx.upsert(make_clustered(rng, 64, D))         # +2 sealed segments
+    path = tmp_path / "resave"
+    idx.save(path)
+    assert len([f for f in os.listdir(path)
+                if f.startswith("segment_")]) == 3
+    idx.compact()                                  # 3 segments -> 1
+    idx.save(path)
+    seg_files = [f for f in os.listdir(path) if f.startswith("segment_")]
+    assert len(seg_files) == 1                     # stale files removed
+    loaded = repro.api.load(path)
+    assert loaded.n_live == idx.n_live
+    q = jnp.asarray(make_queries_near(data, rng, 4))
+    ra, rb = idx.search(q, SearchRequest(k=5)), \
+        loaded.search(q, SearchRequest(k=5))
+    np.testing.assert_array_equal(np.asarray(ra.ids), np.asarray(rb.ids))
+
+
+def test_format_version_mismatch_rejected(static_index, tmp_path):
+    idx, _ = static_index
+    path = tmp_path / "vers"
+    idx.save(path)
+    mpath = os.path.join(path, "MANIFEST.json")
+    manifest = json.load(open(mpath))
+    manifest["format_version"] = 999
+    json.dump(manifest, open(mpath, "w"))
+    with pytest.raises(SnapshotFormatError, match="format_version"):
+        repro.api.load(path)
+
+
+def test_non_snapshot_directory_rejected(tmp_path):
+    with pytest.raises(SnapshotFormatError, match="MANIFEST"):
+        repro.api.load(tmp_path)
+
+
+def test_spec_unknown_field_rejected():
+    spec = IndexSpec(kind="static", K=4, L=4, c=1.5)
+    d = dict(spec.to_dict(), not_a_field=1)
+    with pytest.raises(ValueError, match="not_a_field"):
+        IndexSpec.from_dict(d)
+    assert IndexSpec.from_dict(spec.to_dict()) == spec
+    assert dataclasses.asdict(spec) == spec.to_dict()
