@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import SearchRequest
 from repro.core import DETLSH, derive_params, estimate_r_min
 from repro.core import encoding as enc
 from repro.core.query import QueryConfig, knn_query_batch
@@ -148,7 +149,7 @@ def _vary_row(t, data, queries, gt_i, gt_d, K, L):
 def _all_methods(data, k):
     key = jax.random.key(0)
     yield "det-lsh", lambda: _build(data), \
-        lambda idx, q: idx.query(q, k=k, M=12)
+        lambda idx, q: idx.search(q, SearchRequest(k=k, M=12))
     yield "e2lsh(BC)", lambda: E2LSH.build(data, key, K=6, L=8, w=4.0), \
         lambda idx, q: idx.query(q, k)
     yield "c2lsh(C2)", lambda: C2LSH.build(data, key, m=24, w=2.0), \
@@ -225,7 +226,8 @@ def fig20_scalability() -> Table:
         gt_i, gt_d = ground_truth(np.asarray(data), np.asarray(queries),
                                   K_ANN)
         det, det_b = timed_once(_build, data)
-        res, det_q = timed_once(det.query, queries, K_ANN, M=12)
+        res, det_q = timed_once(det.search, queries,
+                                SearchRequest(k=K_ANN, M=12))
         pm, pm_b = timed_once(PMLSH.build, data, jax.random.key(0), 15, 0.1)
         (pids, pd), pm_q = timed_once(pm.query, queries, K_ANN)
         t.add(n, det_b, det_q / len(queries), pm_b, pm_q / len(queries),
@@ -240,7 +242,7 @@ def fig21_vary_k() -> Table:
     idx = _build(data)
     for k in (1, 10, 25, 50):
         gt_i, gt_d = ground_truth(np.asarray(data), np.asarray(queries), k)
-        res = idx.query(queries, k=k, M=12)
+        res = idx.search(queries, SearchRequest(k=k, M=12))
         t.add(k, recall(res.ids, gt_i), overall_ratio(res.dists, gt_d))
     return t
 

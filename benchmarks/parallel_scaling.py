@@ -8,6 +8,19 @@ stay identical (Theorem 3).  The speedup column is therefore reported two
 ways: measured wall time (flat on 1 core, by construction) and the
 work-based model T1/(T1/N_w + sync) from per-shard op counts.
 
+Two tables live here:
+
+  * ``fig09_10_12_scaling`` — the structure-partitioned ``build_pdet``
+    runtime (per-shard forests); results across worker counts are
+    measured as top-k *overlap* (different shard partitions may admit
+    different, equally valid candidates).
+  * ``parallel_scaling_smoke`` (``run.py --smoke`` / CI) — the
+    ``repro.api`` PDETIndex (layout-sharded, DESIGN.md §7), where the
+    identical-results check across worker counts is *exact*: ids and
+    distance bit patterns must match at every worker count, and the
+    per-shard candidate counters from ``SearchStats`` feed the work-based
+    speedup model.  Written to BENCH_parallel.json and gated in CI.
+
 Each worker-count runs in a subprocess because XLA fixes the device count
 at first initialization.
 """
@@ -90,3 +103,97 @@ def fig09_10_12_scaling() -> Table:
         t.add(nw, r["t_build"], r["t_query"], r["points_per_worker"],
               model, overlap)
     return t
+
+
+# ---------------------------------------------------------------------------
+# CI smoke: the repro.api PDETIndex, exact identity across worker counts
+# ---------------------------------------------------------------------------
+
+_SMOKE_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={nw}"
+    os.environ["JAX_PLATFORMS"] = "cpu"
+    import json, sys, time
+    sys.path.insert(0, {src!r}); sys.path.insert(0, {root!r})
+    import jax, jax.numpy as jnp, numpy as np
+    import repro
+    from repro.api import IndexSpec, PlacementSpec, SearchRequest
+    from benchmarks.common import make_dataset, make_queries
+
+    n, nq, k = {n}, 16, 10
+    data = jnp.asarray(make_dataset("deep-like", n))
+    queries = jnp.asarray(make_queries(np.asarray(data), nq))
+    spec = IndexSpec(kind="static", K=4, L=8, c=1.5, beta_override=0.05,
+                     leaf_size=64,
+                     placement=PlacementSpec(mesh_shape=({nw},),
+                                             mesh_axes=("data",)))
+    t0 = time.perf_counter()
+    idx = repro.api.build(data, jax.random.key(0), spec)
+    jax.block_until_ready(idx.forest.point_ids)
+    t_build = time.perf_counter() - t0
+    req = SearchRequest(k=k, r_min=0.5)
+    res = idx.search(queries, req)               # warm compile
+    jax.block_until_ready(res.dists)
+    t0 = time.perf_counter()
+    res = idx.search(queries, req)
+    jax.block_until_ready(res.dists)
+    t_query = time.perf_counter() - t0
+    print(json.dumps(dict(
+        nw={nw}, t_build=t_build, t_query=t_query,
+        engine=res.stats.engine,
+        shard_candidates=np.asarray(res.stats.shard_candidates).tolist(),
+        psum_rounds=int(res.stats.psum_rounds),
+        ids=np.asarray(res.ids).tolist(),
+        dist_bits=np.asarray(res.dists).view(np.uint32).tolist())))
+""")
+
+
+def run_parallel_smoke(n: int = 8192, workers=(1, 2, 4),
+                       json_path: str = "BENCH_parallel.json",
+                       out_dir: str = "benchmarks/out") -> Table:
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    t = Table("parallel_scaling_smoke",
+              ["workers", "build_s", "query_s", "cand_per_worker_max",
+               "work_model_speedup", "identical_vs_1w"])
+    rows, base = [], None
+    for nw in workers:
+        script = _SMOKE_SCRIPT.format(nw=nw, n=n,
+                                      src=os.path.join(root, "src"),
+                                      root=root)
+        out = subprocess.run([sys.executable, "-c", script],
+                             capture_output=True, text=True, timeout=1200)
+        if out.returncode != 0:
+            raise RuntimeError(out.stderr[-2000:])
+        r = json.loads(out.stdout.strip().splitlines()[-1])
+        base = base or r
+        # Work model from the *measured* per-shard counters: the slowest
+        # shard bounds the round, plus a log-depth merge term per round.
+        peak = max(r["shard_candidates"])
+        model = max(base["shard_candidates"]) / (
+            peak + 64 * r["psum_rounds"] * nw.bit_length())
+        identical = (r["ids"] == base["ids"]
+                     and r["dist_bits"] == base["dist_bits"])
+        r["identical"] = identical
+        rows.append(r)
+        t.add(nw, r["t_build"], r["t_query"], peak, model, identical)
+
+    identical_all = all(r["identical"] for r in rows)
+    payload = dict(bench="parallel_scaling_smoke",
+                   workload=dict(n=n, nq=16, k=10, workers=list(workers)),
+                   engine=rows[0]["engine"],
+                   identical_across_workers=identical_all,
+                   rows=[{k_: r[k_] for k_ in
+                          ("nw", "t_build", "t_query", "shard_candidates",
+                           "psum_rounds", "identical")} for r in rows])
+    with open(json_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    if not identical_all:
+        raise AssertionError(
+            f"PDET results changed with worker count: {payload}")
+    t.emit(out_dir)
+    return t
+
+
+def parallel_scaling_smoke() -> Table:
+    """run.py --smoke entry point."""
+    return run_parallel_smoke()

@@ -49,20 +49,22 @@ def main(argv=None) -> None:
     ap.add_argument("--fast", action="store_true",
                     help="skip multi-process scaling benchmarks")
     ap.add_argument("--smoke", action="store_true",
-                    help="CI smoke: query/build throughput + snapshot "
-                         "round-trip on small indexes; writes "
-                         "BENCH_{query,build,snapshot}.json and the "
-                         "benchmarks/out/smoke_snapshot artifact")
+                    help="CI smoke: query/build throughput, snapshot "
+                         "round-trip, and PDET worker scaling on small "
+                         "indexes; writes "
+                         "BENCH_{query,build,snapshot,parallel}.json and "
+                         "the benchmarks/out/smoke_snapshot artifact")
     ap.add_argument("--only", default="")
     ap.add_argument("--out-dir", default="benchmarks/out")
     args = ap.parse_args(argv)
 
     if args.smoke:
         from benchmarks import build_throughput as B
+        from benchmarks import parallel_scaling as P
         from benchmarks import query_throughput as Q
         from benchmarks import snapshot_smoke as S
         figures = [Q.query_throughput_smoke, B.build_throughput_smoke,
-                   S.snapshot_smoke]
+                   S.snapshot_smoke, P.parallel_scaling_smoke]
     else:
         figures = _figures(args.fast)
 

@@ -2,12 +2,22 @@
 DET-LSH index — the paper's deployment scenario (rapid index build,
 immediate serving) extended with live traffic: points arrive and disappear
 while queries run, sealing delta segments and triggering compaction.
-Everything goes through the unified ``repro.api`` surface, and the finale
-snapshots the live index and restarts the service from the snapshot —
-no rebuild.
+Everything goes through the unified ``repro.api`` surface, the finale
+snapshots the live index and restarts the service from the snapshot — no
+rebuild — and a last phase serves the *sharded* PDET index on a forced
+4-device host mesh, bit-identical to its single-device twin
+(docs/DESIGN.md §7).
 
   PYTHONPATH=src python examples/vector_search_service.py
 """
+
+import os
+
+# The PDET phase wants a multi-device mesh; on a CPU host we force four
+# host-platform devices (must happen before jax initializes).
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=4")
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import sys
 import tempfile
@@ -20,7 +30,7 @@ import numpy as np
 sys.path.insert(0, "src")
 
 import repro
-from repro.api import IndexSpec
+from repro.api import IndexSpec, PlacementSpec, SearchRequest
 from repro.serving.lsh_service import LSHService
 
 
@@ -102,6 +112,57 @@ def main():
         assert np.array_equal(before[0], after[0])
         assert np.array_equal(before[1], after[1])
         print("restarted service answers bit-identically from the snapshot")
+
+    # Phase 3: the sharded PDET index, served through the same protocols.
+    # The placement is part of the IndexSpec; 'auto' routes to the 'pdet'
+    # engine because the index carries an active mesh, and the answers are
+    # bit-identical to the single-device DETLSH on the same spec minus
+    # placement (DESIGN.md §7) — asserted live below.
+    serve_pdet(data, draw)
+
+
+def serve_pdet(data, draw):
+    n_dev = len(jax.devices())
+    shards = max(s for s in (4, 2, 1) if n_dev >= s)
+    import dataclasses
+    base = IndexSpec(kind="static", K=4, L=8, c=1.5, beta_override=0.05,
+                     leaf_size=64)
+    spec = dataclasses.replace(
+        base, placement=PlacementSpec(mesh_shape=(shards,),
+                                      mesh_axes=("data",)))
+    t0 = time.perf_counter()
+    pdet = repro.api.build(jnp.asarray(data), jax.random.key(7), spec)
+    det = repro.api.build(jnp.asarray(data), jax.random.key(7), base)
+    print(f"\nPDET phase: {shards}-shard mesh "
+          f"({time.perf_counter() - t0:.2f}s for both builds)")
+
+    svc = LSHService(pdet, k=10, max_batch=32, pad_to=32)
+    svc.warmup(data.shape[1])
+    probes = [draw(1)[0] for _ in range(48)]
+    results = svc.serve([(time.perf_counter(), p) for p in probes])
+    print(f"served {len(results)} via PDET: {svc.stats.summary()}")
+
+    req = SearchRequest(k=10, r_min=0.5)
+    a = pdet.search(jnp.asarray(np.stack(probes[:16])), req)
+    b = det.search(jnp.asarray(np.stack(probes[:16])),
+                   SearchRequest(k=10, r_min=0.5, engine="fused"))
+    assert np.array_equal(np.asarray(a.ids), np.asarray(b.ids))
+    assert np.array_equal(np.asarray(a.dists), np.asarray(b.dists))
+    print(f"PDET == DET bit-identical over {shards} shards "
+          f"(engine={a.stats.engine}, per-shard candidates="
+          f"{np.asarray(a.stats.shard_candidates).tolist()}, "
+          f"psum_rounds={int(a.stats.psum_rounds)})")
+
+    # Sharded snapshot: per-shard files, reshard-on-load.
+    with tempfile.TemporaryDirectory() as tmp:
+        pdet.save(tmp)
+        halved = repro.api.load(
+            tmp, placement=PlacementSpec(mesh_shape=(max(shards // 2, 1),),
+                                         mesh_axes=("data",)))
+        c = halved.search(jnp.asarray(np.stack(probes[:16])), req)
+        assert np.array_equal(np.asarray(c.ids), np.asarray(a.ids))
+        print(f"snapshot resharded {shards} -> {halved.n_shards} shards; "
+              f"answers unchanged")
 
 
 if __name__ == "__main__":

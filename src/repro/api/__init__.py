@@ -13,6 +13,15 @@ One protocol (``AnnIndex`` / ``MutableAnnIndex``), one build config
     ...
     index = repro.api.load("snapshots/my-index")   # no rebuild
 
+Device placement is part of the spec (DESIGN.md §7): add a
+``PlacementSpec`` and the same calls build/search/save/load the sharded
+``PDETIndex`` instead — bit-identical answers to the unplaced build::
+
+    spec = repro.api.IndexSpec(
+        K=4, L=16, c=1.5,
+        placement=repro.api.PlacementSpec(mesh_shape=(4,),
+                                          mesh_axes=("data",)))
+
 Deprecation policy: the pre-protocol kwarg surfaces
 (``DETLSH.query`` / ``StreamingDETLSH.query``) remain as thin shims that
 emit ``DeprecationWarning`` and delegate to ``search``; they will be
@@ -32,6 +41,8 @@ __all__ = [
     "LegacyIndexAdapter",
     "as_ann_index",
     "IndexSpec",
+    "PlacementSpec",
+    "PDETIndex",
     "SearchRequest",
     "SearchResult",
     "SearchStats",
@@ -53,6 +64,8 @@ _EXPORTS = {
     "LegacyIndexAdapter": "repro.api.protocol",
     "as_ann_index": "repro.api.protocol",
     "IndexSpec": "repro.api.spec",
+    "PlacementSpec": "repro.api.spec",
+    "PDETIndex": "repro.core.distributed",
     "SearchRequest": "repro.api.request",
     "SearchResult": "repro.api.request",
     "SearchStats": "repro.api.request",
@@ -71,11 +84,16 @@ _EXPORTS = {
 def build(data, key, spec=None):
     """Build an index from an ``IndexSpec`` (the one declarative config).
 
-    Dispatches on ``spec.kind``: 'static' -> ``core.DETLSH.from_spec``,
-    'streaming' -> ``streaming.StreamingDETLSH.from_spec``.
+    Dispatches on ``spec.kind`` and ``spec.placement``: a static spec
+    with a placement -> the sharded ``core.distributed.PDETIndex``;
+    'static' -> ``core.DETLSH.from_spec``; 'streaming' ->
+    ``streaming.StreamingDETLSH.from_spec``.
     """
     from repro.api.spec import IndexSpec
     spec = spec or IndexSpec()
+    if spec.placement is not None:
+        from repro.core.distributed import PDETIndex
+        return PDETIndex.from_spec(data, key, spec)
     if spec.kind == "static":
         from repro.core import DETLSH
         return DETLSH.from_spec(data, key, spec)

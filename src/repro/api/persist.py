@@ -1,29 +1,35 @@
 """Snapshot persistence: ``index.save(path)`` / ``repro.api.load(path)``.
 
-A snapshot is a versioned *directory* (docs/DESIGN.md §6):
+A snapshot is a versioned *directory* (docs/DESIGN.md §6-7):
 
     <path>/
       MANIFEST.json            format + version, kind, LSHParams, IndexSpec,
-                               static shapes, per-segment catalog, cached
-                               r_min estimates
+                               static shapes, per-segment/per-shard catalog,
+                               placement, cached r_min estimates
       arrays.npz               (static) A, data, DE-Forest arrays
       plan.npz                 (static, optional) fused-plan constants
       common.npz               (streaming) A, frozen breakpoints bp_all
+                               (pdet) A, breakpoints
       segment_<id>.npz         (streaming) rows, gids, tombstones, forest
                                [+ fused-plan constants when materialized]
       memtable.npz             (streaming) delta rows / gids / live bitmap
+      shard_<i>.npz            (pdet) one shard's data rows + its slice of
+                               the sharded forest arrays
 
 The contract is *loaded-index ≡ original*: a reloaded index answers every
 search with bit-identical ids and distances on both engines (enforced by
 ``tests/test_persistence.py``), including pre-compaction tombstones and
 un-sealed delta rows for the streaming index.  Everything derivable is
-rebuilt deterministically on load (locators, gid maps); everything that is
-state (tombstones, memtable cursor, next_gid, cached radius estimates) is
-persisted.
+rebuilt deterministically on load (locators, gid maps, fused plans);
+everything that is state (tombstones, memtable cursor, next_gid, cached
+radius estimates) is persisted.  A ``pdet`` snapshot can be loaded onto a
+*different* device count: the shard files concatenate back into the one
+global layout and are resharded onto whatever mesh fits (answers are
+device-count invariant by construction — DESIGN.md §7).
 
 ``load`` refuses snapshots whose ``format_version`` it does not understand
 (``SnapshotFormatError``), so a format change can never be silently
-misread as garbage arrays.
+misread as garbage arrays.  Version 2 added the sharded ``pdet`` kind.
 """
 
 from __future__ import annotations
@@ -36,7 +42,15 @@ from typing import Any, Optional
 import numpy as np
 
 FORMAT_NAME = "repro-ann-snapshot"
-FORMAT_VERSION = 1
+FORMAT_VERSION = 2
+# The stamp records the version that defined the kind's *layout*: the
+# static/streaming layouts are unchanged since version 1 (so previous
+# releases keep reading snapshots this build writes), while version 2
+# added the sharded 'pdet' kind.  Reading accepts the supported set, so
+# upgrading in either direction never forces the rebuild the persistence
+# feature exists to avoid; anything else is a SnapshotFormatError.
+SUPPORTED_FORMAT_VERSIONS = (1, 2)
+_KIND_FORMAT_VERSIONS = {"static": 1, "streaming": 1, "pdet": 2}
 
 
 class SnapshotFormatError(ValueError):
@@ -117,11 +131,11 @@ def _read_manifest(path: str) -> dict:
             f"{path!r}: manifest format {manifest.get('format')!r} is not "
             f"{FORMAT_NAME!r}")
     ver = manifest.get("format_version")
-    if ver != FORMAT_VERSION:
+    if ver not in SUPPORTED_FORMAT_VERSIONS:
         raise SnapshotFormatError(
             f"{path!r}: snapshot format_version {ver!r} is not supported "
-            f"by this build (wants {FORMAT_VERSION}); re-save the index "
-            f"with a matching version of repro")
+            f"by this build (supported: {SUPPORTED_FORMAT_VERSIONS}); "
+            f"re-save the index with a matching version of repro")
     return manifest
 
 
@@ -152,7 +166,8 @@ def save_static(index, path: str) -> None:
     _drop_stale_npz(path, {"arrays.npz"} | ({"plan.npz"} if has_plan
                                             else set()))
     _write_manifest(path, {
-        "format": FORMAT_NAME, "format_version": FORMAT_VERSION,
+        "format": FORMAT_NAME,
+        "format_version": _KIND_FORMAT_VERSIONS["static"],
         "kind": "static",
         "params": dataclasses.asdict(index.params),
         "forest": {"n": index.forest.n,
@@ -219,7 +234,8 @@ def save_streaming(index, path: str) -> None:
     if rmin_tag != (index.manifest.version, mt.version):
         rmin_entries = {}
     _write_manifest(path, {
-        "format": FORMAT_NAME, "format_version": FORMAT_VERSION,
+        "format": FORMAT_NAME,
+        "format_version": _KIND_FORMAT_VERSIONS["streaming"],
         "kind": "streaming",
         "params": dataclasses.asdict(index.params),
         "Nr": index.Nr, "leaf_size": index.leaf_size,
@@ -288,6 +304,116 @@ def _load_streaming(path: str, manifest: dict):
 
 
 # ---------------------------------------------------------------------------
+# Sharded (pdet) index
+# ---------------------------------------------------------------------------
+
+_PDET_POINT_KEYS = ("point_ids", "proj_sorted", "codes_sorted", "valid")
+_PDET_LEAF_KEYS = ("leaf_lo", "leaf_hi", "leaf_valid")
+
+
+def save_pdet(index, path: str) -> None:
+    """Snapshot a ``core.distributed.PDETIndex`` as per-shard files.
+
+    One ``shard_<i>.npz`` per layout shard (its data rows + its slice of
+    every position/leaf-sharded forest array) plus the shard map in
+    MANIFEST.json — each file is one device's working set, so a shard
+    never has to be materialized whole on another host to be written."""
+    os.makedirs(path, exist_ok=True)
+    forest = index.forest
+    S = index.placement.n_shards
+    n = index.data.shape[0]
+    n_pad = forest.point_ids.shape[1]
+    n_leaves = forest.leaf_valid.shape[1]
+    # Positions/leaves divide exactly (the layout is padded to a shard
+    # multiple at build); data rows may not — split as evenly as possible.
+    pos, leaves = n_pad // S, n_leaves // S
+    row_bounds = [round(s * n / S) for s in range(S + 1)]
+    np.savez(os.path.join(path, "common.npz"),
+             A=np.asarray(index.A),
+             breakpoints=np.asarray(forest.breakpoints))
+    shard_entries = []
+    for s in range(S):
+        fname = f"shard_{s:05d}.npz"
+        arrays = {"data": np.asarray(
+            index.data[row_bounds[s]:row_bounds[s + 1]])}
+        for k in _PDET_POINT_KEYS:
+            arrays[k] = np.asarray(
+                getattr(forest, k)[:, s * pos:(s + 1) * pos])
+        for k in _PDET_LEAF_KEYS:
+            arrays[k] = np.asarray(
+                getattr(forest, k)[:, s * leaves:(s + 1) * leaves])
+        np.savez(os.path.join(path, fname), **arrays)
+        shard_entries.append({
+            "shard": s, "file": fname,
+            "rows": [row_bounds[s], row_bounds[s + 1]],
+            "positions": [s * pos, (s + 1) * pos],
+            "leaves": [s * leaves, (s + 1) * leaves],
+        })
+    _drop_stale_npz(path, {"common.npz"}
+                    | {e["file"] for e in shard_entries})
+    _write_manifest(path, {
+        "format": FORMAT_NAME,
+        "format_version": _KIND_FORMAT_VERSIONS["pdet"],
+        "kind": "pdet",
+        "params": dataclasses.asdict(index.params),
+        "forest": {"n": forest.n, "leaf_size": forest.leaf_size},
+        "spec": _spec_dict(index),
+        "placement": index.placement.to_dict(),
+        "shards": shard_entries,
+        "r_min_cache": _rmin_dump(index._r_min_cache),
+    })
+
+
+def _fit_placement(saved):
+    """Reshard-on-load policy: keep the saved placement when this process
+    has enough devices for it, else fall back to the widest single-axis
+    ('data',) placement — so a pdet snapshot loads anywhere (the layout
+    pads itself to any shard count; answers are identical regardless)."""
+    import jax
+    from repro.api.spec import PlacementSpec
+    avail = len(jax.devices())
+    if saved is not None and saved.n_devices <= avail:
+        return saved
+    return PlacementSpec(mesh_shape=(avail,), mesh_axes=("data",))
+
+
+def _load_pdet(path: str, manifest: dict, placement=None):
+    import jax.numpy as jnp
+    from repro.api.spec import PlacementSpec
+    from repro.core import DETLSH
+    from repro.core.detree import DEForest
+    from repro.core.distributed import PDETIndex
+
+    common = np.load(os.path.join(path, "common.npz"))
+    entries = sorted(manifest["shards"], key=lambda e: e["shard"])
+    shards = [np.load(os.path.join(path, e["file"])) for e in entries]
+    parts = {k: np.concatenate([sh[k] for sh in shards], axis=1)
+             for k in _PDET_POINT_KEYS + _PDET_LEAF_KEYS}
+    meta = manifest["forest"]
+    forest = DEForest(n=int(meta["n"]), leaf_size=int(meta["leaf_size"]),
+                      breakpoints=jnp.asarray(common["breakpoints"]),
+                      **{k: jnp.asarray(v) for k, v in parts.items()})
+    data = jnp.asarray(np.concatenate([sh["data"] for sh in shards],
+                                      axis=0))
+    spec = _spec_from(manifest.get("spec"))
+    base_spec = (dataclasses.replace(spec, placement=None)
+                 if spec is not None else None)
+    det = DETLSH(params=_params_from(manifest["params"]),
+                 A=jnp.asarray(common["A"]), forest=forest, data=data,
+                 spec=base_spec)
+    det._r_min_cache.update(_rmin_load(manifest.get("r_min_cache")))
+    saved = PlacementSpec.from_dict(manifest["placement"])
+    eff = placement if placement is not None else _fit_placement(saved)
+    # The attached spec must describe the index as it now lives: a
+    # resharded load carries the *effective* placement, not the saved one
+    # (otherwise spec.placement would contradict index.placement and the
+    # contradiction would be written back into the manifest on re-save).
+    if spec is not None and spec.placement != eff:
+        spec = dataclasses.replace(spec, placement=eff)
+    return PDETIndex.from_detlsh(det, eff, spec=spec)
+
+
+# ---------------------------------------------------------------------------
 # Entry points
 # ---------------------------------------------------------------------------
 
@@ -297,15 +423,26 @@ def save(index, path: str) -> None:
     index.save(path)
 
 
-def load(path: str) -> Any:
+def load(path: str, placement=None) -> Any:
     """Read a snapshot directory back into a live index.
 
-    Returns a ``core.DETLSH`` or ``streaming.StreamingDETLSH`` according
-    to the manifest's ``kind``; raises ``SnapshotFormatError`` on any
-    format/version mismatch.
+    Returns a ``core.DETLSH``, ``streaming.StreamingDETLSH``, or
+    ``core.distributed.PDETIndex`` according to the manifest's ``kind``;
+    raises ``SnapshotFormatError`` on any format/version mismatch.
+
+    ``placement`` applies to sharded (pdet) snapshots only: it overrides
+    the reshard-on-load policy (default: the saved placement when it fits
+    this process's devices, else the widest fitting ('data',) mesh).
+    Answers are identical either way — the pdet layout is device-count
+    invariant (DESIGN.md §7).
     """
     manifest = _read_manifest(path)
     kind = manifest.get("kind")
+    if kind == "pdet":
+        return _load_pdet(path, manifest, placement)
+    if placement is not None:
+        raise ValueError(f"placement= only applies to sharded (pdet) "
+                         f"snapshots; this one is kind={kind!r}")
     if kind == "static":
         return _load_static(path, manifest)
     if kind == "streaming":

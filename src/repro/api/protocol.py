@@ -1,15 +1,15 @@
-"""The AnnIndex protocol — the one index surface (docs/DESIGN.md §6).
+"""The AnnIndex protocol — the one index surface (docs/DESIGN.md §6-7).
 
-Both ``core.DETLSH`` (static) and ``streaming.StreamingDETLSH`` (mutable)
-satisfy ``AnnIndex``; the streaming index additionally satisfies
-``MutableAnnIndex``.  ``serving.LSHService`` talks only to these protocols
-— capability checks are ``isinstance`` against a protocol, never
-``hasattr`` duck-typing.
+``core.DETLSH`` (static), ``streaming.StreamingDETLSH`` (mutable), and
+``core.distributed.PDETIndex`` (sharded) all satisfy ``AnnIndex``; the
+streaming index additionally satisfies ``MutableAnnIndex``.
+``serving.LSHService`` talks only to these protocols — capability checks
+are ``isinstance`` against a protocol, never ``hasattr`` duck-typing.
 
 ``as_ann_index`` adapts pre-protocol objects (anything with a
-``query(queries, k=...)`` method — the PDET shard_map index, baselines,
-user code) so legacy indexes keep serving; the adapter is where the old
-signature introspection now lives, in one place.
+``query(queries, k=...)`` method — the legacy per-shard ``PDETLSH``,
+baselines, user code) so legacy indexes keep serving; the adapter is
+where the old signature introspection now lives, in one place.
 """
 
 from __future__ import annotations

@@ -1,12 +1,15 @@
-"""Query-engine registry (docs/DESIGN.md §6).
+"""Query-engine registry (docs/DESIGN.md §6-7).
 
 Engines are the batched c^2-k-ANN execution strategies.  ``core/query.py``
-registers the two built-in ones at import time:
+and ``core/distributed.py`` register the built-in ones at import time:
 
   * ``vmap``  — the per-query ``while_loop``, vmapped; supports both
     admission modes ('leaf' and the unoptimized 'strict' Alg. 3 filter).
   * ``fused`` — the one-pass Pallas range_rerank engine; 'leaf' mode only,
     amortized at batch >= its ``min_batch``.
+  * ``pdet``  — the shard_map'd fused round over a mesh-sharded layout
+    (paper Alg. 8); 'leaf' mode only, and only available when an active
+    mesh is declared (``needs_mesh``).
 
 ``resolve_engine`` replaces the old ``_pick_engine`` string matching with
 explicit, documented rules:
@@ -14,15 +17,23 @@ explicit, documented rules:
   1. an unknown name raises immediately (with the valid names);
   2. an explicitly requested engine that does not support the requested
      mode falls back to the best engine that does — this is the
-     strict-mode fallback (fused -> vmap), now a registry rule rather
-     than a special case buried in the dispatcher;
+     strict-mode fallback (fused/pdet -> vmap), now a registry rule
+     rather than a special case buried in the dispatcher;
   3. ``'auto'`` picks the highest-priority engine supporting the mode
      whose ``min_batch`` the (static) batch size meets, falling back to
-     the lowest-``min_batch`` eligible engine.
+     the lowest-``min_batch`` eligible engine;
+  4. a ``needs_mesh`` engine is eligible only when the caller declares an
+     active mesh (``mesh_devices=``) — a multi-device mesh or an
+     explicitly forced single/host-device one both count (constructing a
+     ``PlacementSpec`` is the opt-in); ``'auto'`` therefore prefers
+     ``pdet`` exactly when a mesh is active, and an *explicit*
+     ``engine='pdet'`` without a mesh raises (running the sharded round
+     without a placement cannot mean anything).
 
 The registry is deliberately dependency-free so ``repro.api`` stays
 importable without pulling the kernel stack; resolving lazily imports
-``repro.core.query`` to guarantee the built-ins are registered.
+``repro.core.query`` / ``repro.core.distributed`` to guarantee the
+built-ins are registered.
 """
 
 from __future__ import annotations
@@ -49,6 +60,7 @@ class EngineSpec:
     min_batch: int = 1
     priority: int = 0
     doc: str = ""
+    needs_mesh: bool = False   # eligible only with a declared active mesh
 
 
 _ENGINES: dict = {}
@@ -56,13 +68,13 @@ _ENGINES: dict = {}
 
 def register_engine(name: str, run: Callable, *, modes=("leaf",),
                     min_batch: int = 1, priority: int = 0,
-                    doc: str = "") -> EngineSpec:
+                    doc: str = "", needs_mesh: bool = False) -> EngineSpec:
     """Register (or replace) a query engine under ``name``."""
     if name == AUTO:
         raise ValueError(f"'{AUTO}' is reserved for engine resolution")
     spec = EngineSpec(name=name, run=run, modes=frozenset(modes),
                       min_batch=int(min_batch), priority=int(priority),
-                      doc=doc)
+                      doc=doc, needs_mesh=bool(needs_mesh))
     _ENGINES[name] = spec
     return spec
 
@@ -71,13 +83,15 @@ _builtins_loaded = False
 
 
 def _ensure_builtins() -> None:
-    # core/query.py registers 'vmap' and 'fused' as an import side effect.
-    # Guarded by a flag, not by `_ENGINES` being empty: a custom engine
-    # registered before the first resolve must not mask the built-ins.
+    # core/query.py registers 'vmap' and 'fused', core/distributed.py
+    # registers 'pdet', both as import side effects.  Guarded by a flag,
+    # not by `_ENGINES` being empty: a custom engine registered before the
+    # first resolve must not mask the built-ins.
     global _builtins_loaded
     if not _builtins_loaded:
         _builtins_loaded = True
         import repro.core.query  # noqa: F401
+        import repro.core.distributed  # noqa: F401
 
 
 def available_engines() -> tuple:
@@ -104,20 +118,34 @@ def validate_engine_name(name: Optional[str]) -> None:
 
 
 def resolve_engine(requested: Optional[str], *, mode: str = "leaf",
-                   batch: Optional[int] = None) -> str:
+                   batch: Optional[int] = None,
+                   mesh_devices: Optional[int] = None) -> str:
     """Map a requested engine (or 'auto' / None) to a concrete engine name.
 
-    See the module docstring for the three rules.  ``batch`` is the static
+    See the module docstring for the four rules.  ``batch`` is the static
     batch size when known; None means "assume large enough".
+    ``mesh_devices`` declares an active device mesh (its device count);
+    None means "no mesh" and excludes ``needs_mesh`` engines (rule 4).
+    An explicitly constructed single-device (forced host) mesh counts —
+    pass ``mesh_devices=1``.
     """
     _ensure_builtins()
     requested = AUTO if requested is None else requested
-    eligible = sorted((s for s in _ENGINES.values() if mode in s.modes),
-                      key=lambda s: -s.priority)
+    eligible = sorted(
+        (s for s in _ENGINES.values()
+         if mode in s.modes and (mesh_devices is not None
+                                 or not s.needs_mesh)),
+        key=lambda s: -s.priority)
     if not eligible:
         raise ValueError(f"no registered engine supports mode={mode!r}")
     if requested != AUTO:
         spec = get_engine(requested)
+        if spec.needs_mesh and mesh_devices is None:
+            raise ValueError(
+                f"engine {requested!r} needs an active device mesh; build "
+                f"the index with an IndexSpec placement (or pass "
+                f"mesh_devices=) — without a mesh the sharded round has "
+                f"nothing to shard over")
         if mode in spec.modes:
             return spec.name
         return eligible[0].name          # explicit mode fallback (rule 2)

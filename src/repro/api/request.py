@@ -93,14 +93,26 @@ class SearchRequest:
 
 
 class SearchStats(NamedTuple):
-    """Per-search diagnostics surfaced by every ``AnnIndex.search``."""
+    """Per-search diagnostics surfaced by every ``AnnIndex.search``.
 
-    engine: str              # concrete engine that ran ('fused' | 'vmap')
+    The last three fields are populated by the sharded ``pdet`` engine
+    only (None elsewhere): per-shard work counters that make the Alg. 8
+    fan-out observable through the typed surface (DESIGN.md §7).
+    """
+
+    engine: str              # concrete engine that ran ('fused' | 'vmap' ...)
     r_min: float             # starting radius actually used
     r_min_cached: bool       # True when it came from the per-(index,k) cache
     rounds: Any              # (B,) int32 — radius enlargements + 1 per lane
     n_candidates: Any        # (B,) int32 — |S| at termination
     final_r: Any             # (B,) f32
+    shard_candidates: Any = None  # (n_shards,) f32 — (point, tree) entries
+    #                               scanned per shard, summed over lanes/rounds
+    #                               (f32: an int32 count would wrap at scale)
+    psum_rounds: Any = None       # () int32 — lockstep radius rounds, i.e.
+    #                               cross-shard termination reductions issued
+    merge_size: Any = None        # int — elements in each cross-shard merge
+    #                               (the pmin'd B x n candidate table)
 
 
 class SearchResult(NamedTuple):

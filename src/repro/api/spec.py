@@ -7,6 +7,14 @@ record that validates eagerly, lowers to ``LSHParams`` via
 ``derive_params``, and round-trips through the snapshot manifest
 (``to_dict``/``from_dict``), so a persisted index remembers exactly how it
 was built.
+
+Device placement is part of the spec (DESIGN.md §7): ``PlacementSpec``
+names the mesh axes and per-axis device counts, and says which axes the
+index layout shards over (everything else — A, breakpoints, queries —
+replicates, following the ``sharding/rules.py`` convention of logical
+names mapped to mesh axes).  A spec with a placement builds the sharded
+``PDETIndex``; the same spec minus placement builds the single-device
+``DETLSH`` that the PDET == DET equivalence contract compares against.
 """
 
 from __future__ import annotations
@@ -19,6 +27,98 @@ from repro.api.request import IMPLS, _check_choice, _check_positive
 
 KINDS = ("static", "streaming")
 BREAKPOINT_METHODS = ("sample_sort", "full_sort", "histogram_refine")
+
+# Logical array axes the PDET layout knows how to place.  'points' (data
+# rows / code-sorted positions) and 'leaves' (leaf summaries) shard over
+# the placement's data axes; everything else replicates.  Mirrors the
+# logical-name -> mesh-axes convention of ``sharding/rules.py``.
+PLACEMENT_LOGICAL_AXES = ("points", "leaves")
+
+
+@dataclasses.dataclass(frozen=True)
+class PlacementSpec:
+    """Where a sharded index lives: mesh shape/axes + shard-vs-replicate.
+
+    ``mesh_shape``/``mesh_axes`` define the device mesh (e.g. ``(4,)`` over
+    ``('data',)``, or ``(2, 2)`` over ``('pod', 'data')``).  ``data_axes``
+    is the subset of mesh axes the index layout shards over (default: all
+    of them).  An explicit placement counts as a "forced mesh" for the
+    ``pdet`` engine's registry rule even at one device — constructing it
+    is the opt-in.
+    """
+
+    mesh_shape: tuple = (1,)
+    mesh_axes: tuple = ("data",)
+    data_axes: Optional[tuple] = None      # default: all mesh axes
+
+    def __post_init__(self):
+        shape = tuple(int(s) for s in self.mesh_shape)
+        axes = tuple(self.mesh_axes)
+        object.__setattr__(self, "mesh_shape", shape)
+        object.__setattr__(self, "mesh_axes", axes)
+        if len(shape) != len(axes):
+            raise ValueError(
+                f"mesh_shape {shape} and mesh_axes {axes} must have the "
+                f"same length (one device count per axis name)")
+        if not shape:
+            raise ValueError("placement needs at least one mesh axis")
+        for s in shape:
+            if s < 1:
+                raise ValueError(f"mesh axis sizes must be >= 1, got {shape}")
+        for a in axes:
+            if not isinstance(a, str) or not a:
+                raise ValueError(f"mesh axis names must be non-empty "
+                                 f"strings, got {axes!r}")
+        if len(set(axes)) != len(axes):
+            raise ValueError(f"duplicate mesh axis names in {axes!r}")
+        data_axes = axes if self.data_axes is None \
+            else tuple(self.data_axes)
+        unknown = [a for a in data_axes if a not in axes]
+        if unknown:
+            raise ValueError(f"data_axes {unknown} are not mesh axes "
+                             f"(mesh has {axes})")
+        if len(set(data_axes)) != len(data_axes) or not data_axes:
+            raise ValueError(f"data_axes must be a non-empty subset of the "
+                             f"mesh axes without repeats, got {data_axes!r}")
+        object.__setattr__(self, "data_axes", data_axes)
+
+    @property
+    def n_devices(self) -> int:
+        out = 1
+        for s in self.mesh_shape:
+            out *= s
+        return out
+
+    @property
+    def n_shards(self) -> int:
+        """Product of mesh sizes over the data axes — the shard count the
+        index layout (and the sharded snapshot) is cut into."""
+        sizes = dict(zip(self.mesh_axes, self.mesh_shape))
+        out = 1
+        for a in self.data_axes:
+            out *= sizes[a]
+        return out
+
+    def rules(self) -> dict:
+        """Logical-axis -> mesh-axes map, ``sharding/rules.py`` style."""
+        return {name: self.data_axes for name in PLACEMENT_LOGICAL_AXES}
+
+    def to_dict(self) -> dict:
+        return {"mesh_shape": list(self.mesh_shape),
+                "mesh_axes": list(self.mesh_axes),
+                "data_axes": list(self.data_axes)}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "PlacementSpec":
+        known = {"mesh_shape", "mesh_axes", "data_axes"}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"unknown PlacementSpec fields: "
+                             f"{sorted(unknown)} (format drift?)")
+        return cls(mesh_shape=tuple(d["mesh_shape"]),
+                   mesh_axes=tuple(d["mesh_axes"]),
+                   data_axes=tuple(d["data_axes"]) if d.get("data_axes")
+                   else None)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,6 +153,8 @@ class IndexSpec:
     delta_capacity: int = 512
     max_segments: int = 4
     id_capacity: Optional[int] = None
+    # --- device placement (None = single device; DESIGN.md §7) ---
+    placement: Optional[PlacementSpec] = None
 
     def __post_init__(self):
         _check_choice("kind", self.kind, KINDS)
@@ -77,6 +179,19 @@ class IndexSpec:
         _check_positive("max_segments", self.max_segments)
         if self.id_capacity is not None:
             _check_positive("id_capacity", self.id_capacity)
+        if self.placement is not None:
+            if isinstance(self.placement, dict):
+                object.__setattr__(self, "placement",
+                                   PlacementSpec.from_dict(self.placement))
+            elif not isinstance(self.placement, PlacementSpec):
+                raise ValueError(
+                    f"placement must be a PlacementSpec (or its dict form), "
+                    f"got {type(self.placement).__name__}")
+            if self.kind != "static":
+                raise ValueError(
+                    f"placement is only supported for kind='static' (the "
+                    f"sharded PDET index); kind={self.kind!r} cannot be "
+                    f"placed on a mesh yet")
 
     def derive_params(self):
         """Solve the Lemma 3 system for this spec -> ``LSHParams``."""

@@ -22,24 +22,39 @@ Determinism/equivalence: ``serial_reference_*`` run the identical sharded
 algorithm as plain vmapped code on one device; tests assert the shard_map
 version returns exactly the same ids/distances (the PDET == DET claim,
 Fig. 20/21).
+
+Two sharded runtimes live here (DESIGN.md §7):
+
+  * ``PDETLSH`` / ``build_pdet`` — the *structure-partitioned* runtime
+    above (per-shard forests, work-partitioned build).  Kept for the
+    parallel-build benchmarks and the serial-reference equivalence tests.
+  * ``PDETIndex`` — the *layout-partitioned* runtime behind ``repro.api``:
+    the one global forest sharded across the mesh, queried by the fused
+    round with an exact ``pmin`` merge, making PDET == DET a bit-identical
+    API contract for any device count.  This is the index ``repro.api.build``
+    returns for an ``IndexSpec`` with a ``placement`` and the ``pdet``
+    entry in the engine registry.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Sequence
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.api import registry as engine_registry
 from repro.sharding.compat import shard_map
 
 from repro.core import encoding as enc
 from repro.core import hashing
 from repro.core.detree import DEForest, build_tree
-from repro.core.query import QueryConfig, _merge_candidates
+from repro.core.query import (FusedPlan, QueryConfig, QueryResult,
+                              _merge_candidates, fused_round_update,
+                              fused_topk, knn_query_batch)
 from repro.core.theory import LSHParams
 
 
@@ -387,3 +402,395 @@ def serial_reference_query(data: jax.Array, A: jax.Array, parts: dict,
         out_ids.append(cat_i[sel])
         out_d.append(-negd)
     return jnp.stack(out_ids), jnp.stack(out_d)
+
+
+# ===========================================================================
+# PDETIndex: the protocol-level sharded index (repro.api; DESIGN.md §7)
+# ===========================================================================
+#
+# ``PDETLSH`` above partitions the *structure*: each device builds its own
+# complete forest over its data shard.  That parallelizes the build (Alg. 7)
+# but per-shard leaf partitions admit different candidate sets than the one
+# global forest, so its equivalence to DET-LSH is statistical, not exact.
+#
+# ``PDETIndex`` instead partitions the *layout* of the one global forest
+# (paper Alg. 8, the serving-critical phase): the code-sorted point arrays
+# and leaf summaries are sharded over the mesh's data axes (a shard owns
+# whole leaves), queries/A/breakpoints replicate, and each radius round is
+# the fused engine's round run shard-locally, merged across shards with
+# ``pmin`` — which is *exact* (min is associative and commutative in fp32,
+# unlike add).  Every (tree, point) distance lives on exactly one shard and
+# is computed by the identical kernel tile, so the merged per-id table —
+# and therefore T1/T2, the lockstep radius schedule, and the final top-k —
+# are bit-identical to ``fused_query_batch`` on one device, for ANY shard
+# count.  The PDET == DET claim (paper Fig. 20/21) is thereby an exact API
+# contract, not a statistical one (tests/test_pdet_api.py).
+
+
+def _pdet_partition_specs(data_axes: tuple):
+    """PartitionSpecs of the PDET layout, logical-name style
+    (``sharding/rules.py`` conventions: 'points'/'leaves' shard over the
+    placement's data axes, everything else replicates)."""
+    ax = tuple(data_axes)
+    return {
+        "data": P(ax),                      # (n, d) rows
+        "points": P(None, ax),              # (L, n_pad) sorted positions
+        "points_k": P(None, ax, None),      # (L, n_pad, K|d)
+        "leaves": P(None, ax),              # (L, n_leaves)
+        "leaves_k": P(None, ax, None),      # (L, n_leaves, K)
+        "replicated": P(),
+    }
+
+
+def _forest_pdet_specs(forest: DEForest, specs: dict) -> DEForest:
+    return DEForest(
+        point_ids=specs["points"], proj_sorted=specs["points_k"],
+        codes_sorted=specs["points_k"], valid=specs["points"],
+        leaf_lo=specs["leaves_k"], leaf_hi=specs["leaves_k"],
+        leaf_valid=specs["leaves"], breakpoints=specs["replicated"],
+        n=forest.n, leaf_size=forest.leaf_size)
+
+
+def _pad_layout_to_shards(forest: DEForest, plan: FusedPlan,
+                          n_shards: int) -> tuple:
+    """Pad the leaf axis (and the matching point slots) so every shard
+    owns the same number of whole leaves.  Padding leaves are invalid
+    (never admitted) and padding point slots carry ``valid=False`` and
+    the ``n`` sentinel id, so no answer can change; real sorted positions
+    keep their indices (padding appends), so ``inv_perm`` is untouched."""
+    n_leaves = forest.n_leaves
+    pad_l = (-n_leaves) % n_shards
+    if pad_l == 0:
+        return forest, plan
+    pad_p = pad_l * forest.leaf_size
+
+    def pad(x, width, value):
+        widths = [(0, 0)] * x.ndim
+        widths[1] = (0, width)
+        return jnp.pad(x, widths, constant_values=value)
+
+    forest = DEForest(
+        n=forest.n, leaf_size=forest.leaf_size,
+        point_ids=pad(forest.point_ids, pad_p, forest.n),
+        proj_sorted=pad(forest.proj_sorted, pad_p, 0.0),
+        codes_sorted=pad(forest.codes_sorted, pad_p, 0),
+        valid=pad(forest.valid, pad_p, False),
+        leaf_lo=pad(forest.leaf_lo, pad_l, 0),
+        leaf_hi=pad(forest.leaf_hi, pad_l, 0),
+        leaf_valid=pad(forest.leaf_valid, pad_l, False),
+        breakpoints=forest.breakpoints)
+    plan = FusedPlan(points_sorted=pad(plan.points_sorted, pad_p, 0.0),
+                     inv_perm=plan.inv_perm)
+    return forest, plan
+
+
+def pdet_query_batch(forest: DEForest, A: jax.Array, params: LSHParams,
+                     queries: jax.Array, cfg: QueryConfig, plan: FusedPlan,
+                     mesh: Mesh, axes: tuple, *,
+                     n_active=None):
+    """Sharded fused c^2-k-ANN round loop (Alg. 8 over the global layout).
+
+    Per round, each shard runs one ``range_rerank`` pass over its own
+    leaves/points, folds its tree rows into id space through the (global)
+    inverse permutation, and the shards merge with an exact ``pmin``; the
+    replicated best-distance table then steps through the *same*
+    ``fused_round_update`` as the single-device fused engine — see the
+    section comment for why this makes the result bit-identical.
+
+    Returns ``(QueryResult, shard_candidates)`` where ``shard_candidates``
+    is the (n_shards,) count of (tree, point) entries scanned per shard.
+    """
+    n = forest.n
+    B = queries.shape[0]
+    K, L = params.K, params.L
+    n_pad = forest.point_ids.shape[1]
+    n_shards = 1
+    for a in axes:
+        n_shards *= mesh.shape[a]
+    n_local = n_pad // n_shards
+    thresh = jnp.asarray(params.beta * n + cfg.k, jnp.float32)
+    interpret = cfg.dist_impl == "pallas_interpret"
+    q_proj = (queries @ A).reshape(B, L, K).transpose(1, 0, 2)   # (L, B, K)
+    done0 = (jnp.zeros((B,), jnp.bool_) if n_active is None
+             else jnp.arange(B) >= jnp.asarray(n_active))
+
+    from repro.kernels import ops as kops
+    specs = _pdet_partition_specs(axes)
+
+    def run(pts_local, valid_local, lo, hi, lv, bp, inv_perm, q, qp, done0):
+        sidx = jnp.asarray(0, jnp.int32)
+        for a in axes:          # row-major over axes — matches device_put
+            sidx = sidx * mesh.shape[a] + jax.lax.axis_index(a)
+        off = sidx * n_local
+
+        def cond(state):
+            rnd, rounds, r, done, best, scanned = state
+            return jnp.any(~done) & (rnd < cfg.max_rounds)
+
+        def body(state):
+            rnd, rounds, r, done, best, scanned = state
+            r_eff = jnp.where(done, -1.0, params.epsilon * r)    # lane mask
+            dmat = kops.range_rerank(
+                q, qp, r_eff, lo, hi, lv, bp, pts_local, valid_local, None,
+                leaf_size=forest.leaf_size, interpret=interpret,
+                block_q=cfg.block_q, block_l=cfg.block_l)  # (L, B, n_local)
+            # f32 accumulator: an int32 count wraps negative on large
+            # (L, B, n_local) workloads (int64 needs x64); this is a work
+            # counter, so f32's rounding at scale beats wrap-around.
+            scanned = scanned + jnp.sum(jnp.isfinite(dmat),
+                                        dtype=jnp.float32)
+            # Fold this shard's tree rows into id space: a point's sorted
+            # position is local iff it falls in [off, off + n_local).
+            rel = inv_perm - off                                 # (L, n)
+            here = (rel >= 0) & (rel < n_local)
+            safe = jnp.clip(rel, 0, n_local - 1)
+            g = jnp.take_along_axis(dmat, safe[:, None, :], axis=2)
+            g = jnp.where(here[:, None, :], g, jnp.inf)
+            by_id = jnp.min(g, axis=0)                           # (B, n)
+            by_id = jax.lax.pmin(by_id, axes)    # exact cross-shard merge
+            best, r, done, rounds = fused_round_update(
+                best, by_id, r, done, rounds, rnd, params=params, k=cfg.k,
+                thresh=thresh)
+            return rnd + 1, rounds, r, done, best, scanned
+
+        state0 = (jnp.asarray(0, jnp.int32), jnp.zeros((B,), jnp.int32),
+                  jnp.full((B,), cfg.r_min, jnp.float32), done0,
+                  jnp.full((B, n), jnp.inf, jnp.float32),
+                  jnp.asarray(0.0, jnp.float32))
+        rnd, rounds, r, done, best, scanned = jax.lax.while_loop(
+            cond, body, state0)
+        ids, dists, count = fused_topk(best, cfg.k, n)
+        return ids, dists, rounds, count, r, scanned[None]
+
+    in_specs = (specs["points_k"], specs["points"], specs["leaves_k"],
+                specs["leaves_k"], specs["leaves"], P(), P(), P(), P(), P())
+    out_specs = (P(), P(), P(), P(), P(), P(axes))
+    ids, dists, rounds, count, r, scanned = shard_map(
+        run, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_vma=False)(
+            plan.points_sorted, forest.valid, forest.leaf_lo,
+            forest.leaf_hi, forest.leaf_valid, forest.breakpoints,
+            plan.inv_perm, queries, q_proj, done0)
+    res = QueryResult(ids=ids, dists=dists, rounds=rounds,
+                      n_candidates=count, final_r=r)
+    return res, scanned
+
+
+@dataclasses.dataclass
+class PDETIndex:
+    """The sharded PDET-LSH index behind the ``repro.api`` surface.
+
+    Satisfies the ``AnnIndex`` protocol end-to-end: built from an
+    ``IndexSpec`` whose ``placement`` names the mesh, searched through
+    ``SearchRequest``/``SearchResult`` via the ``pdet`` engine (with
+    per-shard counters in ``SearchStats``), snapshotted as per-shard files
+    (``repro.api.load`` reshards onto whatever device count is present),
+    and served by ``LSHService`` purely through the protocols.
+    """
+
+    params: LSHParams
+    A: jax.Array               # replicated
+    forest: DEForest           # the ONE global forest, layout-sharded
+    data: jax.Array            # (n, d), rows sharded over the data axes
+    plan: FusedPlan            # points_sorted sharded, inv_perm replicated
+    mesh: Mesh
+    placement: "object"        # repro.api.PlacementSpec
+    spec: Optional["object"] = dataclasses.field(
+        default=None, repr=False, compare=False)
+    _r_min_cache: dict = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
+
+    # ------------------------------------------------------------------
+    # Build
+    # ------------------------------------------------------------------
+
+    @classmethod
+    def from_spec(cls, data: jax.Array, key: jax.Array, spec, *,
+                  mesh: Optional[Mesh] = None) -> "PDETIndex":
+        """Build from an ``IndexSpec`` with a ``placement``.
+
+        The forest is built by the *identical* code path as
+        ``DETLSH.from_spec`` on the same spec minus placement (same key,
+        same arrays — the foundation of the bit-identity contract), then
+        the layout is sharded onto the placement's mesh.
+        """
+        placement = spec.placement
+        if placement is None:
+            raise ValueError("PDETIndex.from_spec needs spec.placement "
+                             "(use repro.api.build for unplaced specs)")
+        from repro.core import DETLSH
+        base_spec = dataclasses.replace(spec, placement=None)
+        det = DETLSH.from_spec(data, key, base_spec)
+        return cls.from_detlsh(det, placement, mesh=mesh, spec=spec)
+
+    @classmethod
+    def from_detlsh(cls, det, placement, *, mesh: Optional[Mesh] = None,
+                    spec=None) -> "PDETIndex":
+        """Shard an already-built single-device index onto a mesh.
+
+        When the leaf count is not a multiple of the shard count, the
+        layout is padded with *invalid* leaves (and their empty point
+        slots) up to one: invalid leaves are never admitted and padding
+        point slots carry ``valid=False``, so the padding changes no
+        answer — bit-identity survives any shard count.  Data rows shard
+        when divisible, else replicate (they only feed the fallback
+        engines, host-side estimates, and snapshots).
+        """
+        if mesh is None:
+            from repro.launch.mesh import mesh_from_placement
+            mesh = mesh_from_placement(placement)
+        axes = placement.data_axes
+        n_shards = placement.n_shards
+        forest, plan = _pad_layout_to_shards(det.forest, det.fused_plan(),
+                                             n_shards)
+        specs = _pdet_partition_specs(axes)
+
+        def put(x, spec_):
+            return jax.device_put(x, NamedSharding(mesh, spec_))
+
+        data_spec = (specs["data"] if det.data.shape[0] % n_shards == 0
+                     else specs["replicated"])
+        fspecs = _forest_pdet_specs(forest, specs)
+        sharded_forest = DEForest(
+            n=forest.n, leaf_size=forest.leaf_size,
+            **{k: put(getattr(forest, k), getattr(fspecs, k))
+               for k in ("point_ids", "proj_sorted", "codes_sorted",
+                         "valid", "leaf_lo", "leaf_hi", "leaf_valid",
+                         "breakpoints")})
+        idx = cls(
+            params=det.params,
+            A=put(det.A, specs["replicated"]),
+            forest=sharded_forest,
+            data=put(det.data, data_spec),
+            plan=FusedPlan(
+                points_sorted=put(plan.points_sorted, specs["points_k"]),
+                inv_perm=put(plan.inv_perm, specs["replicated"])),
+            mesh=mesh, placement=placement,
+            spec=spec if spec is not None else det.spec)
+        idx._r_min_cache.update(det._r_min_cache)
+        return idx
+
+    # ------------------------------------------------------------------
+    # AnnIndex protocol
+    # ------------------------------------------------------------------
+
+    @property
+    def n_points(self) -> int:
+        return int(self.data.shape[0])
+
+    @property
+    def n_shards(self) -> int:
+        return self.placement.n_shards
+
+    def r_min_for(self, k: int, queries: jax.Array | None = None) -> float:
+        """Cached per-(index, k) starting radius — the same estimator over
+        the same rows as ``DETLSH.r_min_for``, so a PDET and its
+        single-device twin start every search at the same radius."""
+        if k not in self._r_min_cache:
+            from repro.core import estimate_r_min
+            probes = (queries if queries is not None
+                      else self.data[: min(64, self.data.shape[0])])
+            self._r_min_cache[k] = estimate_r_min(self.data, probes, k,
+                                                  self.params.c)
+        return self._r_min_cache[k]
+
+    def search(self, queries: jax.Array, request=None):
+        """Typed batched search (``repro.api``).  Resolves through the
+        registry with this index's mesh declared active, so ``'auto'``
+        routes to the ``pdet`` engine; mode/explicit-engine fallbacks
+        (e.g. 'strict' -> vmap) run on the sharded arrays directly."""
+        from repro.api import registry
+        from repro.api.request import SearchRequest, SearchResult, \
+            SearchStats
+        req = request or SearchRequest()
+        r_min, cached = req.r_min, False
+        if r_min is None:
+            cached = req.k in self._r_min_cache
+            probes = queries[: req.n_active] if req.n_active else queries
+            r_min = self.r_min_for(req.k, probes)
+        spec = self.spec
+        default_engine = spec.engine if spec is not None else "auto"
+        cfg = req.to_query_config(
+            default_engine=default_engine, r_min=r_min,
+            block_q=spec.block_q if spec is not None else 8,
+            block_l=spec.block_l if spec is not None else 8)
+        engine = registry.resolve_engine(
+            cfg.engine, mode=cfg.mode, batch=queries.shape[0],
+            mesh_devices=self.placement.n_devices)
+        shard_cands = psum_rounds = merge_size = None
+        if engine == "pdet":
+            res, shard_cands = pdet_query_batch(
+                self.forest, self.A, self.params, queries, cfg, self.plan,
+                self.mesh, self.placement.data_axes, n_active=req.n_active)
+            psum_rounds = jnp.max(res.rounds)
+            merge_size = queries.shape[0] * self.forest.n
+        else:
+            # Mode / explicit-engine fallback: the single-device engines
+            # run on the sharded arrays (XLA inserts the collectives).
+            cfg = dataclasses.replace(cfg, engine=engine)
+            plan = self.plan if engine == "fused" else None
+            res = knn_query_batch(self.data, self.forest, self.A,
+                                  self.params, queries, cfg, plan=plan,
+                                  n_active=req.n_active)
+        return SearchResult(
+            ids=res.ids, dists=res.dists,
+            stats=SearchStats(engine=engine, r_min=float(r_min),
+                              r_min_cached=cached, rounds=res.rounds,
+                              n_candidates=res.n_candidates,
+                              final_r=res.final_r,
+                              shard_candidates=shard_cands,
+                              psum_rounds=psum_rounds,
+                              merge_size=merge_size),
+            raw=res)
+
+    def save(self, path) -> None:
+        """Write a sharded snapshot directory: per-shard npz + shard map
+        in MANIFEST.json (``repro.api.load`` reshards on load)."""
+        from repro.api import persist
+        persist.save_pdet(self, path)
+
+    def index_size_bytes(self) -> int:
+        return self.forest.size_bytes() + self.A.size * 4
+
+
+def _layout_mesh_axes(arr):
+    """Recover (mesh, data_axes) from a PDET-sharded array's placement —
+    the engine-registry entry point has only the uniform engine signature,
+    so the mesh travels with the arrays themselves."""
+    sharding = getattr(arr, "sharding", None)
+    mesh = getattr(sharding, "mesh", None)
+    spec = getattr(sharding, "spec", None)
+    if mesh is None or spec is None or len(spec) < 2 or spec[1] is None:
+        raise ValueError(
+            "engine 'pdet' needs a mesh-sharded index layout (build via "
+            "repro.api.build with an IndexSpec placement); the fused-plan "
+            "arrays of this index are not sharded")
+    axes = spec[1]
+    axes = (axes,) if isinstance(axes, str) else tuple(axes)
+    return mesh, axes
+
+
+def _run_pdet_engine(data, forest, A, params, queries, cfg, *,
+                     plan=None, live=None, live_sorted=None,
+                     n_active=None) -> QueryResult:
+    """Registry entry point for engine='pdet'."""
+    del data
+    if live is not None or live_sorted is not None:
+        raise NotImplementedError(
+            "engine 'pdet' serves the static sharded index; tombstones "
+            "(live masks) belong to the streaming index's engines")
+    if plan is None:
+        raise ValueError("engine 'pdet' needs the index's sharded "
+                         "FusedPlan (plan=)")
+    mesh, axes = _layout_mesh_axes(plan.points_sorted)
+    res, _ = pdet_query_batch(forest, A, params, queries, cfg, plan,
+                              mesh, axes, n_active=n_active)
+    return res
+
+
+engine_registry.register_engine(
+    "pdet", _run_pdet_engine, modes=("leaf",), min_batch=1, priority=20,
+    needs_mesh=True,
+    doc="shard_map'd fused round over the mesh-sharded global layout "
+        "(Alg. 8); exact pmin merge => bit-identical to 'fused' on one "
+        "device for any shard count")

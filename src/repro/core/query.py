@@ -287,6 +287,40 @@ def make_fused_plan(data: jax.Array, forest: DEForest) -> FusedPlan:
     return FusedPlan(points_sorted=pts, inv_perm=inv)
 
 
+def fused_round_update(best: jax.Array, by_id: jax.Array, r: jax.Array,
+                       done: jax.Array, rounds: jax.Array, rnd: jax.Array,
+                       *, params: LSHParams, k: int, thresh: jax.Array):
+    """Fold one round's per-id distance table into the loop state.
+
+    The single source of truth for the fused-style T1/T2 bookkeeping: both
+    ``fused_query_batch`` and the sharded ``pdet`` engine
+    (core/distributed.py) run exactly this update, which is what makes the
+    PDET == DET bit-identity contract hold by construction — the sharded
+    round merges shards with ``pmin`` (min is exact), then steps through
+    the identical state transition.
+    """
+    best = jnp.minimum(best, by_id)
+    count = jnp.sum(best < jnp.inf, axis=1).astype(jnp.int32)
+    t1 = count.astype(jnp.float32) >= thresh                 # line 7
+    within = jnp.sum(best <= params.c * r[:, None], axis=1)
+    t2 = within >= k                                         # line 9
+    rounds = jnp.where(done, rounds, rnd + 1)                # per lane
+    done = done | t1 | t2
+    r = jnp.where(done, r, r * params.c)                     # line 11
+    return best, r, done, rounds
+
+
+def fused_topk(best: jax.Array, k: int, n: int) -> tuple[
+        jax.Array, jax.Array, jax.Array]:
+    """Final (ids, dists, unique-count) over the dense best-distance table
+    (shared by the fused and pdet engines)."""
+    negd, sel = jax.lax.top_k(-best, k)
+    dists = -negd
+    ids = jnp.where(jnp.isfinite(dists), sel.astype(jnp.int32), n)
+    count = jnp.sum(best < jnp.inf, axis=1).astype(jnp.int32)
+    return ids, dists, count
+
+
 def fused_query_batch(data: jax.Array, forest: DEForest, A: jax.Array,
                       params: LSHParams, queries: jax.Array,
                       cfg: QueryConfig,
@@ -341,14 +375,9 @@ def fused_query_batch(data: jax.Array, forest: DEForest, A: jax.Array,
         by_id = jnp.min(
             jnp.take_along_axis(dmat, plan.inv_perm[:, None, :], axis=2),
             axis=0)                                              # (B, n)
-        best = jnp.minimum(best, by_id)
-        count = jnp.sum(best < jnp.inf, axis=1).astype(jnp.int32)
-        t1 = count.astype(jnp.float32) >= thresh                 # line 7
-        within = jnp.sum(best <= params.c * r[:, None], axis=1)
-        t2 = within >= cfg.k                                     # line 9
-        rounds = jnp.where(done, rounds, rnd + 1)                # per lane
-        done = done | t1 | t2
-        r = jnp.where(done, r, r * params.c)                     # line 11
+        best, r, done, rounds = fused_round_update(
+            best, by_id, r, done, rounds, rnd, params=params, k=cfg.k,
+            thresh=thresh)
         return rnd + 1, rounds, r, done, best
 
     done0 = (jnp.zeros((B,), jnp.bool_) if n_active is None
@@ -360,10 +389,7 @@ def fused_query_batch(data: jax.Array, forest: DEForest, A: jax.Array,
               jnp.full((B, n), jnp.inf, jnp.float32))
     rnd, rounds, r, done, best = jax.lax.while_loop(cond, body, state0)
 
-    negd, sel = jax.lax.top_k(-best, cfg.k)
-    dists = -negd
-    ids = jnp.where(jnp.isfinite(dists), sel.astype(jnp.int32), n)
-    count = jnp.sum(best < jnp.inf, axis=1).astype(jnp.int32)
+    ids, dists, count = fused_topk(best, cfg.k, n)
     return QueryResult(ids=ids, dists=dists, rounds=rounds,
                        n_candidates=count, final_r=r)
 

@@ -31,6 +31,30 @@ def make_mesh(shape, axes):
     return jax.make_mesh(tuple(shape), tuple(axes), **_axis_kw(len(axes)))
 
 
+def mesh_from_placement(placement, *, devices=None):
+    """Build the device mesh a ``repro.api.PlacementSpec`` names.
+
+    Uses the first ``placement.n_devices`` of ``devices`` (default: all
+    local devices) so a placement smaller than the machine still works —
+    e.g. loading a 2-shard snapshot on a 4-device host.  Raises with the
+    ``--xla_force_host_platform_device_count`` hint when the machine has
+    too few devices, since that is the usual CPU-test fix.
+    """
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devices = list(jax.devices() if devices is None else devices)
+    need = placement.n_devices
+    if len(devices) < need:
+        raise ValueError(
+            f"placement {placement.mesh_shape} over {placement.mesh_axes} "
+            f"needs {need} devices but only {len(devices)} are available; "
+            f"shrink the placement or force a host-device mesh with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={need}")
+    grid = np.array(devices[:need]).reshape(placement.mesh_shape)
+    return Mesh(grid, placement.mesh_axes)
+
+
 # TPU v5e hardware constants (roofline targets; see EXPERIMENTS.md §Roofline)
 PEAK_FLOPS_BF16 = 197e12        # per chip
 HBM_BW = 819e9                  # bytes/s per chip

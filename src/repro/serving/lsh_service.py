@@ -3,8 +3,9 @@
 In-process model of the production service: requests arrive on a queue,
 are micro-batched up to ``max_batch``/``max_wait``, answered with one
 jitted batched c^2-k-ANN call, and latency percentiles are tracked.
-On a pod the same loop runs with the PDET (shard_map) index; here the
-single-device index keeps the example CPU-friendly.
+The sharded ``PDETIndex`` serves through the same loop with zero service
+code — it satisfies ``AnnIndex``, so the typed ``search`` path (including
+pad-lane ``n_active``) just works on a mesh (tests/test_pdet_api.py).
 
 Partial batches are padded up to the next ``pad_to`` bucket so the jitted
 query fn sees a bounded set of shapes, and the pad lanes are passed as

@@ -138,7 +138,9 @@ def test_legacy_adapter_wraps_query_only_objects(static_idx):
             self._inner = inner
 
         def query(self, queries, k=10):
-            return self._inner.query(queries, k=k)
+            # A pre-protocol surface; implemented on the typed search so
+            # the suite stays clean under -W error::DeprecationWarning.
+            return self._inner.search(queries, SearchRequest(k=k)).raw
 
     adapted = as_ann_index(Legacy(idx))
     assert isinstance(adapted, LegacyIndexAdapter)

@@ -19,7 +19,8 @@ import repro.api
 
 EXPECTED_API_EXPORTS = {
     "AnnIndex", "MutableAnnIndex", "LegacyIndexAdapter", "as_ann_index",
-    "IndexSpec", "SearchRequest", "SearchResult", "SearchStats",
+    "IndexSpec", "PlacementSpec", "PDETIndex",
+    "SearchRequest", "SearchResult", "SearchStats",
     "EngineSpec", "register_engine", "resolve_engine", "available_engines",
     "get_engine", "build", "load", "save",
     "SnapshotFormatError", "FORMAT_VERSION",
@@ -35,6 +36,15 @@ EXPECTED_INDEX_SPEC_FIELDS = (
     "kind", "K", "L", "c", "beta_override", "Nr", "leaf_size",
     "breakpoint_method", "project_impl", "encode_impl", "engine",
     "block_q", "block_l", "delta_capacity", "max_segments", "id_capacity",
+    "placement",
+)
+
+EXPECTED_PLACEMENT_SPEC_FIELDS = ("mesh_shape", "mesh_axes", "data_axes")
+
+# Appending defaulted fields is allowed; reordering/removing is breaking.
+EXPECTED_SEARCH_STATS_FIELDS = (
+    "engine", "r_min", "r_min_cached", "rounds", "n_candidates", "final_r",
+    "shard_candidates", "psum_rounds", "merge_size",
 )
 
 EXPECTED_PROTOCOL_MEMBERS = {
@@ -76,14 +86,30 @@ def test_index_spec_fields_snapshot():
 
 
 def test_callable_signatures_snapshot():
-    assert list(inspect.signature(repro.api.load).parameters) == ["path"]
+    assert list(inspect.signature(repro.api.load).parameters) == \
+        ["path", "placement"]
     assert [p for p in inspect.signature(repro.api.build).parameters] == \
         ["data", "key", "spec"]
     assert [p for p in
             inspect.signature(repro.api.resolve_engine).parameters] == \
-        ["requested", "mode", "batch"]
+        ["requested", "mode", "batch", "mesh_devices"]
     sr = inspect.signature(repro.api.SearchResult)
     assert list(sr.parameters) == ["ids", "dists", "stats", "raw"]
+
+
+def test_placement_spec_fields_snapshot():
+    fields = tuple(f.name for f in
+                   dataclasses.fields(repro.api.PlacementSpec))
+    assert fields == EXPECTED_PLACEMENT_SPEC_FIELDS
+    repro.api.PlacementSpec()          # constructible bare (1-device mesh)
+
+
+def test_search_stats_fields_snapshot():
+    assert repro.api.SearchStats._fields == EXPECTED_SEARCH_STATS_FIELDS
+    # the per-shard counters are defaulted: non-pdet engines omit them
+    s = repro.api.SearchStats(engine="vmap", r_min=1.0, r_min_cached=False,
+                              rounds=None, n_candidates=None, final_r=None)
+    assert s.shard_candidates is None and s.psum_rounds is None
 
 
 @pytest.mark.parametrize("proto_name", sorted(EXPECTED_PROTOCOL_MEMBERS))
@@ -101,5 +127,7 @@ def test_protocol_members_snapshot(proto_name):
 
 def test_builtin_engines_registered():
     names = repro.api.available_engines()
-    assert set(names) >= {"fused", "vmap"}
-    assert names[0] == "fused"             # priority order is the surface
+    assert set(names) >= {"pdet", "fused", "vmap"}
+    # priority order is the surface: pdet (mesh-gated) > fused > vmap
+    assert names.index("pdet") < names.index("fused") < names.index("vmap")
+    assert names[0] == "pdet"

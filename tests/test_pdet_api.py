@@ -1,0 +1,417 @@
+"""The sharded PDET runtime behind ``repro.api`` (DESIGN.md §7).
+
+The acceptance contract: on a forced multi-device host mesh,
+``repro.api.build`` of a spec with a placement returns a ``PDETIndex``
+satisfying ``AnnIndex``; searching via engine ``pdet`` returns
+*bit-identical* ids/distances to a ``DETLSH`` built from the same spec
+minus placement; and save/load round-trips bit-identically, including
+loading onto a different device count (reshard on load).
+
+Bit-identity is by construction (exact ``pmin`` merge of the fused round
+over a layout-sharded global forest), so it is asserted exactly, never
+with tolerances.  Multi-device cases run in subprocesses (XLA fixes the
+device count at first init); the same-process variants are marked
+``multidevice`` for the dedicated CI job that forces 4 host devices.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.api import (AnnIndex, IndexSpec, PlacementSpec, SearchRequest,
+                       resolve_engine)
+from tests.conftest import make_clustered, make_queries_near
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+D = 16
+SPEC_KW = dict(kind="static", K=4, L=8, c=1.5, beta_override=0.1,
+               Nr=32, leaf_size=32)
+
+
+def _data_and_queries(n=4096, nq=16, seed=0):
+    rng = np.random.default_rng(seed)
+    data = make_clustered(rng, n, D)
+    return data, make_queries_near(data, rng, nq)
+
+
+def _det_reference(k=10, engine="fused"):
+    data, queries = _data_and_queries()
+    det = repro.api.build(jnp.asarray(data), jax.random.key(0),
+                          IndexSpec(**SPEC_KW))
+    res = det.search(jnp.asarray(queries),
+                     SearchRequest(k=k, r_min=0.5, engine=engine))
+    return np.asarray(res.ids), np.asarray(res.dists)
+
+
+# ---------------------------------------------------------------------------
+# Subprocess harness (forced host-device meshes)
+# ---------------------------------------------------------------------------
+
+_PDET_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={nd}"
+    os.environ["JAX_PLATFORMS"] = "cpu"
+    import json, sys
+    sys.path.insert(0, {src!r}); sys.path.insert(0, {repo!r})
+    import jax, jax.numpy as jnp, numpy as np
+    import repro
+    from repro.api import (AnnIndex, IndexSpec, MutableAnnIndex,
+                           PlacementSpec, PDETIndex, SearchRequest)
+    from tests.test_pdet_api import SPEC_KW, _data_and_queries
+
+    data, queries = _data_and_queries()
+    queries = jnp.asarray(queries)
+    out = {{}}
+    snap = {snap!r}
+    if {build}:
+        spec = IndexSpec(placement=PlacementSpec(mesh_shape=({shards},),
+                                                 mesh_axes=("data",)),
+                         **SPEC_KW)
+        idx = repro.api.build(jnp.asarray(data), jax.random.key(0), spec)
+        out["is_pdet"] = isinstance(idx, PDETIndex)
+        out["is_ann"] = isinstance(idx, AnnIndex)
+        out["is_mutable"] = isinstance(idx, MutableAnnIndex)
+        out["n_points"] = idx.n_points
+        if snap:
+            idx.save(snap)
+    else:
+        idx = repro.api.load(snap)
+        out["is_pdet"] = isinstance(idx, PDETIndex)
+        out["n_shards"] = idx.n_shards
+    res = idx.search(queries, SearchRequest(k=10, r_min=0.5))
+    out["engine"] = res.stats.engine
+    out["ids"] = np.asarray(res.ids).tolist()
+    out["dists_bits"] = np.asarray(res.dists).view(np.uint32).tolist()
+    out["shard_candidates"] = np.asarray(res.stats.shard_candidates).tolist()
+    out["psum_rounds"] = int(res.stats.psum_rounds)
+    out["merge_size"] = int(res.stats.merge_size)
+    print(json.dumps(out))
+""")
+
+
+def _run_pdet(n_devices, shards, *, snap="", build=True):
+    script = _PDET_SCRIPT.format(nd=n_devices, shards=shards, snap=snap,
+                                 build=build, repo=REPO,
+                                 src=os.path.join(REPO, "src"))
+    out = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                         text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+@pytest.mark.slow
+def test_pdet_bit_identical_to_detlsh_and_snapshot_reshard(tmp_path):
+    """The acceptance criterion, end to end: 4-device build == DETLSH
+    bitwise; snapshot loaded onto TWO devices still == DETLSH bitwise."""
+    snap = str(tmp_path / "pdet_snap")
+    got = _run_pdet(4, 4, snap=snap, build=True)
+    assert got["is_pdet"] and got["is_ann"] and not got["is_mutable"]
+    assert got["engine"] == "pdet"
+    assert got["n_points"] == 4096
+    assert len(got["shard_candidates"]) == 4
+    assert got["psum_rounds"] >= 1
+    ref_ids, ref_dists = _det_reference(k=10, engine="fused")
+    assert np.array_equal(np.asarray(got["ids"]), ref_ids)
+    assert np.array_equal(
+        np.asarray(got["dists_bits"], np.uint32),
+        ref_dists.view(np.uint32))
+
+    # Reload on a *different* device count: resharded, answers unchanged.
+    reloaded = _run_pdet(2, 2, snap=snap, build=False)
+    assert reloaded["is_pdet"] and reloaded["n_shards"] == 2
+    assert reloaded["engine"] == "pdet"
+    assert len(reloaded["shard_candidates"]) == 2
+    assert reloaded["ids"] == got["ids"]
+    assert reloaded["dists_bits"] == got["dists_bits"]
+    # the snapshot really is per-shard files + a shard map
+    manifest = json.load(open(os.path.join(snap, "MANIFEST.json")))
+    assert manifest["kind"] == "pdet"
+    assert manifest["format_version"] == repro.api.FORMAT_VERSION
+    assert [e["file"] for e in manifest["shards"]] == \
+        [f"shard_{s:05d}.npz" for s in range(4)]
+    assert all(os.path.isfile(os.path.join(snap, e["file"]))
+               for e in manifest["shards"])
+
+
+_SERVE_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    os.environ["JAX_PLATFORMS"] = "cpu"
+    import json, sys, time
+    sys.path.insert(0, {src!r}); sys.path.insert(0, {repo!r})
+    import jax, jax.numpy as jnp, numpy as np
+    import repro
+    from repro.api import IndexSpec, PlacementSpec, SearchRequest
+    from repro.serving.lsh_service import LSHService
+    from tests.test_pdet_api import SPEC_KW, _data_and_queries
+
+    data, queries = _data_and_queries(nq=11)
+    spec = IndexSpec(placement=PlacementSpec(mesh_shape=(4,),
+                                             mesh_axes=("data",)),
+                     **SPEC_KW)
+    idx = repro.api.build(jnp.asarray(data), jax.random.key(0), spec)
+    svc = LSHService(idx, k=5, max_batch=8, pad_to=8)
+    svc.warmup(data.shape[1])
+    results = svc.serve([(time.perf_counter(), q) for q in queries])
+    strict = idx.search(jnp.asarray(queries),
+                        SearchRequest(k=5, r_min=0.5, mode="strict"))
+    fb = idx.search(jnp.asarray(queries),
+                    SearchRequest(k=5, r_min=0.5, engine="vmap"))
+    print(json.dumps(dict(
+        served=len(results), s=svc.stats.summary(),
+        adapter=type(svc._index).__name__,
+        strict_engine=strict.stats.engine, fb_engine=fb.stats.engine,
+        ids=[np.asarray(r[0]).tolist() for r in results])))
+""")
+
+
+@pytest.mark.slow
+def test_service_serves_pdet_through_protocols():
+    """LSHService drives a PDETIndex purely via AnnIndex (no adapter),
+    pad lanes included; strict mode and explicit vmap fall back through
+    the registry rules."""
+    script = _SERVE_SCRIPT.format(repo=REPO, src=os.path.join(REPO, "src"))
+    out = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                         text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-4000:]
+    got = json.loads(out.stdout.strip().splitlines()[-1])
+    assert got["adapter"] == "PDETIndex"     # protocol, not LegacyAdapter
+    assert got["served"] == 11
+    assert got["s"]["queries"] == 11
+    assert got["s"]["pad_queries"] == 5      # 8 + 3(+5 pad)
+    assert got["strict_engine"] == "vmap"    # mode fallback (rule 2)
+    assert got["fb_engine"] == "vmap"        # explicit engine honored
+
+
+# ---------------------------------------------------------------------------
+# Single-device / no-mesh behavior (always runs in tier-1)
+# ---------------------------------------------------------------------------
+
+def test_forced_single_device_mesh_is_pdet_and_bit_identical(tmp_path):
+    """An explicit placement is the opt-in: even a 1-device ("forced
+    host") mesh routes to the pdet engine, and the answers equal the
+    unplaced DETLSH bitwise — the contract's degenerate case."""
+    data, queries = _data_and_queries()
+    spec = IndexSpec(placement=PlacementSpec(), **SPEC_KW)
+    idx = repro.api.build(jnp.asarray(data), jax.random.key(0), spec)
+    assert isinstance(idx, AnnIndex)
+    assert isinstance(idx, repro.api.PDETIndex)
+    res = idx.search(jnp.asarray(queries), SearchRequest(k=10, r_min=0.5))
+    assert res.stats.engine == "pdet"
+    assert np.asarray(res.stats.shard_candidates).shape == (1,)
+    assert res.stats.merge_size == 16 * 4096
+    ref_ids, ref_dists = _det_reference(k=10, engine="fused")
+    np.testing.assert_array_equal(np.asarray(res.ids), ref_ids)
+    assert np.array_equal(np.asarray(res.dists).view(np.uint32),
+                          ref_dists.view(np.uint32))
+
+    idx.save(tmp_path / "snap")
+    loaded = repro.api.load(tmp_path / "snap")
+    assert isinstance(loaded, repro.api.PDETIndex)
+    lres = loaded.search(jnp.asarray(queries),
+                         SearchRequest(k=10, r_min=0.5))
+    np.testing.assert_array_equal(np.asarray(lres.ids),
+                                  np.asarray(res.ids))
+    np.testing.assert_array_equal(np.asarray(lres.dists),
+                                  np.asarray(res.dists))
+
+
+def test_placement_spec_validation():
+    with pytest.raises(ValueError, match="same length"):
+        PlacementSpec(mesh_shape=(2, 2), mesh_axes=("data",))
+    with pytest.raises(ValueError, match=">= 1"):
+        PlacementSpec(mesh_shape=(0,), mesh_axes=("data",))
+    with pytest.raises(ValueError, match="duplicate"):
+        PlacementSpec(mesh_shape=(2, 2), mesh_axes=("data", "data"))
+    with pytest.raises(ValueError, match="not mesh axes"):
+        PlacementSpec(mesh_shape=(2,), mesh_axes=("data",),
+                      data_axes=("model",))
+    p = PlacementSpec(mesh_shape=(2, 4), mesh_axes=("pod", "data"))
+    assert p.n_devices == 8 and p.n_shards == 8
+    assert p.data_axes == ("pod", "data")
+    q = PlacementSpec(mesh_shape=(2, 4), mesh_axes=("pod", "data"),
+                      data_axes=("data",))
+    assert q.n_shards == 4
+    assert set(q.rules().values()) == {("data",)}
+    assert PlacementSpec.from_dict(p.to_dict()) == p
+
+
+def test_spec_placement_rules():
+    with pytest.raises(ValueError, match="static"):
+        IndexSpec(kind="streaming", placement=PlacementSpec())
+    with pytest.raises(ValueError, match="PlacementSpec"):
+        IndexSpec(placement="data")
+    # dict form (the snapshot manifest path) normalizes to PlacementSpec
+    spec = IndexSpec(placement=PlacementSpec(mesh_shape=(1,)).to_dict())
+    assert isinstance(spec.placement, PlacementSpec)
+    assert IndexSpec.from_dict(spec.to_dict()) == spec
+
+
+def test_registry_mesh_rules():
+    """Rule 4: pdet is mesh-gated.  'auto' prefers it exactly when a mesh
+    is declared; an explicit request without a mesh raises."""
+    assert resolve_engine("auto", mode="leaf", batch=64) == "fused"
+    assert resolve_engine("auto", mode="leaf", batch=64,
+                          mesh_devices=4) == "pdet"
+    assert resolve_engine("auto", mode="leaf", batch=64,
+                          mesh_devices=1) == "pdet"   # forced 1-device mesh
+    assert resolve_engine("auto", mode="strict", batch=64,
+                          mesh_devices=4) == "vmap"
+    assert resolve_engine("pdet", mode="strict", batch=64,
+                          mesh_devices=4) == "vmap"   # mode fallback
+    with pytest.raises(ValueError, match="mesh"):
+        resolve_engine("pdet", mode="leaf", batch=64)
+    # SearchRequest / IndexSpec validation accepts the name eagerly
+    SearchRequest(engine="pdet")
+    IndexSpec(engine="pdet")
+
+
+def test_mesh_from_placement_errors_actionably():
+    from repro.launch.mesh import mesh_from_placement
+    need = len(jax.devices()) + 1
+    with pytest.raises(ValueError, match="xla_force_host_platform"):
+        mesh_from_placement(PlacementSpec(mesh_shape=(need,),
+                                          mesh_axes=("data",)))
+
+
+def test_layout_pads_to_any_shard_count():
+    """A leaf count that does not divide the shard count pads with
+    invalid leaves — admitted never, positions preserved — so any
+    placement works and no answer can change."""
+    from repro.core import DETLSH, derive_params
+    from repro.core.distributed import _pad_layout_to_shards
+    data, _ = _data_and_queries(n=96)
+    p = derive_params(K=4, c=1.5, L=2, beta_override=0.1)
+    det = DETLSH.build(jnp.asarray(data), jax.random.key(0), p,
+                       leaf_size=32, Nr=32)          # 3 leaves per tree
+    forest, plan = det.forest, det.fused_plan()
+    padded, pplan = _pad_layout_to_shards(forest, plan, 4)
+    assert padded.n_leaves == 4 and padded.point_ids.shape[1] == 4 * 32
+    assert pplan.points_sorted.shape[1] == 4 * 32
+    # padding is inert: invalid leaves, sentinel ids, untouched prefix
+    assert not np.any(np.asarray(padded.leaf_valid)[:, 3:])
+    assert np.all(np.asarray(padded.point_ids)[:, 96:] == forest.n)
+    assert not np.any(np.asarray(padded.valid)[:, 96:])
+    np.testing.assert_array_equal(np.asarray(padded.point_ids)[:, :96],
+                                  np.asarray(forest.point_ids))
+    np.testing.assert_array_equal(np.asarray(pplan.inv_perm),
+                                  np.asarray(plan.inv_perm))
+    same_f, same_p = _pad_layout_to_shards(forest, plan, 3)  # divides: noop
+    assert same_f is forest and same_p is plan
+
+
+def test_static_snapshot_rejects_placement_arg(tmp_path):
+    data, _ = _data_and_queries(n=256)
+    det = repro.api.build(jnp.asarray(data), jax.random.key(0),
+                          IndexSpec(kind="static", K=4, L=4, c=1.5,
+                                    beta_override=0.1, Nr=32, leaf_size=16))
+    det.save(tmp_path / "s")
+    with pytest.raises(ValueError, match="pdet"):
+        repro.api.load(tmp_path / "s", placement=PlacementSpec())
+
+
+# ---------------------------------------------------------------------------
+# Same-process multi-device variants (the dedicated CI job forces 4 host
+# devices; auto-skipped when this session has fewer)
+# ---------------------------------------------------------------------------
+
+needs_devices = pytest.mark.skipif(
+    len(jax.devices()) < 4,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=4")
+
+
+@pytest.mark.multidevice
+@needs_devices
+def test_multidevice_build_search_roundtrip(tmp_path):
+    data, queries = _data_and_queries()
+    spec = IndexSpec(placement=PlacementSpec(mesh_shape=(4,),
+                                             mesh_axes=("data",)),
+                     **SPEC_KW)
+    idx = repro.api.build(jnp.asarray(data), jax.random.key(0), spec)
+    assert isinstance(idx, AnnIndex)
+    res = idx.search(jnp.asarray(queries), SearchRequest(k=10, r_min=0.5))
+    assert res.stats.engine == "pdet"
+    assert np.asarray(res.stats.shard_candidates).shape == (4,)
+    ref_ids, ref_dists = _det_reference(k=10, engine="fused")
+    np.testing.assert_array_equal(np.asarray(res.ids), ref_ids)
+    assert np.array_equal(np.asarray(res.dists).view(np.uint32),
+                          ref_dists.view(np.uint32))
+
+    idx.save(tmp_path / "snap")
+    for placement in (None,
+                      PlacementSpec(mesh_shape=(2,), mesh_axes=("data",)),
+                      PlacementSpec(mesh_shape=(2, 2),
+                                    mesh_axes=("pod", "data"))):
+        loaded = repro.api.load(tmp_path / "snap", placement=placement)
+        # the attached spec describes the index as it now lives: a
+        # resharded load must not keep the stale saved placement
+        assert loaded.spec.placement == loaded.placement
+        lres = loaded.search(jnp.asarray(queries),
+                             SearchRequest(k=10, r_min=0.5))
+        np.testing.assert_array_equal(np.asarray(lres.ids),
+                                      np.asarray(res.ids))
+        np.testing.assert_array_equal(np.asarray(lres.dists),
+                                      np.asarray(res.dists))
+
+
+@pytest.mark.multidevice
+@needs_devices
+def test_multidevice_padded_layout_bit_identical(tmp_path):
+    """4000 points at leaf_size 32 -> 125 leaves per tree: not a multiple
+    of 4 shards, so the padded-layout path runs — and must still answer
+    bitwise like the unplaced DETLSH, through a snapshot too."""
+    rng = np.random.default_rng(3)
+    data = make_clustered(rng, 4000, D)
+    queries = jnp.asarray(make_queries_near(data, rng, 12))
+    kw = dict(kind="static", K=4, L=4, c=1.5, beta_override=0.1,
+              Nr=32, leaf_size=32)
+    pdet = repro.api.build(
+        jnp.asarray(data), jax.random.key(1),
+        IndexSpec(placement=PlacementSpec(mesh_shape=(4,),
+                                          mesh_axes=("data",)), **kw))
+    det = repro.api.build(jnp.asarray(data), jax.random.key(1),
+                          IndexSpec(**kw))
+    a = pdet.search(queries, SearchRequest(k=8, r_min=0.5))
+    b = det.search(queries, SearchRequest(k=8, r_min=0.5, engine="fused"))
+    assert a.stats.engine == "pdet"
+    np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+    assert np.array_equal(np.asarray(a.dists).view(np.uint32),
+                          np.asarray(b.dists).view(np.uint32))
+    pdet.save(tmp_path / "snap")
+    loaded = repro.api.load(
+        tmp_path / "snap",
+        placement=PlacementSpec(mesh_shape=(3,), mesh_axes=("data",)))
+    lres = loaded.search(queries, SearchRequest(k=8, r_min=0.5))
+    np.testing.assert_array_equal(np.asarray(lres.ids), np.asarray(a.ids))
+    np.testing.assert_array_equal(np.asarray(lres.dists),
+                                  np.asarray(a.dists))
+
+
+@pytest.mark.multidevice
+@needs_devices
+def test_multidevice_r_min_cache_matches_detlsh():
+    """With r_min=None both indexes estimate from the same rows, so the
+    bit-identity contract holds for default searches too."""
+    data, queries = _data_and_queries()
+    spec = IndexSpec(placement=PlacementSpec(mesh_shape=(4,),
+                                             mesh_axes=("data",)),
+                     **SPEC_KW)
+    idx = repro.api.build(jnp.asarray(data), jax.random.key(0), spec)
+    det = repro.api.build(jnp.asarray(data), jax.random.key(0),
+                          IndexSpec(**SPEC_KW))
+    a = idx.search(jnp.asarray(queries), SearchRequest(k=7))
+    b = det.search(jnp.asarray(queries), SearchRequest(k=7, engine="fused"))
+    assert a.stats.r_min == b.stats.r_min
+    assert not a.stats.r_min_cached
+    np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+    a2 = idx.search(jnp.asarray(queries), SearchRequest(k=7))
+    assert a2.stats.r_min_cached

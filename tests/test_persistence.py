@@ -184,6 +184,21 @@ def test_format_version_mismatch_rejected(static_index, tmp_path):
         repro.api.load(path)
 
 
+def test_format_version_1_still_readable(static_index, tmp_path):
+    """Version 2 only *added* the pdet kind; a version-1 static/streaming
+    snapshot (previous release) must keep loading — upgrading repro must
+    never force the rebuild persistence exists to avoid."""
+    idx, queries = static_index
+    path = tmp_path / "v1"
+    idx.save(path)
+    mpath = os.path.join(path, "MANIFEST.json")
+    manifest = json.load(open(mpath))
+    manifest["format_version"] = 1
+    json.dump(manifest, open(mpath, "w"))
+    loaded = repro.api.load(path)
+    _assert_identical_answers(idx, loaded, queries, k=10)
+
+
 def test_non_snapshot_directory_rejected(tmp_path):
     with pytest.raises(SnapshotFormatError, match="MANIFEST"):
         repro.api.load(tmp_path)

@@ -5,6 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.api import SearchRequest
 from repro.core import DETLSH, derive_params, estimate_r_min
 from repro.core.query import QueryConfig, knn_query, rc_ann_query
 from tests.conftest import brute_force_knn, make_clustered
@@ -21,7 +22,7 @@ def built(small_dataset):
 def test_knn_returns_valid_sorted(built):
     idx, data, queries = built
     k = 10
-    res = idx.query(jnp.asarray(queries), k=k)
+    res = idx.search(jnp.asarray(queries), SearchRequest(k=k))
     ids = np.asarray(res.ids)
     dd = np.asarray(res.dists)
     n = data.shape[0]
@@ -38,7 +39,7 @@ def test_c2_ratio_guarantee(built):
     least a (1/2 - 1/e) fraction — empirically it holds for nearly all."""
     idx, data, queries = built
     k = 10
-    res = idx.query(jnp.asarray(queries), k=k)
+    res = idx.search(jnp.asarray(queries), SearchRequest(k=k))
     dd = np.asarray(res.dists)
     _, gt_d = brute_force_knn(data, queries, k)
     c2 = idx.params.c ** 2
@@ -49,7 +50,7 @@ def test_c2_ratio_guarantee(built):
 def test_recall_reasonable_on_clustered(built):
     idx, data, queries = built
     k = 10
-    res = idx.query(jnp.asarray(queries), k=k, M=16)
+    res = idx.search(jnp.asarray(queries), SearchRequest(k=k, M=16))
     gt_i, _ = brute_force_knn(data, queries, k)
     ids = np.asarray(res.ids)
     recall = np.mean([len(set(ids[i]) & set(gt_i[i])) / k
@@ -62,9 +63,9 @@ def test_termination_conditions(built):
     idx, data, queries = built
     n = data.shape[0]
     k = 10
-    res = idx.query(jnp.asarray(queries), k=k)
-    count = np.asarray(res.n_candidates)
-    rounds = np.asarray(res.rounds)
+    res = idx.search(jnp.asarray(queries), SearchRequest(k=k))
+    count = np.asarray(res.stats.n_candidates)
+    rounds = np.asarray(res.stats.rounds)
     cap_round = idx.params.L * 8 * idx.forest.leaf_size
     assert np.all(rounds >= 1)
     t1_bound = idx.params.beta * n + k + cap_round
@@ -128,7 +129,8 @@ def test_full_budget_quality_on_tiny_dataset():
     queries = make_clustered(rng, 4, 8)
     p = derive_params(K=4, c=1.5, L=4, beta_override=1.0)  # beta*n = n
     idx = DETLSH.build(jnp.asarray(data), jax.random.key(1), p, leaf_size=16)
-    res = idx.query(jnp.asarray(queries), k=5, M=32, max_rounds=64)
+    res = idx.search(jnp.asarray(queries),
+                     SearchRequest(k=5, M=32, max_rounds=64))
     gt_i, gt_d = brute_force_knn(data, queries, 5)
     dd = np.asarray(res.dists)
     assert np.all(dd <= p.c ** 2 * gt_d + 1e-4)
@@ -153,7 +155,7 @@ def test_property_c2_guarantee_across_datasets(seed, KL, c):
     p = derive_params(K=K, c=float(c), L=L, beta_override=0.1)
     idx = DETLSH.build(jnp.asarray(data), jax.random.key(seed % 997), p,
                        leaf_size=32)
-    res = idx.query(jnp.asarray(queries), k=5, M=8)
+    res = idx.search(jnp.asarray(queries), SearchRequest(k=5, M=8))
     _, gt_d = brute_force_knn(data, queries, 5)
     ok = np.all(np.asarray(res.dists) <= p.c ** 2 * gt_d + 1e-4, axis=1)
     assert ok.mean() >= p.success_probability, (ok.mean(), seed, K, L, c)

@@ -6,6 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import SearchRequest
 from repro.core import DETLSH, derive_params
 from repro.serving.lsh_service import LSHService
 from tests.conftest import brute_force_knn, make_clustered, make_queries_near
@@ -43,13 +44,14 @@ def test_pad_lanes_done_from_round_zero(rng):
     queries = make_queries_near(data, rng, 3)
     padded = np.concatenate([queries, np.zeros((13, 16), np.float32)])
     for engine in ("fused", "vmap"):
-        res = idx.query(jnp.asarray(padded), k=5, engine=engine, n_active=3)
-        rounds = np.asarray(res.rounds)
+        res = idx.search(jnp.asarray(padded),
+                         SearchRequest(k=5, engine=engine, n_active=3))
+        rounds = np.asarray(res.stats.rounds)
         assert np.all(rounds[3:] == 0), (engine, rounds)
         assert np.all(rounds[:3] >= 1), (engine, rounds)
-        assert np.all(np.asarray(res.n_candidates)[3:] == 0), engine
+        assert np.all(np.asarray(res.stats.n_candidates)[3:] == 0), engine
         # real lanes are unaffected by the padding
-        ref = idx.query(jnp.asarray(padded), k=5, engine=engine)
+        ref = idx.search(jnp.asarray(padded), SearchRequest(k=5, engine=engine))
         np.testing.assert_array_equal(np.asarray(res.ids)[:3],
                                       np.asarray(ref.ids)[:3])
 
@@ -106,7 +108,9 @@ def test_service_works_without_n_active_support(rng):
             self._idx = idx
 
         def query(self, queries, k=10):
-            return self._idx.query(queries, k=k)
+            # A pre-protocol surface; implemented on the typed search so
+            # the suite stays clean under -W error::DeprecationWarning.
+            return self._idx.search(queries, SearchRequest(k=k)).raw
 
     data = make_clustered(rng, 512, 8)
     p = derive_params(K=2, c=1.5, L=2, beta_override=0.1)

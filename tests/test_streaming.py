@@ -15,6 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.api import SearchRequest
 from repro.core import DETLSH, derive_params
 from repro.streaming import StreamingDETLSH, merge_segments
 from repro.streaming.compactor import interleave_keys64, \
@@ -62,13 +63,15 @@ def test_saturating_equals_fresh_static_build(idx_and_data, engine):
     (both saturate => both are the exact k-NN of the survivors)."""
     idx, data, new, gids_new, queries = idx_and_data
     k = 10
-    res = idx.query(jnp.asarray(queries), k=k, engine=engine, **SAT)
+    res = idx.search(jnp.asarray(queries),
+                     SearchRequest(k=k, engine=engine, **SAT))
 
     vecs, gids = idx._survivors()
     p = idx.params
     static = DETLSH.build(jnp.asarray(vecs), jax.random.key(7), p,
                           leaf_size=16, Nr=32)
-    sres = static.query(jnp.asarray(queries), k=k, engine=engine, **SAT)
+    sres = static.search(jnp.asarray(queries),
+                         SearchRequest(k=k, engine=engine, **SAT))
     static_gids = gids[np.asarray(sres.ids)]
 
     gt_g, gt_d = survivors_bf(idx, queries, k)
@@ -85,7 +88,8 @@ def test_saturating_equals_fresh_static_build(idx_and_data, engine):
 def test_deleted_never_returned_before_compaction(idx_and_data, engine):
     idx, data, new, gids_new, queries = idx_and_data
     assert any(s.has_tombstones for s in idx.manifest.segments)
-    res = idx.query(jnp.asarray(queries), k=20, engine=engine, **SAT)
+    res = idx.search(jnp.asarray(queries),
+                     SearchRequest(k=20, engine=engine, **SAT))
     dead = set(range(40)) | set(int(g) for g in gids_new[:10])
     assert not (set(np.asarray(res.ids).ravel()) & dead)
 
@@ -97,7 +101,8 @@ def test_upsert_visible_immediately():
     probe = (data[0] + 50.0).astype(np.float32)   # far from everything
     [gid] = idx.upsert(probe)
     assert idx.memtable.n_live == 1               # not sealed yet
-    res = idx.query(jnp.asarray(probe[None, :]), k=1, r_min=1.0)
+    res = idx.search(jnp.asarray(probe[None, :]),
+                     SearchRequest(k=1, r_min=1.0))
     assert int(np.asarray(res.ids)[0, 0]) == int(gid)
     assert float(np.asarray(res.dists)[0, 0]) < 1e-3
 
@@ -108,11 +113,12 @@ def test_upsert_overwrites_existing_gid():
     moved = (data[5] + 100.0).astype(np.float32)
     idx.upsert(moved, gids=[5])
     assert idx.n_live == 300                      # moved, not added
-    res = idx.query(jnp.asarray(moved[None, :]), k=1, **SAT)
+    res = idx.search(jnp.asarray(moved[None, :]), SearchRequest(k=1, **SAT))
     assert int(np.asarray(res.ids)[0, 0]) == 5
     assert float(np.asarray(res.dists)[0, 0]) < 1e-3
     # the old location must not resurface near its former coordinates
-    res_old = idx.query(jnp.asarray(data[5][None, :]), k=300, **SAT)
+    res_old = idx.search(jnp.asarray(data[5][None, :]),
+                         SearchRequest(k=300, **SAT))
     old_ids = np.asarray(res_old.ids)[0]
     old_d = np.asarray(res_old.dists)[0]
     assert old_d[old_ids == 5] > 90.0
@@ -211,7 +217,7 @@ def test_clip_fraction_and_requantile():
     assert idx.clip_fraction() == 0.0
     assert idx.n_live == n_live
     assert len(idx.manifest.segments) == 1
-    res = idx.query(jnp.asarray(far[:2]), k=1, **SAT)
+    res = idx.search(jnp.asarray(far[:2]), SearchRequest(k=1, **SAT))
     assert float(np.asarray(res.dists)[0, 0]) < 1e-3
 
 
@@ -227,7 +233,8 @@ def test_gid_exhaustion_raises_clean_and_capacity_grows():
     assert idx.next_gid == next_before and idx.n_live == n_live
     idx.grow_id_capacity(256)
     gids = idx.upsert(make_clustered(rng, 20, D))
-    res = idx.query(jnp.asarray(data[:2]), k=idx.n_live, **SAT)
+    res = idx.search(jnp.asarray(data[:2]),
+                     SearchRequest(k=idx.n_live, **SAT))
     assert set(int(g) for g in gids) <= set(np.asarray(res.ids).ravel())
     with pytest.raises(ValueError, match="shrink"):
         idx.grow_id_capacity(10)
@@ -244,7 +251,7 @@ def test_upsert_rejects_negative_gids_and_dedups_within_call():
     v2 = np.full((1, D), 2.0, np.float32)
     idx.upsert(np.concatenate([v1, v2]), gids=[999, 999])
     assert idx.n_live == 65
-    res = idx.query(jnp.asarray(v2), k=2, **SAT)
+    res = idx.search(jnp.asarray(v2), SearchRequest(k=2, **SAT))
     assert int(np.asarray(res.ids)[0, 0]) == 999
     assert float(np.asarray(res.dists)[0, 0]) < 1e-4
     assert int(np.asarray(res.ids)[0, 1]) != 999  # old row really gone
@@ -258,9 +265,10 @@ def test_pad_lanes_admit_nothing_from_delta():
     idx.upsert(make_clustered(rng, 5, D))         # non-empty memtable
     qs = np.concatenate([data[:2], np.zeros((3, D), np.float32)])
     for engine in ("fused", "vmap"):
-        res = idx.query(jnp.asarray(qs), k=4, engine=engine, n_active=2,
-                        r_min=1.0)
-        assert np.all(np.asarray(res.n_candidates)[2:] == 0), engine
+        res = idx.search(jnp.asarray(qs),
+                         SearchRequest(k=4, engine=engine, n_active=2,
+                                       r_min=1.0))
+        assert np.all(np.asarray(res.stats.n_candidates)[2:] == 0), engine
         assert np.all(np.asarray(res.ids)[2:] == idx.id_capacity), engine
 
 
@@ -278,8 +286,10 @@ def test_recall_parity_with_static_at_default_radius():
     static = DETLSH.build(jnp.asarray(vecs), jax.random.key(2), idx.params,
                           leaf_size=16, Nr=32)
 
-    ids_s = np.asarray(idx.query(jnp.asarray(queries), k=k).ids)
-    ids_f = gids[np.asarray(static.query(jnp.asarray(queries), k=k).ids)]
+    ids_s = np.asarray(
+        idx.search(jnp.asarray(queries), SearchRequest(k=k)).ids)
+    ids_f = gids[np.asarray(
+        static.search(jnp.asarray(queries), SearchRequest(k=k)).ids)]
     rec = {"stream": np.mean([len(set(ids_s[i]) & set(gt_g[i])) / k
                               for i in range(len(queries))]),
            "static": np.mean([len(set(ids_f[i]) & set(gt_g[i])) / k

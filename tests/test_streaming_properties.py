@@ -19,6 +19,7 @@ import numpy as np
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
+from repro.api import SearchRequest
 from repro.core import derive_params
 from repro.streaming import StreamingDETLSH
 
@@ -76,7 +77,8 @@ def test_mutation_sequence_equals_fresh_build(seed, ops):
     gt_d = np.sqrt(np.take_along_axis(d2, sel, axis=1))
 
     for engine in ("fused", "vmap"):
-        res = idx.query(jnp.asarray(queries), k=k, engine=engine, **SAT)
+        res = idx.search(jnp.asarray(queries),
+                         SearchRequest(k=k, engine=engine, **SAT))
         ids = np.asarray(res.ids)[:, :k]
         np.testing.assert_allclose(np.asarray(res.dists)[:, :k], gt_d,
                                    rtol=1e-4, atol=1e-4, err_msg=engine)
