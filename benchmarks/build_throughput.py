@@ -1,17 +1,23 @@
 """Indexing-time benchmark: static build vs streaming ingest (BENCH_build.json).
 
-The paper's headline claim is indexing speed, but only the query-phase
-trajectory (BENCH_query.json) was recorded.  This benchmark times
+The paper's headline claim is indexing speed (up to 6x DET / 40x PDET over
+SOTA).  This benchmark times the whole indexing phase and the fused
+single-sort build pipeline against the seed path (docs/DESIGN.md §8):
 
-  * the static one-shot build (``DETLSH.build``) — cold (includes trace +
-    compile) and warm (steady-state rebuild, the paper's regime);
-  * streaming ingest of the *same* points: base build on half the data,
-    the other half upserted through the delta buffer (seals included),
-    plus the final compaction — i.e. the full cost of arriving at the same
-    live point set incrementally;
-  * query-QPS parity: batched fused queries against the compacted
-    streaming index vs a static index over the identical live point set.
-    The acceptance gate is streaming QPS >= 0.75x static at batch 32.
+  * static one-shot build — cold (trace + compile) and warm (steady-state
+    rebuild, the paper's regime) for BOTH builders: ``build_impl='auto'``
+    (fused: one-pass encode+key-pack kernel, one sort per forest) vs
+    ``build_impl='reference'`` (the seed per-tree double-argsort path).
+    The warm new/old ratio is the CI speedup gate (ratios, not absolute
+    times, so shared runners don't flake).
+  * per-phase breakdown of the fused warm build: project / encode+pack /
+    sort / gather+leaf-summary (each phase jitted and timed separately
+    over the same arrays).
+  * streaming ingest of the *same* points (base build on half, the rest
+    upserted through the delta with seals, plus the final compaction) for
+    both builders — the seal path is where the fused one-pass kernel pays.
+  * query-QPS parity: batched fused queries, streaming vs static, gate
+    >= 0.75x at batch 32.
 
   PYTHONPATH=src python -m benchmarks.run --only build_throughput
   PYTHONPATH=src python -m benchmarks.run --smoke       # small + JSON only
@@ -31,17 +37,51 @@ from benchmarks.common import Table, make_dataset, make_queries, timed, \
 
 DEFAULT = dict(n=16384, dataset="deep-like", K=4, L=8, c=1.5, beta=0.1,
                leaf_size=64, delta_capacity=2048, batch=32, k=10, repeat=3)
-# repeat=5: the QPS-parity ratio is a hard CI gate, and single-shot timings
-# on shared runners flake; five repeats average out scheduler noise for
-# pennies (each call is ~10 ms).
+# repeat=5: the QPS-parity and build-speedup ratios are hard CI gates, and
+# single-shot timings on shared runners flake; five repeats average out
+# scheduler noise for pennies (each call is ~10 ms).
 SMOKE = dict(n=4096, dataset="deep-like", K=4, L=8, c=1.5, beta=0.1,
              leaf_size=64, delta_capacity=1024, batch=32, k=10, repeat=5)
+
+
+def _phase_breakdown(data_dev, A, cfg, repeat):
+    """Fused warm-build per-phase seconds: project / encode+pack / sort /
+    gather+leaf-summary, each stage jitted separately over the same
+    arrays (the production build runs them fused in ONE jitted call —
+    this is the diagnostic split, so the sum slightly exceeds the fused
+    wall-clock)."""
+    from repro.core import detree, hashing
+    from repro.core import encoding as enc
+    K, L, ls = cfg["K"], cfg["L"], cfg["leaf_size"]
+
+    project = jax.jit(lambda x: hashing.project(x, A))
+    proj, sec_project = timed(project, data_dev, repeat=repeat)
+    # Same Nr as the gated build (DETLSH.build's default).
+    bp_all = enc.select_breakpoints(proj, enc.DEFAULT_NR)
+
+    def encode_pack(pr):
+        from repro.kernels import ops as kops
+        return kops.encode_pack(pr, bp_all, K=K, L=L)
+
+    encode_pack = jax.jit(encode_pack)
+    (proj_t, codes_t, key_hi, key_lo), sec_encode = timed(
+        encode_pack, proj, repeat=repeat)
+
+    sort = jax.jit(lambda hi, lo: detree.code_sort_orders(hi, lo, K))
+    order, sec_sort = timed(sort, key_hi, key_lo, repeat=repeat)
+
+    assemble = jax.jit(lambda pt, ct, o: detree.assemble_sorted_forest(
+        pt, ct, o, n=int(data_dev.shape[0]), leaf_size=ls))
+    _, sec_assemble = timed(assemble, proj_t, codes_t, order, repeat=repeat)
+
+    return {"project": sec_project, "encode_pack": sec_encode,
+            "sort": sec_sort, "gather_leaf_summary": sec_assemble}
 
 
 def run_build_throughput(cfg=None, json_path: str = "BENCH_build.json",
                          out_dir: str | None = "benchmarks/out") -> Table:
     from repro.api import SearchRequest
-    from repro.core import DETLSH, derive_params, estimate_r_min
+    from repro.core import DETLSH, derive_params, estimate_r_min, hashing
     from repro.streaming import StreamingDETLSH
 
     cfg = dict(DEFAULT, **(cfg or {}))
@@ -52,22 +92,40 @@ def run_build_throughput(cfg=None, json_path: str = "BENCH_build.json",
                       beta_override=cfg["beta"])
     data_dev = jnp.asarray(data)
 
-    def static_build():
+    def static_build(impl):
         idx = DETLSH.build(data_dev, jax.random.key(0), p,
-                           leaf_size=cfg["leaf_size"])
+                           leaf_size=cfg["leaf_size"], build_impl=impl)
         jax.block_until_ready(idx.forest.point_ids)
         return idx
 
-    sidx_static, t_cold = timed_once(static_build)
-    _, t_warm = timed_once(static_build)
+    # Old (seed) path first, then the fused path — cold once, warm as the
+    # *best of* `repeat` rebuilds (the warm ratio is a hard CI gate; means
+    # absorb scheduler/GC outliers on shared runners, the minimum is the
+    # standard noise-robust wall-clock estimator).
+    def best_of(impl, repeat):
+        best = float("inf")
+        for _ in range(repeat):
+            _, sec = timed_once(static_build, impl)
+            best = min(best, sec)
+        return best
+
+    _, t_cold_old = timed_once(static_build, "reference")
+    t_warm_old = best_of("reference", cfg["repeat"])
+    sidx_static, t_cold = timed_once(static_build, "auto")
+    t_warm = best_of("auto", cfg["repeat"])
+    warm_speedup = t_warm_old / t_warm
+
+    phases = _phase_breakdown(data_dev, sidx_static.A, cfg,
+                              repeat=cfg["repeat"])
 
     # Streaming ingest of the same points: base on the first half, the
     # second half upserted in delta-sized chunks (sealing as it goes).
-    def ingest():
+    def ingest(impl):
         idx = StreamingDETLSH.build(data_dev[:n // 2], jax.random.key(0), p,
                                     leaf_size=cfg["leaf_size"],
                                     delta_capacity=dc,
-                                    max_segments=1 + n // (2 * dc))
+                                    max_segments=1 + n // (2 * dc),
+                                    build_impl=impl)
         jax.block_until_ready(idx.manifest.segments[0].forest.point_ids)
         t0 = time.perf_counter()
         for start in range(n // 2, n, dc):
@@ -80,10 +138,31 @@ def run_build_throughput(cfg=None, json_path: str = "BENCH_build.json",
         jax.block_until_ready(idx.manifest.segments[0].forest.point_ids)
         return idx, t_ing, time.perf_counter() - t0
 
-    sidx, t_ingest, t_compact = ingest()
+    # One discarded warm-up ingest per impl, then best-of-`repeat` timed
+    # runs, so the gated ratio compares steady state to steady state (the
+    # first fused ingest pays seal-kernel compiles; the first reference
+    # ingest pays eager op-cache fills) and a scheduler hiccup in a single
+    # run can't skew it.
+    def best_ingest(impl):
+        ingest(impl)                                   # discarded warm-up
+        best = (None, float("inf"), float("inf"))
+        for _ in range(cfg["repeat"]):
+            idx, t_ing, t_cmp = ingest(impl)
+            if t_ing + t_cmp < best[1] + best[2]:
+                best = (idx, t_ing, t_cmp)
+        return best
+
+    _, t_ingest_old, t_compact_old = best_ingest("reference")
+    sidx, t_ingest, t_compact = best_ingest("auto")
     assert sidx.n_live == n, (sidx.n_live, n)
+    stream_speedup = ((t_ingest_old + t_compact_old)
+                      / (t_ingest + t_compact))
 
     # Query-QPS parity at equal live point count, batch `batch`, fused.
+    # Best-of-`repeat` per-call wall-clock on both sides for the same
+    # reason as the warm builds: the parity ratio is a hard CI gate and
+    # the two measurement blocks run at different times — a scheduler
+    # hiccup in either block skews a mean-based ratio both ways.
     b, k = cfg["batch"], cfg["k"]
     queries = jnp.asarray(make_queries(data, b, seed=1))
     r0 = estimate_r_min(data_dev, queries, k, p.c)
@@ -92,8 +171,16 @@ def run_build_throughput(cfg=None, json_path: str = "BENCH_build.json",
     sidx.warmup_query_caches()
     fn_static = jax.jit(lambda q: sidx_static.search(q, req).ids)
     fn_stream = jax.jit(lambda q: sidx.search(q, req).ids)
-    _, sec_static = timed(fn_static, queries, repeat=cfg["repeat"])
-    _, sec_stream = timed(fn_stream, queries, repeat=cfg["repeat"])
+
+    def best_call(fn):
+        best = float("inf")
+        for _ in range(cfg["repeat"]):
+            _, sec = timed(fn, queries, repeat=1)
+            best = min(best, sec)
+        return best
+
+    sec_static = best_call(fn_static)
+    sec_stream = best_call(fn_stream)
     qps_static = b / sec_static
     qps_stream = b / sec_stream
     ratio = qps_stream / qps_static
@@ -101,14 +188,27 @@ def run_build_throughput(cfg=None, json_path: str = "BENCH_build.json",
     table = Table("build_throughput", ["phase", "seconds", "points_per_sec"])
     rows = []
     for phase, sec, pts in (
+            ("static_build_cold_old", t_cold_old, n),
+            ("static_build_warm_old", t_warm_old, n),
             ("static_build_cold", t_cold, n),
             ("static_build_warm", t_warm, n),
+            ("streaming_ingest_old", t_ingest_old, n // 2),
+            ("compaction_old", t_compact_old, n),
+            ("ingest_plus_compact_old", t_ingest_old + t_compact_old,
+             n // 2),
             ("streaming_ingest", t_ingest, n // 2),
             ("compaction", t_compact, n),
             ("ingest_plus_compact", t_ingest + t_compact, n // 2)):
         pps = pts / sec
         table.add(phase, sec, pps)
         rows.append(dict(phase=phase, seconds=sec, points_per_sec=pps))
+    for phase, sec in phases.items():
+        table.add("phase_" + phase, sec, n / sec)
+        rows.append(dict(phase="phase_" + phase, seconds=sec,
+                         points_per_sec=n / sec))
+    table.add("warm_build_speedup_new_over_old", float("nan"), warm_speedup)
+    table.add("ingest_compact_speedup_new_over_old", float("nan"),
+              stream_speedup)
     table.add("query_qps_static_b%d" % b, sec_static, qps_static)
     table.add("query_qps_stream_b%d" % b, sec_stream, qps_stream)
     table.add("qps_ratio_stream_over_static", float("nan"), ratio)
@@ -124,6 +224,15 @@ def run_build_throughput(cfg=None, json_path: str = "BENCH_build.json",
         rows=rows,
         static_build_warm_pps=n / t_warm,
         streaming_ingest_pps=(n // 2) / (t_ingest + t_compact),
+        build_phases=phases,
+        # Old-vs-new build-pipeline speedups: the CI gate asserts these
+        # ratios stay >= 1.0 (ratios, not absolute times — runner-noise
+        # proof); the PR-5 acceptance targets were 1.5x warm static and
+        # 2x ingest+compact.
+        build_speedup={
+            "static_warm_new_over_old": warm_speedup,
+            "ingest_compact_new_over_old": stream_speedup,
+        },
         query_qps={"static": qps_static, "stream": qps_stream,
                    "ratio_stream_over_static": ratio},
         segments_after_compact=len(sidx.manifest.segments),

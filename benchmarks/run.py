@@ -69,15 +69,18 @@ def main(argv=None) -> None:
         figures = _figures(args.fast)
 
     summary = ["name,us_per_call,derived"]
+    failed, ran = [], []
     for fig in figures:
         if args.only and fig.__name__ != args.only:
             continue
         t0 = time.perf_counter()
         try:
             table = fig()
+            ran.append(fig.__name__)
         except Exception as e:  # keep the harness running
             print(f"[bench] {fig.__name__} FAILED: {e}", file=sys.stderr)
             summary.append(f"{fig.__name__},nan,error")
+            failed.append(fig.__name__)
             continue
         sec = time.perf_counter() - t0
         lines = table.emit(args.out_dir)
@@ -90,6 +93,32 @@ def main(argv=None) -> None:
     print("\n### summary")
     for ln in summary:
         print(ln)
+
+    if args.smoke:
+        _enforce_smoke_gates(failed, ran)
+
+
+def _enforce_smoke_gates(failed, ran) -> None:
+    """--smoke is the CI entry point: a failed smoke figure or a build-
+    pipeline regression must fail the run, not just print.  Gates are
+    *ratios* measured within the same run (old-vs-new build speedup >= 1.0),
+    not absolute times, so shared CI runners don't flake.  The build gate
+    only fires when this run actually produced BENCH_build.json (--only may
+    have selected a different figure — never gate on a stale file)."""
+    import json
+    if failed:
+        raise SystemExit(f"[bench] smoke figures failed: {failed}")
+    if "build_throughput_smoke" not in ran:
+        print("[bench] build speedup gate skipped (build figure not run)")
+        return
+    with open("BENCH_build.json") as f:
+        speedup = json.load(f)["build_speedup"]
+    bad = {k: v for k, v in speedup.items() if not v >= 1.0}
+    if bad:
+        raise SystemExit(f"[bench] build-pipeline speedup gate (>= 1.0x "
+                         f"over the seed builder) failed: {bad}")
+    print(f"[bench] build speedup gate OK: "
+          + ", ".join(f"{k}={v:.2f}x" for k, v in speedup.items()))
 
 
 if __name__ == "__main__":

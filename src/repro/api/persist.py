@@ -64,6 +64,18 @@ class SnapshotFormatError(ValueError):
 _FOREST_KEYS = ("point_ids", "proj_sorted", "codes_sorted", "valid",
                 "leaf_lo", "leaf_hi", "leaf_valid", "breakpoints")
 
+def _forest_dtypes() -> dict:
+    """Storage dtypes of the forest arrays, derived from detree's narrow
+    layout (the single source of truth).  Loading casts into these, so
+    pre-narrowing snapshots that wrote f32/int32 arrays keep loading
+    bit-compatibly (the values always fit — codes are 8-bit symbols,
+    bounds are region indices < Nr <= 256)."""
+    from repro.core.detree import CODE_DTYPE, LEAF_DTYPE
+    return {"point_ids": np.int32, "proj_sorted": np.float32,
+            "codes_sorted": np.dtype(CODE_DTYPE), "valid": np.bool_,
+            "leaf_lo": np.dtype(LEAF_DTYPE), "leaf_hi": np.dtype(LEAF_DTYPE),
+            "leaf_valid": np.bool_, "breakpoints": np.float32}
+
 
 def _forest_arrays(forest, prefix: str = "forest.") -> dict:
     return {prefix + k: np.asarray(getattr(forest, k))
@@ -73,8 +85,10 @@ def _forest_arrays(forest, prefix: str = "forest.") -> dict:
 def _forest_from(arrays, n: int, leaf_size: int, prefix: str = "forest."):
     import jax.numpy as jnp
     from repro.core.detree import DEForest
+    dtypes = _forest_dtypes()
     return DEForest(n=int(n), leaf_size=int(leaf_size),
-                    **{k: jnp.asarray(arrays[prefix + k])
+                    **{k: jnp.asarray(np.asarray(arrays[prefix + k])
+                                      .astype(dtypes[k]))
                        for k in _FOREST_KEYS})
 
 
@@ -268,6 +282,9 @@ def _load_streaming(path: str, manifest: dict):
         max_segments=int(manifest["max_segments"]),
         id_capacity=int(manifest["id_capacity"]))
     index.spec = _spec_from(manifest.get("spec"))
+    if index.spec is not None:      # seal path keeps the spec'd builder
+        index.build_impl = index.spec.build_impl
+        index.build_chunk = index.spec.build_chunk
 
     for entry in manifest["segments"]:
         arrays = np.load(os.path.join(path, entry["file"]))
@@ -387,11 +404,14 @@ def _load_pdet(path: str, manifest: dict, placement=None):
     common = np.load(os.path.join(path, "common.npz"))
     entries = sorted(manifest["shards"], key=lambda e: e["shard"])
     shards = [np.load(os.path.join(path, e["file"])) for e in entries]
+    dtypes = _forest_dtypes()
     parts = {k: np.concatenate([sh[k] for sh in shards], axis=1)
+             .astype(dtypes[k])
              for k in _PDET_POINT_KEYS + _PDET_LEAF_KEYS}
     meta = manifest["forest"]
     forest = DEForest(n=int(meta["n"]), leaf_size=int(meta["leaf_size"]),
-                      breakpoints=jnp.asarray(common["breakpoints"]),
+                      breakpoints=jnp.asarray(np.asarray(
+                          common["breakpoints"], np.float32)),
                       **{k: jnp.asarray(v) for k, v in parts.items()})
     data = jnp.asarray(np.concatenate([sh["data"] for sh in shards],
                                       axis=0))

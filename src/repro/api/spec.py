@@ -27,6 +27,7 @@ from repro.api.request import IMPLS, _check_choice, _check_positive
 
 KINDS = ("static", "streaming")
 BREAKPOINT_METHODS = ("sample_sort", "full_sort", "histogram_refine")
+BUILD_IMPLS = IMPLS + ("reference",)
 
 # Logical array axes the PDET layout knows how to place.  'points' (data
 # rows / code-sorted positions) and 'leaves' (leaf summaries) shard over
@@ -155,6 +156,11 @@ class IndexSpec:
     id_capacity: Optional[int] = None
     # --- device placement (None = single device; DESIGN.md §7) ---
     placement: Optional[PlacementSpec] = None
+    # --- build pipeline (DESIGN.md §8): fused single-sort builder impl
+    # ('reference' = the seed per-tree double-argsort oracle) and the
+    # fused kernel's row-chunk size ---
+    build_impl: str = "auto"
+    build_chunk: int = 512
 
     def __post_init__(self):
         _check_choice("kind", self.kind, KINDS)
@@ -167,7 +173,11 @@ class IndexSpec:
             raise ValueError(f"beta_override must be positive, got "
                              f"{self.beta_override!r}")
         _check_positive("Nr", self.Nr, minimum=2)
+        from repro.core.detree import check_nr
+        check_nr(self.Nr)            # codes are stored as uint8 symbols
         _check_positive("leaf_size", self.leaf_size)
+        _check_choice("build_impl", self.build_impl, BUILD_IMPLS)
+        _check_positive("build_chunk", self.build_chunk)
         _check_choice("breakpoint_method", self.breakpoint_method,
                       BREAKPOINT_METHODS)
         _check_choice("project_impl", self.project_impl, IMPLS)

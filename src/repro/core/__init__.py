@@ -78,7 +78,13 @@ class DETLSH:
               Nr: int = encoding.DEFAULT_NR, leaf_size: int = 64,
               breakpoint_method: str = "sample_sort",
               project_impl: str = "auto",
-              encode_impl: str = "auto") -> "DETLSH":
+              encode_impl: str = "auto",
+              build_impl: str = "auto",
+              build_chunk: int = 512) -> "DETLSH":
+        """One-shot static build (Alg. 1 + 2).  ``build_impl`` /
+        ``build_chunk`` select the fused single-sort build pipeline and its
+        row-chunk size ('reference' = the seed per-tree double-argsort
+        path; both produce bit-identical forests — docs/DESIGN.md §8)."""
         params = params or derive_params()
         d = data.shape[1]
         kp, kb = jax.random.split(key)
@@ -87,7 +93,8 @@ class DETLSH:
         forest = build_forest(proj, params.K, params.L, Nr=Nr,
                               leaf_size=leaf_size,
                               breakpoint_method=breakpoint_method, key=kb,
-                              encode_impl=encode_impl)
+                              encode_impl=encode_impl,
+                              build_impl=build_impl, build_chunk=build_chunk)
         return cls(params=params, A=A, forest=forest, data=data)
 
     @classmethod
@@ -101,7 +108,9 @@ class DETLSH:
                         leaf_size=spec.leaf_size,
                         breakpoint_method=spec.breakpoint_method,
                         project_impl=spec.project_impl,
-                        encode_impl=spec.encode_impl)
+                        encode_impl=spec.encode_impl,
+                        build_impl=spec.build_impl,
+                        build_chunk=spec.build_chunk)
         idx.spec = spec
         return idx
 

@@ -57,6 +57,8 @@ def build_kv_index(k_cache: jax.Array, key: jax.Array, *,
                    leaf_size: int = 32) -> DETKVIndex:
     """Index cache keys.  k_cache (b, S, hk, dh) -> per-(b,hk) DE-Forests."""
     b, S, hk, dh = k_cache.shape
+    from repro.core.detree import check_nr
+    check_nr(Nr)                     # codes are stored as uint8 symbols
     params = params or derive_params(K=4, c=1.5, L=4, beta_override=0.1)
     K, L = params.K, params.L
     A = hashing.sample_projections(key, dh + 1, K, L)

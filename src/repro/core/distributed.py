@@ -51,7 +51,7 @@ from repro.sharding.compat import shard_map
 
 from repro.core import encoding as enc
 from repro.core import hashing
-from repro.core.detree import DEForest, build_tree
+from repro.core.detree import DEForest, build_tree, fused_forest_arrays
 from repro.core.query import (FusedPlan, QueryConfig, QueryResult,
                               _merge_candidates, fused_round_update,
                               fused_topk, knn_query_batch)
@@ -99,16 +99,18 @@ def _build_local_forest(data_local: jax.Array, A: jax.Array, K: int, L: int,
                         Nr: int, leaf_size: int, bp_rounds: int,
                         n_global: int,
                         axes: Sequence[str] | None) -> DEForest:
+    """Per-shard forest over the local data (Alg. 7), through the shared
+    fused single-sort pipeline (encode + key-pack kernel, one stable sort
+    for all L trees — docs/DESIGN.md §8); only the breakpoints are global
+    (psum'd histogram refinement).  Bit-identical to the per-tree reference
+    builder, which ``serial_reference_build`` still uses as the
+    cross-check (tests/test_distributed.py, tests/test_build_fused.py)."""
     n_local = data_local.shape[0]
     proj = hashing.project(data_local, A)
     bp_all = distributed_breakpoints(proj, n_global, Nr, bp_rounds, axes)
-    codes_all = enc.encode(proj, bp_all)
-    proj_t = proj.reshape(n_local, L, K).transpose(1, 0, 2)
-    codes_t = codes_all.reshape(n_local, L, K).transpose(1, 0, 2)
-    bp_t = bp_all.reshape(L, K, Nr + 1)
-    parts = jax.vmap(functools.partial(build_tree, leaf_size=leaf_size))(
-        proj_t, codes_t, bp_t)
-    return DEForest(n=n_local, leaf_size=leaf_size, **parts)
+    parts = fused_forest_arrays(proj, bp_all, K=K, L=L, leaf_size=leaf_size)
+    return DEForest(n=n_local, leaf_size=leaf_size,
+                    breakpoints=bp_all.reshape(L, K, Nr + 1), **parts)
 
 
 # ---------------------------------------------------------------------------
@@ -313,6 +315,8 @@ def serial_reference_build(data: jax.Array, key: jax.Array,
                            Nr: int = enc.DEFAULT_NR, leaf_size: int = 64,
                            bp_rounds: int = 8):
     """vmap-over-shards build with summed (\"psum\") histogram counts."""
+    from repro.core.detree import check_nr
+    check_nr(Nr)
     n, d = data.shape
     assert n % n_shards == 0
     A = hashing.sample_projections(key, d, params.K, params.L)

@@ -34,8 +34,25 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 DEFAULT_NR = 256
+
+
+def _sort_columns(sample: jax.Array) -> jax.Array:
+    """Column-wise sort for order statistics, (m, D) -> (m, D).
+
+    XLA's CPU sort is a generic comparator sort, ~10x slower than numpy's
+    introsort on the selection sample; the sorted values are identical
+    either way (sorting is exact), so outside a trace on the CPU backend
+    the sort runs on the host.  Inside a trace (the jitted figure
+    benchmarks, shard_map) or on accelerators (hardware-bitonic sort
+    beats a host round-trip) it stays ``jnp.sort``.
+    """
+    if (not isinstance(sample, jax.core.Tracer)
+            and jax.default_backend() == "cpu"):
+        return jnp.asarray(np.sort(np.asarray(sample), axis=0))
+    return jnp.sort(sample, axis=0)
 
 
 # ---------------------------------------------------------------------------
@@ -79,7 +96,7 @@ def breakpoints_sample_sort(coords: jax.Array, Nr: int = DEFAULT_NR, *,
     else:
         stride = max(1, n // n_s)                 # floor: >= n_s rows remain
         sample = coords[::stride][:n_s, :]
-    sample_sorted = jnp.sort(sample, axis=0)
+    sample_sorted = _sort_columns(sample)
     bp = _order_statistic_breakpoints(sample_sorted, Nr)
     # True min/max must come from the full data so every point is coverable.
     bp = bp.at[:, 0].set(jnp.min(coords, axis=0))
@@ -177,7 +194,7 @@ def select_breakpoints(coords: jax.Array, Nr: int = DEFAULT_NR, *,
                                        sample_fraction=sample_fraction)
     if method == "full_sort":  # the paper's strawman (used as benchmark ref)
         return _enforce_monotone(
-            _order_statistic_breakpoints(jnp.sort(coords, axis=0), Nr))
+            _order_statistic_breakpoints(_sort_columns(coords), Nr))
     if method == "histogram_refine":
         return breakpoints_histogram_refine(coords, Nr, rounds=rounds)
     raise ValueError(f"unknown breakpoint method: {method}")

@@ -7,6 +7,10 @@ tiling; ``ops.py`` is the jit'd public wrapper (padding + impl dispatch);
 
   lsh_project      — hashing matmul (MXU), the indexing-phase hot spot
   encode_bins      — iSAX region assignment (VPU compare-accumulate)
+  build_fused      — one-pass build pipeline: project -> encode -> packed
+                     interleaved sort keys, emitted straight into the
+                     per-tree (L, n, K) layout (the indexing-phase engine;
+                     docs/DESIGN.md §8)
   leaf_bounds      — DE-Tree LB/UB pruning distances (fused VPU)
   l2_rerank        — exact-distance rerank (MXU + fused norms)
   range_rerank     — fused batched range query: leaf LB + radius admission +

@@ -1,0 +1,154 @@
+"""Pallas kernel: fused build pipeline — project -> encode -> key-pack.
+
+The indexing phase of DET-LSH (the paper's headline speedup: "up to 6x for
+DET-LSH, 40x for PDET-LSH over SOTA") was three separate HBM passes in the
+seed build: the projection matmul, the encode compare-sweep, and a per-bit
+Python loop packing interleaved sort keys — each materializing an (n, L*K)
+intermediate plus its (L, n, K) transposed copy.  This kernel streams row
+chunks of the input through all three stages in ONE grid pass:
+
+  1. project: the (bn, d) row tile against the full (d, L*K) panel on the
+     MXU (identical tiling to ``lsh_project``) — or skipped when the caller
+     already has projections (the static build projects first because
+     breakpoint *selection* needs the projected coordinates);
+  2. encode: the compare-accumulate sweep over the Nr-1 internal breakpoint
+     edges (identical formulation to ``encode_bins``), entirely on the VPU
+     tile — region ids never round-trip through HBM before packing;
+  3. key-pack: the MSB-first round-robin bit-interleave of each tree's K
+     region ids into two uint32 words (the packed 64-bit sort key; see
+     ``core.detree.interleave_keys``), unrolled over the static (level,
+     dim) table.
+
+Outputs land directly in the per-tree (L, n, K) layout the sorted forest
+needs (the per-tree column slices are static — no transpose op), so the
+build never materializes (n, L*K) arrays or their transposed copies at
+once: peak intermediate memory is O(chunk), not O(n * L * K * passes).
+
+Grid: (n / block_n,) row chunks — ``block_n`` is the build's chunk size,
+plumbed from ``IndexSpec.build_chunk``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.detree import key_bit_budget
+
+
+def _encode_pack_tile(proj, bp_ref, proj_ref, codes_ref, hi_ref, lo_ref, *,
+                      K: int, L: int, Nr: int):
+    """Shared tile body: proj (bn, L*K) f32 resident in VMEM -> outputs."""
+    def body(b, acc):
+        edges = bp_ref[:, b]                           # (L*K,) internal edge b
+        return acc + (proj >= edges[None, :]).astype(jnp.int32)
+
+    acc = jax.lax.fori_loop(1, Nr, body, jnp.zeros(proj.shape, jnp.int32))
+    codes = jnp.clip(acc, 0, Nr - 1)                   # (bn, L*K)
+
+    _, hi_bits, lo_bits = key_bit_budget(K)
+
+    def pack(codes_l, start_bit, nbits):
+        key = jnp.zeros((proj.shape[0],), jnp.uint32)
+        pos = nbits * K
+        for b in range(nbits):                         # bit level (MSB first)
+            for j in range(K):                         # round-robin over dims
+                pos -= 1
+                if pos >= 32:      # overflows the word: dropped, explicitly
+                    continue       # (mirrors detree.interleave_keys)
+                bit = (codes_l[:, j] >> (7 - (start_bit + b))) & 1
+                key = key | (bit.astype(jnp.uint32) << pos)
+        return key
+
+    for l in range(L):                                 # static per-tree slices
+        sl = slice(l * K, (l + 1) * K)
+        proj_ref[l] = proj[:, sl]
+        codes_l = codes[:, sl]
+        codes_ref[l] = codes_l
+        hi_ref[l] = pack(codes_l, 0, hi_bits)
+        lo_ref[l] = (pack(codes_l, hi_bits, lo_bits) if lo_bits > 0
+                     else jnp.zeros((proj.shape[0],), jnp.uint32))
+
+
+def _kernel_from_proj(p_ref, bp_ref, proj_ref, codes_ref, hi_ref, lo_ref, *,
+                      K, L, Nr):
+    _encode_pack_tile(p_ref[...], bp_ref, proj_ref, codes_ref, hi_ref,
+                      lo_ref, K=K, L=L, Nr=Nr)
+
+
+def _kernel_from_data(x_ref, a_ref, bp_ref, proj_ref, codes_ref, hi_ref,
+                      lo_ref, *, K, L, Nr):
+    proj = jax.lax.dot_general(x_ref[...], a_ref[...],
+                               (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+    _encode_pack_tile(proj[:, :L * K], bp_ref, proj_ref, codes_ref, hi_ref,
+                      lo_ref, K=K, L=L, Nr=Nr)
+
+
+def _out_shapes(n: int, K: int, L: int, block_n: int):
+    specs = [
+        pl.BlockSpec((L, block_n, K), lambda i: (0, i, 0)),    # proj_t
+        pl.BlockSpec((L, block_n, K), lambda i: (0, i, 0)),    # codes_t
+        pl.BlockSpec((L, block_n), lambda i: (0, i)),          # key_hi
+        pl.BlockSpec((L, block_n), lambda i: (0, i)),          # key_lo
+    ]
+    shapes = [
+        jax.ShapeDtypeStruct((L, n, K), jnp.float32),
+        jax.ShapeDtypeStruct((L, n, K), jnp.int32),
+        jax.ShapeDtypeStruct((L, n), jnp.uint32),
+        jax.ShapeDtypeStruct((L, n), jnp.uint32),
+    ]
+    return specs, shapes
+
+
+def encode_pack(proj: jax.Array, breakpoints: jax.Array, *, K: int, L: int,
+                block_n: int = 512, interpret: bool = False):
+    """proj (n, L*K), breakpoints (L*K, Nr+1) ->
+    (proj_t (L, n, K) f32, codes_t (L, n, K) i32, key_hi/lo (L, n) u32).
+    n must be a block_n multiple (ops.py pads)."""
+    n, D = proj.shape
+    assert D == L * K, (proj.shape, L, K)
+    E = breakpoints.shape[1]
+    assert n % block_n == 0, (n, block_n)
+    out_specs, out_shape = _out_shapes(n, K, L, block_n)
+    return pl.pallas_call(
+        lambda *refs: _kernel_from_proj(*refs, K=K, L=L, Nr=E - 1),
+        grid=(n // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n, D), lambda i: (i, 0)),
+            pl.BlockSpec((D, E), lambda i: (0, 0)),
+        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(proj, breakpoints)
+
+
+def project_encode_pack(x: jax.Array, a: jax.Array, breakpoints: jax.Array,
+                        *, K: int, L: int, block_n: int = 256,
+                        interpret: bool = False):
+    """x (n, d), a (d, L*K), breakpoints (L*K, Nr+1) -> same outputs as
+    :func:`encode_pack` with the projection matmul fused into the pass
+    (the streaming seal / frozen-breakpoint path, where no breakpoint
+    selection sits between projection and encoding).  n and d must be
+    block-aligned (ops.py pads rows to block_n and the feature dim to the
+    128-lane MXU width)."""
+    n, d = x.shape
+    D = a.shape[1]
+    assert D == L * K, (a.shape, L, K)
+    E = breakpoints.shape[1]
+    assert n % block_n == 0, (n, block_n)
+    out_specs, out_shape = _out_shapes(n, K, L, block_n)
+    return pl.pallas_call(
+        lambda *refs: _kernel_from_data(*refs, K=K, L=L, Nr=E - 1),
+        grid=(n // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, D), lambda i: (0, 0)),
+            pl.BlockSpec((D, E), lambda i: (0, 0)),
+        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(x, a, breakpoints)

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
+from repro.kernels import build_fused as _bf
 from repro.kernels import lsh_project as _proj
 from repro.kernels import encode_bins as _enc
 from repro.kernels import leaf_bounds as _lb
@@ -64,14 +65,51 @@ def encode_bins(coords, breakpoints, *, interpret: bool = False,
     return out[:n]
 
 
+@functools.partial(jax.jit, static_argnames=("K", "L", "interpret",
+                                             "block_n"))
+def encode_pack(proj, breakpoints, *, K: int, L: int,
+                interpret: bool = False, block_n: int = 512):
+    """Fused encode + interleaved-key pack (build pipeline; see
+    kernels/build_fused.py).  proj (n, L*K) -> per-tree layouts
+    (proj_t, codes_t, key_hi, key_lo); rows padded to ``block_n`` (the
+    build chunk size) and sliced back off."""
+    if not _use_pallas(interpret):
+        return _ref.encode_pack(proj, breakpoints, K=K, L=L)
+    n = proj.shape[0]
+    pp = _pad_to(proj, 0, block_n)
+    outs = _bf.encode_pack(pp, breakpoints, K=K, L=L, block_n=block_n,
+                           interpret=interpret)
+    return tuple(o[:, :n] for o in outs)
+
+
+@functools.partial(jax.jit, static_argnames=("K", "L", "interpret",
+                                             "block_n"))
+def project_encode_pack(x, a, breakpoints, *, K: int, L: int,
+                        interpret: bool = False, block_n: int = 256):
+    """One-pass project -> encode -> key-pack (the frozen-breakpoint seal
+    path; see kernels/build_fused.py).  x (n, d), a (d, L*K) -> per-tree
+    layouts; rows padded to ``block_n``, the feature dim to the 128-lane
+    MXU width (zero padding preserves the projection)."""
+    if not _use_pallas(interpret):
+        return _ref.project_encode_pack(x, a, breakpoints, K=K, L=L)
+    n = x.shape[0]
+    xp = _pad_to(_pad_to(x, 0, block_n), 1, 128)
+    ap = _pad_to(a, 0, 128)
+    outs = _bf.project_encode_pack(xp, ap, breakpoints, K=K, L=L,
+                                   block_n=block_n, interpret=interpret)
+    return tuple(o[:, :n] for o in outs)
+
+
 @functools.partial(jax.jit, static_argnames=("interpret", "block_l"))
 def leaf_bounds(q, leaf_lo, leaf_hi, leaf_valid, breakpoints, *,
                 interpret: bool = False, block_l: int = 256):
+    """Leaf bounds take int16 (storage-dtype) bounds; the kernel consumes
+    int32, so the cast happens here at use."""
     if not _use_pallas(interpret):
         return _ref.leaf_bounds(q, leaf_lo, leaf_hi, leaf_valid, breakpoints)
     nl = leaf_lo.shape[0]
-    lo = _pad_to(leaf_lo, 0, block_l)
-    hi = _pad_to(leaf_hi, 0, block_l)
+    lo = _pad_to(leaf_lo.astype(jnp.int32), 0, block_l)
+    hi = _pad_to(leaf_hi.astype(jnp.int32), 0, block_l)
     va = _pad_to(leaf_valid, 0, block_l, value=False)
     lb, ub = _lb.leaf_bounds(q, lo, hi, va, breakpoints, block_l=block_l,
                              interpret=interpret)
@@ -121,8 +159,8 @@ def range_rerank(q, q_proj, r_eff, leaf_lo, leaf_hi, leaf_valid, breakpoints,
     qp_b = _pad_to(_pad_to(q, 0, block_q), 1, 128)
     qproj_b = _pad_to(q_proj, 1, block_q)
     r_b = _pad_to(r_eff, 0, block_q, value=-1.0)
-    lo_b = _pad_to(leaf_lo, 1, block_l)
-    hi_b = _pad_to(leaf_hi, 1, block_l)
+    lo_b = _pad_to(leaf_lo.astype(jnp.int32), 1, block_l)
+    hi_b = _pad_to(leaf_hi.astype(jnp.int32), 1, block_l)
     lv_b = _pad_to(leaf_valid.astype(jnp.int32), 1, block_l)
     pts_b = _pad_to(_pad_to(points, 1, block_l * leaf_size), 2, 128)
     pv_b = _pad_to(point_valid.astype(jnp.int32), 1, block_l * leaf_size)

@@ -33,6 +33,40 @@ def encode_bins(coords: jax.Array, breakpoints: jax.Array) -> jax.Array:
     return jnp.clip(ge.sum(-1), 0, Nr - 1).astype(jnp.int32)
 
 
+def encode_pack(proj: jax.Array, breakpoints: jax.Array, *, K: int,
+                L: int) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Fused build pipeline oracle: encode + interleaved key-pack.
+
+    proj (n, L*K), breakpoints (L*K, Nr+1) -> (proj_t (L, n, K) f32,
+    codes_t (L, n, K) int32, key_hi (L, n) uint32, key_lo (L, n) uint32).
+    Codes are identical to ``encode_bins``; key words are identical to
+    ``repro.core.detree.interleave_keys`` per tree.
+    """
+    from repro.core.detree import interleave_keys
+    n = proj.shape[0]
+    # Same codes as ``encode_bins`` (tested), via the O(n D log Nr)
+    # searchsorted form: this oracle IS the CPU build path, and the
+    # kernel's O(Nr) compare-sweep formulation is an XLA memory/time hog
+    # off-TPU (it materializes the (n, D, Nr-1) compare tensor).
+    D, E = breakpoints.shape
+    Nr = E - 1
+    inner = breakpoints[:, 1:Nr]
+    bins = jax.vmap(lambda e, col: jnp.searchsorted(e, col, side="right"),
+                    in_axes=(0, 1), out_axes=1)(inner, proj)
+    codes = jnp.clip(bins, 0, Nr - 1).astype(jnp.int32)  # (n, L*K)
+    proj_t = proj.reshape(n, L, K).transpose(1, 0, 2)
+    codes_t = codes.reshape(n, L, K).transpose(1, 0, 2)
+    key_hi, key_lo = interleave_keys(codes_t, K)         # (L, n) each
+    return proj_t, codes_t, key_hi, key_lo
+
+
+def project_encode_pack(x: jax.Array, a: jax.Array, breakpoints: jax.Array,
+                        *, K: int, L: int):
+    """Projection-fused variant of :func:`encode_pack` (the frozen-
+    breakpoint seal path): x (n, d), a (d, L*K) -> same outputs."""
+    return encode_pack(lsh_project(x, a), breakpoints, K=K, L=L)
+
+
 def leaf_bounds(q: jax.Array, leaf_lo: jax.Array, leaf_hi: jax.Array,
                 leaf_valid: jax.Array,
                 breakpoints: jax.Array) -> tuple[jax.Array, jax.Array]:

@@ -83,13 +83,17 @@ def run(mesh, mesh_tag, n=500_000_000, d=100, nq=64, k=50):
     n_pad = n_leaves * leaf_size
     sds = jax.ShapeDtypeStruct
     K, L = params.K, params.L
+    # Storage dtypes must match what the build now emits (detree's narrow
+    # layout: uint8 codes, int16 bounds) or the query executable's input
+    # signature — and the memory model — drift from the real index.
+    from repro.core.detree import CODE_DTYPE, LEAF_DTYPE
     forest_sds = DEForest(
         point_ids=sds((L, n_shards * n_pad), jnp.int32),
         proj_sorted=sds((L, n_shards * n_pad, K), jnp.float32),
-        codes_sorted=sds((L, n_shards * n_pad, K), jnp.int32),
+        codes_sorted=sds((L, n_shards * n_pad, K), CODE_DTYPE),
         valid=sds((L, n_shards * n_pad), jnp.bool_),
-        leaf_lo=sds((L, n_shards * n_leaves, K), jnp.int32),
-        leaf_hi=sds((L, n_shards * n_leaves, K), jnp.int32),
+        leaf_lo=sds((L, n_shards * n_leaves, K), LEAF_DTYPE),
+        leaf_hi=sds((L, n_shards * n_leaves, K), LEAF_DTYPE),
         leaf_valid=sds((L, n_shards * n_leaves), jnp.bool_),
         breakpoints=sds((L, K, 257), jnp.float32),
         n=n_local, leaf_size=leaf_size)

@@ -11,6 +11,14 @@ recomputed from the merged codes in one O(n) blockwise pass, and the outer
 breakpoint edges of the merged forest are the union (min/max) of the
 inputs' — which, as in ``segment.build_segment``, changes no code.
 
+All data movement is vectorized over the L trees at once: survivor
+extraction, the merge scatter, the padded assembly, and the leaf summaries
+operate on stacked (L, m, ...) arrays (every tree holds the same survivor
+set, so the per-tree survivor counts are equal and the stacked extraction
+is a single boolean take + reshape).  Only the two ``searchsorted`` calls
+per merge remain per-tree (numpy's searchsorted is 1-D) — O(m log m) each
+over a tiny L, not the former per-tree Python assembly of every array.
+
 Runs on the host (numpy): compaction is the background maintenance path,
 and host-side merging keeps dynamic result shapes out of the jitted query
 graph entirely — the query path only ever sees the swapped-in segment.
@@ -18,20 +26,56 @@ graph entirely — the query path only ever sees the swapped-in segment.
 
 from __future__ import annotations
 
+import functools
 from typing import List, Optional
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.detree import DEForest, _interleave_keys
+from repro.core.detree import DEForest, key_bit_budget
 from repro.streaming.segment import Segment
 
 
+@functools.lru_cache(maxsize=None)
+def _key_lut(K: int) -> np.ndarray:
+    """(K, 256) uint64: the joined-word key contribution of code value v
+    in dimension j — ``(hi << 32) | lo`` of ``detree.interleave_keys``,
+    precomputed per 8-bit symbol so packing a run is one gather + OR per
+    dimension instead of a per-bit shift sweep."""
+    _, hi_bits, lo_bits = key_bit_budget(K)
+    v = np.arange(256, dtype=np.uint64)
+    lut = np.zeros((K, 256), np.uint64)
+    # Positions >= 32 within a word overflow the device's uint32 shift and
+    # are dropped there (e.g. K=9: lo positions reach 35); the host keys
+    # must drop them identically or the merge order diverges from the
+    # device sort order the segment arrays are actually in.
+    for b in range(hi_bits):                       # hi word, shifted up 32
+        bit = (v >> np.uint64(7 - b)) & np.uint64(1)
+        for j in range(K):
+            pos = hi_bits * K - 1 - (b * K + j)
+            if pos < 32:
+                lut[j] |= bit << np.uint64(32 + pos)
+    for b in range(lo_bits):                       # lo word
+        bit = (v >> np.uint64(7 - hi_bits - b)) & np.uint64(1)
+        for j in range(K):
+            pos = lo_bits * K - 1 - (b * K + j)
+            if pos < 32:
+                lut[j] |= bit << np.uint64(pos)
+    return lut
+
+
 def interleave_keys64(codes: np.ndarray, K: int) -> np.ndarray:
-    """(m, K) region ids -> uint64 interleaved sort keys (detree's order)."""
-    hi, lo = _interleave_keys(jnp.asarray(codes), K)
-    return ((np.asarray(hi).astype(np.uint64) << np.uint64(32))
-            | np.asarray(lo).astype(np.uint64))
+    """(..., m, K) region ids -> (..., m) uint64 interleaved sort keys
+    (the two packed uint32 words of ``detree.interleave_keys`` joined —
+    detree's exact order; asserted identical in tests/test_build_fused.py).
+    Pure numpy: the compactor is the host maintenance path and must not
+    round-trip keys through the device."""
+    lut = _key_lut(K)
+    c = np.asarray(codes, np.intp)
+    out = lut[0][c[..., 0]]
+    for j in range(1, K):
+        out = out | lut[j][c[..., j]]
+    return out
 
 
 def stable_merge_positions(keys_a: np.ndarray,
@@ -44,46 +88,64 @@ def stable_merge_positions(keys_a: np.ndarray,
     return pos_a, pos_b
 
 
+_RUN_FIELDS = ("keys", "gids", "proj", "codes")
+
+
 def _merge_two(a: dict, b: dict) -> dict:
-    """Merge two per-tree runs of (keys, gids, proj, codes)."""
-    pos_a, pos_b = stable_merge_positions(a["keys"], b["keys"])
-    m = len(pos_a) + len(pos_b)
+    """Merge two stacked per-tree runs of (L, m, ...) arrays in one scatter
+    per field (positions per tree, assembly vectorized over trees)."""
+    L, ma = a["keys"].shape
+    mb = b["keys"].shape[1]
+    pos_a = np.empty((L, ma), np.intp)
+    pos_b = np.empty((L, mb), np.intp)
+    for l in range(L):                      # searchsorted is 1-D only
+        pos_a[l], pos_b[l] = stable_merge_positions(a["keys"][l],
+                                                    b["keys"][l])
+    rows = np.arange(L)[:, None]
     out = {}
-    for name in ("keys", "gids", "proj", "codes"):
-        arr = np.empty((m,) + a[name].shape[1:], a[name].dtype)
-        arr[pos_a] = a[name]
-        arr[pos_b] = b[name]
+    for name in _RUN_FIELDS:
+        arr = np.empty((L, ma + mb) + a[name].shape[2:], a[name].dtype)
+        arr[rows, pos_a] = a[name]
+        arr[rows, pos_b] = b[name]
         out[name] = arr
     return out
 
 
-def _tree_run(seg: Segment, l: int, K: int) -> dict:
-    """Extract tree l's surviving rows in sorted order (tombstones dropped)."""
+def _tree_runs(seg: Segment, K: int) -> dict:
+    """All L trees' surviving rows in sorted order, stacked (L, m, ...)
+    (tombstones dropped).  Every tree keeps the same survivor set, so the
+    per-tree counts are equal and one boolean take + reshape extracts all
+    trees at once."""
     f = seg.forest
-    pid = np.asarray(f.point_ids[l])
-    sel = np.asarray(f.valid[l]).copy()
-    sel[sel] = seg.live[pid[sel]]
-    rows = pid[sel]
-    codes = np.asarray(f.codes_sorted[l])[sel]
+    pid = np.asarray(f.point_ids)                      # (L, n_pad)
+    valid = np.asarray(f.valid)
+    sel = valid.copy()
+    sel[valid] = seg.live[pid[valid]]                  # (L, n_pad)
+    L = pid.shape[0]
+    m = int(sel[0].sum())
+    rows = pid[sel].reshape(L, m)
+    codes = np.asarray(f.codes_sorted)[sel].reshape(L, m, K)
     return dict(keys=interleave_keys64(codes, K),
                 gids=seg.gids[rows].astype(np.int64),
-                proj=np.asarray(f.proj_sorted[l])[sel],
+                proj=np.asarray(f.proj_sorted)[sel].reshape(L, m, K),
                 codes=codes)
 
 
 def _leaf_summaries(codes_pad: np.ndarray, valid: np.ndarray,
                     leaf_size: int) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
-    """Numpy mirror of detree.build_tree's blockwise lo/hi computation."""
-    n_pad, K = codes_pad.shape
+    """Numpy mirror of detree.assemble_sorted_forest's blockwise lo/hi
+    computation, for all L trees at once: codes_pad (L, n_pad, K),
+    valid (n_pad,) -> lo/hi (L, n_leaves, K) int16, leaf_valid bool."""
+    L, n_pad, K = codes_pad.shape
     n_leaves = n_pad // leaf_size
-    blocks = codes_pad.reshape(n_leaves, leaf_size, K)
-    bmask = valid.reshape(n_leaves, leaf_size)
+    blocks = codes_pad.reshape(L, n_leaves, leaf_size, K).astype(np.int32)
+    bmask = valid.reshape(n_leaves, leaf_size)[None]
     big = np.iinfo(np.int32).max
-    lo = np.where(bmask[..., None], blocks, big).min(axis=1)
-    hi = np.where(bmask[..., None], blocks, -1).max(axis=1)
-    leaf_valid = bmask.any(axis=1)
-    lo = np.where(leaf_valid[:, None], lo, 0).astype(np.int32)
-    hi = np.where(leaf_valid[:, None], hi, 0).astype(np.int32)
+    lo = np.where(bmask[..., None], blocks, big).min(axis=2)
+    hi = np.where(bmask[..., None], blocks, -1).max(axis=2)
+    leaf_valid = np.broadcast_to(bmask.any(axis=2), (L, n_leaves))
+    lo = np.where(leaf_valid[..., None], lo, 0).astype(np.int16)
+    hi = np.where(leaf_valid[..., None], hi, 0).astype(np.int16)
     return lo, hi, leaf_valid
 
 
@@ -118,32 +180,29 @@ def merge_segments(segments: List[Segment], *, leaf_size: int,
     order = np.argsort(gids_m, kind="stable")
     gids_sorted = gids_m[order]
 
-    def local_ids(tree_gids: np.ndarray) -> np.ndarray:
-        return order[np.searchsorted(gids_sorted, tree_gids)].astype(np.int32)
+    run = _tree_runs(segments[0], K)
+    for seg in segments[1:]:
+        run = _merge_two(run, _tree_runs(seg, K))
+    assert run["gids"].shape == (L, m), (run["gids"].shape, m)
 
     n_leaves = -(-m // leaf_size)
     n_pad = n_leaves * leaf_size
     pad = n_pad - m
     valid = np.arange(n_pad) < m
 
-    pids, projs, codess = [], [], []
-    leaf_los, leaf_his, leaf_vs = [], [], []
-    for l in range(L):
-        run = _tree_run(segments[0], l, K)
-        for seg in segments[1:]:
-            run = _merge_two(run, _tree_run(seg, l, K))
-        assert len(run["gids"]) == m, (l, len(run["gids"]), m)
-        pids.append(np.concatenate(
-            [local_ids(run["gids"]), np.full(pad, m, np.int32)]))
-        projs.append(np.concatenate(
-            [run["proj"], np.zeros((pad, K), np.float32)]))
-        codes_pad = np.concatenate(
-            [run["codes"], np.zeros((pad, K), np.int32)]).astype(np.int32)
-        codess.append(codes_pad)
-        lo, hi, lv = _leaf_summaries(codes_pad, valid, leaf_size)
-        leaf_los.append(lo)
-        leaf_his.append(hi)
-        leaf_vs.append(lv)
+    # gid -> merged local id, all trees at once (searchsorted broadcasts
+    # over the stacked (L, m) lookup).
+    local = order[np.searchsorted(gids_sorted, run["gids"])].astype(np.int32)
+    pids = np.concatenate(
+        [local, np.full((L, pad), m, np.int32)], axis=1)
+    projs = np.concatenate(
+        [run["proj"].astype(np.float32), np.zeros((L, pad, K), np.float32)],
+        axis=1)
+    codes_pad = np.concatenate(
+        [run["codes"].astype(np.uint8), np.zeros((L, pad, K), np.uint8)],
+        axis=1)
+    leaf_lo, leaf_hi, leaf_valid = _leaf_summaries(codes_pad, valid,
+                                                   leaf_size)
 
     bp_stack = np.stack(bps)                       # (S, L, K, Nr+1)
     bp_m = bps[0].copy()
@@ -151,13 +210,13 @@ def merge_segments(segments: List[Segment], *, leaf_size: int,
     bp_m[..., -1] = bp_stack[..., -1].max(axis=0)
 
     forest = DEForest(
-        point_ids=jnp.asarray(np.stack(pids)),
-        proj_sorted=jnp.asarray(np.stack(projs), jnp.float32),
-        codes_sorted=jnp.asarray(np.stack(codess)),
+        point_ids=jnp.asarray(pids),
+        proj_sorted=jnp.asarray(projs, jnp.float32),
+        codes_sorted=jnp.asarray(codes_pad),
         valid=jnp.asarray(np.tile(valid, (L, 1))),
-        leaf_lo=jnp.asarray(np.stack(leaf_los)),
-        leaf_hi=jnp.asarray(np.stack(leaf_his)),
-        leaf_valid=jnp.asarray(np.stack(leaf_vs)),
+        leaf_lo=jnp.asarray(leaf_lo),
+        leaf_hi=jnp.asarray(leaf_hi),
+        leaf_valid=jnp.asarray(leaf_valid),
         breakpoints=jnp.asarray(bp_m, jnp.float32),
         n=m, leaf_size=leaf_size)
 

@@ -62,12 +62,15 @@ class StreamingDETLSH:
     def __init__(self, params: LSHParams, A: jax.Array, bp_all: jax.Array,
                  base: Optional[Segment], *, Nr: int, leaf_size: int,
                  delta_capacity: int = 512, max_segments: int = 4,
-                 id_capacity: int = 1 << 20):
+                 id_capacity: int = 1 << 20,
+                 build_impl: str = "auto", build_chunk: int = 512):
         self.params = params
         self.A = A
         self.bp_all = bp_all              # (L*K, Nr+1) frozen breakpoints
         self.Nr = Nr
         self.leaf_size = leaf_size
+        self.build_impl = build_impl      # seal-path builder (DESIGN.md §8)
+        self.build_chunk = build_chunk
         self.max_segments = max_segments
         self.id_capacity = int(id_capacity)
         self.manifest = Manifest()
@@ -101,9 +104,13 @@ class StreamingDETLSH:
               id_capacity: int | None = None,
               breakpoint_method: str = "sample_sort",
               project_impl: str = "auto",
-              encode_impl: str = "auto") -> "StreamingDETLSH":
+              encode_impl: str = "auto",
+              build_impl: str = "auto",
+              build_chunk: int = 512) -> "StreamingDETLSH":
         """Static base build (Alg. 1 + 2) that also freezes the breakpoints
-        every later seal will encode with."""
+        every later seal will encode with.  ``build_impl``/``build_chunk``
+        select the fused single-sort builder for the base build and every
+        later seal (docs/DESIGN.md §8)."""
         params = params or derive_params()
         data = jnp.asarray(data, jnp.float32)
         n, d = data.shape
@@ -114,12 +121,14 @@ class StreamingDETLSH:
                                         key=kb)
         base = build_segment(data, np.arange(n, dtype=np.int64), A, params,
                              bp_all, Nr=Nr, leaf_size=leaf_size, seg_id=0,
-                             proj=proj, encode_impl=encode_impl)
+                             proj=proj, encode_impl=encode_impl,
+                             build_impl=build_impl, build_chunk=build_chunk)
         if id_capacity is None:
             id_capacity = max(2 * n, n + 16 * delta_capacity, 1024)
         return cls(params, A, bp_all, base, Nr=Nr, leaf_size=leaf_size,
                    delta_capacity=delta_capacity, max_segments=max_segments,
-                   id_capacity=id_capacity)
+                   id_capacity=id_capacity, build_impl=build_impl,
+                   build_chunk=build_chunk)
 
     @classmethod
     def from_spec(cls, data: jax.Array, key: jax.Array,
@@ -136,7 +145,9 @@ class StreamingDETLSH:
                         id_capacity=spec.id_capacity,
                         breakpoint_method=spec.breakpoint_method,
                         project_impl=spec.project_impl,
-                        encode_impl=spec.encode_impl)
+                        encode_impl=spec.encode_impl,
+                        build_impl=spec.build_impl,
+                        build_chunk=spec.build_chunk)
         idx.spec = spec
         return idx
 
@@ -233,7 +244,9 @@ class StreamingDETLSH:
         seg = build_segment(mt.vecs, mt.gids, self.A, self.params,
                             self.bp_all, Nr=self.Nr,
                             leaf_size=self.leaf_size,
-                            seg_id=self._next_seg_id, live=mt.live)
+                            seg_id=self._next_seg_id, live=mt.live,
+                            build_impl=self.build_impl,
+                            build_chunk=self.build_chunk)
         self._next_seg_id += 1
         self.manifest.add(seg)
         for slot in range(mt.count):
@@ -291,7 +304,9 @@ class StreamingDETLSH:
             proj, self.Nr, key=key)
         base = build_segment(data, gids, self.A, self.params, self.bp_all,
                              Nr=self.Nr, leaf_size=self.leaf_size,
-                             seg_id=self._next_seg_id, proj=proj)
+                             seg_id=self._next_seg_id, proj=proj,
+                             build_impl=self.build_impl,
+                             build_chunk=self.build_chunk)
         self._next_seg_id += 1
         self.manifest = Manifest()
         self.manifest.add(base)

@@ -19,6 +19,7 @@ breakpoint-drift signal that tells the operator when a re-quantile
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional
 
 import jax
@@ -26,7 +27,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import hashing
-from repro.core.detree import DEForest, build_forest
+from repro.core.detree import (DEForest, assemble_sorted_forest, build_forest,
+                               code_sort_orders)
 from repro.core.query import FusedPlan, live_in_sorted_order, make_fused_plan
 from repro.core.theory import LSHParams
 
@@ -124,37 +126,95 @@ class Segment:
         self.gid_map_dev(sentinel)
 
 
+@functools.partial(jax.jit,
+                   static_argnames=("K", "L", "leaf_size", "impl", "chunk"))
+def _fused_seal(data, A, bp_all, *, K, L, leaf_size, impl, chunk):
+    """One jitted pass for the whole seal: project -> encode -> key-pack
+    (one fused kernel — encoding reads only the *inner* edges, so it can
+    run with the frozen breakpoints while the outer-edge widening is
+    computed from the same pass's projections) -> single sort -> forest
+    arrays.  Returns (arrays, bp_seg (L*K, Nr+1) widened, clip_fraction).
+    """
+    if impl == "xla":
+        from repro.kernels import ref as kref
+        proj_t, codes_t, key_hi, key_lo = kref.project_encode_pack(
+            data, A, bp_all, K=K, L=L)
+    else:
+        from repro.kernels import ops as kops
+        proj_t, codes_t, key_hi, key_lo = kops.project_encode_pack(
+            data, A, bp_all, K=K, L=L, block_n=chunk,
+            interpret=(impl == "pallas_interpret"))
+    # Dimension D = l*K + j maps to proj_t[l, :, j]: (L, K) stats -> (L*K,).
+    pmin = jnp.min(proj_t, axis=1).reshape(-1)
+    pmax = jnp.max(proj_t, axis=1).reshape(-1)
+    bp_lo = bp_all[:, 0].reshape(L, 1, K)
+    bp_hi = bp_all[:, -1].reshape(L, 1, K)
+    clip = jnp.mean(((proj_t < bp_lo) | (proj_t > bp_hi))
+                    .astype(jnp.float32))
+    bp_seg = bp_all.at[:, 0].set(jnp.minimum(bp_all[:, 0], pmin))
+    bp_seg = bp_seg.at[:, -1].set(jnp.maximum(bp_all[:, -1], pmax))
+    order = code_sort_orders(key_hi, key_lo, K)
+    arrays = assemble_sorted_forest(proj_t, codes_t, order,
+                                    n=data.shape[0], leaf_size=leaf_size)
+    return arrays, bp_seg, clip
+
+
 def build_segment(data: jax.Array, gids: np.ndarray, A: jax.Array,
                   params: LSHParams, bp_all: jax.Array, *,
                   Nr: int, leaf_size: int, seg_id: int,
                   live: np.ndarray | None = None,
                   proj: jax.Array | None = None,
                   project_impl: str = "auto",
-                  encode_impl: str = "auto") -> Segment:
+                  encode_impl: str = "auto",
+                  build_impl: str = "auto",
+                  build_chunk: int = 512) -> Segment:
     """Seal rows into a Segment, encoding with the frozen breakpoints.
 
     bp_all: (L*K, Nr+1) — the base build's breakpoints.  Outer edges are
     widened per dimension to the segment's projected min/max (no code
     changes; restores Fig. 5 box containment for out-of-range inserts).
     ``proj`` skips re-projection when the caller already has it.
+
+    With no precomputed ``proj`` and a fused ``build_impl``, the entire
+    seal — projection, encoding, key packing, widening stats, the sort and
+    the leaf summaries — is ONE jitted call around the one-pass
+    ``project_encode_pack`` kernel (frozen breakpoints mean no selection
+    step splits the pipeline; docs/DESIGN.md §8), which is what makes
+    steady-state ingest dispatch-bound no longer.
     """
     # jnp.array (not asarray): the CPU backend may zero-copy alias a numpy
     # buffer, and seal() hands us the memtable's arrays which are zeroed
     # right after — the segment must own its rows.
     data = jnp.array(data, jnp.float32)
-    if proj is None:
-        proj = hashing.project(data, A, impl=project_impl)  # (m, L*K)
-    out_lo = proj < bp_all[:, 0][None, :]
-    out_hi = proj > bp_all[:, -1][None, :]
-    clip_fraction = float(jnp.mean((out_lo | out_hi).astype(jnp.float32)))
-    bp_seg = bp_all.at[:, 0].set(jnp.minimum(bp_all[:, 0],
-                                             jnp.min(proj, axis=0)))
-    bp_seg = bp_seg.at[:, -1].set(jnp.maximum(bp_all[:, -1],
-                                              jnp.max(proj, axis=0)))
-    forest = build_forest(proj, params.K, params.L, Nr=Nr,
-                          leaf_size=leaf_size, breakpoints=bp_seg,
-                          encode_impl=encode_impl)
     m = data.shape[0]
+    K, L = params.K, params.L
+    from repro.core.detree import check_nr
+    check_nr(Nr)
+    if proj is None and build_impl != "reference":
+        impl = build_impl
+        if impl == "auto" and project_impl != "auto":
+            impl = project_impl       # an explicit project impl wins on auto
+        arrays, bp_seg, clip = _fused_seal(
+            data, A, bp_all, K=K, L=L, leaf_size=leaf_size, impl=impl,
+            chunk=int(build_chunk) if build_chunk else 512)
+        forest = DEForest(n=m, leaf_size=leaf_size,
+                          breakpoints=bp_seg.reshape(L, K, Nr + 1), **arrays)
+        clip_fraction = float(clip)
+    else:
+        if proj is None:
+            proj = hashing.project(data, A, impl=project_impl)  # (m, L*K)
+        out_lo = proj < bp_all[:, 0][None, :]
+        out_hi = proj > bp_all[:, -1][None, :]
+        clip_fraction = float(jnp.mean((out_lo | out_hi).astype(jnp.float32)))
+        bp_seg = bp_all.at[:, 0].set(jnp.minimum(bp_all[:, 0],
+                                                 jnp.min(proj, axis=0)))
+        bp_seg = bp_seg.at[:, -1].set(jnp.maximum(bp_all[:, -1],
+                                                  jnp.max(proj, axis=0)))
+        forest = build_forest(proj, K, L, Nr=Nr,
+                              leaf_size=leaf_size, breakpoints=bp_seg,
+                              encode_impl=encode_impl,
+                              build_impl=build_impl,
+                              build_chunk=build_chunk)
     live = np.ones(m, bool) if live is None else np.asarray(live, bool).copy()
     return Segment(seg_id=seg_id, data=data,
                    gids=np.asarray(gids, np.int32).copy(), live=live,

@@ -36,7 +36,7 @@ EXPECTED_INDEX_SPEC_FIELDS = (
     "kind", "K", "L", "c", "beta_override", "Nr", "leaf_size",
     "breakpoint_method", "project_impl", "encode_impl", "engine",
     "block_q", "block_l", "delta_capacity", "max_segments", "id_capacity",
-    "placement",
+    "placement", "build_impl", "build_chunk",
 )
 
 EXPECTED_PLACEMENT_SPEC_FIELDS = ("mesh_shape", "mesh_axes", "data_axes")

@@ -1,0 +1,326 @@
+"""Fused single-sort build pipeline: bit-identity with the seed builder.
+
+The contract (docs/DESIGN.md §8): the fused pipeline (encode + key-pack
+kernel, ONE stable variadic sort for all L trees, vectorized assembly) must
+produce *bit-identical* forests to the seed per-tree double-argsort path
+(``build_impl='reference'``), on every builder entry point — static
+(``build_forest``/``DETLSH``), streaming seal (``build_segment``), and the
+PDET per-shard build — and loaded snapshots must answer searches
+bit-identically regardless of which builder wrote them.
+
+The hypothesis property pins the heart of it: the stable lexicographic
+(hi, lo)-word sort induces the same permutation — hence identical leaf
+grouping (lo/hi/valid summaries and per-leaf member sets) — as the seed's
+stable argsort-by-lo-then-argsort-by-hi composition, across random
+n/K/leaf_size.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.api
+from repro.core import DETLSH, derive_params, detree
+from repro.core.detree import (CODE_DTYPE, LEAF_DTYPE, assemble_sorted_forest,
+                               build_forest, code_sort_orders,
+                               interleave_keys, _sort_by_code)
+from tests.conftest import make_clustered
+
+_FOREST_KEYS = ("point_ids", "proj_sorted", "codes_sorted", "valid",
+                "leaf_lo", "leaf_hi", "leaf_valid", "breakpoints")
+
+
+def _assert_forests_equal(a, b, msg=""):
+    assert a.n == b.n and a.leaf_size == b.leaf_size
+    for k in _FOREST_KEYS:
+        xa, xb = np.asarray(getattr(a, k)), np.asarray(getattr(b, k))
+        assert xa.dtype == xb.dtype, (k, xa.dtype, xb.dtype)
+        np.testing.assert_array_equal(xa, xb, err_msg=f"{msg}{k}")
+
+
+def _rand_proj(rng, n, D):
+    return jnp.asarray((rng.standard_normal((n, D)) * 2.0)
+                       .astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Forest bit-identity: fused == reference, all impls
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("impl", ["auto", "xla", "pallas_interpret"])
+@pytest.mark.parametrize("n,K,L,leaf_size",
+                         [(1000, 4, 3, 32), (513, 8, 2, 16),
+                          (129, 16, 1, 8), (300, 5, 4, 8)])
+def test_fused_build_bit_identical_to_reference(rng, impl, n, K, L,
+                                                leaf_size):
+    proj = _rand_proj(rng, n, L * K)
+    ref = build_forest(proj, K, L, Nr=64, leaf_size=leaf_size,
+                       breakpoint_method="full_sort",
+                       build_impl="reference")
+    got = build_forest(proj, K, L, Nr=64, leaf_size=leaf_size,
+                       breakpoint_method="full_sort", build_impl=impl,
+                       build_chunk=128)
+    _assert_forests_equal(ref, got, msg=f"impl={impl} ")
+
+
+def test_narrow_storage_dtypes_and_size_bytes(rng):
+    proj = _rand_proj(rng, 512, 8)
+    f = build_forest(proj, 4, 2, Nr=64, leaf_size=16)
+    assert f.codes_sorted.dtype == CODE_DTYPE
+    assert f.leaf_lo.dtype == LEAF_DTYPE and f.leaf_hi.dtype == LEAF_DTYPE
+    assert f.valid.dtype == jnp.bool_ and f.leaf_valid.dtype == jnp.bool_
+    # size_bytes reports the actual resident bytes of the code-side arrays.
+    want = sum(np.asarray(getattr(f, k)).nbytes
+               for k in ("codes_sorted", "point_ids", "leaf_lo", "leaf_hi",
+                         "breakpoints"))
+    assert f.size_bytes() == want
+
+
+@pytest.mark.parametrize("K", [1, 2, 4, 5, 8, 9, 11, 12, 16])
+def test_compactor_numpy_keys_match_detree_words(rng, K):
+    """The compactor's pure-numpy uint64 keys == the device key words
+    joined (same shift/mask/sum; the host merge must not diverge from the
+    device sort order).  K in {9, 11, 12} exercises the word-overflow
+    positions (lo_bits*K > 32) that both sides must drop identically."""
+    from repro.streaming.compactor import interleave_keys64
+    codes = rng.integers(0, 256, size=(3, 100, K))
+    hi, lo = interleave_keys(jnp.asarray(codes, jnp.int32), K)
+    want = ((np.asarray(hi).astype(np.uint64) << np.uint64(32))
+            | np.asarray(lo).astype(np.uint64))
+    np.testing.assert_array_equal(interleave_keys64(codes, K), want)
+    np.testing.assert_array_equal(
+        interleave_keys64(codes.astype(np.uint8), K), want)
+
+
+def test_nr_over_256_is_rejected(rng):
+    with pytest.raises(ValueError, match="uint8"):
+        build_forest(_rand_proj(rng, 64, 4), 2, 2, Nr=512, leaf_size=8)
+    with pytest.raises(ValueError, match="uint8"):
+        repro.api.IndexSpec(Nr=512)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis property: single-sort permutation == seed double argsort
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 220), st.integers(1, 9), st.integers(1, 12),
+       st.integers(0, 2 ** 31 - 1))
+def test_single_sort_matches_double_argsort_grouping(n, K, leaf_size, seed):
+    """The packed-word single sort induces the same leaf grouping (identical
+    lo/hi/valid summaries and per-leaf member sets) as the seed double
+    argsort — here with many duplicate codes, the tie-heavy regime."""
+    rng = np.random.default_rng(seed)
+    codes = jnp.asarray(rng.integers(0, 5, size=(n, K)), jnp.int32)
+
+    order_ref = np.asarray(_sort_by_code(codes, K))
+    key_hi, key_lo = interleave_keys(codes[None], K)       # (1, n) words
+    order_new = np.asarray(code_sort_orders(key_hi, key_lo, K))[0]
+
+    # Both sorts are stable over the same key: identical permutations —
+    # on the eager host (lexsort) path and the traced (lax.sort) path.
+    np.testing.assert_array_equal(order_ref, order_new)
+    order_traced = np.asarray(jax.jit(
+        lambda h, lo: code_sort_orders(h, lo, K))(key_hi, key_lo))[0]
+    np.testing.assert_array_equal(order_ref, order_traced)
+
+    # And the contract that actually matters downstream — identical leaf
+    # grouping — restated structurally (member sets per leaf + summaries),
+    # so it keeps holding even if the sort ever becomes only
+    # grouping-equivalent rather than permutation-equal.
+    proj = jnp.asarray(rng.standard_normal((n, K)).astype(np.float32))
+    a = assemble_sorted_forest(proj[None], codes[None],
+                               jnp.asarray(order_ref)[None],
+                               n=n, leaf_size=leaf_size)
+    b = assemble_sorted_forest(proj[None], codes[None],
+                               jnp.asarray(order_new)[None],
+                               n=n, leaf_size=leaf_size)
+    np.testing.assert_array_equal(np.asarray(a["leaf_lo"]),
+                                  np.asarray(b["leaf_lo"]))
+    np.testing.assert_array_equal(np.asarray(a["leaf_hi"]),
+                                  np.asarray(b["leaf_hi"]))
+    np.testing.assert_array_equal(np.asarray(a["leaf_valid"]),
+                                  np.asarray(b["leaf_valid"]))
+    n_leaves = -(-n // leaf_size)
+    for leaf in range(n_leaves):
+        sl = slice(leaf * leaf_size, (leaf + 1) * leaf_size)
+        va = np.asarray(a["valid"])[0, sl]
+        assert (set(np.asarray(a["point_ids"])[0, sl][va].tolist())
+                == set(np.asarray(b["point_ids"])[0, sl][va].tolist()))
+
+
+# ---------------------------------------------------------------------------
+# Search bit-identity: old-build vs fused-build, both engines
+# ---------------------------------------------------------------------------
+
+def _search_pair(idx_a, idx_b, queries, engine, k=8):
+    req = repro.api.SearchRequest(k=k, r_min=0.5, engine=engine)
+    ra = idx_a.search(queries, req)
+    rb = idx_b.search(queries, req)
+    np.testing.assert_array_equal(np.asarray(ra.ids), np.asarray(rb.ids))
+    np.testing.assert_array_equal(np.asarray(ra.dists), np.asarray(rb.dists))
+
+
+def test_search_bit_identical_old_vs_fused_build(rng):
+    data = jnp.asarray(make_clustered(rng, 1024, 12))
+    queries = jnp.asarray(make_clustered(rng, 16, 12))
+    p = derive_params(K=4, c=1.5, L=4, beta_override=0.1)
+    old = DETLSH.build(data, jax.random.key(0), p, leaf_size=16,
+                       build_impl="reference")
+    new = DETLSH.build(data, jax.random.key(0), p, leaf_size=16)
+    _assert_forests_equal(old.forest, new.forest)
+    for engine in ("vmap", "fused"):
+        _search_pair(old, new, queries, engine)
+
+
+def test_streaming_seal_bit_identical_old_vs_fused(rng):
+    """The one-pass fused seal (project+encode+pack in one kernel, widening
+    stats from the same pass) == the seed seal path, bitwise."""
+    from repro.core import encoding as enc, hashing
+    from repro.streaming.segment import build_segment
+    data = jnp.asarray(make_clustered(rng, 300, 10))
+    extra = jnp.asarray(make_clustered(rng, 96, 10) * 1.5)
+    p = derive_params(K=4, c=1.5, L=3, beta_override=0.1)
+    A = hashing.sample_projections(jax.random.key(1), 10, p.K, p.L)
+    bp_all = enc.select_breakpoints(hashing.project(data, A), 32)
+    gids = np.arange(96, dtype=np.int64)
+    old = build_segment(extra, gids, A, p, bp_all, Nr=32, leaf_size=8,
+                        seg_id=0, build_impl="reference")
+    new = build_segment(extra, gids, A, p, bp_all, Nr=32, leaf_size=8,
+                        seg_id=0)
+    _assert_forests_equal(old.forest, new.forest, msg="seal ")
+    np.testing.assert_allclose(old.clip_fraction, new.clip_fraction,
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_streaming_index_search_identical_old_vs_fused(rng):
+    from repro.streaming import StreamingDETLSH
+    data = make_clustered(rng, 256, 10)
+    extra = make_clustered(rng, 96, 10)
+    queries = jnp.asarray(make_clustered(rng, 8, 10))
+    p = derive_params(K=4, c=1.5, L=2, beta_override=0.1)
+    built = {}
+    for impl in ("reference", "auto"):
+        idx = StreamingDETLSH.build(jnp.asarray(data), jax.random.key(2), p,
+                                    leaf_size=16, delta_capacity=32,
+                                    build_impl=impl)
+        gids = idx.upsert(extra)
+        idx.delete(gids[:10])
+        built[impl] = idx
+    for engine in ("vmap", "fused"):
+        _search_pair(built["reference"], built["auto"], queries, engine)
+
+
+def test_snapshot_roundtrip_fused_build_and_old_widths(rng, tmp_path):
+    """Fused-built snapshot round-trips bit-identically, and a snapshot
+    whose arrays were written with the pre-narrowing dtypes (f32/int32)
+    still loads into the narrow layout with identical answers."""
+    data = jnp.asarray(make_clustered(rng, 512, 10))
+    queries = jnp.asarray(make_clustered(rng, 8, 10))
+    p = derive_params(K=4, c=1.5, L=2, beta_override=0.1)
+    idx = DETLSH.build(data, jax.random.key(3), p, leaf_size=16)
+    path = tmp_path / "snap"
+    idx.save(path)
+    loaded = repro.api.load(path)
+    _assert_forests_equal(idx.forest, loaded.forest)
+    _search_pair(idx, loaded, queries, "fused")
+
+    # Simulate an old-format snapshot: widen the stored forest arrays the
+    # way the pre-narrowing code wrote them (codes/bounds int32).
+    arrs = dict(np.load(path / "arrays.npz"))
+    for k in ("forest.codes_sorted", "forest.leaf_lo", "forest.leaf_hi"):
+        arrs[k] = arrs[k].astype(np.int32)
+    np.savez(path / "arrays.npz", **arrs)
+    wide = repro.api.load(path)
+    assert wide.forest.codes_sorted.dtype == CODE_DTYPE
+    assert wide.forest.leaf_lo.dtype == LEAF_DTYPE
+    _assert_forests_equal(idx.forest, wide.forest, msg="old-width ")
+    _search_pair(idx, wide, queries, "fused")
+
+
+def test_pdet_snapshot_search_identical_to_fused_build(rng, tmp_path):
+    """A placed (1-shard) PDET build + snapshot reload answers bit-
+    identically to the old-path single-device build — the device-count-
+    invariance contract is untouched by the fused builder (the multi-shard
+    variants run in the multidevice CI job)."""
+    data = jnp.asarray(make_clustered(rng, 512, 10))
+    queries = jnp.asarray(make_clustered(rng, 8, 10))
+    spec = repro.api.IndexSpec(K=4, L=2, c=1.5, beta_override=0.1,
+                               leaf_size=16,
+                               placement=repro.api.PlacementSpec((1,)))
+    pdet = repro.api.build(data, jax.random.key(4), spec)
+    old = DETLSH.from_spec(
+        data, jax.random.key(4),
+        dataclasses.replace(spec, placement=None, build_impl="reference"))
+    path = tmp_path / "pdet"
+    pdet.save(path)
+    loaded = repro.api.load(path)
+    req = repro.api.SearchRequest(k=8, r_min=0.5)
+    r_old = old.search(queries, dataclasses.replace(req, engine="fused"))
+    for idx in (pdet, loaded):
+        r = idx.search(queries, req)
+        assert r.stats.engine == "pdet"
+        np.testing.assert_array_equal(np.asarray(r.ids),
+                                      np.asarray(r_old.ids))
+        np.testing.assert_array_equal(np.asarray(r.dists),
+                                      np.asarray(r_old.dists))
+
+
+# ---------------------------------------------------------------------------
+# Sharded per-shard builds (the multidevice CI job runs these for real)
+# ---------------------------------------------------------------------------
+
+def test_serial_reference_shards_match_fused_local_build(rng):
+    """Per-shard forests: the fused shared pipeline == the reference
+    per-tree builder that ``serial_reference_build`` still uses, shard by
+    shard (same breakpoints, same arrays)."""
+    from repro.core import encoding as enc, hashing
+    from repro.core.detree import fused_forest_arrays
+    from repro.core.distributed import serial_reference_build
+    data = make_clustered(rng, 1024, 12)
+    p = derive_params(K=4, c=1.5, L=2, beta_override=0.1)
+    n_shards = 4
+    A, parts, edges = serial_reference_build(
+        jnp.asarray(data), jax.random.key(5), p, n_shards, leaf_size=16)
+    shards = jnp.asarray(data).reshape(n_shards, -1, data.shape[1])
+    for s in range(n_shards):
+        proj = hashing.project(shards[s], A)
+        got = fused_forest_arrays(proj, edges, K=p.K, L=p.L, leaf_size=16)
+        for k, v in got.items():
+            np.testing.assert_array_equal(
+                np.asarray(v), np.asarray(parts[k][s]),
+                err_msg=f"shard {s} {k}")
+
+
+@pytest.mark.multidevice
+@pytest.mark.skipif(len(jax.devices()) < 4, reason="needs 4 devices")
+def test_multidevice_fused_build_matches_reference_build(rng):
+    """On a real 4-device mesh: a fused-built placed index answers bit-
+    identically to the reference-built one (sharded build produces the
+    same per-shard forests)."""
+    data = jnp.asarray(make_clustered(rng, 1024, 12))
+    queries = jnp.asarray(make_clustered(rng, 8, 12))
+    spec = repro.api.IndexSpec(K=4, L=2, c=1.5, beta_override=0.1,
+                               leaf_size=16,
+                               placement=repro.api.PlacementSpec((4,)))
+    fused = repro.api.build(data, jax.random.key(6), spec)
+    ref = repro.api.build(data, jax.random.key(6),
+                          dataclasses.replace(spec, build_impl="reference"))
+    _assert_forests_equal(
+        type(fused.forest)(n=fused.forest.n,
+                           leaf_size=fused.forest.leaf_size,
+                           **{k: jax.device_get(getattr(fused.forest, k))
+                              for k in _FOREST_KEYS}),
+        type(ref.forest)(n=ref.forest.n, leaf_size=ref.forest.leaf_size,
+                         **{k: jax.device_get(getattr(ref.forest, k))
+                            for k in _FOREST_KEYS}),
+        msg="sharded ")
+    req = repro.api.SearchRequest(k=8, r_min=0.5)
+    ra, rb = fused.search(queries, req), ref.search(queries, req)
+    np.testing.assert_array_equal(np.asarray(ra.ids), np.asarray(rb.ids))
+    np.testing.assert_array_equal(np.asarray(ra.dists),
+                                  np.asarray(rb.dists))

@@ -59,6 +59,61 @@ def test_encode_bins_matches_core_encoding(rng):
 
 
 # ---------------------------------------------------------------------------
+# build_fused: encode_pack / project_encode_pack (ref-oracle matrix; the
+# multidevice CI job re-runs these under a forced 4-device host platform)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,K,L,Nr", [(512, 4, 8, 256), (300, 8, 2, 64),
+                                      (64, 16, 1, 16), (1024, 2, 4, 128)])
+def test_encode_pack_matches_ref(rng, n, K, L, Nr):
+    coords = _rand(rng, (n, L * K), scale=3.0)
+    bp = jnp.sort(_rand(rng, (L * K, Nr + 1), scale=3.0), axis=1)
+    got = ops.encode_pack(coords, bp, K=K, L=L, interpret=True, block_n=128)
+    want = ref.encode_pack(coords, bp, K=K, L=L)
+    for g, w, name in zip(got, want, ("proj_t", "codes_t", "key_hi",
+                                      "key_lo")):
+        assert g.dtype == w.dtype, (name, g.dtype, w.dtype)
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w),
+                                      err_msg=name)
+
+
+def test_encode_pack_codes_match_encode_bins(rng):
+    """The fused kernel's codes are exactly the encode_bins codes, re-laid
+    per tree, and its key words are exactly detree.interleave_keys."""
+    from repro.core.detree import interleave_keys
+    K, L, Nr, n = 4, 3, 32, 200
+    coords = _rand(rng, (n, L * K), scale=2.0)
+    bp = jnp.sort(_rand(rng, (L * K, Nr + 1), scale=2.0), axis=1)
+    proj_t, codes_t, key_hi, key_lo = ops.encode_pack(
+        coords, bp, K=K, L=L, interpret=True, block_n=64)
+    codes_flat = ops.encode_bins(coords, bp, interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(codes_t),
+        np.asarray(codes_flat).reshape(n, L, K).transpose(1, 0, 2))
+    hi, lo = interleave_keys(codes_t, K)
+    np.testing.assert_array_equal(np.asarray(key_hi), np.asarray(hi))
+    np.testing.assert_array_equal(np.asarray(key_lo), np.asarray(lo))
+
+
+@pytest.mark.parametrize("n,d,K,L,Nr", [(256, 32, 4, 4, 64),
+                                        (100, 17, 2, 3, 16),
+                                        (512, 128, 8, 2, 256)])
+def test_project_encode_pack_matches_ref(rng, n, d, K, L, Nr):
+    x = _rand(rng, (n, d))
+    a = _rand(rng, (d, L * K))
+    bp = jnp.sort(_rand(rng, (L * K, Nr + 1), scale=3.0), axis=1)
+    got = ops.project_encode_pack(x, a, bp, K=K, L=L, interpret=True,
+                                  block_n=64)
+    want = ref.project_encode_pack(x, a, bp, K=K, L=L)
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want[0]),
+                               rtol=1e-5, atol=1e-5)       # proj: fp matmul
+    for g, w, name in zip(got[1:], want[1:], ("codes_t", "key_hi",
+                                              "key_lo")):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w),
+                                      err_msg=name)
+
+
+# ---------------------------------------------------------------------------
 # leaf_bounds
 # ---------------------------------------------------------------------------
 
