@@ -50,10 +50,10 @@ def main(argv=None) -> None:
                     help="skip multi-process scaling benchmarks")
     ap.add_argument("--smoke", action="store_true",
                     help="CI smoke: query/build throughput, snapshot "
-                         "round-trip, and PDET worker scaling on small "
-                         "indexes; writes "
-                         "BENCH_{query,build,snapshot,parallel}.json and "
-                         "the benchmarks/out/smoke_snapshot artifact")
+                         "round-trip, PDET worker scaling, and the serving-"
+                         "runtime mixed-load check on small indexes; writes "
+                         "BENCH_{query,build,snapshot,parallel,serving}.json "
+                         "and the benchmarks/out/smoke_snapshot artifact")
     ap.add_argument("--only", default="")
     ap.add_argument("--out-dir", default="benchmarks/out")
     args = ap.parse_args(argv)
@@ -62,9 +62,11 @@ def main(argv=None) -> None:
         from benchmarks import build_throughput as B
         from benchmarks import parallel_scaling as P
         from benchmarks import query_throughput as Q
+        from benchmarks import serving_load as V
         from benchmarks import snapshot_smoke as S
         figures = [Q.query_throughput_smoke, B.build_throughput_smoke,
-                   S.snapshot_smoke, P.parallel_scaling_smoke]
+                   S.snapshot_smoke, P.parallel_scaling_smoke,
+                   V.serving_load]
     else:
         figures = _figures(args.fast)
 
@@ -108,6 +110,18 @@ def _enforce_smoke_gates(failed, ran) -> None:
     import json
     if failed:
         raise SystemExit(f"[bench] smoke figures failed: {failed}")
+    if "serving_load" in ran:
+        with open("BENCH_serving.json") as f:
+            srv = json.load(f)
+        if not srv["identical_to_oracle"]:
+            raise SystemExit("[bench] serving gate: answers diverged from "
+                             "the serialized oracle")
+        if srv["stats"]["shed_total"] != 0:
+            raise SystemExit(f"[bench] serving gate: shed at smoke load: "
+                             f"{srv['stats']['shed']}")
+        print(f"[bench] serving gates OK: oracle-identical, zero shed, "
+              f"p99={srv['stats']['p99_ms']:.1f}ms "
+              f"({srv['closed_loop_qps']:.0f} qps closed-loop)")
     if "build_throughput_smoke" not in ran:
         print("[bench] build speedup gate skipped (build figure not run)")
         return

@@ -1,0 +1,179 @@
+"""Serving-runtime load smoke: closed-loop mixed traffic with gates (CI).
+
+Drives a ``ServingRuntime`` over a streaming index with the full mixed
+workload — query bursts, upserts, deletes (including no-op ids), and a
+forced compaction concurrent with a pinned epoch — and checks the §9
+serialized-oracle contract live: every full-bucket burst must answer
+bit-identically to running the same request directly against the index in
+submission order (mutations are barriers, so the index state *is* the
+serialized state).  Odd-sized bursts exercise the pad path and are checked
+against the same oracle set-wise (padding preserves the answer set; the
+bit-level guarantee is gated on unpadded buckets).
+
+Writes BENCH_serving.json at the repo root and enforces the smoke gates
+in-process (run.py --smoke re-checks them from the JSON):
+
+  * zero shed at smoke load,
+  * answers identical to the serialized oracle,
+  * p99 latency bounded (generous absolute bound — warmup compiles every
+    bucket first, so the percentile measures steady-state service time).
+
+  PYTHONPATH=src python -m benchmarks.run --smoke
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Table, make_dataset, make_queries
+
+SMOKE = dict(n=4096, k=10, rounds=3, burst=32, odd_burst=20,
+             upserts_per_round=192, deletes_per_round=48,
+             deadline_s=30.0, p99_budget_ms=6000.0)
+
+
+def _oracle_check(rt, idx, base_req, burst, outcomes, *, bitwise):
+    """Serialized oracle: the same queries, run to completion against the
+    index directly (no scheduler), must match the runtime's answers."""
+    from repro.serving import Answer
+
+    req = dataclasses.replace(base_req, n_active=len(burst))
+    res = idx.search(jnp.asarray(np.stack(burst)), req)
+    ids, dists = np.asarray(res.ids), np.asarray(res.dists)
+    ok = True
+    for i, out in enumerate(outcomes):
+        if not isinstance(out, Answer):
+            return False
+        if bitwise:
+            ok &= bool(np.array_equal(np.asarray(out.ids), ids[i]))
+            ok &= bool(np.array_equal(np.asarray(out.dists), dists[i]))
+        else:
+            ok &= set(np.asarray(out.ids).tolist()) == set(ids[i].tolist())
+            ok &= bool(np.allclose(np.sort(np.asarray(out.dists)),
+                                   np.sort(dists[i]), rtol=1e-5, atol=1e-5))
+    return ok
+
+
+def run_serving_load(cfg=None, json_path: str = "BENCH_serving.json",
+                     out_dir: str = "benchmarks/out") -> Table:
+    import repro
+    from repro.api import IndexSpec, SearchRequest
+
+    cfg = dict(SMOKE, **(cfg or {}))
+    n, k, burst = cfg["n"], cfg["k"], cfg["burst"]
+    data = make_dataset("deep-like", n, seed=0)
+    d = data.shape[1]
+    rng = np.random.default_rng(7)
+
+    idx = repro.api.build(
+        jnp.asarray(data), jax.random.key(0),
+        IndexSpec(kind="streaming", K=4, L=4, c=1.5, beta_override=0.1,
+                  Nr=64, leaf_size=32, delta_capacity=256, max_segments=4))
+    # Explicit r_min: the r_min=None estimate is batch-dependent, and the
+    # oracle comparison needs both sides to start at the same radius.
+    base_req = SearchRequest(k=k, r_min=float(idx.r_min_for(k)))
+
+    from repro.serving import ServingRuntime
+    # max_wait 1s >> submit spacing: bursts always coalesce into one
+    # deterministic bucket (closed loop — flush() drains the remainder).
+    rt = ServingRuntime(idx, k=k, max_batch=burst, pad_to=burst,
+                        max_wait_ms=1000.0, request=base_req)
+    rt.warmup(d)
+
+    table = Table("serving_load",
+                  ["phase", "queries", "qps", "p50_ms", "p99_ms",
+                   "shed", "identical"])
+    identical, serve_s, served = True, 0.0, 0
+    for round_ in range(cfg["rounds"]):
+        queries = make_queries(data, burst, seed=100 + round_)
+        t0 = time.perf_counter()
+        out = rt.serve([(time.perf_counter(), q,
+                         time.perf_counter() + cfg["deadline_s"])
+                        for q in queries])
+        serve_s += time.perf_counter() - t0
+        served += len(out)
+        identical &= _oracle_check(rt, idx, base_req, list(queries), out,
+                                   bitwise=True)
+
+        # mixed mutations: fresh rows, churned ids, and never-inserted ids
+        # (counted no-ops); both are barriers, so the next burst's oracle
+        # state is simply the index after them.
+        fresh = make_dataset("deep-like", cfg["upserts_per_round"],
+                             seed=200 + round_)
+        gids = rt.upsert(fresh)
+        rt.delete(np.concatenate([
+            gids[:: max(len(gids) // cfg["deletes_per_round"], 1)],
+            rng.integers(0, n, 8),
+            np.arange(10**8, 10**8 + 4)]))        # no-op ids
+
+    # padded burst: odd size < bucket exercises the pad lanes; the answer
+    # set must survive padding even if lane-level floats reassociate.
+    queries = make_queries(data, cfg["odd_burst"], seed=999)
+    t0 = time.perf_counter()
+    out = rt.serve([(time.perf_counter(), q) for q in queries])
+    serve_s += time.perf_counter() - t0
+    served += len(out)
+    padded_ok = _oracle_check(rt, idx, base_req, list(queries), out,
+                              bitwise=False)
+
+    # forced compaction concurrent with a pinned reader: the pinned epoch
+    # must answer bit-identically across the swap (RCU), and post-compaction
+    # live traffic still matches the oracle.
+    probe = jnp.asarray(make_queries(data, 8, seed=555))
+    epoch = rt.pin()
+    before = epoch.search(probe, dataclasses.replace(base_req, n_active=8))
+    compacted = rt.compact(force=True)
+    after = epoch.search(probe, dataclasses.replace(base_req, n_active=8))
+    pinned_ok = bool(
+        np.array_equal(np.asarray(before.ids), np.asarray(after.ids))
+        and np.array_equal(np.asarray(before.dists),
+                           np.asarray(after.dists)))
+    rt.release(epoch)
+
+    queries = make_queries(data, burst, seed=777)
+    t0 = time.perf_counter()
+    out = rt.serve([(time.perf_counter(), q) for q in queries])
+    serve_s += time.perf_counter() - t0
+    served += len(out)
+    identical &= _oracle_check(rt, idx, base_req, list(queries), out,
+                               bitwise=True)
+
+    s = rt.stats.summary()
+    qps = served / max(serve_s, 1e-9)
+    table.add("mixed", served, qps, s["p50_ms"], s["p99_ms"],
+              s["shed_total"], identical and padded_ok and pinned_ok)
+
+    payload = dict(
+        bench="serving_load", workload=cfg,
+        backend=jax.default_backend(),
+        closed_loop_qps=qps, served=served,
+        identical_to_oracle=bool(identical),
+        padded_burst_ok=bool(padded_ok),
+        pinned_epoch_survives_compaction=bool(pinned_ok),
+        compacted=bool(compacted),
+        stats=s)
+    with open(json_path, "w") as f:
+        json.dump(payload, f, indent=2)
+
+    if s["shed_total"] != 0:
+        raise AssertionError(f"smoke load shed requests: {s['shed']}")
+    if not (identical and padded_ok and pinned_ok):
+        raise AssertionError(
+            f"serving answers diverged from the serialized oracle: "
+            f"{payload}")
+    if not s["p99_ms"] <= cfg["p99_budget_ms"]:
+        raise AssertionError(
+            f"p99 {s['p99_ms']:.1f}ms over budget {cfg['p99_budget_ms']}ms")
+    table.emit(out_dir)
+    return table
+
+
+def serving_load() -> Table:
+    """run.py --smoke entry point."""
+    return run_serving_load()

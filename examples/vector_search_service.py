@@ -1,11 +1,13 @@
 """End-to-end serving driver: batched ANN requests against a *mutable*
 DET-LSH index — the paper's deployment scenario (rapid index build,
-immediate serving) extended with live traffic: points arrive and disappear
-while queries run, sealing delta segments and triggering compaction.
-Everything goes through the unified ``repro.api`` surface, the finale
-snapshots the live index and restarts the service from the snapshot — no
-rebuild — and a last phase serves the *sharded* PDET index on a forced
-4-device host mesh, bit-identical to its single-device twin
+immediate serving) extended with live traffic, now through the
+epoch-pinned ``ServingRuntime`` (docs/DESIGN.md §9): points arrive and
+disappear while queries run, sealing delta segments and triggering
+compaction; hopeless deadlines are shed with an explicit ``Rejected``;
+injected engine and compaction faults recover with bit-identical answers.
+The finale snapshots the live index and restarts the service from the
+snapshot — no rebuild — and a last phase serves the *sharded* PDET index
+on a forced 4-device host mesh, bit-identical to its single-device twin
 (docs/DESIGN.md §7).
 
   PYTHONPATH=src python examples/vector_search_service.py
@@ -19,6 +21,7 @@ os.environ.setdefault("XLA_FLAGS",
                       "--xla_force_host_platform_device_count=4")
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
+import dataclasses
 import sys
 import tempfile
 import time
@@ -31,7 +34,8 @@ sys.path.insert(0, "src")
 
 import repro
 from repro.api import IndexSpec, PlacementSpec, SearchRequest
-from repro.serving.lsh_service import LSHService
+from repro.serving import (Answer, COMPACTION_SWAP, ENGINE_CALL, FaultPlan,
+                           InjectedFault, Rejected, ServingRuntime)
 
 
 def main():
@@ -55,46 +59,70 @@ def main():
           f"({index.index_size_bytes() / 1e6:.1f} MB, "
           f"{index.n_live} live points)")
 
-    svc = LSHService(index, k=10, max_batch=32, pad_to=32)
-    svc.warmup(d)
+    # Explicit r_min pins the search radius, so every equality below —
+    # retry vs baseline, restart vs live — compares like with like.
+    base_req = SearchRequest(k=10, r_min=float(index.r_min_for(10)))
+    plan = FaultPlan()
+    # max_wait 50ms: closed-loop submits are µs apart, so bursts coalesce
+    # into full buckets (one compiled batch shape) instead of fragmenting.
+    rt = ServingRuntime(index, k=10, max_batch=32, pad_to=32,
+                        max_wait_ms=50.0, fault_plan=plan, request=base_req)
+    rt.warmup(d)
 
     def queries(m):
-        now = time.perf_counter()
-        return [(now, data[rng.integers(0, n)]
-                 + 0.05 * rng.standard_normal(d).astype(np.float32))
+        return [data[rng.integers(0, n)]
+                + 0.05 * rng.standard_normal(d).astype(np.float32)
                 for _ in range(m)]
 
+    def stream(vecs, deadline=None):
+        # serve() iterates lazily, so arrivals are stamped at submit time —
+        # pre-stamping a whole burst makes every request look old after the
+        # first batch's service time and fragments the batching.
+        return ((time.perf_counter(), v, deadline) for v in vecs)
+
     # Phase 1: read-only traffic against the base build.
-    results = svc.serve(queries(n_requests))
-    print(f"phase 1 (static): served {len(results)}: {svc.stats.summary()}")
+    results = rt.serve(stream(queries(n_requests)))
+    assert all(isinstance(o, Answer) for o in results)
+    print(f"phase 1 (static): served {len(results)}: {rt.stats.summary()}")
 
     # Phase 2: live traffic — interleave upserts/deletes with query bursts.
-    # Upserts land in the delta (served exactly, immediately); seals happen
-    # at delta capacity and compaction fires via the service trigger.
+    # Mutations are barriers (queued queries answer first); seals happen at
+    # delta capacity and compaction fires via the runtime trigger.
     t0 = time.perf_counter()
     for round_ in range(4):
         fresh = draw(800)
-        gids = svc.upsert(fresh)
-        svc.delete(gids[::7])                      # churn: drop every 7th
-        svc.delete(rng.integers(0, n, 100))        # and some base points
-        burst = svc.serve(queries(32))
+        gids = rt.upsert(fresh)
+        rt.delete(gids[::7])                       # churn: drop every 7th
+        rt.delete(rng.integers(0, n, 100))         # and some base points
+        burst = rt.serve(stream(queries(32)))
         assert len(burst) == 32
+    rt.delete(np.arange(10**8, 10**8 + 5))         # counted no-op deletes
     print(f"phase 2 (live churn, {time.perf_counter() - t0:.2f}s): "
-          f"{svc.stats.summary()}")
+          f"{rt.stats.summary()}")
     print(f"index now: {index.stats()}")
 
     # A just-upserted point must be findable right away.
     probe = draw(1)[0]
-    [gid] = svc.upsert(probe)
-    (ids, dists), = svc.serve([(time.perf_counter(), probe)])
-    assert int(ids[0]) == int(gid) and dists[0] < 1e-3, (ids[0], gid)
-    print(f"fresh upsert gid={int(gid)} served with dist={dists[0]:.2g}")
+    [gid] = rt.upsert(probe)
+    ans, = rt.serve([(time.perf_counter(), probe)])
+    assert int(ans.ids[0]) == int(gid) and ans.dists[0] < 1e-3
+    print(f"fresh upsert gid={int(gid)} served with dist={ans.dists[0]:.2g}")
 
-    svc.delete([gid])
-    (ids, _), = svc.serve([(time.perf_counter(), probe)])
-    assert int(ids[0]) != int(gid)
+    rt.delete([gid])
+    ans, = rt.serve([(time.perf_counter(), probe)])
+    assert int(ans.ids[0]) != int(gid)
     print(f"...and invisible immediately after delete "
-          f"(top hit now gid={int(ids[0])})")
+          f"(top hit now gid={int(ans.ids[0])})")
+
+    # Load shedding is explicit: a request whose deadline already passed is
+    # rejected with a reason, never silently dropped or silently late.
+    past = time.perf_counter() - 1.0
+    shed = rt.serve(stream(queries(8), deadline=past))
+    assert all(isinstance(o, Rejected) and o.reason == "deadline"
+               for o in shed)
+    print(f"hopeless deadlines shed explicitly: {rt.stats.summary()['shed']}")
+
+    fault_recovery_phase(rt, index, plan, queries, stream, base_req)
 
     # Snapshot the live index (segments + tombstones + un-sealed delta
     # rows) and restart the service from disk — the rebuild the paper's
@@ -105,26 +133,71 @@ def main():
         restored = repro.api.load(tmp)
         print(f"snapshot save+load in {time.perf_counter() - t0:.2f}s "
               f"({restored.n_live} live points restored)")
-        svc2 = LSHService(restored, k=10, max_batch=32, pad_to=32)
+        rt2 = ServingRuntime(restored, k=10, max_batch=32, pad_to=32,
+                             request=base_req)
         probe2 = draw(1)[0]
-        before, = svc.serve([(time.perf_counter(), probe2)])
-        after, = svc2.serve([(time.perf_counter(), probe2)])
-        assert np.array_equal(before[0], after[0])
-        assert np.array_equal(before[1], after[1])
+        before, = rt.serve([(time.perf_counter(), probe2)])
+        after, = rt2.serve([(time.perf_counter(), probe2)])
+        assert np.array_equal(before.ids, after.ids)
+        assert np.array_equal(before.dists, after.dists)
         print("restarted service answers bit-identically from the snapshot")
 
-    # Phase 3: the sharded PDET index, served through the same protocols.
-    # The placement is part of the IndexSpec; 'auto' routes to the 'pdet'
-    # engine because the index carries an active mesh, and the answers are
-    # bit-identical to the single-device DETLSH on the same spec minus
-    # placement (DESIGN.md §7) — asserted live below.
+    # Phase 3: the sharded PDET index, served through the same runtime.
     serve_pdet(data, draw)
+
+
+def fault_recovery_phase(rt, index, plan, queries, stream, base_req):
+    """Inject the §9 faults live and prove recovery is bit-identical."""
+    probes = queries(32)
+
+    # Engine-call failure: one retry on the vmap semantics-of-record
+    # engine.  32 probes = exactly one batch, so the whole serve runs on
+    # the retry path — and its answers must be bit-identical to a
+    # fault-free serialized run on that same engine.
+    retries0 = rt.stats.retries
+    plan.arm(ENGINE_CALL, times=1)
+    recovered = rt.serve(stream(probes))
+    assert rt.stats.retries == retries0 + 1
+    assert all(isinstance(o, Answer) for o in recovered)
+    oracle = index.search(
+        jnp.asarray(np.stack(probes)),
+        dataclasses.replace(base_req, engine="vmap", n_active=len(probes)))
+    oids, odists = np.asarray(oracle.ids), np.asarray(oracle.dists)
+    for i, a in enumerate(recovered):
+        assert np.array_equal(a.ids, oids[i])
+        assert np.array_equal(a.dists, odists[i])
+    print(f"engine fault: retried on vmap, {len(recovered)} answers "
+          f"bit-identical to a fault-free run on the retry engine")
+
+    # Compaction crash mid-swap: the manifest stays on the pre-swap epoch,
+    # a pinned reader keeps answering identically through the crash AND
+    # through the successful retry (RCU), and live traffic still matches.
+    qs = jnp.asarray(np.stack(probes[:8]))
+    req = dataclasses.replace(base_req, n_active=8)
+    epoch = rt.pin()
+    before = epoch.search(qs, req)
+    v0 = index.manifest.version
+    plan.arm(COMPACTION_SWAP, times=1)
+    assert rt.compact(force=True) is False
+    assert isinstance(rt.last_compaction_error, InjectedFault)
+    assert index.manifest.version == v0          # pre-swap epoch intact
+    assert rt.compact(force=True) is True        # retried swap completes
+    after = epoch.search(qs, req)
+    assert np.array_equal(np.asarray(before.ids), np.asarray(after.ids))
+    assert np.array_equal(np.asarray(before.dists),
+                          np.asarray(after.dists))
+    rt.release(epoch)
+    live = rt.serve(stream(probes))
+    assert all(isinstance(o, Answer) for o in live)
+    print(f"compaction crash: recovered to pre-swap epoch, pinned reader "
+          f"bit-identical across the retried swap "
+          f"(crashes={rt.stats.compaction_crashes}, "
+          f"compactions={rt.stats.compactions})")
 
 
 def serve_pdet(data, draw):
     n_dev = len(jax.devices())
     shards = max(s for s in (4, 2, 1) if n_dev >= s)
-    import dataclasses
     base = IndexSpec(kind="static", K=4, L=8, c=1.5, beta_override=0.05,
                      leaf_size=64)
     spec = dataclasses.replace(
@@ -136,11 +209,13 @@ def serve_pdet(data, draw):
     print(f"\nPDET phase: {shards}-shard mesh "
           f"({time.perf_counter() - t0:.2f}s for both builds)")
 
-    svc = LSHService(pdet, k=10, max_batch=32, pad_to=32)
-    svc.warmup(data.shape[1])
+    # Immutable indexes get trivial epochs — the same runtime serves them.
+    rt = ServingRuntime(pdet, k=10, max_batch=32, pad_to=32)
+    rt.warmup(data.shape[1])
     probes = [draw(1)[0] for _ in range(48)]
-    results = svc.serve([(time.perf_counter(), p) for p in probes])
-    print(f"served {len(results)} via PDET: {svc.stats.summary()}")
+    results = rt.serve((time.perf_counter(), p) for p in probes)
+    assert all(isinstance(o, Answer) for o in results)
+    print(f"served {len(results)} via PDET: {rt.stats.summary()}")
 
     req = SearchRequest(k=10, r_min=0.5)
     a = pdet.search(jnp.asarray(np.stack(probes[:16])), req)

@@ -46,6 +46,7 @@ __all__ = [
     "SearchRequest",
     "SearchResult",
     "SearchStats",
+    "Rejected",
     "EngineSpec",
     "register_engine",
     "resolve_engine",
@@ -69,6 +70,7 @@ _EXPORTS = {
     "SearchRequest": "repro.api.request",
     "SearchResult": "repro.api.request",
     "SearchStats": "repro.api.request",
+    "Rejected": "repro.serving.scheduler",
     "EngineSpec": "repro.api.registry",
     "register_engine": "repro.api.registry",
     "resolve_engine": "repro.api.registry",

@@ -57,6 +57,11 @@ class SnapshotFormatError(ValueError):
     """The directory is not a snapshot this build can read."""
 
 
+# Test seam (serving/faults.py): when set, called with the snapshot path at
+# the top of ``load`` — the SNAPSHOT_LOAD fault-injection boundary.
+load_fault_hook = None
+
+
 # ---------------------------------------------------------------------------
 # Helpers
 # ---------------------------------------------------------------------------
@@ -133,13 +138,97 @@ def _drop_stale_npz(path: str, keep: set) -> None:
             os.remove(os.path.join(path, fname))
 
 
+class _SnapshotArrays(dict):
+    """Eagerly-read npz contents; a missing key is a format error naming
+    the offending file, never a raw ``KeyError`` from deep in a loader."""
+
+    def __init__(self, path: str, values: dict):
+        super().__init__(values)
+        self.path = path
+
+    def __missing__(self, key):
+        raise SnapshotFormatError(
+            f"{self.path!r}: snapshot array {key!r} is missing "
+            f"(have: {sorted(self.keys())})")
+
+
+def _load_npz(path: str, fname: str) -> _SnapshotArrays:
+    """Read one snapshot .npz completely, translating every failure mode
+    (missing file, truncated/corrupt zip, bad array payload) into a
+    ``SnapshotFormatError`` that names the offending path.
+
+    Arrays are read *eagerly*: ``np.load`` of an npz is lazy, so a
+    truncated member would otherwise surface as a raw ``zipfile``/EOF
+    error at first access, far from the load call."""
+    fpath = os.path.join(path, fname)
+    if not os.path.isfile(fpath):
+        raise SnapshotFormatError(
+            f"{fpath!r}: snapshot file is missing (the manifest references "
+            f"it — the directory is incomplete or was partially copied)")
+    try:
+        with np.load(fpath, allow_pickle=False) as npz:
+            values = {k: npz[k] for k in npz.files}
+    except SnapshotFormatError:
+        raise
+    except Exception as exc:
+        raise SnapshotFormatError(
+            f"{fpath!r}: snapshot file is truncated or corrupt "
+            f"({type(exc).__name__}: {exc})") from exc
+    return _SnapshotArrays(fpath, values)
+
+
+def _typed_field(mapping, key: str, types, where: str, kind: str):
+    """Manifest field access with a format-error taxonomy: missing keys and
+    wrong-type values both raise ``SnapshotFormatError`` naming the path
+    and field, never ``KeyError``/``TypeError`` from a loader internals."""
+    if not isinstance(mapping, dict):
+        raise SnapshotFormatError(
+            f"{where}: manifest section holding {key!r} must be an object, "
+            f"got {type(mapping).__name__}")
+    if key not in mapping:
+        raise SnapshotFormatError(f"{where}: manifest field {key!r} is "
+                                  f"missing")
+    val = mapping[key]
+    # bool is an int subclass; a JSON true/false where a count belongs is
+    # a wrong-type field, not a usable integer
+    if not isinstance(val, types) or (int in (types if isinstance(
+            types, tuple) else (types,)) and isinstance(val, bool)):
+        want = "/".join(t.__name__ for t in
+                        (types if isinstance(types, tuple) else (types,)))
+        raise SnapshotFormatError(
+            f"{where}: manifest field {key!r} must be {want}, got "
+            f"{type(val).__name__} ({val!r})")
+    return val
+
+
+def _int_field(manifest: dict, key: str, where: str) -> int:
+    return _typed_field(manifest, key, int, where, "int")
+
+
+def _dict_field(manifest: dict, key: str, where: str) -> dict:
+    return _typed_field(manifest, key, dict, where, "dict")
+
+
+def _list_field(manifest: dict, key: str, where: str) -> list:
+    return _typed_field(manifest, key, list, where, "list")
+
+
 def _read_manifest(path: str) -> dict:
     mpath = os.path.join(path, "MANIFEST.json")
     if not os.path.isfile(mpath):
         raise SnapshotFormatError(f"{path!r} is not a snapshot directory "
                                   f"(no MANIFEST.json)")
-    with open(mpath) as f:
-        manifest = json.load(f)
+    try:
+        with open(mpath) as f:
+            manifest = json.load(f)
+    except (json.JSONDecodeError, UnicodeDecodeError, OSError) as exc:
+        raise SnapshotFormatError(
+            f"{mpath!r}: MANIFEST.json is unreadable or not valid JSON "
+            f"({type(exc).__name__}: {exc})") from exc
+    if not isinstance(manifest, dict):
+        raise SnapshotFormatError(
+            f"{mpath!r}: MANIFEST.json must hold a JSON object, got "
+            f"{type(manifest).__name__}")
     if manifest.get("format") != FORMAT_NAME:
         raise SnapshotFormatError(
             f"{path!r}: manifest format {manifest.get('format')!r} is not "
@@ -153,9 +242,15 @@ def _read_manifest(path: str) -> dict:
     return manifest
 
 
-def _params_from(d: dict):
+def _params_from(manifest: dict, where: str):
     from repro.core.theory import LSHParams
-    return LSHParams(**d)
+    d = _dict_field(manifest, "params", where)
+    try:
+        return LSHParams(**d)
+    except (TypeError, ValueError) as exc:
+        raise SnapshotFormatError(
+            f"{where}: manifest field 'params' does not describe LSHParams "
+            f"({type(exc).__name__}: {exc})") from exc
 
 
 def _spec_from(d: Optional[dict]):
@@ -194,16 +289,18 @@ def save_static(index, path: str) -> None:
 
 def _load_static(path: str, manifest: dict):
     from repro.core import DETLSH
-    arrays = np.load(os.path.join(path, "arrays.npz"))
+    arrays = _load_npz(path, "arrays.npz")
     import jax.numpy as jnp
-    forest = _forest_from(arrays, **manifest["forest"])
-    index = DETLSH(params=_params_from(manifest["params"]),
+    fmeta = _dict_field(manifest, "forest", path)
+    forest = _forest_from(arrays, n=_int_field(fmeta, "n", path),
+                          leaf_size=_int_field(fmeta, "leaf_size", path))
+    index = DETLSH(params=_params_from(manifest, path),
                    A=jnp.asarray(arrays["A"]),
                    forest=forest,
                    data=jnp.asarray(arrays["data"]),
                    spec=_spec_from(manifest.get("spec")))
     if manifest.get("has_plan"):
-        index._plan = _plan_from(np.load(os.path.join(path, "plan.npz")))
+        index._plan = _plan_from(_load_npz(path, "plan.npz"))
     index._r_min_cache.update(_rmin_load(manifest.get("r_min_cache")))
     return index
 
@@ -270,29 +367,34 @@ def _load_streaming(path: str, manifest: dict):
     from repro.streaming.index import StreamingDETLSH, _DELTA
     from repro.streaming.segment import Segment
 
-    common = np.load(os.path.join(path, "common.npz"))
-    mt_meta = manifest["memtable"]
+    common = _load_npz(path, "common.npz")
+    mt_meta = _dict_field(manifest, "memtable", path)
     index = StreamingDETLSH(
-        params=_params_from(manifest["params"]),
+        params=_params_from(manifest, path),
         A=jnp.asarray(common["A"]),
         bp_all=jnp.asarray(common["bp_all"]),
         base=None,
-        Nr=int(manifest["Nr"]), leaf_size=int(manifest["leaf_size"]),
-        delta_capacity=int(mt_meta["capacity"]),
-        max_segments=int(manifest["max_segments"]),
-        id_capacity=int(manifest["id_capacity"]))
+        Nr=_int_field(manifest, "Nr", path),
+        leaf_size=_int_field(manifest, "leaf_size", path),
+        delta_capacity=_int_field(mt_meta, "capacity", path),
+        max_segments=_int_field(manifest, "max_segments", path),
+        id_capacity=_int_field(manifest, "id_capacity", path))
     index.spec = _spec_from(manifest.get("spec"))
     if index.spec is not None:      # seal path keeps the spec'd builder
         index.build_impl = index.spec.build_impl
         index.build_chunk = index.spec.build_chunk
 
-    for entry in manifest["segments"]:
-        arrays = np.load(os.path.join(path, entry["file"]))
-        seg = Segment(seg_id=int(entry["seg_id"]),
+    for entry in _list_field(manifest, "segments", path):
+        fname = _typed_field(entry, "file", str, path, "str")
+        arrays = _load_npz(path, fname)
+        fmeta = _dict_field(entry, "forest", path)
+        seg = Segment(seg_id=_int_field(entry, "seg_id", path),
                       data=jnp.asarray(arrays["data"]),
                       gids=np.asarray(arrays["gids"]),
                       live=np.asarray(arrays["live"]).copy(),
-                      forest=_forest_from(arrays, **entry["forest"]),
+                      forest=_forest_from(
+                          arrays, n=_int_field(fmeta, "n", path),
+                          leaf_size=_int_field(fmeta, "leaf_size", path)),
                       clip_fraction=float(entry["clip_fraction"]))
         if entry.get("has_plan"):
             seg._plan = _plan_from(arrays)
@@ -303,18 +405,23 @@ def _load_streaming(path: str, manifest: dict):
             for g, r in zip(seg.gids[live_rows], live_rows))
 
     mt = index.memtable
-    saved = np.load(os.path.join(path, "memtable.npz"))
-    mt.vecs[:] = saved["vecs"]
-    mt.gids[:] = saved["gids"]
-    mt.live[:] = saved["live"]
-    mt.count = int(mt_meta["count"])
+    saved = _load_npz(path, "memtable.npz")
+    try:
+        mt.vecs[:] = saved["vecs"]
+        mt.gids[:] = saved["gids"]
+        mt.live[:] = saved["live"]
+    except (ValueError, TypeError) as exc:
+        raise SnapshotFormatError(
+            f"{saved.path!r}: memtable arrays do not match the manifest's "
+            f"capacity/d ({type(exc).__name__}: {exc})") from exc
+    mt.count = _int_field(mt_meta, "count", path)
     mt.version += 1
     live_slots = np.flatnonzero(mt.live[: mt.count])
     index.locator.update((int(mt.gids[s]), (_DELTA, int(s)))
                          for s in live_slots)
 
-    index.next_gid = int(manifest["next_gid"])
-    index._next_seg_id = int(manifest["next_seg_id"])
+    index.next_gid = _int_field(manifest, "next_gid", path)
+    index._next_seg_id = _int_field(manifest, "next_seg_id", path)
     index._rmin_cache = ((index.manifest.version, mt.version),
                          _rmin_load(manifest.get("r_min_cache")))
     return index
@@ -401,15 +508,18 @@ def _load_pdet(path: str, manifest: dict, placement=None):
     from repro.core.detree import DEForest
     from repro.core.distributed import PDETIndex
 
-    common = np.load(os.path.join(path, "common.npz"))
-    entries = sorted(manifest["shards"], key=lambda e: e["shard"])
-    shards = [np.load(os.path.join(path, e["file"])) for e in entries]
+    common = _load_npz(path, "common.npz")
+    entries = sorted(_list_field(manifest, "shards", path),
+                     key=lambda e: _int_field(e, "shard", path))
+    shards = [_load_npz(path, _typed_field(e, "file", str, path, "str"))
+              for e in entries]
     dtypes = _forest_dtypes()
     parts = {k: np.concatenate([sh[k] for sh in shards], axis=1)
              .astype(dtypes[k])
              for k in _PDET_POINT_KEYS + _PDET_LEAF_KEYS}
-    meta = manifest["forest"]
-    forest = DEForest(n=int(meta["n"]), leaf_size=int(meta["leaf_size"]),
+    meta = _dict_field(manifest, "forest", path)
+    forest = DEForest(n=_int_field(meta, "n", path),
+                      leaf_size=_int_field(meta, "leaf_size", path),
                       breakpoints=jnp.asarray(np.asarray(
                           common["breakpoints"], np.float32)),
                       **{k: jnp.asarray(v) for k, v in parts.items()})
@@ -418,11 +528,19 @@ def _load_pdet(path: str, manifest: dict, placement=None):
     spec = _spec_from(manifest.get("spec"))
     base_spec = (dataclasses.replace(spec, placement=None)
                  if spec is not None else None)
-    det = DETLSH(params=_params_from(manifest["params"]),
+    det = DETLSH(params=_params_from(manifest, path),
                  A=jnp.asarray(common["A"]), forest=forest, data=data,
                  spec=base_spec)
     det._r_min_cache.update(_rmin_load(manifest.get("r_min_cache")))
-    saved = PlacementSpec.from_dict(manifest["placement"])
+    try:
+        saved = PlacementSpec.from_dict(
+            _dict_field(manifest, "placement", path))
+    except SnapshotFormatError:
+        raise
+    except (TypeError, ValueError, KeyError) as exc:
+        raise SnapshotFormatError(
+            f"{path!r}: manifest field 'placement' does not describe a "
+            f"PlacementSpec ({type(exc).__name__}: {exc})") from exc
     eff = placement if placement is not None else _fit_placement(saved)
     # The attached spec must describe the index as it now lives: a
     # resharded load carries the *effective* placement, not the saved one
@@ -456,6 +574,8 @@ def load(path: str, placement=None) -> Any:
     Answers are identical either way — the pdet layout is device-count
     invariant (DESIGN.md §7).
     """
+    if load_fault_hook is not None:
+        load_fault_hook(path)          # SNAPSHOT_LOAD injection boundary
     manifest = _read_manifest(path)
     kind = manifest.get("kind")
     if kind == "pdet":

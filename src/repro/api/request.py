@@ -55,6 +55,10 @@ class SearchRequest:
     max_rounds: int = 48
     dist_impl: str = "auto"
     bounds_impl: str = "auto"
+    # Absolute deadline (same clock domain as the serving runtime).  The
+    # engines ignore it; the scheduler uses it for flush/admission/shed
+    # decisions (docs/DESIGN.md §9).  None = best-effort, never shed.
+    deadline: Optional[float] = None
 
     def __post_init__(self):
         _check_positive("k", self.k)
@@ -113,6 +117,8 @@ class SearchStats(NamedTuple):
     #                               cross-shard termination reductions issued
     merge_size: Any = None        # int — elements in each cross-shard merge
     #                               (the pmin'd B x n candidate table)
+    degraded: bool = False        # answered at the serving runtime's capped
+    #                               max_rounds under overload (§9)
 
 
 class SearchResult(NamedTuple):

@@ -1,0 +1,24 @@
+"""repro.serving: the serving layer over (P)DET-LSH indexes.
+
+``LSHService`` is the synchronous pad-to-bucket loop (the seed-era
+surface, kept); ``ServingRuntime`` is the concurrent runtime — epoch/RCU
+snapshot pinning, deadline-aware micro-batching with admission control,
+fault injection + retry, and lock-free metrics (docs/DESIGN.md §9).
+"""
+
+from repro.serving.faults import (COMPACTION_SWAP, ENGINE_CALL,
+                                  SNAPSHOT_LOAD, FaultPlan, InjectedFault)
+from repro.serving.lsh_service import LSHService, ServiceStats
+from repro.serving.runtime import (Epoch, EpochManager, LatencyRing,
+                                   RuntimeStats, ServingRuntime)
+from repro.serving.scheduler import (Answer, LatencyModel, MicroBatcher,
+                                     Rejected, Request)
+
+__all__ = [
+    "LSHService", "ServiceStats",
+    "ServingRuntime", "RuntimeStats", "LatencyRing", "Epoch",
+    "EpochManager",
+    "MicroBatcher", "LatencyModel", "Request", "Answer", "Rejected",
+    "FaultPlan", "InjectedFault",
+    "ENGINE_CALL", "COMPACTION_SWAP", "SNAPSHOT_LOAD",
+]

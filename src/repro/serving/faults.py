@@ -1,0 +1,109 @@
+"""Fault injection for the serving runtime (docs/DESIGN.md §9).
+
+A ``FaultPlan`` arms failures at the three boundaries where a production
+ANN service actually breaks, so tests (and the example driver) can prove
+the recovery paths instead of asserting them:
+
+  * ``ENGINE_CALL``      — fired by the runtime immediately before every
+    engine dispatch (including the retry dispatch, so ``times=2`` models a
+    persistently failing engine).
+  * ``COMPACTION_SWAP``  — fired by ``Manifest.swap`` *before* any
+    mutation (the runtime installs the hook), so an armed fault models a
+    compaction crashing mid-install: the manifest — and every pinned
+    epoch — must come through untouched.
+  * ``SNAPSHOT_LOAD``    — fired by ``repro.api.persist.load`` on entry
+    while the plan is installed there (``installed_on_load``), modelling
+    an unreadable snapshot store.
+
+The plan is deliberately deterministic: ``arm(site, times=n)`` makes the
+next ``n`` fires at that site raise ``InjectedFault`` and every fire
+(raising or not) is counted in ``fired``, so a test can assert both that
+the fault happened and that the runtime's recovery consumed it.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Type
+
+ENGINE_CALL = "engine_call"
+COMPACTION_SWAP = "compaction_swap"
+SNAPSHOT_LOAD = "snapshot_load"
+
+SITES = (ENGINE_CALL, COMPACTION_SWAP, SNAPSHOT_LOAD)
+
+
+class InjectedFault(RuntimeError):
+    """An armed ``FaultPlan`` fault fired at a runtime boundary."""
+
+    def __init__(self, site: str, detail: str = ""):
+        self.site = site
+        self.detail = detail
+        super().__init__(f"injected fault at {site}"
+                         + (f" ({detail})" if detail else ""))
+
+
+class FaultPlan:
+    """Deterministic fault schedule over the runtime's injection sites."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._armed: Dict[str, int] = {}
+        self._exc: Dict[str, Type[BaseException]] = {}
+        # every fire() call per site, whether or not it raised — the
+        # "did the boundary actually get exercised" observability counter
+        self.fired: Dict[str, int] = {s: 0 for s in SITES}
+        self.raised: Dict[str, int] = {s: 0 for s in SITES}
+
+    def _check_site(self, site: str) -> None:
+        if site not in SITES:
+            raise ValueError(f"unknown fault site {site!r}; valid: {SITES}")
+
+    def arm(self, site: str, times: int = 1,
+            exc: Optional[Type[BaseException]] = None) -> "FaultPlan":
+        """Make the next ``times`` fires at ``site`` raise (chainable)."""
+        self._check_site(site)
+        if times < 1:
+            raise ValueError(f"times must be >= 1, got {times}")
+        with self._lock:
+            self._armed[site] = self._armed.get(site, 0) + int(times)
+            if exc is not None:
+                self._exc[site] = exc
+        return self
+
+    def armed(self, site: str) -> int:
+        """How many future fires at ``site`` will still raise."""
+        self._check_site(site)
+        with self._lock:
+            return self._armed.get(site, 0)
+
+    def fire(self, site: str, detail: str = "") -> None:
+        """Cross the boundary: raises iff the site is armed (consuming one
+        armed charge); always counts the crossing."""
+        self._check_site(site)
+        with self._lock:
+            self.fired[site] += 1
+            remaining = self._armed.get(site, 0)
+            if remaining <= 0:
+                return
+            self._armed[site] = remaining - 1
+            self.raised[site] += 1
+            exc = self._exc.get(site, InjectedFault)
+        if exc is InjectedFault:
+            raise InjectedFault(site, detail)
+        raise exc(f"injected fault at {site}"
+                  + (f" ({detail})" if detail else ""))
+
+    @contextlib.contextmanager
+    def installed_on_load(self):
+        """Install this plan at the snapshot-load boundary
+        (``repro.api.persist.load`` fires SNAPSHOT_LOAD on entry)."""
+        from repro.api import persist
+        prev = persist.load_fault_hook
+        persist.load_fault_hook = lambda path: self.fire(SNAPSHOT_LOAD,
+                                                         str(path))
+        try:
+            yield self
+        finally:
+            persist.load_fault_hook = prev

@@ -34,21 +34,28 @@ import numpy as np
 from repro.api.protocol import LegacyIndexAdapter, MutableAnnIndex, \
     as_ann_index
 from repro.api.request import SearchRequest
+from repro.serving.runtime import LatencyRing
 
 
 @dataclasses.dataclass
 class ServiceStats:
-    latencies_ms: list
+    # Bounded ring (docs/DESIGN.md §9): a long-running service records
+    # latencies forever, so the metrics path must be O(1) memory.  The
+    # ring keeps the most recent window; len()/iteration/percentile all
+    # behave like the old list of samples.
+    latencies_ms: LatencyRing = dataclasses.field(
+        default_factory=lambda: LatencyRing(4096))
     batches: int = 0
     queries: int = 0          # real served queries only — never pad lanes
     pad_queries: int = 0      # pad lanes issued across all partial batches
     upserts: int = 0
     deletes: int = 0
+    noop_deletes: int = 0     # deletes of never-inserted gids (counted no-op)
     compactions: int = 0
 
     def percentile(self, p: float) -> float:
         return float(np.percentile(self.latencies_ms, p)) \
-            if self.latencies_ms else float("nan")
+            if len(self.latencies_ms) else float("nan")
 
     def summary(self) -> dict:
         return {"queries": self.queries, "batches": self.batches,
@@ -71,7 +78,7 @@ class LSHService:
         self.max_batch = max_batch
         self.pad_to = pad_to
         self._fn = None
-        self.stats = ServiceStats(latencies_ms=[])
+        self.stats = ServiceStats()
 
     @property
     def _supports_n_active(self) -> bool:
@@ -130,8 +137,10 @@ class LSHService:
 
     def delete(self, ids) -> int:
         idx = self._mutable_index()
+        requested = int(np.atleast_1d(np.asarray(ids)).size)
         removed = idx.delete(ids)
         self.stats.deletes += removed
+        self.stats.noop_deletes += requested - removed
         if idx.maybe_compact():
             self.stats.compactions += 1
         return removed

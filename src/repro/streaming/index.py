@@ -32,7 +32,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import warnings
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -50,6 +50,73 @@ from repro.streaming.memtable import Memtable
 from repro.streaming.segment import Segment, build_segment
 
 _DELTA = "delta"     # locator tag for rows still in the memtable
+
+
+class _SegView(NamedTuple):
+    """One segment's pinned query inputs.
+
+    Device arrays are immutable, so pinning = holding references taken at
+    pin time: a later ``mark_dead`` replaces the segment's *caches* but
+    never mutates the arrays an earlier pin captured.  ``live_host`` is a
+    copy (the host bitmap does mutate in place) — it exists for
+    ``PinnedView.survivors()``, the oracle input, not for the query path.
+    """
+
+    seg: Segment
+    live_dev: Optional[jax.Array]         # (m,) bool, None = all live
+    live_sorted_dev: Optional[jax.Array]  # (L, n_pad) bool, None = all live
+    gmap: jax.Array                       # (m+1,) int32 local -> global id
+    live_host: np.ndarray                 # (m,) bool copy at pin time
+
+
+@dataclasses.dataclass(frozen=True)
+class PinnedView:
+    """An immutable epoch of a ``StreamingDETLSH`` (docs/DESIGN.md §9).
+
+    Everything a query needs is captured by reference-to-immutable (device
+    arrays, sealed segment rows) or by copy (host bitmaps, delta rows), so
+    any interleaving of upsert/delete/seal/compact after the pin leaves
+    this view answering exactly as the index did at pin time.  The view is
+    what the serving runtime's epoch wraps; ``search(queries, request,
+    view=...)`` runs the ordinary fan-out against it.
+    """
+
+    manifest_version: int
+    memtable_version: int
+    id_capacity: int                      # combine sentinel / bitmap width
+    segs: tuple                           # of _SegView (n_live > 0 only)
+    delta: Optional[tuple]                # (vecs, live, gmap) device arrays
+    delta_n_live: int
+    delta_capacity: int
+    delta_host: Optional[tuple]           # (vecs, gids, live) host copies
+    # per-view r_min cache (the index cache is keyed by *current* versions)
+    _rmin: dict = dataclasses.field(default_factory=dict, repr=False,
+                                    compare=False)
+
+    @property
+    def fingerprint(self) -> tuple:
+        return (self.manifest_version, self.memtable_version)
+
+    @property
+    def n_live(self) -> int:
+        return (sum(int(v.live_host.sum()) for v in self.segs)
+                + self.delta_n_live)
+
+    def survivors(self) -> tuple:
+        """(vectors, gids) alive at pin time — the from-scratch-rebuild
+        oracle input for the epoch equivalence property test."""
+        vecs = [np.asarray(v.seg.data)[v.live_host] for v in self.segs]
+        gids = [v.seg.gids[v.live_host].astype(np.int64) for v in self.segs]
+        if self.delta_host is not None:
+            dv, dg, dl = self.delta_host
+            vecs.append(dv[dl])
+            gids.append(dg[dl])
+        if not vecs:
+            d = (self.segs[0].seg.data.shape[1] if self.segs
+                 else (self.delta_host[0].shape[1] if self.delta_host
+                       else 0))
+            return np.zeros((0, d), np.float32), np.zeros(0, np.int64)
+        return np.concatenate(vecs), np.concatenate(gids)
 
 
 class StreamingDETLSH:
@@ -344,7 +411,45 @@ class StreamingDETLSH:
                                   jnp.asarray(gmap)))
         return self._delta_cache[1]
 
-    def _query_delta(self, queries: jax.Array, k: int,
+    # ------------------------------------------------------------------
+    # Epoch views (docs/DESIGN.md §9)
+    # ------------------------------------------------------------------
+
+    def _current_view(self) -> PinnedView:
+        """The view of the *current* structure — the ordinary query path
+        (one code path: a plain ``search`` is a search on a just-pinned
+        view, so epoch answers can never drift from live answers)."""
+        mt = self.memtable
+        return PinnedView(
+            manifest_version=self.manifest.version,
+            memtable_version=mt.version,
+            id_capacity=self.id_capacity,
+            segs=tuple(
+                _SegView(seg, seg.live_dev(), seg.live_sorted_dev(),
+                         seg.gid_map_dev(self.id_capacity), seg.live)
+                for seg in self.manifest.segments if seg.n_live > 0),
+            delta=self._delta_device() if mt.n_live > 0 else None,
+            delta_n_live=mt.n_live, delta_capacity=mt.capacity,
+            delta_host=None)
+
+    def pin_state(self) -> PinnedView:
+        """Pin the current epoch: an immutable view that keeps answering
+        exactly as of now, across any later upsert/delete/seal/compact.
+
+        Device arrays are pinned by reference (they never mutate — later
+        deletes replace segment *caches*, old arrays survive through the
+        view); host bitmaps and delta rows are pinned by copy, so the
+        view's ``survivors()`` oracle stays frozen too."""
+        cur = self._current_view()
+        mt = self.memtable
+        return dataclasses.replace(
+            cur,
+            segs=tuple(v._replace(live_host=v.live_host.copy())
+                       for v in cur.segs),
+            delta_host=((mt.vecs.copy(), mt.gids.copy(), mt.live.copy())
+                        if mt.count > 0 else None))
+
+    def _query_delta(self, view: PinnedView, queries: jax.Array, k: int,
                      n_active: Optional[jax.Array | int] = None):
         """Exact top-k over the delta rows (bounded, one stable shape).
 
@@ -353,25 +458,25 @@ class StreamingDETLSH:
         the direct form avoids the expansion's cancellation error (the delta
         is the 'exact' tier of the index — keep it exact).  Pad lanes
         (>= n_active) admit nothing, matching the segment engines."""
-        vecs, live, gmap = self._delta_device()
+        vecs, live, gmap = view.delta
         diff = queries[:, None, :] - vecs[None, :, :]
         dist = jnp.sqrt(jnp.sum(diff * diff, axis=-1))
         dist = jnp.where(live[None, :], dist, jnp.inf)
         if n_active is not None:
             lane_ok = jnp.arange(queries.shape[0]) < jnp.asarray(n_active)
             dist = jnp.where(lane_ok[:, None], dist, jnp.inf)
-        kk = min(k, self.memtable.capacity)
+        kk = min(k, view.delta_capacity)
         negd, sel = jax.lax.top_k(-dist, kk)
         # +inf slots (dead rows, masked pad lanes) must not leak their gid.
-        ids = jnp.where(jnp.isfinite(negd), gmap[sel], self.id_capacity)
+        ids = jnp.where(jnp.isfinite(negd), gmap[sel], view.id_capacity)
         return ids, -negd
 
     def _combine(self, sources: List[Tuple[jax.Array, jax.Array]],
-                 k: int, B: int):
+                 k: int, B: int, nid: int):
         """Fold per-source (global ids, exact dists) top-k lists into the
-        overall top-k via the incremental candidate merge."""
+        overall top-k via the incremental candidate merge.  ``nid`` is the
+        view's pinned invalid-id sentinel / bitmap width."""
         cap = sum(int(ids.shape[1]) for ids, _ in sources)
-        nid = self.id_capacity
         state = cand.CandidateState(
             ids=jnp.full((B, cap), nid, jnp.int32),
             dists=jnp.full((B, cap), jnp.inf, jnp.float32),
@@ -421,38 +526,37 @@ class StreamingDETLSH:
             cache[k] = estimate_r_min(ref, probes, k, self.params.c)
         return cache[k]
 
-    def _fanout_query(self, queries: jax.Array, req,
-                      r_min: float) -> QueryResult:
-        """Batched c^2-k-ANN over the live point set (fan-out + combine).
-        Returned ids are *global* ids; invalid slots carry ``id_capacity``
-        and +inf."""
+    def _fanout_query(self, queries: jax.Array, req, r_min: float,
+                      view: PinnedView) -> QueryResult:
+        """Batched c^2-k-ANN over a view's live point set (fan-out +
+        combine).  Returned ids are *global* ids; invalid slots carry the
+        view's ``id_capacity`` and +inf."""
         queries = jnp.asarray(queries, jnp.float32)
         B = queries.shape[0]
         k, n_active = req.k, req.n_active
-        segs = [s for s in self.manifest.segments if s.n_live > 0]
 
         spec = self.spec
         block_q = spec.block_q if spec is not None else 8
         block_l = spec.block_l if spec is not None else 8
         sources, rounds, n_cands, final_r = [], [], [], []
-        for seg in segs:
+        for sv in view.segs:
+            seg = sv.seg
             cfg = req.to_query_config(k=min(k, seg.m), r_min=r_min,
                                       block_q=block_q, block_l=block_l)
             fused = engine_registry.resolve_engine(
                 cfg.engine, mode=cfg.mode, batch=B) == "fused"
             res = knn_query_batch(
                 seg.data, seg.forest, self.A, self.params, queries, cfg,
-                plan=seg.plan() if fused else None, live=seg.live_dev(),
-                live_sorted=seg.live_sorted_dev(), n_active=n_active)
-            gmap = seg.gid_map_dev(self.id_capacity)
-            sources.append((gmap[res.ids], res.dists))
+                plan=seg.plan() if fused else None, live=sv.live_dev,
+                live_sorted=sv.live_sorted_dev, n_active=n_active)
+            sources.append((sv.gmap[res.ids], res.dists))
             rounds.append(res.rounds)
             n_cands.append(res.n_candidates)
             final_r.append(res.final_r)
-        if self.memtable.n_live > 0:
-            ids_d, d_d = self._query_delta(queries, k, n_active)
+        if view.delta is not None:
+            ids_d, d_d = self._query_delta(view, queries, k, n_active)
             sources.append((ids_d, d_d))
-            delta_cand = jnp.full((B,), self.memtable.n_live, jnp.int32)
+            delta_cand = jnp.full((B,), view.delta_n_live, jnp.int32)
             if n_active is not None:
                 delta_cand = jnp.where(jnp.arange(B) < jnp.asarray(n_active),
                                        delta_cand, 0)
@@ -460,13 +564,13 @@ class StreamingDETLSH:
 
         if not sources:
             return QueryResult(
-                ids=jnp.full((B, k), self.id_capacity, jnp.int32),
+                ids=jnp.full((B, k), view.id_capacity, jnp.int32),
                 dists=jnp.full((B, k), jnp.inf, jnp.float32),
                 rounds=jnp.zeros((B,), jnp.int32),
                 n_candidates=jnp.zeros((B,), jnp.int32),
                 final_r=jnp.full((B,), r_min, jnp.float32))
 
-        ids, dists = self._combine(sources, k, B)
+        ids, dists = self._combine(sources, k, B, view.id_capacity)
         zero = jnp.zeros((B,), jnp.int32)
         return QueryResult(
             ids=ids, dists=dists,
@@ -475,23 +579,58 @@ class StreamingDETLSH:
             final_r=functools.reduce(
                 jnp.maximum, final_r, jnp.full((B,), r_min, jnp.float32)))
 
-    def search(self, queries: jax.Array, request=None):
+    def _view_rmin(self, view: PinnedView, k: int,
+                   probes: jax.Array) -> float:
+        """Per-(view, k) starting-radius estimate — cached *on the view*
+        (the index cache is keyed by current versions, which a pinned
+        epoch must not consult after a mutation)."""
+        if k not in view._rmin:
+            if view.segs:
+                ref = view.segs[0].seg.data
+            elif view.delta is not None:
+                ref = view.delta[0]
+            else:
+                view._rmin[k] = 1.0                    # empty view
+                return 1.0
+            probes = probes if probes is not None and len(probes) \
+                else ref[: min(64, ref.shape[0])]
+            view._rmin[k] = estimate_r_min(ref, probes, k, self.params.c)
+        return view._rmin[k]
+
+    def search(self, queries: jax.Array, request=None, *,
+               view: Optional[PinnedView] = None):
         """Typed batched search over the live point set
         (``repro.api.SearchRequest`` in, ``repro.api.SearchResult`` out).
-        Trace-compatible when the request carries an explicit ``r_min``."""
+        Trace-compatible when the request carries an explicit ``r_min``.
+
+        ``view`` pins the search to an epoch from ``pin_state()``: the
+        answer is computed over the view's frozen structure regardless of
+        any mutation since the pin (the serving runtime's RCU read path).
+        """
         from repro.api.request import SearchRequest, SearchResult, \
             SearchStats
         req = request or SearchRequest()
         if req.engine is None and self.spec is not None:
             req = dataclasses.replace(req, engine=self.spec.engine)
         r_min, cached = req.r_min, False
+        current = (view is None
+                   or view.fingerprint == (self.manifest.version,
+                                           self.memtable.version))
         if r_min is None:
-            cached = self._rmin_hit(req.k)            # hit vs first estimate
             # Zero-vector pad lanes must not skew the cached estimate
             # (n_active == 0 keeps the full batch: no real lanes to probe).
             probes = queries[: req.n_active] if req.n_active else queries
-            r_min = self.r_min_for(req.k, probes)
-        res = self._fanout_query(queries, req, float(r_min))
+            if current:
+                cached = self._rmin_hit(req.k)        # hit vs first estimate
+                r_min = self.r_min_for(req.k, probes)
+                if view is not None:
+                    view._rmin.setdefault(req.k, r_min)
+            else:
+                cached = req.k in view._rmin
+                r_min = self._view_rmin(view, req.k, probes)
+        res = self._fanout_query(queries, req, float(r_min),
+                                 view if view is not None
+                                 else self._current_view())
         engine = engine_registry.resolve_engine(
             req.engine, mode=req.mode, batch=jnp.asarray(queries).shape[0])
         return SearchResult(

@@ -21,6 +21,7 @@ EXPECTED_API_EXPORTS = {
     "AnnIndex", "MutableAnnIndex", "LegacyIndexAdapter", "as_ann_index",
     "IndexSpec", "PlacementSpec", "PDETIndex",
     "SearchRequest", "SearchResult", "SearchStats",
+    "Rejected",
     "EngineSpec", "register_engine", "resolve_engine", "available_engines",
     "get_engine", "build", "load", "save",
     "SnapshotFormatError", "FORMAT_VERSION",
@@ -29,7 +30,7 @@ EXPECTED_API_EXPORTS = {
 # Field ORDER is part of the surface (positional construction).
 EXPECTED_SEARCH_REQUEST_FIELDS = (
     "k", "r_min", "M", "mode", "engine", "n_active", "max_rounds",
-    "dist_impl", "bounds_impl",
+    "dist_impl", "bounds_impl", "deadline",
 )
 
 EXPECTED_INDEX_SPEC_FIELDS = (
@@ -44,7 +45,7 @@ EXPECTED_PLACEMENT_SPEC_FIELDS = ("mesh_shape", "mesh_axes", "data_axes")
 # Appending defaulted fields is allowed; reordering/removing is breaking.
 EXPECTED_SEARCH_STATS_FIELDS = (
     "engine", "r_min", "r_min_cached", "rounds", "n_candidates", "final_r",
-    "shard_candidates", "psum_rounds", "merge_size",
+    "shard_candidates", "psum_rounds", "merge_size", "degraded",
 )
 
 EXPECTED_PROTOCOL_MEMBERS = {

@@ -1,0 +1,167 @@
+"""Property test: epoch-pinned serving equals serialized execution.
+
+For random interleavings of {query, upsert, delete, compact} driven
+through the ``ServingRuntime`` (hypothesis; deterministic shim fallback),
+every query's answer must be bit-identical to a from-scratch *static*
+build over its pinned epoch's surviving union — the serialized-oracle
+equivalence of docs/DESIGN.md §9.  Saturating requests (every leaf
+admitted, exact rerank) make the answer the exact brute-force top-k, so
+"identical to a fresh static build" and "identical to brute force over the
+pinned survivors" coincide and the check is deterministic.
+
+Checked on both engines; a separate fixed interleaving drives the same
+oracle against a PDET-sharded from-scratch build (mesh of all host
+devices — 1 in tier-1, 4 in the multidevice CI job).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import repro.api
+from repro.api import IndexSpec, PlacementSpec, SearchRequest
+from repro.core import derive_params
+from repro.serving import Answer, ServingRuntime
+from repro.streaming import StreamingDETLSH
+
+D = 8
+K_NN = 4
+SAT = dict(r_min=1e6, M=10**6)
+PARAMS = derive_params(K=2, c=1.5, L=2, beta_override=0.1)
+# One fixed geometry => one compile per (engine, shape) across examples.
+KW = dict(Nr=8, leaf_size=8, delta_capacity=16, max_segments=2)
+
+
+def _oracle(view, queries, k):
+    """Brute-force top-k over the pinned epoch's surviving union."""
+    vecs, gids = view.survivors()
+    d2 = ((queries[:, None, :] - vecs[None, :, :]) ** 2).sum(-1)
+    sel = np.argsort(d2, axis=1)[:, :k]
+    return gids[sel], np.sqrt(np.take_along_axis(d2, sel, axis=1))
+
+
+def _check_epoch_answers(res, view, queries, k, tag):
+    gt_gids, gt_d = _oracle(view, queries, k)
+    ids = np.asarray(res.ids)[:, :k]
+    np.testing.assert_allclose(np.asarray(res.dists)[:, :k], gt_d,
+                               rtol=1e-4, atol=1e-4, err_msg=str(tag))
+    for b in range(len(queries)):          # same ids up to distance ties
+        assert set(ids[b].tolist()) == set(gt_gids[b].tolist()), (tag, b)
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(min_value=0, max_value=2 ** 31 - 1),
+       st.lists(st.tuples(st.sampled_from(["query", "upsert", "delete",
+                                           "compact"]),
+                          st.integers(min_value=1, max_value=16)),
+                min_size=3, max_size=7))
+@pytest.mark.timeout(600)
+def test_interleavings_answer_on_their_pinned_epoch(seed, ops):
+    rng = np.random.default_rng(seed)
+    data = rng.standard_normal((48, D)).astype(np.float32)
+    idx = StreamingDETLSH.build(jnp.asarray(data), jax.random.key(0),
+                                PARAMS, **KW)
+    rt = ServingRuntime(idx, k=K_NN, max_batch=4, pad_to=4,
+                        request=SearchRequest(k=K_NN, **SAT))
+    queries = rng.standard_normal((3, D)).astype(np.float32)
+    sat_req = SearchRequest(k=K_NN, n_active=3, **SAT)
+
+    held = []                              # epochs pinned across later ops
+    for kind, arg in ops:
+        if kind == "query":
+            # pin an epoch, query it now, and HOLD it: it must answer the
+            # same after every later mutation/compaction in the sequence
+            epoch = rt.pin()
+            res = epoch.search(jnp.asarray(queries), sat_req)
+            _check_epoch_answers(res, epoch.view, queries, K_NN, "live")
+            held.append((epoch, np.asarray(res.ids), np.asarray(res.dists)))
+        elif kind == "upsert":
+            rt.upsert(rng.standard_normal((arg, D)).astype(np.float32))
+        elif kind == "delete":
+            alive = sorted(idx.locator.keys())
+            if alive:
+                rt.delete(rng.choice(alive, size=min(arg, len(alive)),
+                                     replace=False))
+        elif kind == "compact":
+            rt.compact()
+
+    # also serve through the micro-batch path on the final state
+    final = rt.pin()
+    out = rt.serve([(0.0, q) for q in queries])
+    assert all(isinstance(o, Answer) for o in out)
+    ids = np.stack([o.ids for o in out])
+    dists = np.stack([o.dists for o in out])
+    gt_gids, gt_d = _oracle(final.view, queries, K_NN)
+    np.testing.assert_allclose(dists[:, :K_NN], gt_d, rtol=1e-4, atol=1e-4)
+    for b in range(len(queries)):
+        assert set(ids[b, :K_NN].tolist()) == set(gt_gids[b].tolist())
+    rt.release(final)
+
+    # every held epoch: bit-identical replay after the full interleaving,
+    # on both engines, and equal to a from-scratch static build of its
+    # pinned surviving union
+    for epoch, ids0, dists0 in held:
+        for engine in ("fused", "vmap"):
+            req = SearchRequest(k=K_NN, n_active=3, engine=engine, **SAT)
+            res = epoch.search(jnp.asarray(queries), req)
+            _check_epoch_answers(res, epoch.view, queries, K_NN, engine)
+        replay = epoch.search(jnp.asarray(queries), sat_req)
+        np.testing.assert_array_equal(np.asarray(replay.ids), ids0)
+        np.testing.assert_array_equal(np.asarray(replay.dists), dists0)
+
+        vecs, gids = epoch.view.survivors()
+        if len(gids) >= K_NN:              # static build needs >= k rows
+            static = repro.api.build(
+                jnp.asarray(vecs), jax.random.key(1),
+                IndexSpec(kind="static", K=2, L=2, c=1.5, beta_override=0.1,
+                          Nr=8, leaf_size=8))
+            sres = static.search(jnp.asarray(queries), sat_req)
+            sids = gids[np.asarray(sres.ids)[:, :K_NN]]
+            np.testing.assert_allclose(
+                np.asarray(sres.dists)[:, :K_NN],
+                np.asarray(replay.dists)[:, :K_NN], rtol=1e-4, atol=1e-4)
+            for b in range(len(queries)):
+                assert set(sids[b].tolist()) == \
+                    set(np.asarray(replay.ids)[b, :K_NN].tolist())
+        rt.release(epoch)
+    assert idx.manifest.pinned_versions() == ()
+
+
+@pytest.mark.timeout(600)
+def test_pinned_epoch_matches_pdet_sharded_rebuild(rng):
+    """One fixed interleaving, same oracle, against a PDET-sharded
+    from-scratch build of the pinned epoch's survivors (the sharded leg of
+    the §9 equivalence — mesh over all host devices)."""
+    data = rng.standard_normal((96, D)).astype(np.float32)
+    idx = StreamingDETLSH.build(jnp.asarray(data), jax.random.key(0),
+                                PARAMS, **KW)
+    rt = ServingRuntime(idx, k=K_NN, request=SearchRequest(k=K_NN, **SAT))
+    rt.upsert(rng.standard_normal((20, D)).astype(np.float32))
+    rt.delete(np.arange(0, 30))
+    epoch = rt.pin()
+    rt.upsert(rng.standard_normal((10, D)).astype(np.float32))
+    rt.compact()
+
+    queries = rng.standard_normal((4, D)).astype(np.float32)
+    res = epoch.search(jnp.asarray(queries),
+                       SearchRequest(k=K_NN, n_active=4, **SAT))
+    vecs, gids = epoch.view.survivors()
+    placement = PlacementSpec(mesh_shape=(len(jax.devices()),),
+                              mesh_axes=("data",))
+    pdet = repro.api.build(
+        jnp.asarray(vecs), jax.random.key(1),
+        IndexSpec(kind="static", K=2, L=2, c=1.5, beta_override=0.1,
+                  Nr=8, leaf_size=8, placement=placement))
+    pres = pdet.search(jnp.asarray(queries),
+                       SearchRequest(k=K_NN, n_active=4, **SAT))
+    pids = gids[np.asarray(pres.ids)[:, :K_NN]]
+    np.testing.assert_allclose(np.asarray(pres.dists)[:, :K_NN],
+                               np.asarray(res.dists)[:, :K_NN],
+                               rtol=1e-4, atol=1e-4)
+    for b in range(len(queries)):
+        assert set(pids[b].tolist()) == \
+            set(np.asarray(res.ids)[b, :K_NN].tolist())
+    rt.release(epoch)
