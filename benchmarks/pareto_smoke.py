@@ -1,0 +1,95 @@
+"""Recall/QPS Pareto smoke: DET-LSH vs baselines through one protocol (CI).
+
+Runs ``repro.eval.pareto`` at smoke scale: a (K, L, leaf_size) x
+(M, max_rounds, engine) sweep for DET-LSH plus hnsw / ivf-pq / pm-lsh /
+brute-force variants, every method measured through ``AnnIndex.search``.
+Writes the full curve set to BENCH_pareto.json; run.py --smoke gates on
+
+  * det_dominates_brute.ok — some DET-LSH point must reach recall >= 0.9
+    doing strictly less work per query (mean SearchStats.n_candidates)
+    than the exact scan.  Work, not wall clock: at smoke scale a dense
+    scan is one BLAS matmul and CPU QPS would "refute" every sublinear
+    method ever published (the paper's candidate-count figures, 17-18,
+    exist for the same reason).
+
+  PYTHONPATH=src python -m benchmarks.run --smoke
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Table, make_dataset, make_queries
+
+SMOKE = dict(dataset="msong-like", n=8192, nq=16, k=10, repeat=2,
+             min_recall=0.9)
+
+
+def _baseline_variants(data, key):
+    """(label, index, build_seconds, params) per method — knob sweeps via
+    rebuild or ``dataclasses.replace`` (cheap field-only variants)."""
+    import dataclasses
+    from repro.baselines import HNSW, IVFPQ, PMLSH
+
+    out = {"hnsw": [], "ivf-pq": [], "pm-lsh": []}
+    t0 = time.perf_counter()
+    hnsw = HNSW.build(np.asarray(data), None, M=12, ef_construction=48)
+    t_hnsw = time.perf_counter() - t0
+    for ef in (16, 64):
+        out["hnsw"].append((f"ef{ef}",
+                            dataclasses.replace(hnsw, ef_search=ef),
+                            t_hnsw, dict(ef_search=ef)))
+    t0 = time.perf_counter()
+    pq = IVFPQ.build(data, key, nlist=64, M=4, nprobe=4, rerank=128)
+    t_pq = time.perf_counter() - t0
+    for nprobe in (4, 8):
+        out["ivf-pq"].append((f"np{nprobe}",
+                              dataclasses.replace(pq, nprobe=nprobe),
+                              t_pq, dict(nprobe=nprobe)))
+    for beta in (0.02, 0.1):
+        t0 = time.perf_counter()
+        pm = PMLSH.build(data, key, beta=beta)
+        out["pm-lsh"].append((f"b{beta}", pm, time.perf_counter() - t0,
+                              dict(beta=beta)))
+    return out
+
+
+def pareto_smoke() -> Table:
+    from repro.api import IndexSpec
+    from repro.eval import run_pareto
+
+    cfg = SMOKE
+    data = jnp.asarray(make_dataset(cfg["dataset"], cfg["n"]))
+    queries = jnp.asarray(make_queries(np.asarray(data), cfg["nq"]))
+    key = jax.random.PRNGKey(0)
+
+    specs = [IndexSpec(K=4, L=4, c=1.5, beta_override=0.05, Nr=64,
+                       leaf_size=32),
+             IndexSpec(K=8, L=4, c=1.5, beta_override=0.1, Nr=128,
+                       leaf_size=64),
+             IndexSpec(K=8, L=8, c=1.5, beta_override=0.1, Nr=128,
+                       leaf_size=64)]
+    out = run_pareto(data, queries, key, k=cfg["k"], specs=specs,
+                     Ms=(4, 16), max_rounds=(8, 48),
+                     engines=("fused", "vmap"),
+                     baselines=_baseline_variants(data, key),
+                     repeat=cfg["repeat"], min_recall=cfg["min_recall"])
+    out["dataset"] = cfg["dataset"]
+    with open("BENCH_pareto.json", "w") as f:
+        json.dump(out, f, indent=2)
+
+    tab = Table("pareto_smoke",
+                ["method", "label", "recall", "qps", "work_per_q"])
+    for p in out["points"]:
+        tab.add([p["method"], p["label"], f"{p['recall']:.3f}",
+                 f"{p['qps']:.1f}", f"{p['work_per_query']:.0f}"])
+    gate = out["det_dominates_brute"]
+    tab.add(["gate", "det_dominates_brute", str(gate["ok"]),
+             f"{gate.get('best_recall', float('nan')):.3f}",
+             f"{gate.get('best_work', float('nan')):.0f}"])
+    return tab

@@ -50,23 +50,28 @@ def main(argv=None) -> None:
                     help="skip multi-process scaling benchmarks")
     ap.add_argument("--smoke", action="store_true",
                     help="CI smoke: query/build throughput, snapshot "
-                         "round-trip, PDET worker scaling, and the serving-"
-                         "runtime mixed-load check on small indexes; writes "
-                         "BENCH_{query,build,snapshot,parallel,serving}.json "
-                         "and the benchmarks/out/smoke_snapshot artifact")
+                         "round-trip, PDET worker scaling, the serving-"
+                         "runtime mixed-load check, LSH-decode vs full "
+                         "attention, and the recall/QPS Pareto sweep on "
+                         "small indexes; writes BENCH_{query,build,snapshot,"
+                         "parallel,serving,decode,pareto}.json and the "
+                         "benchmarks/out/smoke_snapshot artifact")
     ap.add_argument("--only", default="")
     ap.add_argument("--out-dir", default="benchmarks/out")
     args = ap.parse_args(argv)
 
     if args.smoke:
         from benchmarks import build_throughput as B
+        from benchmarks import decode_throughput as D
         from benchmarks import parallel_scaling as P
+        from benchmarks import pareto_smoke as PS
         from benchmarks import query_throughput as Q
         from benchmarks import serving_load as V
         from benchmarks import snapshot_smoke as S
         figures = [Q.query_throughput_smoke, B.build_throughput_smoke,
                    S.snapshot_smoke, P.parallel_scaling_smoke,
-                   V.serving_load]
+                   V.serving_load, D.decode_throughput_smoke,
+                   PS.pareto_smoke]
     else:
         figures = _figures(args.fast)
 
@@ -122,6 +127,32 @@ def _enforce_smoke_gates(failed, ran) -> None:
         print(f"[bench] serving gates OK: oracle-identical, zero shed, "
               f"p99={srv['stats']['p99_ms']:.1f}ms "
               f"({srv['closed_loop_qps']:.0f} qps closed-loop)")
+    if "decode_throughput_smoke" in ran:
+        with open("BENCH_decode.json") as f:
+            dec = json.load(f)
+        if not dec["ratio_lsh_over_full"] >= 1.0:
+            raise SystemExit(f"[bench] decode gate: LSH decode slower than "
+                             f"full attention at S={dec['S']}: "
+                             f"{dec['ratio_lsh_over_full']:.2f}x")
+        if not dec["planted_recall"] >= 0.9:
+            raise SystemExit(f"[bench] decode gate: planted recall "
+                             f"{dec['planted_recall']:.2f} < 0.9 — speed "
+                             f"via retrieval misses is not acceptable")
+        print(f"[bench] decode gates OK: "
+              f"{dec['ratio_lsh_over_full']:.2f}x over full attention, "
+              f"planted recall {dec['planted_recall']:.2f} "
+              f"(S={dec['S']}, refresh_every={dec['refresh_every']})")
+    if "pareto_smoke" in ran:
+        with open("BENCH_pareto.json") as f:
+            gate = json.load(f)["det_dominates_brute"]
+        if not gate["ok"]:
+            raise SystemExit(f"[bench] pareto gate: no DET-LSH point beats "
+                             f"brute force at recall >= "
+                             f"{gate['min_recall']}: {gate}")
+        print(f"[bench] pareto gate OK: {gate['best_label']} reaches "
+              f"recall {gate['best_recall']:.3f} at "
+              f"{gate['best_work']:.0f} candidates/query vs "
+              f"{gate['reference_work']:.0f} exact")
     if "build_throughput_smoke" not in ran:
         print("[bench] build speedup gate skipped (build figure not run)")
         return

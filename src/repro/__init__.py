@@ -5,6 +5,7 @@ Pillars:
     IndexSpec, SearchRequest/SearchResult, engine registry, snapshots).
   * ``repro.core``      — the paper's contribution (DET-LSH / PDET-LSH).
   * ``repro.streaming`` — the mutable LSM-style segmented index.
+  * ``repro.decode``    — LSH attention decode: the KV cache as an index.
   * ``repro.kernels``   — Pallas TPU kernels for the compute hot spots.
   * ``repro.models``    — the assigned LM architecture zoo.
   * ``repro.train`` / ``repro.serving`` / ``repro.data`` — substrate.
@@ -22,14 +23,16 @@ import importlib
 
 __version__ = "1.0.0"
 
-__all__ = ["__version__", "api", "DETLSH", "StreamingDETLSH",
-           "derive_params"]
+__all__ = ["__version__", "api", "decode", "DETLSH", "StreamingDETLSH",
+           "derive_params", "KVCacheIndex"]
 
 _LAZY = {
     "api": ("repro.api", None),
+    "decode": ("repro.decode", None),
     "DETLSH": ("repro.core", "DETLSH"),
     "StreamingDETLSH": ("repro.streaming", "StreamingDETLSH"),
     "derive_params": ("repro.core.theory", "derive_params"),
+    "KVCacheIndex": ("repro.decode", "KVCacheIndex"),
 }
 
 

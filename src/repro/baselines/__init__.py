@@ -4,6 +4,12 @@ Common API: ``build(data, key, **kw) -> index``; ``index.query(q, k) ->
 (ids, dists)`` plus ``index.size_bytes()``.  JAX implementations except HNSW
 (graph construction is inherently pointer-based; NumPy).
 
+The Pareto-harness baselines (brute_force, pmlsh, hnsw, ivfpq) also carry
+the native ``repro.api.AnnIndex`` surface via ``common.ProtocolBaseline``
+(``search``/``n_points``/``work_per_query``/...), so ``as_ann_index`` is a
+no-op on them and ``eval/pareto.py`` drives every method through one
+protocol.
+
   brute_force — exact oracle
   e2lsh       — boundary-constraint (BC) multi-table bucket LSH [19]
   c2lsh       — collision-counting (C2) with virtual rehashing [22]-like
@@ -12,6 +18,7 @@ Common API: ``build(data, key, **kw) -> index``; ``index.query(q, k) ->
   ivfpq       — quantization-based (IMI/OPQ-family) [45]: IVF + PQ
 """
 
+from repro.baselines.common import ProtocolBaseline
 from repro.baselines.brute_force import BruteForce
 from repro.baselines.e2lsh import E2LSH
 from repro.baselines.c2lsh import C2LSH
@@ -19,4 +26,5 @@ from repro.baselines.pmlsh import PMLSH
 from repro.baselines.hnsw import HNSW
 from repro.baselines.ivfpq import IVFPQ
 
-__all__ = ["BruteForce", "E2LSH", "C2LSH", "PMLSH", "HNSW", "IVFPQ"]
+__all__ = ["BruteForce", "E2LSH", "C2LSH", "PMLSH", "HNSW", "IVFPQ",
+           "ProtocolBaseline"]

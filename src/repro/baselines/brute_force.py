@@ -7,10 +7,14 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.baselines.common import ProtocolBaseline
+
 
 @dataclasses.dataclass
-class BruteForce:
+class BruteForce(ProtocolBaseline):
     data: jax.Array
+
+    engine_name = "brute-force"
 
     @classmethod
     def build(cls, data, key=None, **kw):

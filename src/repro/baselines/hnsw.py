@@ -14,15 +14,21 @@ import math
 
 import numpy as np
 
+from repro.baselines.common import ProtocolBaseline
+
 
 @dataclasses.dataclass
-class HNSW:
+class HNSW(ProtocolBaseline):
     data: np.ndarray
     M: int
     ef_construction: int
     levels: list          # per-level adjacency dict: {node: [neighbors]}
     entry: int
     max_level: int
+    ef_search: int = 64   # default beam width (dataclasses.replace to sweep)
+    n_dist: int = 0       # distance evaluations since build (work metric)
+
+    engine_name = "hnsw"
 
     @classmethod
     def build(cls, data, key=None, M: int = 16, ef_construction: int = 64,
@@ -65,6 +71,7 @@ class HNSW:
         return obj
 
     def _dist(self, q, i):
+        self.n_dist += 1
         return float(np.linalg.norm(self.data[i] - q))
 
     def _greedy(self, q, start, level):
@@ -100,19 +107,27 @@ class HNSW:
                         heapq.heappop(best)
         return [(-d, c) for d, c in best]
 
-    def query(self, queries, k: int, ef_search: int = 64):
+    def query(self, queries, k: int, ef_search: int | None = None):
+        ef = self.ef_search if ef_search is None else ef_search
         queries = np.asarray(queries)
         ids = np.zeros((len(queries), k), np.int32)
         ds = np.zeros((len(queries), k), np.float32)
+        work = np.zeros(len(queries), np.int64)
         for bi, q in enumerate(queries):
+            before = self.n_dist
             cur = self.entry
             for l in range(self.max_level, 0, -1):
                 cur = self._greedy(q, cur, l)
             found = sorted(self._search_layer(q, cur, 0,
-                                              max(ef_search, k)))[:k]
+                                              max(ef, k)))[:k]
             for j, (d, c) in enumerate(found):
                 ids[bi, j], ds[bi, j] = c, d
+            work[bi] = self.n_dist - before
+        self._last_work = work     # measured per-lane evals (work metric)
         return ids, ds
+
+    def work_per_query(self, k: int):
+        return getattr(self, "_last_work", np.asarray(self.n_points))
 
     def size_bytes(self):
         return sum(4 * (len(v) + 1) for lvl in self.levels

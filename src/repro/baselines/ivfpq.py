@@ -13,6 +13,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.baselines.common import ProtocolBaseline
+
 
 def _kmeans(key, x, k, iters=10):
     n = x.shape[0]
@@ -31,7 +33,7 @@ def _kmeans(key, x, k, iters=10):
 
 
 @dataclasses.dataclass
-class IVFPQ:
+class IVFPQ(ProtocolBaseline):
     data: jax.Array
     coarse: jax.Array        # (nlist, d)
     assign: jax.Array        # (n,)
@@ -41,6 +43,16 @@ class IVFPQ:
     cell_start: jax.Array    # (nlist+1,)
     nprobe: int
     rerank: int
+
+    engine_name = "ivf-pq"
+
+    def work_per_query(self, k: int):
+        # coarse scan (nlist centroid dists) + PQ-scored candidates in the
+        # probed cells + exact reranks; PQ scoring is table lookups but we
+        # count it 1:1 to stay conservative on IVF-PQ's behalf
+        cap = max(self.rerank, k)
+        return (self.coarse.shape[0] + self.nprobe * cap
+                + min(self.rerank, self.nprobe * cap))
 
     @classmethod
     def build(cls, data, key, nlist: int = 64, M: int = 4,

@@ -15,13 +15,24 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.baselines.common import ProtocolBaseline
+
 
 @dataclasses.dataclass
-class PMLSH:
+class PMLSH(ProtocolBaseline):
     data: jax.Array
     A: jax.Array
     proj: jax.Array
     beta: float
+
+    engine_name = "pm-lsh"
+
+    def work_per_query(self, k: int):
+        # exact reranks = the candidate budget beta*n + k (the paper's
+        # candidate-count metric; the K-dim projected scan is ~K/d of an
+        # exact evaluation and is dominated by the rerank)
+        n = self.n_points
+        return min(n, int(self.beta * n) + k)
 
     @classmethod
     def build(cls, data, key, K: int = 15, beta: float = 0.1):

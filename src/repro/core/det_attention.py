@@ -1,25 +1,28 @@
-"""DET-LSH-accelerated decode attention (beyond-paper integration).
+"""Seed DET-LSH decode attention — now the *oracle* for ``repro.decode``.
 
-The paper motivates LSH with "LLM inference acceleration" (§I, MagicPIG
-[16]).  This module makes DET-LSH a first-class serving feature: the KV
-cache's *keys* are indexed with a DE-Forest at prefill time; each decode
-step retrieves the top-M candidate positions by (augmented-L2) range query
-and computes exact attention only over those positions plus a local window
-and attention sinks — the standard sparse-attention safety set.
+This was the first cut of LSH-accelerated decode: per-(batch, kv-head)
+DE-Forests built with the per-tree ``build_tree`` path and a per-head
+leaf-LB scan (``retrieve_topm``).  The production implementation lives in
+``repro.decode`` (docs/DESIGN.md §10): ``KVCacheIndex.prefill`` builds
+through the fused single-sort pipeline, each decode step is a streaming
+upsert + one batched fused ``range_rerank`` query, and the MIPS -> L2
+augmentation lives in ``repro.decode.mips`` (re-exported here).
 
-MIPS -> L2 reduction: argmax q.k over keys with varying norms is turned
-into nearest-neighbor search with the Shrivastava-Li augmentation
-  k_hat = [k, sqrt(R^2 - ||k||^2)],  q_hat = [q, 0]
-so  ||q_hat - k_hat||^2 = ||q||^2 + R^2 - 2 q.k  — monotone in q.k.
+What remains here:
+  * ``build_kv_index`` / ``det_decode_attention`` — deprecation shims that
+    still run the seed path, because it is the bit-level oracle
+    (tests/test_decode.py checks the fused engine admits the same
+    candidate sets over identical forests);
+  * ``retrieve_topm`` — the seed per-head scan, oracle-only.
 
-Per (batch, kv-head) an independent forest is built (vmapped); queries from
-the g query-heads of a group are answered against their kv-head's forest.
+Do not add new callers: outside oracle tests nothing in-tree may call the
+per-head scan path (ISSUE 7 acceptance criterion).
 """
 
 from __future__ import annotations
 
-import dataclasses
 import functools
+import warnings
 from typing import NamedTuple
 
 import jax
@@ -44,22 +47,33 @@ class DETKVIndex(NamedTuple):
 
 
 def _augment_keys(keys: jax.Array):
-    """keys (S, dh) -> (S, dh+1) Shrivastava-Li augmentation + R."""
-    norms2 = jnp.sum(keys.astype(jnp.float32) ** 2, -1)
-    R2 = jnp.max(norms2) * (1.0 + 1e-6)
-    aug = jnp.sqrt(jnp.maximum(R2 - norms2, 0.0))
-    return jnp.concatenate([keys.astype(jnp.float32), aug[:, None]], -1), \
-        jnp.sqrt(R2)
+    """keys (S, dh) -> (S, dh+1) Shrivastava-Li augmentation + R.
+
+    Thin wrapper over ``repro.decode.mips`` (the maintained reduction);
+    kept because the oracle tests pin the seed call shape."""
+    from repro.decode import mips
+    R2 = mips.mips_radius(keys)
+    aug, _ = mips.augment_keys(keys, R2)
+    return aug, jnp.sqrt(R2)
 
 
 def build_kv_index(k_cache: jax.Array, key: jax.Array, *,
                    params: LSHParams | None = None, Nr: int = 64,
                    leaf_size: int = 32) -> DETKVIndex:
-    """Index cache keys.  k_cache (b, S, hk, dh) -> per-(b,hk) DE-Forests."""
+    """Index cache keys.  k_cache (b, S, hk, dh) -> per-(b,hk) DE-Forests.
+
+    Deprecated oracle path; layout knobs (Nr, leaf_size, and the derived
+    K/L/c) route through the same eager validation ``IndexSpec`` runs, so
+    a bad Nr or non-positive leaf_size fails here exactly as it would in
+    ``repro.decode.KVSpec``.
+    """
+    warnings.warn("core.det_attention.build_kv_index is deprecated. use "
+                  "repro.decode.KVCacheIndex.prefill (docs/DESIGN.md §10)",
+                  DeprecationWarning, stacklevel=2)
     b, S, hk, dh = k_cache.shape
-    from repro.core.detree import check_nr
-    check_nr(Nr)                     # codes are stored as uint8 symbols
     params = params or derive_params(K=4, c=1.5, L=4, beta_override=0.1)
+    from repro.decode.kv_index import KVSpec
+    KVSpec(K=params.K, L=params.L, c=params.c, Nr=Nr, leaf_size=leaf_size)
     K, L = params.K, params.L
     A = hashing.sample_projections(key, dh + 1, K, L)
 
@@ -125,6 +139,9 @@ def det_decode_attention(q: jax.Array, k_cache: jax.Array,
     q (b, 1, h, dh); caches (b, S, hk, dh).  Exact softmax over the union of
     {retrieved candidates} + {last ``window`` positions} + {first ``sinks``}.
     """
+    warnings.warn("core.det_attention.det_decode_attention is deprecated. "
+                  "use repro.decode.LSHDecoder / sparse_decode_attention "
+                  "(docs/DESIGN.md §10)", DeprecationWarning, stacklevel=2)
     b, _, h, dh = q.shape
     S, hk = k_cache.shape[1], k_cache.shape[2]
     g = h // hk

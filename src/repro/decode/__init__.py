@@ -1,0 +1,20 @@
+"""DET-LSH attention decode on the production stack (docs/DESIGN.md §10).
+
+Re-platforms the seed ``core.det_attention`` prototype: the KV cache is a
+``repro.api.MutableAnnIndex`` (``KVCacheIndex``) — prefill is a batched
+fused build, each decode step is a streaming-delta upsert plus a batched
+fused ``range_rerank`` retrieval, and ``sparse_decode_attention`` computes
+exact softmax over the retrieved ∪ window ∪ sink survivor set.  The
+MIPS -> L2 reduction (``repro.decode.mips``) is the thin transform layer
+between attention scores and the Euclidean engine.
+"""
+
+from repro.decode.mips import (DEFAULT_SLACK, augment_keys, augment_queries,
+                               mips_radius)
+from repro.decode.kv_index import (HeadForest, KVCacheIndex, KVRetrieval,
+                                   KVSpec)
+from repro.decode.attention import LSHDecoder, sparse_decode_attention
+
+__all__ = ["KVCacheIndex", "KVSpec", "KVRetrieval", "HeadForest",
+           "LSHDecoder", "sparse_decode_attention", "mips_radius",
+           "augment_keys", "augment_queries", "DEFAULT_SLACK"]

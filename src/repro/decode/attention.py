@@ -1,0 +1,125 @@
+"""Sparse-attention assembly over retrieved KV positions (DESIGN.md §10).
+
+``sparse_decode_attention`` is the read side of LSH decode: exact softmax
+over the union of {retrieved candidate positions} ∪ {local window} ∪
+{attention sinks} — the standard sparse-attention safety set.  Retrieval
+decides *which* positions matter; this module computes *exact* attention
+over them (no approximation inside the softmax).
+
+``LSHDecoder`` is the step driver that ties the two halves of a decode
+step together against a ``KVCacheIndex``:
+
+  write half:  upsert the step's new key into the streaming delta;
+  read half:   batched fused retrieval every ``refresh_every`` steps
+               (retrieval amortization: decode queries drift slowly, and
+               the local window — required to be >= refresh_every — covers
+               every key written since the last refresh, so stale
+               candidate tables stay safe between refreshes).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.decode.kv_index import KVCacheIndex
+
+
+@functools.partial(jax.jit, static_argnames=("window", "sinks"))
+def sparse_decode_attention(q: jax.Array, k_cache: jax.Array,
+                            v_cache: jax.Array, positions: jax.Array,
+                            length, *, window: int = 64,
+                            sinks: int = 4) -> jax.Array:
+    """Exact attention over {positions} ∪ {window} ∪ {sinks}.
+
+    q (b, 1, h, dh); caches (b, S, hk, dh); positions (b, hk, g, m) int32
+    cache positions (-1 = no candidate); length = attendable prefix.
+    Duplicate positions across the three sources are masked (first
+    occurrence kept), so the softmax is exactly the dense softmax
+    restricted to the survivor set.
+    """
+    b, _, h, dh = q.shape
+    S, hk = k_cache.shape[1], k_cache.shape[2]
+    g = h // hk
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    qh = q.reshape(b, hk, g, dh)
+
+    loc = length - 1 - jnp.arange(window)
+    snk = jnp.arange(sinks)
+    fixed = jnp.concatenate([loc, snk])
+    fixed = jnp.broadcast_to(fixed, (b, hk, g, fixed.shape[0]))
+    ids = jnp.concatenate([positions.astype(jnp.int32), fixed], axis=-1)
+    # mask BEFORE clipping: -1 candidates must not alias position 0
+    in_range = (ids >= 0) & (ids < length)
+    ids = jnp.clip(ids, 0, S - 1)
+
+    def head(qv, kc, vc, idv, okv):          # (g,dh),(S,dh),(S,dh),(g,m)
+        kg = kc[idv.reshape(-1)].reshape(*idv.shape, dh)
+        vg = vc[idv.reshape(-1)].reshape(*idv.shape, dh)
+        s = jnp.einsum("gd,gmd->gm", qv.astype(jnp.float32) * scale,
+                       kg.astype(jnp.float32))
+
+        def mask_dups(row_ids, row_valid):
+            order = jnp.argsort(row_ids)
+            rs = row_ids[order]
+            first = jnp.concatenate([jnp.array([True]), rs[1:] != rs[:-1]])
+            keep = jnp.zeros_like(row_valid).at[order].set(first)
+            return row_valid & keep
+
+        valid = jax.vmap(mask_dups)(idv, okv)
+        s = jnp.where(valid, s, -jnp.inf)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("gm,gmd->gd", p, vg.astype(jnp.float32))
+
+    out = jax.vmap(jax.vmap(head))(
+        qh, k_cache.transpose(0, 2, 1, 3), v_cache.transpose(0, 2, 1, 3),
+        ids, in_range)                                 # (b, hk, g, dh)
+    return out.reshape(b, 1, h, dh).astype(q.dtype)
+
+
+class LSHDecoder:
+    """One decode step = streaming upsert + (amortized) fused retrieval +
+    sparse assembly, against a prefilled ``KVCacheIndex``.
+
+    ``refresh_every=1`` retrieves every step; larger values reuse the last
+    candidate table for R-1 steps, which is the honest throughput lever —
+    retrieval cost amortizes to 1/R per token while the local window
+    (``window >= refresh_every`` is enforced) keeps all not-yet-retrieved
+    fresh keys attendable.
+    """
+
+    def __init__(self, index: KVCacheIndex, *, window: int = 64,
+                 sinks: int = 4, refresh_every: int = 1):
+        if window < refresh_every:
+            raise ValueError(
+                f"window ({window}) must be >= refresh_every "
+                f"({refresh_every}): keys written since the last refresh "
+                f"are only attendable through the local window")
+        self.index = index
+        self.window = window
+        self.sinks = sinks
+        self.refresh_every = refresh_every
+        self.n_refreshes = 0
+        self._positions: Optional[jax.Array] = None    # (b, hk, g, m)
+        self._since = refresh_every                    # force refresh at t=0
+
+    def step(self, q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+             k_new: jax.Array, length) -> jax.Array:
+        """q (b, 1, h, dh); caches (b, S, hk, dh) with the step's k/v
+        already written at position length-1; k_new (b, hk, dh) is that
+        key (upserted into the index's delta).  Returns (b, 1, h, dh)."""
+        self.index.upsert(k_new)
+        if self._positions is None or self._since >= self.refresh_every:
+            res = self.index.retrieve(q)
+            b, hk = self.index.b, self.index.hk
+            g, m = res.ids.shape[1], res.ids.shape[2]
+            self._positions = res.ids.reshape(b, hk, g, m)
+            self._since = 0
+            self.n_refreshes += 1
+        self._since += 1
+        return sparse_decode_attention(q, k_cache, v_cache, self._positions,
+                                       length, window=self.window,
+                                       sinks=self.sinks)

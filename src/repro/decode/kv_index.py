@@ -1,0 +1,440 @@
+"""KVCacheIndex: the KV cache as a MutableAnnIndex (docs/DESIGN.md §10).
+
+Re-platforms DET-LSH attention decode on the production stack:
+
+  * **prefill** is a batched fused build — per (batch, kv-head) the
+    augmented keys go through the same ``build_forest`` single-sort
+    pipeline every other index uses (PR 5), with per-head frozen
+    breakpoints, and a per-head ``FusedPlan`` (code-sorted points +
+    inverse permutation) exactly like ``DETLSH``;
+  * **each decode step** is an upsert of the new key into a streaming
+    delta buffer (``streaming.BatchedMemtable`` — H lockstep heads, one
+    cursor) plus a batched fused ``range_rerank`` query over
+    {sealed forests + delta}: the round loop drives
+    ``kernels.ops.range_rerank_heads`` (one kernel pass for all H
+    forests) and folds each round through the engine's single source of
+    truth, ``core.query.fused_round_update``;
+  * the MIPS -> L2 reduction lives in ``repro.decode.mips`` as a thin
+    transform layer: keys are augmented once (radius frozen at prefill),
+    queries are zero-extended per step.
+
+Candidate ids ARE cache positions: sealed forests are built over keys in
+cache-position order and delta slots carry their position as gid, so the
+retrieval output feeds ``repro.decode.attention`` directly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.request import SearchRequest, SearchResult, SearchStats
+from repro.api.request import _check_positive
+from repro.api.spec import IndexSpec
+from repro.core import hashing
+from repro.core.detree import build_forest
+from repro.core.query import fused_round_update, fused_topk, make_fused_plan
+from repro.core.theory import LSHParams, derive_params
+from repro.decode import mips
+from repro.kernels import ops as kops
+from repro.streaming.memtable import BatchedMemtable
+
+
+@dataclasses.dataclass(frozen=True)
+class KVSpec:
+    """Build/search configuration for a ``KVCacheIndex``.
+
+    Validation routes through ``IndexSpec`` (``index_spec()``) so the KV
+    path fails with exactly the same eager, actionable messages as every
+    other index (Nr <= 256, positive leaf_size, known breakpoint method,
+    ...); the decode-only knobs are checked here.
+    """
+
+    K: int = 4
+    L: int = 4
+    c: float = 1.5
+    beta_override: Optional[float] = 0.1
+    Nr: int = 64
+    leaf_size: int = 32
+    # full_sort matches the seed ``det_attention`` breakpoint selection,
+    # which is what makes the oracle test's forests bit-identical; at KV
+    # scale (S ~ thousands) the full sort is cheap.
+    breakpoint_method: str = "full_sort"
+    build_impl: str = "auto"
+    delta_capacity: int = 128     # decode steps between reseals
+    m_top: int = 64               # retrieved positions per (kv-head, q-head)
+    max_rounds: int = 8           # radius enlargements per retrieval
+    radius_slack: float = 1e-6    # headroom on the frozen MIPS radius
+
+    def __post_init__(self):
+        self.index_spec()                      # shared eager validation
+        _check_positive("m_top", self.m_top)
+        _check_positive("max_rounds", self.max_rounds)
+        if not self.radius_slack >= 0.0:
+            raise ValueError(f"radius_slack must be >= 0, got "
+                             f"{self.radius_slack!r} (it is headroom for "
+                             f"post-prefill key-norm drift)")
+
+    def index_spec(self) -> IndexSpec:
+        """The equivalent ``IndexSpec`` (streaming kind: the KV index is a
+        delta-buffered mutable index); constructing it IS the validation."""
+        return IndexSpec(kind="streaming", K=self.K, L=self.L, c=self.c,
+                         beta_override=self.beta_override, Nr=self.Nr,
+                         leaf_size=self.leaf_size,
+                         breakpoint_method=self.breakpoint_method,
+                         build_impl=self.build_impl,
+                         delta_capacity=self.delta_capacity)
+
+    def derive_params(self) -> LSHParams:
+        return derive_params(K=self.K, c=self.c, L=self.L,
+                             beta_override=self.beta_override)
+
+
+class HeadForest(NamedTuple):
+    """H stacked per-(batch, kv-head) DE-Forests + their fused plans."""
+    point_ids: jax.Array      # (H, L, n_pad) int32
+    valid: jax.Array          # (H, L, n_pad) bool
+    leaf_lo: jax.Array        # (H, L, nl, K) int16
+    leaf_hi: jax.Array        # (H, L, nl, K) int16
+    leaf_valid: jax.Array     # (H, L, nl) bool
+    breakpoints: jax.Array    # (H, L, K, Nr+1) f32
+    points_sorted: jax.Array  # (H, L, n_pad, d_aug) f32
+    inv_perm: jax.Array       # (H, L, n) int32
+
+
+class KVRetrieval(NamedTuple):
+    ids: jax.Array            # (H, g, m_top + C) int32 positions (-1 = none)
+    dists: jax.Array          # (H, g, m_top + C) f32 augmented-L2 (+inf)
+    rounds: jax.Array         # (H, g) int32
+    n_candidates: jax.Array   # (H, g) int32 — |S| in the sealed forests
+
+
+class _RoundParams(NamedTuple):
+    c: float                  # fused_round_update only reads params.c
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n", "m_top", "max_rounds", "leaf_size", "eps", "c", "beta"))
+def _retrieve_impl(q_aug, A, forest: HeadForest, live_pos, delta_vecs,
+                   delta_gids, delta_mask, r_min, *, n, m_top, max_rounds,
+                   leaf_size, eps, c, beta):
+    """Batched fused retrieval over {sealed forests + delta}.
+
+    q_aug (H, g, d_aug); live_pos (n,) bool position-order tombstones;
+    delta_vecs (H, C, d_aug); delta_gids (C,) positions; delta_mask (C,)
+    live-and-assigned.  The round loop is the fused engine's: one
+    ``range_rerank_heads`` pass per round, ``fused_round_update`` per head.
+    """
+    H, g, _ = q_aug.shape
+    L, K = forest.breakpoints.shape[1], forest.breakpoints.shape[2]
+    q_proj = jnp.einsum("hgd,dp->hgp", q_aug, A)
+    q_proj = q_proj.reshape(H, g, L, K).transpose(0, 2, 1, 3)   # (H, L, g, K)
+    live_sorted = (live_pos[jnp.clip(forest.point_ids, 0, n - 1)]
+                   & forest.valid)                              # (H, L, n_pad)
+    thresh = jnp.asarray(beta * n + m_top, jnp.float32)
+    params = _RoundParams(c=c)
+    upd = jax.vmap(functools.partial(fused_round_update, params=params,
+                                     k=m_top, thresh=thresh),
+                   in_axes=(0, 0, 0, 0, 0, None))
+
+    def cond(state):
+        rnd, rounds, r, done, best = state
+        return jnp.any(~done) & (rnd < max_rounds)
+
+    def body(state):
+        rnd, rounds, r, done, best = state
+        r_eff = jnp.where(done, -1.0, eps * r)                  # (H, g)
+        dmat = kops.range_rerank_heads(
+            q_aug, q_proj, r_eff, forest.leaf_lo, forest.leaf_hi,
+            forest.leaf_valid, forest.breakpoints, forest.points_sorted,
+            forest.valid, live_sorted, leaf_size=leaf_size)
+        by_id = jnp.min(
+            jnp.take_along_axis(dmat, forest.inv_perm[:, :, None, :],
+                                axis=3), axis=1)                # (H, g, n)
+        best, r, done, rounds = upd(best, by_id, r, done, rounds, rnd)
+        return rnd + 1, rounds, r, done, best
+
+    state0 = (jnp.asarray(0, jnp.int32), jnp.zeros((H, g), jnp.int32),
+              jnp.full((H, g), r_min, jnp.float32),
+              jnp.zeros((H, g), jnp.bool_),
+              jnp.full((H, g, n), jnp.inf, jnp.float32))
+    _, rounds, _, _, best = jax.lax.while_loop(cond, body, state0)
+
+    ids_f, dists_f, count = jax.vmap(
+        functools.partial(fused_topk, k=m_top, n=n))(best)
+    ids_f = jnp.where(jnp.isfinite(dists_f), ids_f, -1)
+
+    # Delta tier: exact augmented distances over the (tiny) buffer.
+    diff = delta_vecs[:, None, :, :] - q_aug[:, :, None, :]     # (H, g, C, d)
+    dd = jnp.sqrt(jnp.maximum(jnp.sum(diff * diff, -1), 0.0))   # (H, g, C)
+    dd = jnp.where(delta_mask[None, None, :], dd, jnp.inf)
+    did = jnp.where(delta_mask, delta_gids.astype(jnp.int32), -1)
+    did = jnp.broadcast_to(did[None, None, :], dd.shape)
+
+    ids = jnp.concatenate([ids_f, did], axis=-1)
+    dists = jnp.concatenate([dists_f, dd], axis=-1)
+    return ids, dists, rounds, count
+
+
+class KVCacheIndex:
+    """Per-(batch, kv-head) DE-Forests over a KV cache's augmented keys.
+
+    Satisfies ``repro.api.MutableAnnIndex``: ``upsert`` appends the next
+    decode step's key(s), ``delete`` tombstones evicted positions,
+    ``search`` answers the protocol surface (queries in decode layout
+    (b, 1, h, dh), ids are cache positions).  ``retrieve`` is the
+    decode-native entry returning the full (H, g, m) candidate tables the
+    sparse-attention assembler consumes.
+    """
+
+    def __init__(self, spec: KVSpec, params: LSHParams, A: jax.Array,
+                 b: int, hk: int, dh: int, R2: jax.Array,
+                 forest: HeadForest, aug_keys: np.ndarray):
+        self.spec = spec
+        self.params = params
+        self.A = A
+        self.b, self.hk, self.dh = b, hk, dh
+        self.H = b * hk
+        self.d_aug = dh + 1
+        self.R2 = R2                                   # (H,) frozen radius^2
+        self.forest = forest
+        self.n_sealed = aug_keys.shape[1]
+        self.next_pos = self.n_sealed
+        self._aug = aug_keys                           # (H, n_sealed, d_aug)
+        self._live = np.ones(self.n_sealed, bool)
+        self.delta = BatchedMemtable(self.H, spec.delta_capacity, self.d_aug)
+        self.clip_total = 0                            # upserts beyond R
+        self.seals = 0
+        self._r_min_cache: Optional[float] = None
+
+    # ------------------------------------------------------------------
+    # Build (prefill)
+    # ------------------------------------------------------------------
+
+    @classmethod
+    def prefill(cls, k_cache: jax.Array, key: jax.Array,
+                spec: Optional[KVSpec] = None) -> "KVCacheIndex":
+        """k_cache (b, S, hk, dh) -> index over all S prefix positions."""
+        spec = spec or KVSpec()
+        b, S, hk, dh = k_cache.shape
+        params = spec.derive_params()
+        keys = jnp.transpose(k_cache, (0, 2, 1, 3)).reshape(b * hk, S, dh)
+        R2 = mips.mips_radius(keys, slack=spec.radius_slack)      # (H,)
+        aug, _ = mips.augment_keys(keys, R2)                      # (H, S, d+1)
+        A = hashing.sample_projections(key, dh + 1, spec.K, spec.L)
+        proj = jnp.einsum("hsd,dp->hsp", aug, A)                  # (H, S, LK)
+        forest = cls._build_heads(aug, proj, spec)
+        return cls(spec, params, A, b, hk, dh, R2, forest,
+                   np.asarray(aug))
+
+    @staticmethod
+    def _build_heads(aug: jax.Array, proj: jax.Array, spec: KVSpec,
+                     breakpoints: Optional[np.ndarray] = None) -> HeadForest:
+        """Stack per-head ``build_forest`` + ``make_fused_plan`` outputs.
+
+        ``breakpoints`` ((H, L*K, Nr+1), optional) is the reseal path:
+        encode with the prefill quantization (outer edges pre-widened by
+        the caller) instead of re-selecting per-head quantiles.
+        """
+        H = aug.shape[0]
+        cols = {f: [] for f in HeadForest._fields}
+        for h in range(H):
+            f = build_forest(
+                proj[h], spec.K, spec.L, Nr=spec.Nr,
+                leaf_size=spec.leaf_size,
+                breakpoint_method=spec.breakpoint_method,
+                breakpoints=(None if breakpoints is None
+                             else jnp.asarray(breakpoints[h])),
+                build_impl=spec.build_impl)
+            plan = make_fused_plan(aug[h], f)
+            cols["point_ids"].append(f.point_ids)
+            cols["valid"].append(f.valid)
+            cols["leaf_lo"].append(f.leaf_lo)
+            cols["leaf_hi"].append(f.leaf_hi)
+            cols["leaf_valid"].append(f.leaf_valid)
+            cols["breakpoints"].append(f.breakpoints)
+            cols["points_sorted"].append(plan.points_sorted)
+            cols["inv_perm"].append(plan.inv_perm)
+        return HeadForest(**{k: jnp.stack(v) for k, v in cols.items()})
+
+    # ------------------------------------------------------------------
+    # Mutation (the decode step's write half)
+    # ------------------------------------------------------------------
+
+    def upsert(self, vectors, gids=None) -> int:
+        """Insert one decode step's keys ((b, hk, dh) or (b, 1, hk, dh));
+        returns the assigned cache position.  ``gids`` must be None —
+        positions are implicit (the KV cache is append-only)."""
+        if gids is not None:
+            raise ValueError("KVCacheIndex assigns positions itself; "
+                             "gids must be None")
+        vec = jnp.asarray(vectors)
+        if vec.ndim == 4:                      # (b, 1, hk, dh) decode layout
+            vec = vec[:, 0]
+        if vec.shape != (self.b, self.hk, self.dh):
+            raise ValueError(f"expected one key per (batch, kv-head) "
+                             f"({self.b}, {self.hk}, {self.dh}), got "
+                             f"{vec.shape}")
+        rows = vec.reshape(self.H, 1, self.dh)
+        aug, clipped = mips.augment_keys(rows, self.R2)     # frozen radius
+        self.clip_total += int(clipped)
+        pos = self.next_pos
+        self.delta.add_step(pos, np.asarray(aug[:, 0]))
+        self._live = np.append(self._live, True)
+        self.next_pos += 1
+        if self.delta.full:
+            self._seal()
+        return pos
+
+    def delete(self, gids) -> int:
+        """Tombstone cache positions (eviction); returns #newly dead."""
+        removed = 0
+        for pos in np.atleast_1d(np.asarray(gids, np.int64)):
+            if not 0 <= pos < self.next_pos or not self._live[pos]:
+                continue
+            self._live[pos] = False
+            if pos >= self.n_sealed:
+                slot = int(np.where(self.delta.gids == pos)[0][0])
+                self.delta.kill(slot)
+            removed += 1
+        return removed
+
+    def maybe_compact(self) -> bool:
+        """Seal a full delta (upsert already does; this is the protocol
+        hook for callers that batch their mutations)."""
+        if self.delta.full:
+            self._seal()
+            return True
+        return False
+
+    def _seal(self) -> None:
+        """Rebuild the sealed forests over {old sealed + delta} with the
+        prefill breakpoints (frozen quantization, outer edges widened to
+        keep leaf boxes admissible for out-of-range new keys)."""
+        cnt = self.delta.count
+        if cnt == 0:
+            return
+        self._aug = np.concatenate(
+            [self._aug, np.asarray(self.delta.vecs[:, :cnt])], axis=1)
+        aug = jnp.asarray(self._aug)                   # (H, n_total, d_aug)
+        proj = jnp.einsum("hsd,dp->hsp", aug, self.A)
+        E = self.spec.Nr + 1
+        bp = np.asarray(self.forest.breakpoints).reshape(
+            self.H, self.spec.L * self.spec.K, E).copy()
+        pmin = np.asarray(proj.min(axis=1))            # (H, L*K)
+        pmax = np.asarray(proj.max(axis=1))
+        bp[:, :, 0] = np.minimum(bp[:, :, 0], pmin)
+        bp[:, :, E - 1] = np.maximum(bp[:, :, E - 1], pmax)
+        self.forest = self._build_heads(aug, proj, self.spec, breakpoints=bp)
+        self.n_sealed = self._aug.shape[1]
+        self.delta.reset()
+        self.seals += 1
+        self._r_min_cache = None
+
+    # ------------------------------------------------------------------
+    # Retrieval (the decode step's read half)
+    # ------------------------------------------------------------------
+
+    def retrieve(self, q: jax.Array,
+                 r_min: Optional[float] = None) -> KVRetrieval:
+        """q (b, 1, h, dh) decode queries -> per-(kv-head, q-head)
+        candidate positions ranked by augmented L2 (monotone in q.k)."""
+        b, one, h, dh = q.shape
+        if (b, dh) != (self.b, self.dh) or one != 1 or h % self.hk:
+            raise ValueError(f"query shape {q.shape} does not match cache "
+                             f"(b={self.b}, hk={self.hk}, dh={self.dh})")
+        g = h // self.hk
+        q_aug = mips.augment_queries(
+            q.reshape(b, self.hk, g, dh).reshape(self.H, g, dh))
+        # Rescale lanes to the key-norm scale: order-preserving per lane
+        # (retrieval ranks by q.k either way) and it restores the LSH
+        # contrast that large-norm attention queries otherwise destroy.
+        q_aug = mips.normalize_queries(q_aug, self.R2[:, None])
+        if r_min is None:
+            r_min = self._estimate_r_min(q_aug)
+        ids, dists, rounds, count = _retrieve_impl(
+            q_aug, self.A, self.forest,
+            jnp.asarray(self._live[:self.n_sealed]),
+            jnp.asarray(self.delta.vecs), jnp.asarray(self.delta.gids),
+            jnp.asarray(self.delta.live
+                        & (np.arange(self.delta.capacity)
+                           < self.delta.count)),
+            jnp.asarray(r_min, jnp.float32),
+            n=self.n_sealed, m_top=self.spec.m_top,
+            max_rounds=self.spec.max_rounds, leaf_size=self.spec.leaf_size,
+            eps=float(self.params.epsilon), c=float(self.params.c),
+            beta=float(self.params.beta))
+        return KVRetrieval(ids=ids, dists=dists, rounds=rounds,
+                           n_candidates=count)
+
+    def _estimate_r_min(self, q_aug: jax.Array) -> float:
+        """First-retrieval starting radius: k-th augmented distance from a
+        key subsample (paper §V-B1 heuristic), cached until the next seal
+        (decode queries drift slowly; pad lanes would only over-search)."""
+        if self._r_min_cache is None:
+            qa = np.asarray(q_aug)                        # (H, g, d)
+            m = min(self.n_sealed, 512)
+            sub = self._aug[:, :m]                        # (H, m, d)
+            d2 = (((qa[:, :, None, :] - sub[:, None, :, :]) ** 2)
+                  .sum(-1))                               # (H, g, m)
+            kth = np.sqrt(np.partition(
+                d2, min(self.spec.m_top, m - 1), axis=-1)
+                [..., min(self.spec.m_top, m - 1)])
+            r = float(np.median(kth))
+            self._r_min_cache = max(r / (self.params.c ** 2), 1e-6)
+        return self._r_min_cache
+
+    # ------------------------------------------------------------------
+    # AnnIndex protocol surface
+    # ------------------------------------------------------------------
+
+    @property
+    def n_points(self) -> int:
+        return int(self._live.sum())
+
+    def search(self, queries, request: Optional[SearchRequest] = None
+               ) -> SearchResult:
+        """Protocol search: queries (b, 1, h, dh) -> per-lane top-k cache
+        positions, lanes flattened to (H*g, k)."""
+        req = request or SearchRequest()
+        res = self.retrieve(queries, r_min=req.r_min)
+        k = min(req.k, res.ids.shape[-1])
+        neg, sel = jax.lax.top_k(-res.dists, k)
+        ids = jnp.take_along_axis(res.ids, sel, axis=-1)
+        H, g = res.rounds.shape
+        stats = SearchStats(
+            engine="fused-kv", r_min=self._r_min_cache or float("nan"),
+            r_min_cached=req.r_min is None, rounds=res.rounds.reshape(-1),
+            n_candidates=res.n_candidates.reshape(-1), final_r=None)
+        return SearchResult(ids=ids.reshape(H * g, k),
+                            dists=(-neg).reshape(H * g, k), stats=stats,
+                            raw=res)
+
+    def r_min_for(self, k: int) -> float:
+        """Starting-radius estimate from key-to-key augmented distances
+        (protocol surface; ``retrieve`` refines from the live queries)."""
+        if self._r_min_cache is None:
+            sub = jnp.asarray(self._aug[:, : min(self.n_sealed, 256)])
+            self._estimate_r_min(sub[:, : max(1, min(8, sub.shape[1]))])
+        return self._r_min_cache
+
+    def save(self, path) -> None:
+        raise NotImplementedError(
+            "KV caches are ephemeral: rebuild with KVCacheIndex.prefill "
+            "from the cache keys instead of snapshotting")
+
+    def index_size_bytes(self) -> int:
+        arrays = sum(int(np.asarray(a).nbytes) for a in self.forest)
+        return arrays + int(self.delta.vecs.nbytes)
+
+    @property
+    def scan_fraction(self) -> float:
+        """Retrieved candidates / attendable positions — the work model the
+        decode benchmark reports (docs/DESIGN.md §10)."""
+        m = self.spec.m_top + self.delta.capacity
+        return m / max(1, self.next_pos)

@@ -1,0 +1,85 @@
+"""MIPS -> L2 reduction (Shrivastava-Li asymmetric augmentation).
+
+Attention retrieval is maximum inner-product search: the positions worth
+attending to are argmax q.k, over keys whose norms vary.  The DE-Forest
+answers *Euclidean* range queries, so keys and queries are lifted into
+R^(d+1) with
+
+    k_hat = [k, sqrt(R^2 - ||k||^2)],      q_hat = [q, 0]
+
+which gives ||q_hat - k_hat||^2 = ||q||^2 + R^2 - 2 q.k — a strictly
+decreasing function of q.k for a fixed query, so augmented-L2 nearest ==
+inner-product largest (property-tested in tests/test_decode.py).
+
+R is frozen at prefill (``mips_radius`` with a slack factor); keys upserted
+later whose norm exceeds R get a clipped (0) augmentation coordinate.  For
+a clipped key the identity degrades to an *under*-estimate of its distance
+(||q_hat - k_hat||^2 = ||q||^2 + ||k||^2 - 2 q.k <= ||q||^2 + R^2 - 2 q.k),
+i.e. clipped keys are ranked at least as close as the exact reduction would
+rank them — retrieval can only over-admit them, never lose them behind an
+unclipped key with smaller q.k.  ``augment_keys`` reports the clip count so
+callers can widen the slack when drift is real (docs/DESIGN.md §10).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_SLACK = 1e-6
+
+
+def mips_radius(keys: jax.Array, *, slack: float = DEFAULT_SLACK,
+                axis=(-2, -1)) -> jax.Array:
+    """Squared augmentation radius R^2 = max ||k||^2 * (1 + slack).
+
+    keys (..., S, d); the max runs over ``axis`` (default: per leading
+    batch/head index), so each head freezes its own radius.
+    """
+    norms2 = jnp.sum(keys.astype(jnp.float32) ** 2, -1)
+    return jnp.max(norms2, axis=-1) * (1.0 + slack)
+
+
+def augment_keys(keys: jax.Array, R2: jax.Array | float
+                 ) -> tuple[jax.Array, jax.Array]:
+    """keys (..., S, d), R2 broadcastable to (..., S) -> (aug, n_clipped).
+
+    aug (..., S, d+1) f32 with last coordinate sqrt(max(R^2 - ||k||^2, 0));
+    n_clipped counts keys whose norm exceeded R (coordinate clipped to 0).
+    """
+    kf = keys.astype(jnp.float32)
+    norms2 = jnp.sum(kf ** 2, -1)
+    R2 = jnp.asarray(R2, jnp.float32)
+    if R2.ndim:
+        R2 = R2[..., None]            # broadcast over the S axis
+    gap = R2 - norms2
+    extra = jnp.sqrt(jnp.maximum(gap, 0.0))
+    n_clipped = jnp.sum(gap < 0.0).astype(jnp.int32)
+    return jnp.concatenate([kf, extra[..., None]], -1), n_clipped
+
+
+def augment_queries(q: jax.Array) -> jax.Array:
+    """q (..., d) -> q_hat (..., d+1) with a zero augmentation coordinate."""
+    qf = q.astype(jnp.float32)
+    return jnp.concatenate([qf, jnp.zeros(qf.shape[:-1] + (1,),
+                                          jnp.float32)], -1)
+
+
+def normalize_queries(q: jax.Array, R2: jax.Array | float) -> jax.Array:
+    """Rescale each query lane to the key-norm scale (||q_n|| = R).
+
+    For a fixed lane, augmented-L2 order is a monotone function of q.k for
+    *any* positive query scale, so rescaling never changes the ranking —
+    but it changes the LSH contrast enormously: with ||q|| >> R the
+    distance spread 2(q.k_max - q.k_min) vanishes against the common
+    ||q||^2 + R^2 term and every projected leaf looks equidistant, while
+    at ||q|| = R near/far separation is maximal (Shrivastava-Li normalize
+    their queries for exactly this reason).  q (..., d or d+1 augmented);
+    R2 broadcastable to the lane axes.
+    """
+    qf = q.astype(jnp.float32)
+    norms = jnp.sqrt(jnp.sum(qf ** 2, -1, keepdims=True))
+    R = jnp.sqrt(jnp.asarray(R2, jnp.float32))
+    if R.ndim:
+        R = R.reshape(R.shape + (1,) * (qf.ndim - R.ndim))
+    return qf * (R / jnp.maximum(norms, 1e-12))

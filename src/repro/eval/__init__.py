@@ -1,0 +1,13 @@
+"""Evaluation harnesses over the ``repro.api`` protocol surface.
+
+``repro.eval.pareto`` sweeps build/search knobs for DET-LSH and the
+baselines — every method driven through ``AnnIndex.search`` — and emits
+(recall@k, QPS, work/query, build-time) curves plus their Pareto front.
+"""
+
+from repro.eval.pareto import (CurvePoint, baseline_points, detlsh_points,
+                               dominates_at_recall, measure, pareto_front,
+                               run_pareto)
+
+__all__ = ["CurvePoint", "measure", "detlsh_points", "baseline_points",
+           "pareto_front", "dominates_at_recall", "run_pareto"]

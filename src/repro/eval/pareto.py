@@ -1,0 +1,202 @@
+"""Recall/QPS Pareto harness over the AnnIndex protocol (DESIGN.md §10).
+
+One measurement path for every method: build an index (timed), drive it
+through ``AnnIndex.search`` with a ``SearchRequest``, and record a
+``CurvePoint`` per (index, request) knob setting:
+
+  * ``recall``          — recall@k against exact ground truth;
+  * ``qps``             — queries/s of the batched search (best of
+    ``repeat`` runs, post-warmup, device-synchronized);
+  * ``work_per_query``  — mean ``SearchStats.n_candidates``: the method's
+    exact-distance-equivalent evaluations per query.  This is the
+    hardware-neutral cost axis — on CPU smoke shapes a brute-force scan is
+    one BLAS matmul and wall clock rewards it unconditionally, so QPS
+    alone cannot rank algorithms at benchmark scale (the paper's candidate
+    counts, Fig. 17-18, play the same role);
+  * ``build_seconds`` / ``index_bytes``.
+
+``detlsh_points`` sweeps IndexSpecs (K, L, leaf_size, ...) x SearchRequests
+(M, max_rounds, engine); ``baseline_points`` sweeps prebuilt protocol
+baselines (knob variants via ``dataclasses.replace``); ``pareto_front``
+extracts the non-dominated set; ``dominates_at_recall`` is the smoke
+gate's sanity predicate.  ``run_pareto`` bundles everything into the
+JSON-ready dict ``benchmarks/pareto_smoke.py`` writes to BENCH_pareto.json.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Any, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.api.request import SearchRequest
+
+
+@dataclasses.dataclass(frozen=True)
+class CurvePoint:
+    method: str               # 'det-lsh' | 'brute-force' | 'hnsw' | ...
+    label: str                # knob setting, e.g. 'K4-L4-M8'
+    recall: float
+    qps: float
+    work_per_query: float     # mean exact-distance-equivalent evals
+    build_seconds: float
+    index_bytes: int
+    params: dict              # the knobs that produced this point
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def _block(res) -> None:
+    ids = res.ids
+    if hasattr(ids, "block_until_ready"):
+        ids.block_until_ready()
+
+
+def _recall_at_k(ids, gt_ids) -> float:
+    ids = np.asarray(ids)
+    gt = np.asarray(gt_ids)[:, : ids.shape[1]]
+    hits = (ids[:, :, None] == gt[:, None, :]).any(axis=1)
+    return float(hits.mean())
+
+
+def measure(method: str, label: str, index: Any, queries, gt_ids,
+            request: SearchRequest, *, build_seconds: float,
+            repeat: int = 3, params: Optional[dict] = None) -> CurvePoint:
+    """One protocol-driven measurement: recall from a scored run, QPS as
+    the best of ``repeat`` timed runs (run 0 doubles as compile warmup)."""
+    res = index.search(queries, request)
+    _block(res)
+    rec = _recall_at_k(res.ids, gt_ids)
+    nc = res.stats.n_candidates
+    work = float(np.mean(np.asarray(nc))) if nc is not None \
+        else float(index.n_points)
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        _block(index.search(queries, request))
+        best = min(best, time.perf_counter() - t0)
+    nq = int(np.asarray(queries).shape[0])
+    return CurvePoint(method=method, label=label, recall=rec,
+                      qps=nq / max(best, 1e-9), work_per_query=work,
+                      build_seconds=build_seconds,
+                      index_bytes=int(index.index_size_bytes()),
+                      params=dict(params or {}, k=request.k))
+
+
+def detlsh_points(data, queries, gt_ids, key, *, k: int = 10,
+                  specs: Sequence = (), Ms: Sequence[int] = (8,),
+                  max_rounds: Sequence[int] = (48,),
+                  engines: Sequence[str] = ("fused",),
+                  repeat: int = 3) -> list[CurvePoint]:
+    """Sweep (IndexSpec) x (M, max_rounds, engine) through ``api.build``.
+
+    ``M`` (the per-round leaf probe budget) only steers the vmap engine;
+    pairing it with engines is the caller's sweep design.
+    """
+    from repro import api
+    points = []
+    for spec in specs:
+        t0 = time.perf_counter()
+        index = api.build(data, key, spec)
+        _block(index.search(queries[:1], SearchRequest(k=k)))   # build+warm
+        t_build = time.perf_counter() - t0
+        for M, mr, eng in itertools.product(Ms, max_rounds, engines):
+            req = SearchRequest(k=k, M=M, max_rounds=mr, engine=eng)
+            label = f"K{spec.K}-L{spec.L}-ls{spec.leaf_size}-M{M}-r{mr}-{eng}"
+            points.append(measure(
+                "det-lsh", label, index, queries, gt_ids, req,
+                build_seconds=t_build, repeat=repeat,
+                params=dict(K=spec.K, L=spec.L, leaf_size=spec.leaf_size,
+                            Nr=spec.Nr, M=M, max_rounds=mr, engine=eng)))
+    return points
+
+
+def baseline_points(method: str, variants, queries, gt_ids, *, k: int = 10,
+                    repeat: int = 3) -> list[CurvePoint]:
+    """``variants``: iterable of (label, index, build_seconds, params);
+    each index must carry the AnnIndex surface (ProtocolBaseline)."""
+    req = SearchRequest(k=k)
+    return [measure(method, label, index, queries, gt_ids, req,
+                    build_seconds=t_build, repeat=repeat, params=params)
+            for label, index, t_build, params in variants]
+
+
+def pareto_front(points: Sequence[CurvePoint],
+                 y: str = "qps") -> list[int]:
+    """Indices of the non-dominated points on (recall up, ``y``);
+    ``y='qps'`` maximizes, ``y='work_per_query'`` minimizes."""
+    sign = -1.0 if y == "work_per_query" else 1.0
+    front = []
+    for i, p in enumerate(points):
+        dominated = any(
+            q.recall >= p.recall
+            and sign * getattr(q, y) >= sign * getattr(p, y)
+            and (q.recall > p.recall
+                 or sign * getattr(q, y) > sign * getattr(p, y))
+            for q in points)
+        if not dominated:
+            front.append(i)
+    return front
+
+
+def dominates_at_recall(points: Sequence[CurvePoint], *,
+                        method: str = "det-lsh",
+                        reference: str = "brute-force",
+                        min_recall: float = 0.9) -> dict:
+    """The smoke gate: does ``method`` reach ``min_recall`` doing strictly
+    less work per query than ``reference``?  Returns the evidence."""
+    ref_work = [p.work_per_query for p in points if p.method == reference]
+    ok_pts = [p for p in points
+              if p.method == method and p.recall >= min_recall]
+    if not ref_work or not ok_pts:
+        return {"ok": False, "reason": f"missing {reference} points"
+                if not ref_work else f"no {method} point with recall >= "
+                f"{min_recall}", "min_recall": min_recall}
+    ref = min(ref_work)
+    best = min(ok_pts, key=lambda p: p.work_per_query)
+    return {"ok": best.work_per_query < ref, "min_recall": min_recall,
+            "reference_work": ref, "best_work": best.work_per_query,
+            "best_label": best.label, "best_recall": best.recall}
+
+
+def run_pareto(data, queries, key, *, k: int = 10, specs: Sequence = (),
+               Ms: Sequence[int] = (8,), max_rounds: Sequence[int] = (48,),
+               engines: Sequence[str] = ("fused",),
+               baselines: Optional[dict] = None, repeat: int = 3,
+               min_recall: float = 0.9) -> dict:
+    """Full sweep -> JSON-ready dict (the BENCH_pareto.json payload).
+
+    ``baselines``: {method: variants} as ``baseline_points`` expects.
+    Ground truth comes from the BruteForce oracle (which then also
+    contributes its own curve points).
+    """
+    from repro.baselines import BruteForce
+
+    bf = BruteForce.build(data)
+    gt = bf.search(queries, SearchRequest(k=k))
+    _block(gt)
+    points = detlsh_points(data, queries, gt.ids, key, k=k, specs=specs,
+                           Ms=Ms, max_rounds=max_rounds, engines=engines,
+                           repeat=repeat)
+    points += baseline_points(
+        "brute-force", [("scan", bf, 0.0, {})], queries, gt.ids, k=k,
+        repeat=repeat)
+    for name, variants in (baselines or {}).items():
+        points += baseline_points(name, variants, queries, gt.ids, k=k,
+                                  repeat=repeat)
+    gate = dominates_at_recall(points, min_recall=min_recall)
+    return {
+        "k": k, "n": int(np.asarray(data).shape[0]),
+        "d": int(np.asarray(data).shape[1]),
+        "n_queries": int(np.asarray(queries).shape[0]),
+        "methods": sorted({p.method for p in points}),
+        "points": [p.to_dict() for p in points],
+        "front_qps": pareto_front(points, y="qps"),
+        "front_work": pareto_front(points, y="work_per_query"),
+        "det_dominates_brute": gate,
+    }

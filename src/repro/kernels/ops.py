@@ -172,6 +172,33 @@ def range_rerank(q, q_proj, r_eff, leaf_lo, leaf_hi, leaf_valid, breakpoints,
     return out[:, :B, :npts]
 
 
+def range_rerank_heads(q, q_proj, r_eff, leaf_lo, leaf_hi, leaf_valid,
+                       breakpoints, points, point_valid, live=None, *,
+                       leaf_size: int, interpret: bool = False,
+                       block_q: int = 8, block_l: int = 8):
+    """Batched-*forest* fused range query + rerank (the KV-decode entry).
+
+    Same contract as :func:`range_rerank` with one extra leading axis ``H``
+    on every array argument: H independent forests (one per (batch,
+    kv-head) in ``repro.decode``), each answering its own query batch.
+    q (H, B, d); q_proj (H, L, B, K); r_eff (H, B); leaf arrays
+    (H, L, nl, ...); points (H, L, nl*leaf_size, d).  Returns
+    (H, L, B, nl*leaf_size).
+
+    Implemented as ``jax.vmap`` over the single-forest wrapper: on CPU the
+    ref oracle vmaps as plain XLA; on TPU the vmap lifts into a leading
+    ``pallas_call`` grid dimension, so all H forests share one kernel
+    launch instead of H dispatches.
+    """
+    if live is None:
+        live = point_valid
+    fn = functools.partial(range_rerank, leaf_size=leaf_size,
+                           interpret=interpret, block_q=block_q,
+                           block_l=block_l)
+    return jax.vmap(fn)(q, q_proj, r_eff, leaf_lo, leaf_hi, leaf_valid,
+                        breakpoints, points, point_valid, live)
+
+
 @functools.partial(jax.jit, static_argnames=("causal", "scale", "interpret",
                                              "block_q", "block_k"))
 def flash_attention(q, k, v, *, causal: bool = False,

@@ -516,8 +516,16 @@ def cross_attention(params, cfg: ModelConfig, x, memory):
 
 
 def decode_self_attention(params, cfg: ModelConfig, x, cache_k, cache_v,
-                          length):
-    """One-token decode against a (b, S, hk, dh) cache; writes slot ``length``."""
+                          length, kv_decoder=None):
+    """One-token decode against a (b, S, hk, dh) cache; writes slot ``length``.
+
+    ``kv_decoder`` (a ``repro.decode.LSHDecoder`` over this layer's cache,
+    optional) swaps the dense cache scan for LSH sparse decode: the new
+    key is upserted into the decoder's ``KVCacheIndex`` and attention runs
+    over the retrieved ∪ window ∪ sink set.  The decoder mutates host
+    state, so this path is host-loop only — do not jit/scan over it (the
+    default dense path stays fully traceable).
+    """
     xn = rmsnorm(params["ln"], x, cfg.norm_eps)
     q, k, v = _qkv(params, cfg, xn)
     if cfg.pos_emb == "rope":
@@ -528,7 +536,10 @@ def decode_self_attention(params, cfg: ModelConfig, x, cache_k, cache_v,
         cache_k, k.astype(cache_k.dtype), length, axis=1)
     cache_v = jax.lax.dynamic_update_slice_in_dim(
         cache_v, v.astype(cache_v.dtype), length, axis=1)
-    out = decode_gqa_attention(q, cache_k, cache_v, length + 1)
+    if kv_decoder is not None:
+        out = kv_decoder.step(q, cache_k, cache_v, k[:, 0], length + 1)
+    else:
+        out = decode_gqa_attention(q, cache_k, cache_v, length + 1)
     y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
     return y, cache_k, cache_v
 

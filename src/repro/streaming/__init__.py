@@ -23,10 +23,10 @@ it to ``upsert()``/``delete()`` with a compaction trigger.
 """
 
 from repro.streaming.segment import Segment, build_segment
-from repro.streaming.memtable import Memtable
+from repro.streaming.memtable import BatchedMemtable, Memtable
 from repro.streaming.manifest import Manifest
 from repro.streaming.compactor import merge_segments
 from repro.streaming.index import StreamingDETLSH
 
 __all__ = ["StreamingDETLSH", "Segment", "build_segment", "Memtable",
-           "Manifest", "merge_segments"]
+           "BatchedMemtable", "Manifest", "merge_segments"]

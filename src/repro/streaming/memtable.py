@@ -60,3 +60,57 @@ class Memtable:
         self.live[:] = False
         self.count = 0
         self.version += 1
+
+
+class BatchedMemtable:
+    """H parallel delta buffers advancing in lockstep (the KV-decode delta).
+
+    ``repro.decode`` keeps one DE-Forest per (batch, kv-head); a decode
+    step inserts exactly one new key into *every* head's delta at the same
+    cache position, so the H buffers share one cursor, one gid (position)
+    array, and one live bitmap — only the vectors carry a head axis.
+    Same fixed-capacity / stable-shape contract as ``Memtable`` (one
+    compile for the exact delta-distance path).
+    """
+
+    def __init__(self, heads: int, capacity: int, d: int):
+        assert heads >= 1 and capacity >= 1
+        self.heads = heads
+        self.capacity = capacity
+        self.d = d
+        self.vecs = np.zeros((heads, capacity, d), np.float32)
+        self.gids = np.full(capacity, -1, np.int64)
+        self.live = np.zeros(capacity, bool)
+        self.count = 0
+        self.version = 0
+
+    @property
+    def full(self) -> bool:
+        return self.count >= self.capacity
+
+    @property
+    def n_live(self) -> int:
+        return int(self.live.sum())
+
+    def add_step(self, gid: int, vecs: np.ndarray) -> int:
+        """Append one row per head (vecs (H, d)); returns the slot."""
+        assert self.count < self.capacity, (self.count, self.capacity)
+        assert vecs.shape == (self.heads, self.d), vecs.shape
+        slot = self.count
+        self.vecs[:, slot] = vecs
+        self.gids[slot] = gid
+        self.live[slot] = True
+        self.count += 1
+        self.version += 1
+        return slot
+
+    def kill(self, slot: int) -> None:
+        self.live[slot] = False
+        self.version += 1
+
+    def reset(self) -> None:
+        self.vecs[:] = 0.0
+        self.gids[:] = -1
+        self.live[:] = False
+        self.count = 0
+        self.version += 1

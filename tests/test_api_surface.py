@@ -66,11 +66,14 @@ def test_api_exports_snapshot():
 
 def test_top_level_exports_snapshot():
     assert set(repro.__all__) == {"__version__", "api", "DETLSH",
-                                  "StreamingDETLSH", "derive_params"}
+                                  "StreamingDETLSH", "derive_params",
+                                  "decode", "KVCacheIndex"}
     assert repro.DETLSH is not None
     assert repro.StreamingDETLSH is not None
     assert callable(repro.derive_params)
     assert repro.api.load is not None
+    assert repro.KVCacheIndex is not None          # decode pillar (§10)
+    assert repro.decode.LSHDecoder is not None
 
 
 def test_search_request_fields_snapshot():

@@ -70,6 +70,49 @@ def test_ivfpq_recall(ds):
     assert _recall(ids, gt_i) >= 0.6
 
 
+def _protocol_builders():
+    return [
+        ("brute-force", lambda d, k: BruteForce.build(d)),
+        ("pm-lsh", lambda d, k: PMLSH.build(d, k, beta=0.1)),
+        ("ivf-pq", lambda d, k: IVFPQ.build(d, k, nlist=32, M=4, nprobe=8,
+                                            rerank=256)),
+        ("hnsw", lambda d, k: HNSW.build(np.asarray(d), None, M=8,
+                                         ef_construction=32)),
+    ]
+
+
+@pytest.mark.parametrize("name,build",
+                         _protocol_builders(),
+                         ids=[n for n, _ in _protocol_builders()])
+def test_baseline_conforms_to_ann_index_protocol(ds, name, build):
+    """Every baseline answers the same ``AnnIndex`` surface the Pareto
+    harness drives (docs/DESIGN.md §10): native protocol, no adapter."""
+    from repro.api import AnnIndex, SearchRequest, as_ann_index
+    data, queries, gt_i, _ = ds
+    idx = build(data, jax.random.key(9))
+    assert isinstance(idx, AnnIndex)
+    assert as_ann_index(idx) is idx           # no LegacyIndexAdapter wrap
+    assert idx.n_points == data.shape[0]
+    assert idx.index_size_bytes() >= 0      # brute-force owns no structure
+    assert idx.r_min_for(10) > 0
+    with pytest.raises(NotImplementedError):
+        idx.save("/tmp/nope")
+
+    res = idx.search(queries, SearchRequest(k=5))
+    assert res.ids.shape == (queries.shape[0], 5)
+    assert res.dists.shape == (queries.shape[0], 5)
+    assert res.stats.engine == name
+    work = np.asarray(res.stats.n_candidates)
+    assert work.shape == (queries.shape[0],)
+    # cost model: positive, and never claims more than a full scan
+    # (hnsw counts real distance evaluations; the others count their
+    # candidate budget)
+    assert np.all(work > 0)
+    if name != "hnsw":
+        assert np.all(work <= data.shape[0])
+    assert _recall(res.ids, gt_i[:, :5]) >= 0.5
+
+
 def test_reported_distances_are_true_distances(ds):
     data, queries, gt_i, _ = ds
     for idx in (PMLSH.build(data, jax.random.key(2)),

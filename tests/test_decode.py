@@ -1,0 +1,325 @@
+"""The decode subsystem (docs/DESIGN.md §10): KVCacheIndex + LSHDecoder.
+
+Covers the three load-bearing claims:
+
+  * the MIPS -> L2 reduction is order-preserving for arbitrary key norms,
+    and query rescaling never changes the ranking (hypothesis properties);
+  * the fused-engine KV retrieval is the *same algorithm* as the seed
+    ``core.det_attention`` path — identical forests from identical inputs,
+    and (forced single-round) the retrieved set is exactly the top-m of an
+    exact scan under the same augmentation;
+  * the mutable-index surface behaves: upserts land in the delta and
+    survive a seal, deletes tombstone, the protocol shapes hold.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.api import MutableAnnIndex, SearchRequest, as_ann_index
+from repro.decode import (KVCacheIndex, KVSpec, LSHDecoder,
+                          augment_keys, augment_queries, mips_radius,
+                          sparse_decode_attention)
+from repro.decode.mips import normalize_queries
+
+_shim = pytest.mark.filterwarnings(
+    "ignore:.*is deprecated. use.*:DeprecationWarning")
+
+
+def _cache(rng, b=1, S=256, hk=2, dh=16, scale=0.3):
+    return jnp.asarray(rng.standard_normal((b, S, hk, dh))
+                       .astype(np.float32) * scale)
+
+
+def _query_at(k_cache, pos, g, scale=8.0):
+    """Decode query aligned with the key at ``pos`` (strong attention)."""
+    b, _, hk, dh = k_cache.shape
+    q = np.repeat(np.asarray(k_cache[:, pos])[:, :, None, :], g, axis=2)
+    return jnp.asarray((q * scale).reshape(b, 1, hk * g, dh))
+
+
+# ----------------------------------------------------------------------
+# MIPS -> L2 reduction properties
+# ----------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2 ** 16), st.floats(0.1, 30.0))
+def test_mips_augmentation_preserves_ip_order(seed, qscale):
+    """argmax q.k == argmin ||q_hat - k_hat|| for keys of *varying* norm
+    (the whole point of the lift: plain L2-LSH on raw keys gets this
+    wrong) and for any query scale."""
+    r = np.random.default_rng(seed)
+    keys = (r.standard_normal((48, 6)).astype(np.float32)
+            * r.uniform(0.1, 10.0, (48, 1)).astype(np.float32))
+    q = r.standard_normal(6).astype(np.float32) * qscale
+    R2 = mips_radius(jnp.asarray(keys))
+    aug, n_clipped = augment_keys(jnp.asarray(keys), R2)
+    assert int(n_clipped) == 0          # radius covers its own keys
+    qa = augment_queries(jnp.asarray(q))
+    d2 = np.asarray(jnp.sum((aug - qa[None]) ** 2, -1))
+    ip = keys @ q
+    np.testing.assert_array_equal(np.argsort(d2), np.argsort(-ip))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2 ** 16), st.floats(0.05, 50.0))
+def test_query_normalization_is_order_invariant(seed, qscale):
+    """Rescaling a query lane to ||q|| = R changes LSH contrast, never the
+    augmented-L2 ranking."""
+    r = np.random.default_rng(seed)
+    keys = jnp.asarray(r.standard_normal((32, 5)).astype(np.float32))
+    q = jnp.asarray(r.standard_normal(5).astype(np.float32) * qscale)
+    R2 = mips_radius(keys)
+    aug, _ = augment_keys(keys, R2)
+    qa = augment_queries(q)
+    qn = normalize_queries(qa, R2)
+    np.testing.assert_allclose(float(jnp.sum(qn ** 2)), float(R2),
+                               rtol=1e-4)
+    d_raw = np.asarray(jnp.sum((aug - qa[None]) ** 2, -1))
+    d_norm = np.asarray(jnp.sum((aug - qn[None]) ** 2, -1))
+    np.testing.assert_array_equal(np.argsort(d_raw), np.argsort(d_norm))
+
+
+def test_clipped_keys_are_only_over_admitted(rng):
+    """A key whose norm outgrows the frozen R ranks at least as close as
+    the exact reduction would rank it — never lost."""
+    keys = rng.standard_normal((16, 8)).astype(np.float32)
+    R2 = mips_radius(jnp.asarray(keys))
+    big = jnp.asarray(keys[:1] * 5.0)              # norm > R
+    aug, n_clipped = augment_keys(big, R2)
+    assert int(n_clipped) == 1
+    q = jnp.asarray(rng.standard_normal(8).astype(np.float32))
+    qa = augment_queries(q)
+    d2_clipped = float(jnp.sum((aug[0] - qa) ** 2))
+    # vs the exact reduction at a radius that actually covers the key:
+    # frozen-R clipping can only *shrink* the distance (over-admission)
+    R2_true = mips_radius(big)
+    d2_exact = float(jnp.sum(q ** 2) + R2_true - 2 * jnp.dot(big[0], q))
+    assert d2_clipped <= d2_exact + 1e-3
+
+
+# ----------------------------------------------------------------------
+# Validation
+# ----------------------------------------------------------------------
+
+def test_kvspec_validates_through_indexspec():
+    with pytest.raises(ValueError, match="Nr"):
+        KVSpec(Nr=300)                  # uint8 symbol budget
+    with pytest.raises(ValueError, match="leaf_size"):
+        KVSpec(leaf_size=0)
+    with pytest.raises(ValueError, match="breakpoint_method"):
+        KVSpec(breakpoint_method="bogus")
+    with pytest.raises(ValueError, match="m_top"):
+        KVSpec(m_top=0)
+    with pytest.raises(ValueError, match="max_rounds"):
+        KVSpec(max_rounds=-1)
+    with pytest.raises(ValueError, match="radius_slack"):
+        KVSpec(radius_slack=-0.5)
+
+
+def test_decoder_window_must_cover_refresh_gap(rng):
+    idx = KVCacheIndex.prefill(_cache(rng, S=128), jax.random.key(0),
+                               KVSpec(delta_capacity=16, m_top=16))
+    with pytest.raises(ValueError, match="window"):
+        LSHDecoder(idx, window=4, refresh_every=8)
+
+
+# ----------------------------------------------------------------------
+# Oracle: same algorithm as the seed det_attention path
+# ----------------------------------------------------------------------
+
+@_shim
+def test_forests_bit_identical_to_seed(rng):
+    """Same cache + same PRNG key -> the fused-built KV forests equal the
+    seed per-tree build structure-for-structure (same projections, same
+    augmentation, same full_sort breakpoints)."""
+    from repro.core import det_attention as DA
+    b, hk = 1, 2
+    k_cache = _cache(rng, b=b, S=256, hk=hk, dh=16)
+    seed_idx = DA.build_kv_index(k_cache, jax.random.key(7))
+    kv = KVCacheIndex.prefill(k_cache, jax.random.key(7), KVSpec())
+
+    np.testing.assert_array_equal(np.asarray(kv.A),
+                                  np.asarray(seed_idx.A))
+    H = b * hk
+    for name in ("point_ids", "leaf_lo", "leaf_hi", "leaf_valid",
+                 "breakpoints"):
+        ours = np.asarray(getattr(kv.forest, name))
+        seed = np.asarray(getattr(seed_idx, name)).reshape(
+            (H,) + ours.shape[1:])
+        np.testing.assert_array_equal(ours, seed, err_msg=name)
+
+
+def test_retrieval_matches_exact_scan_on_wide_radius(rng):
+    """With a radius wide enough to admit every leaf in round one, the
+    fused engine's top-m must be exactly the top-m of a brute-force scan
+    under the same (normalized-query) augmentation — the engine changes
+    *work*, never the metric."""
+    spec = KVSpec(m_top=24, delta_capacity=16)
+    k_cache = _cache(rng, S=256, hk=2, dh=16)
+    kv = KVCacheIndex.prefill(k_cache, jax.random.key(3), spec)
+    g = 2
+    q = _query_at(k_cache, 77, g)
+    res = kv.retrieve(q, r_min=1e6)
+    assert int(np.asarray(res.rounds).max()) == 1
+
+    q_aug = normalize_queries(
+        augment_queries(jnp.asarray(np.asarray(q).reshape(
+            kv.H, g, kv.dh))), kv.R2[:, None])
+    d = np.sqrt((((np.asarray(q_aug)[:, :, None, :]
+                   - kv._aug[:, None, :, :]) ** 2).sum(-1)))  # (H, g, n)
+    exact = np.argsort(d, axis=-1)[..., :spec.m_top]
+    got = np.asarray(res.ids)[..., :spec.m_top]               # forest tier
+    for h in range(kv.H):
+        for lane in range(g):
+            assert set(got[h, lane]) == set(exact[h, lane])
+
+
+def test_retrieval_finds_planted_position(rng):
+    k_cache = _cache(rng, S=512, hk=2, dh=32)
+    kv = KVCacheIndex.prefill(k_cache, jax.random.key(0),
+                              KVSpec(m_top=32, delta_capacity=32))
+    hits = []
+    for pos in (17, 123, 400):
+        res = kv.retrieve(_query_at(k_cache, pos, g=2))
+        hits.append((np.asarray(res.ids) == pos).any(axis=-1).mean())
+    assert np.mean(hits) >= 0.75, hits
+
+
+# ----------------------------------------------------------------------
+# Mutation: upsert / seal / delete
+# ----------------------------------------------------------------------
+
+def test_upsert_lands_in_delta_and_survives_seal(rng):
+    cap = 8
+    k_cache = _cache(rng, S=128, hk=2, dh=16)
+    kv = KVCacheIndex.prefill(k_cache, jax.random.key(1),
+                              KVSpec(delta_capacity=cap, m_top=16))
+    new_keys = rng.standard_normal((cap, 1, 2, 16)).astype(np.float32) * 0.3
+    probe = jnp.asarray(np.repeat(
+        new_keys[3][:, :, None, :], 2, axis=2).reshape(1, 1, 4, 16) * 8.0)
+
+    positions = [kv.upsert(jnp.asarray(new_keys[i])) for i in range(cap - 1)]
+    assert positions == list(range(128, 128 + cap - 1))
+    assert kv.seals == 0 and kv.delta.count == cap - 1
+    res = kv.retrieve(probe)            # delta tier answers pre-seal
+    assert (np.asarray(res.ids) == positions[3]).any()
+
+    kv.upsert(jnp.asarray(new_keys[cap - 1]))      # fills -> auto-seal
+    assert kv.seals == 1 and kv.delta.count == 0
+    assert kv.n_sealed == 128 + cap
+    res = kv.retrieve(probe)            # sealed forest answers post-seal
+    assert (np.asarray(res.ids) == positions[3]).any()
+
+
+def test_delete_tombstones_everywhere(rng):
+    k_cache = _cache(rng, S=128, hk=2, dh=16)
+    kv = KVCacheIndex.prefill(k_cache, jax.random.key(2),
+                              KVSpec(delta_capacity=8, m_top=16))
+    # sealed position
+    assert kv.delete(50) == 1
+    assert kv.delete(50) == 0           # idempotent
+    res = kv.retrieve(_query_at(k_cache, 50, g=2))
+    assert not (np.asarray(res.ids) == 50).any()
+    # delta position
+    pos = kv.upsert(jnp.asarray(np.asarray(k_cache[:, 50])))
+    assert kv.delete(pos) == 1
+    res = kv.retrieve(_query_at(k_cache, 50, g=2))
+    assert not (np.asarray(res.ids) == pos).any()
+    assert kv.n_points == 128 + 1 - 2
+
+
+def test_upsert_rejects_explicit_gids_and_bad_shapes(rng):
+    kv = KVCacheIndex.prefill(_cache(rng, S=64, hk=2, dh=16),
+                              jax.random.key(0),
+                              KVSpec(delta_capacity=8, m_top=8))
+    vec = jnp.zeros((1, 2, 16))
+    with pytest.raises(ValueError, match="gids"):
+        kv.upsert(vec, gids=np.array([999]))
+    with pytest.raises(ValueError, match="expected one key"):
+        kv.upsert(jnp.zeros((1, 3, 16)))
+    with pytest.raises(ValueError, match="query shape"):
+        kv.retrieve(jnp.zeros((2, 1, 4, 16)))
+
+
+# ----------------------------------------------------------------------
+# Protocol surface + decoder loop
+# ----------------------------------------------------------------------
+
+def test_kv_index_is_a_mutable_ann_index(rng):
+    kv = KVCacheIndex.prefill(_cache(rng, S=128, hk=2, dh=16),
+                              jax.random.key(0),
+                              KVSpec(delta_capacity=16, m_top=16))
+    assert isinstance(kv, MutableAnnIndex)
+    assert as_ann_index(kv) is kv
+    assert kv.n_points == 128
+    assert kv.index_size_bytes() > 0
+    assert kv.r_min_for(10) > 0
+    with pytest.raises(NotImplementedError, match="prefill"):
+        kv.save("/tmp/nope")
+
+    res = kv.search(_query_at(_cache(rng, S=1, hk=2, dh=16), 0, g=2),
+                    SearchRequest(k=5))
+    assert res.ids.shape == (4, 5) and res.dists.shape == (4, 5)
+    assert res.stats.engine == "fused-kv"
+    assert res.stats.rounds.shape == (4,)
+    assert np.all(np.asarray(res.stats.n_candidates) >= 0)
+    # per-lane distances are sorted ascending
+    d = np.asarray(res.dists)
+    assert np.all(np.diff(d, axis=-1) >= -1e-6)
+
+
+def test_decode_loop_tracks_exact_attention(rng):
+    """Multi-step LSHDecoder loop vs the dense reference on peaky queries:
+    one upsert per step, retrieval refreshed every 4, cosine stays high."""
+    from repro.models import layers as L
+    b, S, hk, g, dh = 1, 384, 2, 2, 32
+    prefill = S - 16
+    k_cache = _cache(rng, b=b, S=S, hk=hk, dh=dh)
+    v_cache = jnp.asarray(rng.standard_normal((b, S, hk, dh))
+                          .astype(np.float32))
+    kv = KVCacheIndex.prefill(k_cache[:, :prefill], jax.random.key(0),
+                              KVSpec(delta_capacity=32, m_top=32,
+                                     max_rounds=6))
+    dec = LSHDecoder(kv, window=32, sinks=4, refresh_every=4)
+    cos = []
+    target = 100
+    for t in range(16):
+        if t % dec.refresh_every == 0:
+            target = int(rng.integers(0, prefill))
+        length = prefill + t + 1
+        q = _query_at(k_cache, target, g, scale=16.0)
+        out = dec.step(q, k_cache, v_cache, k_cache[:, length - 1], length)
+        ref = L.decode_gqa_attention(q, k_cache, v_cache, length)
+        a = np.asarray(out).reshape(-1, dh)
+        r = np.asarray(ref).reshape(-1, dh)
+        cos.append(np.mean(np.sum(a * r, -1)
+                           / (np.linalg.norm(a, axis=-1)
+                              * np.linalg.norm(r, axis=-1) + 1e-9)))
+    assert dec.n_refreshes == 4
+    assert np.mean(cos) > 0.9, cos
+
+
+def test_sparse_attention_ignores_invalid_positions(rng):
+    """-1 (no candidate) must not alias position 0: attention with all
+    candidates invalid equals attention over window+sinks alone."""
+    b, S, hk, g, dh = 1, 128, 2, 2, 16
+    k_cache = _cache(rng, b=b, S=S, hk=hk, dh=dh)
+    v_cache = jnp.asarray(rng.standard_normal((b, S, hk, dh))
+                          .astype(np.float32))
+    q = jnp.asarray(rng.standard_normal((b, 1, hk * g, dh))
+                    .astype(np.float32))
+    none = jnp.full((b, hk, g, 8), -1, jnp.int32)
+    zeros = jnp.zeros((b, hk, g, 8), jnp.int32)
+    out_none = sparse_decode_attention(q, k_cache, v_cache, none, S,
+                                       window=16, sinks=0)
+    out_zero = sparse_decode_attention(q, k_cache, v_cache, zeros, S,
+                                       window=16, sinks=0)
+    assert not np.allclose(np.asarray(out_none), np.asarray(out_zero))
+    out_empty = sparse_decode_attention(
+        q, k_cache, v_cache, jnp.full((b, hk, g, 1), -1, jnp.int32), S,
+        window=16, sinks=0)
+    np.testing.assert_allclose(np.asarray(out_none), np.asarray(out_empty),
+                               rtol=1e-5, atol=1e-6)

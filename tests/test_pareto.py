@@ -1,0 +1,70 @@
+"""The Pareto harness (repro.eval.pareto): front extraction, the
+dominance gate, and a tiny end-to-end run through the protocol."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.eval import (CurvePoint, dominates_at_recall, pareto_front,
+                        run_pareto)
+from tests.conftest import make_clustered, make_queries_near
+
+
+def _pt(method, label, recall, qps, work):
+    return CurvePoint(method=method, label=label, recall=recall, qps=qps,
+                      work_per_query=work, build_seconds=0.0,
+                      index_bytes=0, params={})
+
+
+def test_pareto_front_qps_and_work_axes():
+    pts = [_pt("a", "p0", 0.9, 100.0, 500),    # qps-front; p1 beats on work
+           _pt("a", "p1", 0.9, 50.0, 400),     # work-front; p0 beats on qps
+           _pt("a", "p2", 0.8, 80.0, 600),     # dominated on both axes
+           _pt("a", "p3", 1.0, 10.0, 8192)]    # best recall: front on both
+    assert pareto_front(pts, y="qps") == [0, 3]
+    assert pareto_front(pts, y="work_per_query") == [1, 3]
+
+
+def test_dominates_at_recall_gate():
+    pts = [_pt("brute-force", "scan", 1.0, 10.0, 8192),
+           _pt("det-lsh", "lo", 0.5, 90.0, 100),
+           _pt("det-lsh", "hi", 0.95, 40.0, 3000)]
+    gate = dominates_at_recall(pts, min_recall=0.9)
+    assert gate["ok"] and gate["best_label"] == "hi"
+    assert gate["best_work"] == 3000 and gate["reference_work"] == 8192
+    # no qualifying det-lsh point -> explicit, reasoned failure
+    gate = dominates_at_recall(pts[:2], min_recall=0.9)
+    assert not gate["ok"] and "recall" in gate["reason"]
+    gate = dominates_at_recall(pts[1:], min_recall=0.9)
+    assert not gate["ok"] and "brute-force" in gate["reason"]
+
+
+def test_run_pareto_end_to_end_tiny(rng):
+    """A tiny full sweep: det-lsh + brute-force + one baseline through the
+    same protocol, JSON-shaped output, gate evidence present."""
+    from repro.api import IndexSpec
+    from repro.baselines import PMLSH
+
+    data = jnp.asarray(make_clustered(rng, 2048, 16))
+    queries = jnp.asarray(make_queries_near(np.asarray(data), rng, 4))
+    key = jax.random.PRNGKey(0)
+    pm = PMLSH.build(data, key, beta=0.1)
+    out = run_pareto(
+        data, queries, key, k=5,
+        specs=[IndexSpec(K=4, L=4, beta_override=0.1, Nr=64, leaf_size=32)],
+        Ms=(8,), max_rounds=(16,), engines=("fused",),
+        baselines={"pm-lsh": [("b0.1", pm, 0.1, dict(beta=0.1))]},
+        repeat=1, min_recall=0.5)
+
+    assert out["methods"] == ["brute-force", "det-lsh", "pm-lsh"]
+    assert len(out["points"]) == 3
+    import json
+    json.dumps(out)                       # BENCH_pareto.json-ready
+    by = {p["method"]: p for p in out["points"]}
+    assert by["brute-force"]["recall"] == 1.0
+    assert by["brute-force"]["work_per_query"] == 2048
+    assert by["det-lsh"]["work_per_query"] < 2048
+    assert out["front_qps"] and out["front_work"]
+    gate = out["det_dominates_brute"]
+    assert set(gate) >= {"ok", "min_recall"}
