@@ -1,7 +1,7 @@
 """Recall/QPS Pareto smoke: DET-LSH vs baselines through one protocol (CI).
 
 Runs ``repro.eval.pareto`` at smoke scale: a (K, L, leaf_size) x
-(M, max_rounds, engine) sweep for DET-LSH plus hnsw / ivf-pq / pm-lsh /
+(M, engine, probe_depth) sweep for DET-LSH plus hnsw / ivf-pq / pm-lsh /
 brute-force variants, every method measured through ``AnnIndex.search``.
 Writes the full curve set to BENCH_pareto.json; run.py --smoke gates on
 
@@ -74,9 +74,13 @@ def pareto_smoke() -> Table:
                        leaf_size=64),
              IndexSpec(K=8, L=8, c=1.5, beta_override=0.1, Nr=128,
                        leaf_size=64)]
+    # probe_depth joins (M, engine) as a first-class sweep axis: p4 points
+    # are the multi-probe curves (near-miss leaf admission), p0 the classic
+    # radius rounds.  max_rounds stays fixed so the point count holds at 24.
     out = run_pareto(data, queries, key, k=cfg["k"], specs=specs,
-                     Ms=(4, 16), max_rounds=(8, 48),
+                     Ms=(4, 16), max_rounds=(48,),
                      engines=("fused", "vmap"),
+                     probe_depths=(0, 4),
                      baselines=_baseline_variants(data, key),
                      repeat=cfg["repeat"], min_recall=cfg["min_recall"])
     out["dataset"] = cfg["dataset"]

@@ -52,9 +52,10 @@ def main(argv=None) -> None:
                     help="CI smoke: query/build throughput, snapshot "
                          "round-trip, PDET worker scaling, the serving-"
                          "runtime mixed-load check, LSH-decode vs full "
-                         "attention, and the recall/QPS Pareto sweep on "
-                         "small indexes; writes BENCH_{query,build,snapshot,"
-                         "parallel,serving,decode,pareto}.json and the "
+                         "attention, the recall/QPS Pareto sweep on "
+                         "small indexes, and the auto-tuner shrink-L check; "
+                         "writes BENCH_{query,build,snapshot,parallel,"
+                         "serving,decode,pareto,tune}.json and the "
                          "benchmarks/out/smoke_snapshot artifact")
     ap.add_argument("--only", default="")
     ap.add_argument("--out-dir", default="benchmarks/out")
@@ -68,10 +69,11 @@ def main(argv=None) -> None:
         from benchmarks import query_throughput as Q
         from benchmarks import serving_load as V
         from benchmarks import snapshot_smoke as S
+        from benchmarks import tune_smoke as T
         figures = [Q.query_throughput_smoke, B.build_throughput_smoke,
                    S.snapshot_smoke, P.parallel_scaling_smoke,
                    V.serving_load, D.decode_throughput_smoke,
-                   PS.pareto_smoke]
+                   PS.pareto_smoke, T.tune_smoke]
     else:
         figures = _figures(args.fast)
 
@@ -153,6 +155,27 @@ def _enforce_smoke_gates(failed, ran) -> None:
               f"recall {gate['best_recall']:.3f} at "
               f"{gate['best_work']:.0f} candidates/query vs "
               f"{gate['reference_work']:.0f} exact")
+    if "tune_smoke" in ran:
+        with open("BENCH_tune.json") as f:
+            tg = json.load(f)["gates"]
+        if not tg["tuner_hit_target"]:
+            raise SystemExit(
+                f"[bench] tune gate: tuner missed target recall "
+                f"{tg['target_recall']}: tuned recall "
+                f"{tg['tuned_recall']:.3f} "
+                f"(L={tg['tuned_L']}, probe_depth={tg['tuned_probe_depth']})")
+        if not tg["shrinks_L_at_fixed_recall"]:
+            raise SystemExit(
+                f"[bench] tune gate: tuned config does not shrink L at "
+                f"fixed recall: L {tg['tuned_L']} vs {tg['baseline_L']}, "
+                f"work {tg['tuned_work']:.0f} vs {tg['baseline_work']:.0f}, "
+                f"recall {tg['tuned_recall']:.3f} vs target "
+                f"{tg['target_recall']}")
+        print(f"[bench] tune gates OK: L={tg['tuned_L']} "
+              f"p={tg['tuned_probe_depth']} reaches recall "
+              f"{tg['tuned_recall']:.3f} at {tg['tuned_work']:.0f} "
+              f"candidates/query vs static L={tg['baseline_L']} at "
+              f"{tg['baseline_work']:.0f}")
     if "build_throughput_smoke" not in ran:
         print("[bench] build speedup gate skipped (build figure not run)")
         return

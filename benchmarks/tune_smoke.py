@@ -1,0 +1,138 @@
+"""Auto-tuner smoke: shrink L at fixed recall via multi-probe (CI).
+
+Runs ``repro.tune.suggest_params`` at smoke scale against a static-L
+reference config and writes BENCH_tune.json; run.py --smoke gates on
+
+  * tuner_hit_target   — the tuner's chosen config reaches the target
+    recall (0.9) on the held-out workload queries; and
+  * shrinks_L_at_fixed_recall — that config is genuinely multi-probe
+    (probe_depth > 0) and uses strictly fewer trees than the static-L
+    baseline AND strictly fewer candidates per query (mean
+    SearchStats.n_candidates), at recall still >= the target.
+
+This is the paper-level claim multi-probe exists to cash: L is the
+dominant cost knob (build time, memory, per-round query work all scale
+linearly in it), and probing near-miss leaves buys back the recall a
+smaller forest loses — so the tuned operating point must dominate the
+static one on the work axis, not just match it.  Both configs are
+measured through the same ``AnnIndex.search`` protocol and the same
+``repro.eval.pareto.measure`` path as every other benchmark.
+
+  PYTHONPATH=src python -m benchmarks.run --smoke
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Table, make_dataset, make_queries
+
+SMOKE = dict(dataset="msong-like", n=4096, nq=32, k=10, repeat=2,
+             target_recall=0.9)
+
+# The static reference: the forest size a user without a tuner would run
+# (the pareto_smoke upper spec).  The tuner's grid is capped strictly
+# below this L, so hitting the target at all *requires* either a lucky
+# small forest or multi-probe admission.
+BASELINE = dict(K=4, L=8, beta=0.1)
+GRID = dict(Ks=(4,), Ls=(2, 3, 4), betas=(0.05, 0.1),
+            probe_depths=(0, 2, 4, 8))
+
+
+def tune_smoke() -> Table:
+    import dataclasses
+
+    from repro.api import IndexSpec, SearchRequest, build
+    from repro.baselines import BruteForce
+    from repro.eval.pareto import measure
+    from repro.tune import suggest_params
+
+    cfg = SMOKE
+    data = jnp.asarray(make_dataset(cfg["dataset"], cfg["n"]))
+    queries = jnp.asarray(make_queries(np.asarray(data), cfg["nq"]))
+    key = jax.random.PRNGKey(0)
+    k = cfg["k"]
+
+    bf = BruteForce.build(data)
+    gt = bf.search(queries, SearchRequest(k=k))
+
+    base_spec = IndexSpec(kind="static", K=BASELINE["K"], L=BASELINE["L"],
+                          c=1.5, beta_override=BASELINE["beta"], Nr=64,
+                          leaf_size=32)
+    t0 = time.perf_counter()
+    base_index = build(data, key, base_spec)
+    base_index.search(queries[:1], SearchRequest(k=k))     # build + warmup
+    t_base = time.perf_counter() - t0
+    base_pt = measure("det-lsh", f"static-K{base_spec.K}-L{base_spec.L}",
+                      base_index, queries, gt.ids, SearchRequest(k=k),
+                      build_seconds=t_base, repeat=cfg["repeat"],
+                      params=dict(K=base_spec.K, L=base_spec.L,
+                                  beta=BASELINE["beta"], probe_depth=0))
+
+    result = suggest_params(data, cfg["target_recall"], key=key, k=k,
+                            queries=queries, Nr=64, leaf_size=32,
+                            repeat=cfg["repeat"], **GRID)
+    # Re-measure the winner through the spec's baked-in probe default (no
+    # explicit probe_depth on the request) — the gate scores what a user
+    # gets from ``api.build(data, key, result.spec)`` + a plain request.
+    tuned_index = build(data, key, result.spec)
+    tuned_index.search(queries[:1], SearchRequest(k=k))
+    tuned_pt = measure("det-lsh", f"tuned-L{result.spec.L}-p"
+                       f"{result.spec.probe_depth}", tuned_index, queries,
+                       gt.ids, SearchRequest(k=k),
+                       build_seconds=result.build_seconds,
+                       repeat=cfg["repeat"],
+                       params=dict(K=result.spec.K, L=result.spec.L,
+                                   beta=result.spec.beta_override,
+                                   probe_depth=result.spec.probe_depth))
+    # measure() records the *request's* probe_depth; here the probing comes
+    # from the index default, so stamp the effective depth on the point.
+    tuned_pt = dataclasses.replace(tuned_pt,
+                                   probe_depth=result.spec.probe_depth)
+
+    gates = {
+        "tuner_hit_target": bool(result.achieved
+                                 and tuned_pt.recall >= cfg["target_recall"]),
+        "shrinks_L_at_fixed_recall": bool(
+            result.spec.L < base_spec.L
+            and result.spec.probe_depth > 0
+            and tuned_pt.recall >= cfg["target_recall"]
+            and tuned_pt.work_per_query < base_pt.work_per_query),
+        "target_recall": cfg["target_recall"],
+        "baseline_L": base_spec.L,
+        "tuned_L": result.spec.L,
+        "tuned_probe_depth": result.spec.probe_depth,
+        "baseline_recall": base_pt.recall,
+        "tuned_recall": tuned_pt.recall,
+        "baseline_work": base_pt.work_per_query,
+        "tuned_work": tuned_pt.work_per_query,
+    }
+    out = {
+        "dataset": cfg["dataset"], "n": cfg["n"], "k": k,
+        "n_queries": cfg["nq"],
+        "baseline": base_pt.to_dict(),
+        "tuned": tuned_pt.to_dict(),
+        "result": result.to_dict(),
+        "gates": gates,
+    }
+    with open("BENCH_tune.json", "w") as f:
+        json.dump(out, f, indent=2)
+
+    tab = Table("tune_smoke",
+                ["config", "L", "probe_depth", "recall", "work_per_q"])
+    for p in result.trials:
+        tab.add([p.label, p.params["L"], p.probe_depth,
+                 f"{p.recall:.3f}", f"{p.work_per_query:.0f}"])
+    tab.add([base_pt.label, base_spec.L, 0, f"{base_pt.recall:.3f}",
+             f"{base_pt.work_per_query:.0f}"])
+    tab.add([tuned_pt.label, result.spec.L, result.spec.probe_depth,
+             f"{tuned_pt.recall:.3f}", f"{tuned_pt.work_per_query:.0f}"])
+    tab.add(["gate_hit_target", "", "", str(gates["tuner_hit_target"]), ""])
+    tab.add(["gate_shrinks_L", "", "", str(gates["shrinks_L_at_fixed_recall"]),
+             ""])
+    return tab

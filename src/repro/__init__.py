@@ -23,16 +23,20 @@ import importlib
 
 __version__ = "1.0.0"
 
-__all__ = ["__version__", "api", "decode", "DETLSH", "StreamingDETLSH",
-           "derive_params", "KVCacheIndex"]
+__all__ = ["__version__", "api", "decode", "tune", "DETLSH",
+           "StreamingDETLSH", "derive_params", "KVCacheIndex",
+           "suggest_params", "TuneResult"]
 
 _LAZY = {
     "api": ("repro.api", None),
     "decode": ("repro.decode", None),
+    "tune": ("repro.tune", None),
     "DETLSH": ("repro.core", "DETLSH"),
     "StreamingDETLSH": ("repro.streaming", "StreamingDETLSH"),
     "derive_params": ("repro.core.theory", "derive_params"),
     "KVCacheIndex": ("repro.decode", "KVCacheIndex"),
+    "suggest_params": ("repro.tune", "suggest_params"),
+    "TuneResult": ("repro.tune", "TuneResult"),
 }
 
 

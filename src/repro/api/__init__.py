@@ -53,6 +53,9 @@ __all__ = [
     "available_engines",
     "get_engine",
     "build",
+    "tune",
+    "suggest_params",
+    "TuneResult",
     "load",
     "save",
     "SnapshotFormatError",
@@ -76,6 +79,9 @@ _EXPORTS = {
     "resolve_engine": "repro.api.registry",
     "available_engines": "repro.api.registry",
     "get_engine": "repro.api.registry",
+    "tune": "repro.tune",
+    "suggest_params": "repro.tune",
+    "TuneResult": "repro.tune",
     "load": "repro.api.persist",
     "save": "repro.api.persist",
     "SnapshotFormatError": "repro.api.persist",

@@ -59,6 +59,10 @@ class SearchRequest:
     # engines ignore it; the scheduler uses it for flush/admission/shed
     # decisions (docs/DESIGN.md §9).  None = best-effort, never shed.
     deadline: Optional[float] = None
+    # Multi-probe: near-miss leaves admitted per (tree, round), ranked by
+    # leaf-LB slack (docs/DESIGN.md §11).  None = the index's default
+    # (``IndexSpec.probe_depth``, itself 0 = classic radius rounds).
+    probe_depth: Optional[int] = None
 
     def __post_init__(self):
         _check_positive("k", self.k)
@@ -69,31 +73,45 @@ class SearchRequest:
                              f"(radii only grow by factors of c)")
         if self.n_active is not None:
             _check_positive("n_active", self.n_active, minimum=0)
+        if self.probe_depth is not None:
+            _check_positive("probe_depth", self.probe_depth, minimum=0)
         _check_choice("mode", self.mode, MODES)
         _check_choice("dist_impl", self.dist_impl, IMPLS)
         _check_choice("bounds_impl", self.bounds_impl, IMPLS)
         registry.validate_engine_name(self.engine)
+        if self.probe_depth and self.mode == "strict":
+            raise ValueError(
+                "mode='strict' (the unoptimized Alg. 3 per-point filter) "
+                "admits no near-miss leaves; probe_depth must be 0/None in "
+                f"strict mode (got {self.probe_depth})")
 
     def to_query_config(self, *, default_engine: str = "auto",
                         r_min: Optional[float] = None,
                         k: Optional[int] = None,
-                        block_q: int = 8, block_l: int = 8):
+                        block_q: int = 8, block_l: int = 8,
+                        default_probe_depth: int = 0):
         """Lower to the engine-level ``core.query.QueryConfig``.
 
         ``r_min`` / ``k`` override the request's values — the index fills
         in its cached radius estimate and per-segment k clamps here.
+        ``default_probe_depth`` is the index's configured probe depth
+        (``IndexSpec.probe_depth``), used when the request leaves
+        ``probe_depth=None``.
         """
         from repro.core.query import QueryConfig
         rm = self.r_min if r_min is None else r_min
         if rm is None:
             raise ValueError("r_min unresolved: pass r_min= or set it on "
                              "the request")
+        pd = (self.probe_depth if self.probe_depth is not None
+              else default_probe_depth)
         return QueryConfig(
             k=self.k if k is None else k, M=self.M, r_min=float(rm),
             mode=self.mode, max_rounds=self.max_rounds,
             engine=self.engine or default_engine,
             dist_impl=self.dist_impl, bounds_impl=self.bounds_impl,
-            block_q=block_q, block_l=block_l)
+            block_q=block_q, block_l=block_l,
+            probe_depth=0 if self.mode == "strict" else int(pd))
 
 
 class SearchStats(NamedTuple):
@@ -119,6 +137,11 @@ class SearchStats(NamedTuple):
     #                               (the pmin'd B x n candidate table)
     degraded: bool = False        # answered at the serving runtime's capped
     #                               max_rounds under overload (§9)
+    probed_leaves: Any = None     # (B,) int32 — near-miss leaves admitted by
+    #                               multi-probe, summed over trees/rounds
+    #                               (None when the path never probes)
+    probe_candidates: Any = None  # (B,) int32 — candidates contributed by
+    #                               probe-admitted leaves
 
 
 class SearchResult(NamedTuple):

@@ -161,6 +161,11 @@ class IndexSpec:
     # fused kernel's row-chunk size ---
     build_impl: str = "auto"
     build_chunk: int = 512
+    # --- search-time default: near-miss leaves admitted per (tree, round)
+    # (multi-probe, docs/DESIGN.md §11; 0 = classic radius rounds).  A
+    # request's explicit probe_depth overrides it.  This is the knob the
+    # auto-tuner (repro.tune) bakes into its suggested spec. ---
+    probe_depth: int = 0
 
     def __post_init__(self):
         _check_choice("kind", self.kind, KINDS)
@@ -184,6 +189,7 @@ class IndexSpec:
         _check_choice("encode_impl", self.encode_impl, IMPLS)
         _check_positive("block_q", self.block_q)
         _check_positive("block_l", self.block_l)
+        _check_positive("probe_depth", self.probe_depth, minimum=0)
         registry.validate_engine_name(self.engine)
         _check_positive("delta_capacity", self.delta_capacity)
         _check_positive("max_segments", self.max_segments)

@@ -161,7 +161,8 @@ class DETLSH:
         cfg = req.to_query_config(
             default_engine=default_engine, r_min=r_min,
             block_q=spec.block_q if spec is not None else 8,
-            block_l=spec.block_l if spec is not None else 8)
+            block_l=spec.block_l if spec is not None else 8,
+            default_probe_depth=spec.probe_depth if spec is not None else 0)
         engine = registry.resolve_engine(cfg.engine, mode=cfg.mode,
                                          batch=queries.shape[0])
         plan = self.fused_plan() if engine == "fused" else None
@@ -172,7 +173,9 @@ class DETLSH:
             stats=SearchStats(engine=engine, r_min=float(r_min),
                               r_min_cached=cached, rounds=res.rounds,
                               n_candidates=res.n_candidates,
-                              final_r=res.final_r),
+                              final_r=res.final_r,
+                              probed_leaves=res.probed_leaves,
+                              probe_candidates=res.probe_candidates),
             raw=res)
 
     def query(self, queries: jax.Array, k: int = 50, *,

@@ -504,6 +504,14 @@ def pdet_query_batch(forest: DEForest, A: jax.Array, params: LSHParams,
     Returns ``(QueryResult, shard_candidates)`` where ``shard_candidates``
     is the (n_shards,) count of (tree, point) entries scanned per shard.
     """
+    if getattr(cfg, "probe_depth", 0):
+        raise NotImplementedError(
+            "engine 'pdet' does not support multi-probe (probe_depth > 0): "
+            "each shard only sees its own leaves, so a per-shard "
+            "slack ranking would admit a different probe set per device "
+            "count and break the bit-identical PDET == DET contract; use "
+            "engine='fused' or 'vmap' (they run on the sharded arrays), or "
+            "probe_depth=0")
     n = forest.n
     B = queries.shape[0]
     K, L = params.K, params.L
@@ -717,10 +725,18 @@ class PDETIndex:
         cfg = req.to_query_config(
             default_engine=default_engine, r_min=r_min,
             block_q=spec.block_q if spec is not None else 8,
-            block_l=spec.block_l if spec is not None else 8)
+            block_l=spec.block_l if spec is not None else 8,
+            default_probe_depth=spec.probe_depth if spec is not None else 0)
         engine = registry.resolve_engine(
             cfg.engine, mode=cfg.mode, batch=queries.shape[0],
             mesh_devices=self.placement.n_devices)
+        if engine == "pdet" and cfg.probe_depth > 0 and \
+                (req.engine or default_engine) != "pdet":
+            # Multi-probe is not expressible per-shard (see
+            # pdet_query_batch); 'auto' falls back to the fused engine on
+            # the sharded arrays.  An *explicit* engine='pdet' with
+            # probe_depth > 0 falls through and raises there.
+            engine = "fused"
         shard_cands = psum_rounds = merge_size = None
         if engine == "pdet":
             res, shard_cands = pdet_query_batch(
@@ -744,7 +760,9 @@ class PDETIndex:
                               final_r=res.final_r,
                               shard_candidates=shard_cands,
                               psum_rounds=psum_rounds,
-                              merge_size=merge_size),
+                              merge_size=merge_size,
+                              probed_leaves=res.probed_leaves,
+                              probe_candidates=res.probe_candidates),
             raw=res)
 
     def save(self, path) -> None:

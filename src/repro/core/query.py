@@ -65,6 +65,10 @@ class QueryResult(NamedTuple):
     rounds: jax.Array     # ()  int32  — number of radius enlargements + 1
     n_candidates: jax.Array  # () int32 — |S| (unique) at termination
     final_r: jax.Array    # ()  f32
+    # Multi-probe counters (appended, defaulted: paths that never probe —
+    # rc_ann, the legacy distributed query — leave them None).
+    probed_leaves: Optional[jax.Array] = None    # () int32 — near-miss leaves
+    probe_candidates: Optional[jax.Array] = None  # () int32 — their candidates
 
 
 # ---------------------------------------------------------------------------
@@ -74,14 +78,23 @@ class QueryResult(NamedTuple):
 def range_query_round(forest: DEForest, q_proj: jax.Array, r_proj: jax.Array,
                       M: int, *, mode: str = "leaf",
                       bounds_impl: str = "auto",
-                      live: Optional[jax.Array] = None
-                      ) -> tuple[jax.Array, jax.Array]:
+                      live: Optional[jax.Array] = None,
+                      probe_depth: int = 0, with_stats: bool = False):
     """Range query with projected radius ``r_proj`` in all L trees.
 
     q_proj: (L, K) projected query.  ``live`` is an optional (n,) bool
     tombstone mask in point-id order (None = all live); dead points are
-    rejected at admission, before the exact rerank.  Returns (ids, ok):
-    ids (L*M*leaf_size,) int32 candidate point ids, ok bool mask.
+    rejected at admission, before the exact rerank.
+
+    ``probe_depth > 0`` additionally admits, per tree, the probe_depth
+    near-miss leaves — the smallest-LB valid leaves with LB *above* the
+    radius, within the same top-M LB cut the engine already takes (the
+    multi-probe sequence; docs/DESIGN.md §11).  With probe_depth=0 the
+    admitted set is exactly the pre-probe rule.
+
+    Returns (ids, ok): ids (L*M*leaf_size,) int32 candidate point ids, ok
+    bool mask.  With ``with_stats=True`` also returns scalar int32 counters
+    (probed_leaves, probe_candidates) summed over trees.
     """
     leaf_size = forest.leaf_size
     M = min(M, forest.n_leaves)
@@ -89,22 +102,35 @@ def range_query_round(forest: DEForest, q_proj: jax.Array, r_proj: jax.Array,
     def per_tree(pids, proj_s, lo, hi, lvalid, bp, qp):
         lb, _ = leaf_bounds(qp, lo, hi, lvalid, bp, impl=bounds_impl)
         neg, leaf_idx = jax.lax.top_k(-lb, M)                 # best-M by LB
-        leaf_ok = (-neg) <= r_proj                            # LB <= eps*r
+        lb_m = -neg                                           # ascending LB
+        leaf_ok = lb_m <= r_proj                              # LB <= eps*r
+        if probe_depth > 0:
+            outside = (~leaf_ok) & jnp.isfinite(lb_m)
+            rank = jnp.cumsum(outside.astype(jnp.int32))      # slack order
+            probe_ok = outside & (rank <= probe_depth)
+            admit = leaf_ok | probe_ok
+        else:
+            probe_ok = jnp.zeros_like(leaf_ok)
+            admit = leaf_ok
         gidx = leaf_idx[:, None] * leaf_size + jnp.arange(leaf_size)[None, :]
         gidx = gidx.reshape(-1)                               # (M*leaf_size,)
         ids = pids[gidx]
-        ok = jnp.repeat(leaf_ok, leaf_size) & (ids < forest.n)
+        ok = jnp.repeat(admit, leaf_size) & (ids < forest.n)
         if live is not None:
             ok = ok & live[jnp.clip(ids, 0, forest.n - 1)]
         if mode == "strict":
             pts = proj_s[gidx]                                # (M*ls, K)
             d = jnp.sqrt(jnp.sum((pts - qp[None, :]) ** 2, axis=1))
             ok = ok & (d <= r_proj)
-        return ids, ok
+        probed = probe_ok.sum().astype(jnp.int32)
+        pcand = (ok & jnp.repeat(probe_ok, leaf_size)).sum().astype(jnp.int32)
+        return ids, ok, probed, pcand
 
-    ids, ok = jax.vmap(per_tree)(forest.point_ids, forest.proj_sorted,
-                                 forest.leaf_lo, forest.leaf_hi,
-                                 forest.leaf_valid, forest.breakpoints, q_proj)
+    ids, ok, probed, pcand = jax.vmap(per_tree)(
+        forest.point_ids, forest.proj_sorted, forest.leaf_lo, forest.leaf_hi,
+        forest.leaf_valid, forest.breakpoints, q_proj)
+    if with_stats:
+        return ids.reshape(-1), ok.reshape(-1), probed.sum(), pcand.sum()
     return ids.reshape(-1), ok.reshape(-1)
 
 
@@ -182,6 +208,7 @@ class QueryConfig:
     engine: str = "auto"       # batch engine: 'auto' or a registered name
     block_q: int = 8           # fused kernel query-tile
     block_l: int = 8           # fused kernel leaf-tile
+    probe_depth: int = 0       # near-miss leaves admitted per (tree, round)
 
     def __post_init__(self):
         # Eager validation: a typo'd engine/mode/impl or a non-positive
@@ -195,12 +222,18 @@ class QueryConfig:
         _check_positive("cap", self.cap, minimum=0)
         _check_positive("block_q", self.block_q)
         _check_positive("block_l", self.block_l)
+        _check_positive("probe_depth", self.probe_depth, minimum=0)
         if not self.r_min > 0.0:
             raise ValueError(f"r_min must be positive, got {self.r_min!r}")
         _check_choice("mode", self.mode, MODES)
         _check_choice("dist_impl", self.dist_impl, IMPLS)
         _check_choice("bounds_impl", self.bounds_impl, IMPLS)
         engine_registry.validate_engine_name(self.engine)
+        if self.probe_depth and self.mode == "strict":
+            raise ValueError(
+                "mode='strict' reproduces the unoptimized Alg. 3 per-point "
+                "filter and admits no near-miss leaves; probe_depth must be "
+                f"0 in strict mode (got {self.probe_depth})")
 
 
 def _auto_cap(n: int, params: LSHParams, cfg: QueryConfig,
@@ -227,14 +260,15 @@ def knn_query(data: jax.Array, forest: DEForest, A: jax.Array,
     thresh = jnp.asarray(params.beta * n + cfg.k, jnp.float32)
 
     def cond(state):
-        rnd, r, cs, done = state
+        rnd, r, cs, done, probed, pcand = state
         return (~done) & (rnd < cfg.max_rounds)
 
     def body(state):
-        rnd, r, cs, done = state
-        new_ids, ok = range_query_round(
+        rnd, r, cs, done, probed, pcand = state
+        new_ids, ok, pl, pc = range_query_round(
             forest, q_proj, params.epsilon * r, cfg.M, mode=cfg.mode,
-            bounds_impl=cfg.bounds_impl, live=live)             # line 5
+            bounds_impl=cfg.bounds_impl, live=live,
+            probe_depth=cfg.probe_depth, with_stats=True)       # line 5
         new_d = exact_distances(data, q, new_ids, ok, impl=cfg.dist_impl)
         new_ids = jnp.where(ok, new_ids, n)
         cs = cand.merge_round(n, cs, new_ids, new_d)
@@ -243,15 +277,17 @@ def knn_query(data: jax.Array, forest: DEForest, A: jax.Array,
         t2 = within >= cfg.k                                    # line 9
         done = t1 | t2
         r = jnp.where(done, r, r * params.c)                    # line 11
-        return rnd + 1, r, cs, done
+        return rnd + 1, r, cs, done, probed + pl, pcand + pc
 
     state0 = (jnp.asarray(0, jnp.int32), jnp.asarray(cfg.r_min, jnp.float32),
-              cand.init_state(n, cap), ~jnp.asarray(active))
-    rnd, r, cs, done = jax.lax.while_loop(cond, body, state0)
+              cand.init_state(n, cap), ~jnp.asarray(active),
+              jnp.asarray(0, jnp.int32), jnp.asarray(0, jnp.int32))
+    rnd, r, cs, done, probed, pcand = jax.lax.while_loop(cond, body, state0)
 
     negd, sel = jax.lax.top_k(-cs.dists, cfg.k)                 # final rerank
     return QueryResult(ids=cs.ids[sel], dists=-negd, rounds=rnd,
-                       n_candidates=cs.count, final_r=r)
+                       n_candidates=cs.count, final_r=r,
+                       probed_leaves=probed, probe_candidates=pcand)
 
 
 # ---------------------------------------------------------------------------
@@ -345,6 +381,13 @@ def fused_query_batch(data: jax.Array, forest: DEForest, A: jax.Array,
     ``n_active`` (int or scalar array) marks lanes >= n_active done from
     round 0 with r_eff = -1 — pad lanes of a partial batch admit nothing
     and skip all MXU work (see serving/lsh_service.py).
+
+    With ``cfg.probe_depth > 0`` the leaf-LB table (radius-independent) is
+    computed once up front and every round widens each lane's radius
+    *per tree* to also admit the probe_depth nearest near-miss leaves
+    (docs/DESIGN.md §11).  Unlike the vmap engine there is no top-M cut, so
+    the probe set ranges over all leaves of the tree.  probe_depth=0 takes
+    the exact pre-probe path (1-D radii, no LB pre-pass) — bit-identical.
     """
     n = data.shape[0]
     B = queries.shape[0]
@@ -354,22 +397,42 @@ def fused_query_batch(data: jax.Array, forest: DEForest, A: jax.Array,
     q_proj = (queries @ A).reshape(B, L, K).transpose(1, 0, 2)   # (L, B, K)
     thresh = jnp.asarray(params.beta * n + cfg.k, jnp.float32)
     interpret = cfg.dist_impl == "pallas_interpret"
+    nl, ls = forest.n_leaves, forest.leaf_size
 
     from repro.kernels import ops as kops
+    from repro.kernels import ref as kref
+
+    if cfg.probe_depth > 0:
+        # Leaf LBs depend only on (query, leaf), not the radius: one
+        # (L, B, nl) pre-pass ranks probe candidates for every round.
+        probe_lb = kref.forest_leaf_lb(
+            q_proj, forest.leaf_lo.astype(jnp.int32),
+            forest.leaf_hi.astype(jnp.int32), forest.leaf_valid,
+            forest.breakpoints)
 
     def cond(state):
-        rnd, rounds, r, done, best = state
+        rnd, rounds, r, done, best, probed, pcand = state
         return jnp.any(~done) & (rnd < cfg.max_rounds)
 
     def body(state):
-        rnd, rounds, r, done, best = state
+        rnd, rounds, r, done, best, probed, pcand = state
         r_eff = jnp.where(done, -1.0, params.epsilon * r)        # lane mask
+        if cfg.probe_depth > 0:
+            r_adm, probe_mask = kref.probe_radii_from_lb(
+                probe_lb, r_eff, cfg.probe_depth)                # (L, B)
+        else:
+            r_adm = r_eff                                        # (B,) shared
         dmat = kops.range_rerank(
-            queries, q_proj, r_eff, forest.leaf_lo, forest.leaf_hi,
+            queries, q_proj, r_adm, forest.leaf_lo, forest.leaf_hi,
             forest.leaf_valid, forest.breakpoints, plan.points_sorted,
             forest.valid, live_sorted,
             leaf_size=forest.leaf_size, interpret=interpret,
             block_q=cfg.block_q, block_l=cfg.block_l)            # (L, B, n_pad)
+        if cfg.probe_depth > 0:
+            probed = probed + probe_mask.sum((0, 2)).astype(jnp.int32)
+            per_leaf = jnp.isfinite(dmat.reshape(L, B, nl, ls)).sum(-1)
+            pcand = pcand + jnp.where(probe_mask, per_leaf,
+                                      0).sum((0, 2)).astype(jnp.int32)
         # Fold the round into the id-indexed table: inv_perm turns each
         # tree's sorted-order row into id order (gather, not scatter).
         by_id = jnp.min(
@@ -378,7 +441,7 @@ def fused_query_batch(data: jax.Array, forest: DEForest, A: jax.Array,
         best, r, done, rounds = fused_round_update(
             best, by_id, r, done, rounds, rnd, params=params, k=cfg.k,
             thresh=thresh)
-        return rnd + 1, rounds, r, done, best
+        return rnd + 1, rounds, r, done, best, probed, pcand
 
     done0 = (jnp.zeros((B,), jnp.bool_) if n_active is None
              else jnp.arange(B) >= jnp.asarray(n_active))
@@ -386,25 +449,21 @@ def fused_query_batch(data: jax.Array, forest: DEForest, A: jax.Array,
               jnp.zeros((B,), jnp.int32),
               jnp.full((B,), cfg.r_min, jnp.float32),
               done0,
-              jnp.full((B, n), jnp.inf, jnp.float32))
-    rnd, rounds, r, done, best = jax.lax.while_loop(cond, body, state0)
+              jnp.full((B, n), jnp.inf, jnp.float32),
+              jnp.zeros((B,), jnp.int32),
+              jnp.zeros((B,), jnp.int32))
+    rnd, rounds, r, done, best, probed, pcand = jax.lax.while_loop(
+        cond, body, state0)
 
     ids, dists, count = fused_topk(best, cfg.k, n)
     return QueryResult(ids=ids, dists=dists, rounds=rounds,
-                       n_candidates=count, final_r=r)
+                       n_candidates=count, final_r=r,
+                       probed_leaves=probed, probe_candidates=pcand)
 
 
 # Below this batch size the fused engine's full-forest streaming pass is not
 # amortized and the per-query vmap path wins (measured in BENCH_query.json).
 _FUSED_MIN_BATCH = 8
-
-
-def _pick_engine(cfg: QueryConfig, batch: int | None = None) -> str:
-    """Compat shim over ``repro.api.registry.resolve_engine`` (the engine
-    picker now lives in the registry; see its module docstring for the
-    resolution rules, including the explicit strict-mode fallback)."""
-    return engine_registry.resolve_engine(cfg.engine, mode=cfg.mode,
-                                          batch=batch)
 
 
 def live_in_sorted_order(forest: DEForest,
@@ -492,7 +551,8 @@ def rc_ann_query(data: jax.Array, forest: DEForest, A: jax.Array,
     q_proj = (q @ A).reshape(params.L, params.K)
     ids, ok = range_query_round(forest, q_proj,
                                 jnp.asarray(params.epsilon * r), cfg.M,
-                                mode=cfg.mode, bounds_impl=cfg.bounds_impl)
+                                mode=cfg.mode, bounds_impl=cfg.bounds_impl,
+                                probe_depth=cfg.probe_depth)
     d = exact_distances(data, q, ids, ok, impl=cfg.dist_impl)
     ids = jnp.where(ok, ids, n)
     cs = cand.merge_round(n, cand.init_state(n, cap), ids, d)

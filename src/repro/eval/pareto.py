@@ -46,6 +46,7 @@ class CurvePoint:
     build_seconds: float
     index_bytes: int
     params: dict              # the knobs that produced this point
+    probe_depth: int = 0      # multi-probe near-miss leaves per (tree, round)
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -85,18 +86,22 @@ def measure(method: str, label: str, index: Any, queries, gt_ids,
                       qps=nq / max(best, 1e-9), work_per_query=work,
                       build_seconds=build_seconds,
                       index_bytes=int(index.index_size_bytes()),
-                      params=dict(params or {}, k=request.k))
+                      params=dict(params or {}, k=request.k),
+                      probe_depth=int(request.probe_depth or 0))
 
 
 def detlsh_points(data, queries, gt_ids, key, *, k: int = 10,
                   specs: Sequence = (), Ms: Sequence[int] = (8,),
                   max_rounds: Sequence[int] = (48,),
                   engines: Sequence[str] = ("fused",),
+                  probe_depths: Sequence[int] = (0,),
                   repeat: int = 3) -> list[CurvePoint]:
-    """Sweep (IndexSpec) x (M, max_rounds, engine) through ``api.build``.
+    """Sweep (IndexSpec) x (M, max_rounds, engine, probe_depth) through
+    ``api.build``.
 
-    ``M`` (the per-round leaf probe budget) only steers the vmap engine;
-    pairing it with engines is the caller's sweep design.
+    ``M`` (the per-round leaf budget) only steers the vmap engine;
+    ``probe_depth`` steers both engines (multi-probe near-miss admission;
+    0 = classic radius rounds).  Pairing axes is the caller's sweep design.
     """
     from repro import api
     points = []
@@ -105,14 +110,18 @@ def detlsh_points(data, queries, gt_ids, key, *, k: int = 10,
         index = api.build(data, key, spec)
         _block(index.search(queries[:1], SearchRequest(k=k)))   # build+warm
         t_build = time.perf_counter() - t0
-        for M, mr, eng in itertools.product(Ms, max_rounds, engines):
-            req = SearchRequest(k=k, M=M, max_rounds=mr, engine=eng)
-            label = f"K{spec.K}-L{spec.L}-ls{spec.leaf_size}-M{M}-r{mr}-{eng}"
+        for M, mr, eng, pd in itertools.product(Ms, max_rounds, engines,
+                                                probe_depths):
+            req = SearchRequest(k=k, M=M, max_rounds=mr, engine=eng,
+                                probe_depth=pd)
+            label = (f"K{spec.K}-L{spec.L}-ls{spec.leaf_size}-M{M}-r{mr}"
+                     f"-p{pd}-{eng}")
             points.append(measure(
                 "det-lsh", label, index, queries, gt_ids, req,
                 build_seconds=t_build, repeat=repeat,
                 params=dict(K=spec.K, L=spec.L, leaf_size=spec.leaf_size,
-                            Nr=spec.Nr, M=M, max_rounds=mr, engine=eng)))
+                            Nr=spec.Nr, M=M, max_rounds=mr, engine=eng,
+                            probe_depth=pd)))
     return points
 
 
@@ -167,6 +176,7 @@ def dominates_at_recall(points: Sequence[CurvePoint], *,
 def run_pareto(data, queries, key, *, k: int = 10, specs: Sequence = (),
                Ms: Sequence[int] = (8,), max_rounds: Sequence[int] = (48,),
                engines: Sequence[str] = ("fused",),
+               probe_depths: Sequence[int] = (0,),
                baselines: Optional[dict] = None, repeat: int = 3,
                min_recall: float = 0.9) -> dict:
     """Full sweep -> JSON-ready dict (the BENCH_pareto.json payload).
@@ -182,7 +192,7 @@ def run_pareto(data, queries, key, *, k: int = 10, specs: Sequence = (),
     _block(gt)
     points = detlsh_points(data, queries, gt.ids, key, k=k, specs=specs,
                            Ms=Ms, max_rounds=max_rounds, engines=engines,
-                           repeat=repeat)
+                           probe_depths=probe_depths, repeat=repeat)
     points += baseline_points(
         "brute-force", [("scan", bf, 0.0, {})], queries, gt.ids, k=k,
         repeat=repeat)

@@ -129,13 +129,20 @@ def l2_rerank(q, c, *, interpret: bool = False, block_q: int = 128,
     return out[:b, :m]
 
 
-@functools.partial(jax.jit, static_argnames=("leaf_size", "interpret",
-                                             "block_q", "block_l"))
+@functools.partial(jax.jit, static_argnames=("leaf_size", "probe_depth",
+                                             "interpret", "block_q",
+                                             "block_l"))
 def range_rerank(q, q_proj, r_eff, leaf_lo, leaf_hi, leaf_valid, breakpoints,
                  points, point_valid, live=None, *, leaf_size: int,
-                 interpret: bool = False, block_q: int = 8,
-                 block_l: int = 8):
+                 probe_depth: int = 0, interpret: bool = False,
+                 block_q: int = 8, block_l: int = 8):
     """Fused batched range query + rerank; see kernels/range_rerank.py.
+
+    ``r_eff`` is (B,) per-lane radii shared across trees, or (L, B) per-tree
+    radii (the multi-probe engine passes pre-widened per-tree radii).  With
+    ``probe_depth > 0`` and 1-D radii the wrapper widens them itself via
+    :func:`repro.kernels.ref.probe_radii` so the probe_depth best near-miss
+    leaves per (tree, lane) are admitted alongside the radius box.
 
     Pads the query batch to ``block_q`` (padded lanes get r_eff = -1 so they
     admit nothing), the leaf axis to ``block_l`` (padded leaves invalid) and
@@ -149,6 +156,10 @@ def range_rerank(q, q_proj, r_eff, leaf_lo, leaf_hi, leaf_valid, breakpoints,
         # pv & pv == pv: reusing the validity buffer as the live operand
         # keeps the all-live case allocation-free (no ones tensor).
         live = point_valid
+    if probe_depth and r_eff.ndim == 1:
+        r_eff = _ref.probe_radii(q_proj, leaf_lo.astype(jnp.int32),
+                                 leaf_hi.astype(jnp.int32), leaf_valid,
+                                 breakpoints, r_eff, probe_depth)
     if not _use_pallas(interpret):
         return _ref.range_rerank(q, q_proj, r_eff, leaf_lo, leaf_hi,
                                  leaf_valid, breakpoints, points, point_valid,
@@ -158,7 +169,8 @@ def range_rerank(q, q_proj, r_eff, leaf_lo, leaf_hi, leaf_valid, breakpoints,
     npts = nl * leaf_size
     qp_b = _pad_to(_pad_to(q, 0, block_q), 1, 128)
     qproj_b = _pad_to(q_proj, 1, block_q)
-    r_b = _pad_to(r_eff, 0, block_q, value=-1.0)
+    r2 = jnp.broadcast_to(r_eff, (L, B)) if r_eff.ndim == 1 else r_eff
+    r_b = _pad_to(r2, 1, block_q, value=-1.0)
     lo_b = _pad_to(leaf_lo.astype(jnp.int32), 1, block_l)
     hi_b = _pad_to(leaf_hi.astype(jnp.int32), 1, block_l)
     lv_b = _pad_to(leaf_valid.astype(jnp.int32), 1, block_l)

@@ -40,7 +40,7 @@ def _kernel(q_ref, qp_ref, r_ref, lo_ref, hi_ref, lv_ref, bp_ref, pts_ref,
     lo = lo_ref[0]                                     # (bl, K) int32
     hi = hi_ref[0] + 1                                 # upper edge index
     qp = qp_ref[0]                                     # (bq, K) f32
-    r_eff = r_ref[...]                                 # (bq,) f32; -1 = done
+    r_eff = r_ref[0]                                   # (bq,) f32; -1 = done
 
     # Edge sweep: materialize the leaf bounding-box edge coordinates without
     # a gather (bp[k, lo[j,k]] expressed as select-accumulate over E edges).
@@ -96,8 +96,10 @@ def range_rerank(q: jax.Array, q_proj: jax.Array, r_eff: jax.Array,
                  interpret: bool = False) -> jax.Array:
     """Fused range query + rerank over all L trees.
 
-    q (B, d) original-space queries; q_proj (L, B, K); r_eff (B,) projected
-    radii (eps*r, or -1 for done lanes); leaf_lo/hi (L, nl, K) int32;
+    q (B, d) original-space queries; q_proj (L, B, K); r_eff (L, B)
+    per-(tree, lane) projected admission radii (eps*r broadcast over trees
+    for plain radius rounds; per-tree probe-widened radii for multi-probe
+    rounds; -1 for done lanes); leaf_lo/hi (L, nl, K) int32;
     leaf_valid (L, nl) int32; breakpoints (L, K, E); points (L, nl*ls, d)
     code-sorted original-space points; point_valid (L, nl*ls) int32;
     live (L, nl*ls) int32 — per-point tombstone mask in sorted order (0 =
@@ -114,6 +116,7 @@ def range_rerank(q: jax.Array, q_proj: jax.Array, r_eff: jax.Array,
     npts = nl * leaf_size
     assert B % block_q == 0 and nl % block_l == 0, (B, nl, block_q, block_l)
     assert points.shape == (L, npts, d), (points.shape, L, npts, d)
+    assert r_eff.shape == (L, B), (r_eff.shape, L, B)
     grid = (L, B // block_q, nl // block_l)
     return pl.pallas_call(
         lambda *refs: _kernel(*refs, E=E, K=K, leaf_size=leaf_size),
@@ -121,7 +124,7 @@ def range_rerank(q: jax.Array, q_proj: jax.Array, r_eff: jax.Array,
         in_specs=[
             pl.BlockSpec((block_q, d), lambda l, i, j: (i, 0)),
             pl.BlockSpec((1, block_q, K), lambda l, i, j: (l, i, 0)),
-            pl.BlockSpec((block_q,), lambda l, i, j: (i,)),
+            pl.BlockSpec((1, block_q), lambda l, i, j: (l, i)),
             pl.BlockSpec((1, block_l, K), lambda l, i, j: (l, j, 0)),
             pl.BlockSpec((1, block_l, K), lambda l, i, j: (l, j, 0)),
             pl.BlockSpec((1, block_l), lambda l, i, j: (l, j)),

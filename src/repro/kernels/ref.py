@@ -91,6 +91,66 @@ def leaf_bounds(q: jax.Array, leaf_lo: jax.Array, leaf_hi: jax.Array,
     return lb, ub
 
 
+def forest_leaf_lb(q_proj: jax.Array, leaf_lo: jax.Array, leaf_hi: jax.Array,
+                   leaf_valid: jax.Array,
+                   breakpoints: jax.Array) -> jax.Array:
+    """Leaf LB distances for the whole forest at once.
+
+    q_proj (L, B, K); leaf_lo/hi (L, nl, K); leaf_valid (L, nl);
+    breakpoints (L, K, E) -> (L, B, nl) f32, +inf for invalid leaves.
+    Radius-independent: the fused engine computes this once per batch and
+    reuses it across rounds to rank probe candidates.
+    """
+    def per_tree(qp_t, lo_t, hi_t, lv_t, bp_t):
+        return jax.vmap(
+            lambda qp: leaf_bounds(qp, lo_t, hi_t, lv_t, bp_t)[0])(qp_t)
+
+    return jax.vmap(per_tree)(q_proj, leaf_lo, leaf_hi,
+                              leaf_valid.astype(jnp.bool_), breakpoints)
+
+
+def probe_radii_from_lb(lb: jax.Array, r_eff: jax.Array,
+                        probe_depth: int) -> tuple[jax.Array, jax.Array]:
+    """Probe-widened admission radii from a leaf-LB table.
+
+    lb (L, B, nl) leaf LBs (+inf for invalid leaves); r_eff (B,) radius per
+    lane (-1 = done).  Per (tree, lane), widen the radius to also admit the
+    ``probe_depth`` valid leaves with the smallest LB *above* r_eff — the
+    near-miss leaves ranked by LB slack.  Done lanes keep r_eff = -1 and
+    never probe.
+
+    Returns (r_adm (L, B), probe_mask (L, B, nl)).  ``lb <= r_adm`` admits
+    exactly the within-radius leaves plus the probe set (LB ties can admit
+    a few more — a superset, which preserves the quality guarantees).  When
+    a (tree, lane) has fewer than probe_depth near-miss leaves the k-th
+    slack is +inf and every valid leaf is admitted.
+    """
+    L, B, nl = lb.shape
+    outside = lb > r_eff[None, :, None]                # invalid leaves too
+    slack = jnp.where(outside & jnp.isfinite(lb), lb, jnp.inf)
+    depth = min(int(probe_depth), nl)
+    kth = -jax.lax.top_k(-slack, depth)[0][..., -1]    # depth-th smallest
+    # The depth-th probe leaf sits exactly ON the widened radius (r_adm is
+    # its LB by construction), and the fused kernel recomputes leaf LBs
+    # in-tile with a different accumulation order — a 1-ulp discrepancy
+    # would silently drop the boundary leaf.  One relative-epsilon nudge
+    # keeps it in; epsilon ties admit at most a few extra leaves (still a
+    # superset, so the quality guarantees are untouched).
+    kth = jnp.where(jnp.isfinite(kth), kth * (1 + 1e-5) + 1e-6, kth)
+    r_adm = jnp.maximum(r_eff[None, :], kth)
+    r_adm = jnp.where(r_eff[None, :] < 0, r_eff[None, :], r_adm)
+    probe_mask = outside & jnp.isfinite(lb) & (lb <= r_adm[..., None])
+    return r_adm, probe_mask
+
+
+def probe_radii(q_proj: jax.Array, leaf_lo: jax.Array, leaf_hi: jax.Array,
+                leaf_valid: jax.Array, breakpoints: jax.Array,
+                r_eff: jax.Array, probe_depth: int) -> jax.Array:
+    """Convenience composition: leaf-LB table -> probe-widened (L, B) radii."""
+    lb = forest_leaf_lb(q_proj, leaf_lo, leaf_hi, leaf_valid, breakpoints)
+    return probe_radii_from_lb(lb, r_eff, probe_depth)[0]
+
+
 def l2_rerank(q: jax.Array, c: jax.Array) -> jax.Array:
     """Exact Euclidean distances: q (b, d), c (m, d) -> (b, m)."""
     qq = (q.astype(jnp.float32) ** 2).sum(-1, keepdims=True)      # (b, 1)
@@ -104,14 +164,19 @@ def range_rerank(q: jax.Array, q_proj: jax.Array, r_eff: jax.Array,
                  leaf_valid: jax.Array, breakpoints: jax.Array,
                  points: jax.Array, point_valid: jax.Array,
                  live: jax.Array | None = None, *,
-                 leaf_size: int) -> jax.Array:
+                 leaf_size: int, probe_depth: int = 0) -> jax.Array:
     """Fused batched range query + exact rerank (semantics of record).
 
-    q (B, d); q_proj (L, B, K); r_eff (B,) projected radii (-1 = inactive
-    lane); leaf_lo/hi (L, nl, K); leaf_valid (L, nl); breakpoints (L, K, E);
+    q (B, d); q_proj (L, B, K); r_eff projected admission radii — either
+    (B,) shared across trees or (L, B) per-tree (-1 = inactive lane);
+    leaf_lo/hi (L, nl, K); leaf_valid (L, nl); breakpoints (L, K, E);
     points (L, nl*leaf_size, d) code-sorted original-space points;
     point_valid (L, nl*leaf_size); live (L, nl*leaf_size) per-point
     tombstone mask in sorted order (None = all live).
+
+    With probe_depth > 0 and 1-D r_eff the radii are first widened per
+    (tree, lane) via :func:`probe_radii` so the ``probe_depth`` nearest
+    near-miss leaves are admitted too (multi-probe rounds).
 
     Returns (L, B, nl*leaf_size) f32: the exact original-space distance for
     every live point whose covering leaf has LB <= r_eff (leaf-granular
@@ -119,16 +184,22 @@ def range_rerank(q: jax.Array, q_proj: jax.Array, r_eff: jax.Array,
     """
     if live is None:
         live = jnp.ones_like(point_valid)
+    L = q_proj.shape[0]
+    B = q_proj.shape[1]
+    if probe_depth and r_eff.ndim == 1:
+        r_eff = probe_radii(q_proj, leaf_lo, leaf_hi, leaf_valid,
+                            breakpoints, r_eff, probe_depth)
+    r2 = jnp.broadcast_to(r_eff, (L, B)) if r_eff.ndim == 1 else r_eff
 
-    def per_tree(qp_t, lo_t, hi_t, lv_t, bp_t, pts_t, pv_t, lm_t):
+    def per_tree(qp_t, r_t, lo_t, hi_t, lv_t, bp_t, pts_t, pv_t, lm_t):
         lb, _ = jax.vmap(
             lambda qp: leaf_bounds(qp, lo_t, hi_t, lv_t, bp_t))(qp_t)
-        admit = (lb <= r_eff[:, None]) & lv_t[None, :]       # (B, nl)
+        admit = (lb <= r_t[:, None]) & lv_t[None, :]         # (B, nl)
         dist = l2_rerank(q, pts_t)                           # (B, nl*ls)
         mask = jnp.repeat(admit, leaf_size, axis=1) & (pv_t & lm_t)[None, :]
         return jnp.where(mask, dist, jnp.inf)
 
-    return jax.vmap(per_tree)(q_proj, leaf_lo, leaf_hi,
+    return jax.vmap(per_tree)(q_proj, r2, leaf_lo, leaf_hi,
                               leaf_valid.astype(jnp.bool_), breakpoints,
                               points, point_valid.astype(jnp.bool_),
                               live.astype(jnp.bool_))

@@ -538,11 +538,14 @@ class StreamingDETLSH:
         spec = self.spec
         block_q = spec.block_q if spec is not None else 8
         block_l = spec.block_l if spec is not None else 8
+        probe_default = spec.probe_depth if spec is not None else 0
         sources, rounds, n_cands, final_r = [], [], [], []
+        probed, pcand = [], []
         for sv in view.segs:
             seg = sv.seg
             cfg = req.to_query_config(k=min(k, seg.m), r_min=r_min,
-                                      block_q=block_q, block_l=block_l)
+                                      block_q=block_q, block_l=block_l,
+                                      default_probe_depth=probe_default)
             fused = engine_registry.resolve_engine(
                 cfg.engine, mode=cfg.mode, batch=B) == "fused"
             res = knn_query_batch(
@@ -553,6 +556,9 @@ class StreamingDETLSH:
             rounds.append(res.rounds)
             n_cands.append(res.n_candidates)
             final_r.append(res.final_r)
+            if res.probed_leaves is not None:
+                probed.append(res.probed_leaves)
+                pcand.append(res.probe_candidates)
         if view.delta is not None:
             ids_d, d_d = self._query_delta(view, queries, k, n_active)
             sources.append((ids_d, d_d))
@@ -568,7 +574,9 @@ class StreamingDETLSH:
                 dists=jnp.full((B, k), jnp.inf, jnp.float32),
                 rounds=jnp.zeros((B,), jnp.int32),
                 n_candidates=jnp.zeros((B,), jnp.int32),
-                final_r=jnp.full((B,), r_min, jnp.float32))
+                final_r=jnp.full((B,), r_min, jnp.float32),
+                probed_leaves=jnp.zeros((B,), jnp.int32),
+                probe_candidates=jnp.zeros((B,), jnp.int32))
 
         ids, dists = self._combine(sources, k, B, view.id_capacity)
         zero = jnp.zeros((B,), jnp.int32)
@@ -577,7 +585,9 @@ class StreamingDETLSH:
             rounds=functools.reduce(jnp.maximum, rounds, zero),
             n_candidates=functools.reduce(jnp.add, n_cands, zero),
             final_r=functools.reduce(
-                jnp.maximum, final_r, jnp.full((B,), r_min, jnp.float32)))
+                jnp.maximum, final_r, jnp.full((B,), r_min, jnp.float32)),
+            probed_leaves=functools.reduce(jnp.add, probed, zero),
+            probe_candidates=functools.reduce(jnp.add, pcand, zero))
 
     def _view_rmin(self, view: PinnedView, k: int,
                    probes: jax.Array) -> float:
@@ -638,7 +648,9 @@ class StreamingDETLSH:
             stats=SearchStats(engine=engine, r_min=float(r_min),
                               r_min_cached=cached, rounds=res.rounds,
                               n_candidates=res.n_candidates,
-                              final_r=res.final_r),
+                              final_r=res.final_r,
+                              probed_leaves=res.probed_leaves,
+                              probe_candidates=res.probe_candidates),
             raw=res)
 
     def query(self, queries: jax.Array, k: int = 10, *,

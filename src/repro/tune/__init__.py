@@ -1,0 +1,27 @@
+"""repro.tune — recall-targeted empirical parameter search (DESIGN.md §11).
+
+The paper's quality guarantee is probabilistic in L, but L is the single
+biggest cost knob: every extra DE-Tree costs build time, memory, and
+per-round query work.  Multi-probe rounds (``probe_depth``; core/query.py)
+reach the same recall at smaller L by admitting near-miss leaves instead
+of growing the forest — and this package picks the operating point:
+
+    result = repro.tune.suggest_params(sample, target_recall=0.9,
+                                       key=jax.random.PRNGKey(0))
+    index = repro.api.build(data, key, result.spec)       # tuned spec
+    # or in one step:
+    index, result = repro.tune.tune(data, key, target_recall=0.9)
+
+``suggest_params`` runs every (K, L, beta) build on the sample once, then
+measures each ``probe_depth`` as a request-time knob against brute-force
+ground truth (``baselines/brute_force.py``), scoring trials on the
+``repro.eval.pareto`` work-per-query axis; the winner is the cheapest
+config meeting the target, returned as a ``TuneResult`` whose ``spec``
+has the chosen probe depth baked in as the index's search-time default.
+"""
+
+from repro.tune.tuner import (DEFAULT_GRID, TuneResult, predicted_build_cost,
+                              suggest_params, tune)
+
+__all__ = ["TuneResult", "suggest_params", "tune", "predicted_build_cost",
+           "DEFAULT_GRID"]

@@ -1,0 +1,226 @@
+"""The auto-tuner: empirical (K, L, beta, probe_depth) search on a sample.
+
+Procedure (docs/DESIGN.md §11):
+
+  1. brute-force ground truth on the sample (the exact-scan oracle is the
+     only recall reference that needs no assumptions);
+  2. one ``api.build`` per (K, L, beta) — probe_depth is a request-time
+     knob, so all probe depths share a build;
+  3. one ``repro.eval.pareto.measure`` per (build, probe_depth): recall@k
+     plus mean candidates/query (the hardware-neutral work axis) through
+     the same ``AnnIndex.search`` protocol every benchmark uses;
+  4. among trials meeting the target recall, pick the least work per
+     query (ties: smaller L, then faster measured build).
+
+The returned ``TuneResult.spec`` is an ordinary ``IndexSpec`` with the
+winning probe depth installed as the index's search-time default — build
+it with ``repro.api.build`` (or use :func:`tune` for the one-step path)
+and plain ``SearchRequest``s inherit the tuned behavior.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.request import SearchRequest, _check_positive
+from repro.api.spec import IndexSpec
+
+# The default search grid: small K keeps projections cheap, L sweeps the
+# "how few trees can we afford" axis, probe depths trade near-miss
+# admission against radius growth.  Callers narrow this for smoke runs.
+DEFAULT_GRID = dict(Ks=(4,), Ls=(2, 3, 4, 6, 8), betas=(0.05, 0.1),
+                    probe_depths=(0, 2, 4, 8))
+
+
+def predicted_build_cost(n: int, K: int, L: int) -> float:
+    """Build-cost model in scale-free work units.
+
+    Per point and tree: K projection multiply-adds plus ~log2(n) sort
+    compares (the fused single-sort build; DESIGN.md §8), so
+    cost = n * L * (K + log2 n).  Used to rank candidate configs by how
+    expensive the *full-size* build will be before any is built, and
+    reported on ``TuneResult`` so callers can weigh build against query
+    work at their own traffic volume.
+    """
+    return float(n) * float(L) * (float(K) + math.log2(max(n, 2)))
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneResult:
+    """The tuner's verdict: a buildable spec plus the evidence for it."""
+
+    spec: IndexSpec            # chosen build config, probe_depth baked in
+    target_recall: float
+    achieved: bool             # False: nothing met the target; ``spec`` is
+    #                            then the best-recall config found
+    recall: float              # measured on the sample, recall@k
+    work_per_query: float      # mean candidates/query on the sample
+    qps: float                 # sample-batch QPS (CPU smoke: indicative only)
+    build_seconds: float       # measured sample build
+    predicted_build_cost: float  # work-model units at n_full (or sample n)
+    k: int
+    n_sample: int
+    trials: tuple              # every evaluated CurvePoint, sweep order
+
+    @property
+    def probe_depth(self) -> int:
+        return self.spec.probe_depth
+
+    def request(self, **overrides) -> SearchRequest:
+        """A ``SearchRequest`` reproducing the winning measurement."""
+        kw = dict(k=self.k, probe_depth=self.spec.probe_depth)
+        kw.update(overrides)
+        return SearchRequest(**kw)
+
+    def to_dict(self) -> dict:
+        """JSON-ready form (the BENCH_tune.json payload)."""
+        d = dataclasses.asdict(self)
+        d["spec"] = self.spec.to_dict()
+        d["trials"] = [t.to_dict() for t in self.trials]
+        return d
+
+
+def _default_queries(sample: jax.Array, key: jax.Array,
+                     n_queries: int) -> jax.Array:
+    """Workload stand-in when the caller has no real queries: sample rows
+    perturbed by 10%-of-data-std noise (near-neighbor queries, the ANN
+    regime the guarantee speaks to — exact-copy queries would let every
+    config score perfect recall at radius ~0)."""
+    n, d = sample.shape
+    kc, kn = jax.random.split(key)
+    nq = min(n_queries, n)
+    idx = jax.random.choice(kc, n, (nq,), replace=False)
+    noise = 0.1 * jnp.std(sample) * jax.random.normal(kn, (nq, d))
+    return sample[idx] + noise
+
+
+def suggest_params(sample, target_recall: float = 0.9, *,
+                   key: Optional[jax.Array] = None, k: int = 10,
+                   queries=None, n_queries: int = 32,
+                   Ks: Sequence[int] = DEFAULT_GRID["Ks"],
+                   Ls: Sequence[int] = DEFAULT_GRID["Ls"],
+                   betas: Sequence[Optional[float]] = DEFAULT_GRID["betas"],
+                   probe_depths: Sequence[int] = DEFAULT_GRID["probe_depths"],
+                   c: float = 1.5, Nr: int = 64, leaf_size: int = 32,
+                   max_rounds: int = 48, engine: str = "auto",
+                   n_full: Optional[int] = None, repeat: int = 1,
+                   spec_base: Optional[IndexSpec] = None) -> TuneResult:
+    """Empirically pick (K, L, beta, probe_depth) for a target recall.
+
+    ``sample`` (m, d): a representative data sample — every candidate
+    config is built on it and measured against brute-force ground truth.
+    ``queries``: real workload queries if available (else perturbed sample
+    rows stand in).  ``n_full``: the intended full dataset size, used only
+    to extrapolate ``predicted_build_cost``.  ``spec_base``: template for
+    non-swept IndexSpec fields (engine, block sizes, ...).
+
+    Returns a :class:`TuneResult`; ``result.achieved`` is False when no
+    grid config reached the target (the best-recall config is still
+    returned so callers can inspect how close the grid got).
+    """
+    from repro import api
+    from repro.baselines import BruteForce
+    from repro.eval.pareto import measure
+
+    if not 0.0 < target_recall <= 1.0:
+        raise ValueError(f"target_recall must be in (0, 1], got "
+                         f"{target_recall!r}")
+    _check_positive("k", k)
+    _check_positive("repeat", repeat)
+    Ks, Ls = tuple(Ks), tuple(Ls)
+    betas, probe_depths = tuple(betas), tuple(probe_depths)
+    if not (Ks and Ls and betas and probe_depths):
+        raise ValueError(
+            f"empty search grid: Ks={Ks} Ls={Ls} betas={betas} "
+            f"probe_depths={probe_depths} must all be non-empty")
+
+    sample = jnp.asarray(sample, jnp.float32)
+    m = sample.shape[0]
+    key = jax.random.PRNGKey(0) if key is None else key
+    kq, kb = jax.random.split(key)
+    if queries is None:
+        queries = _default_queries(sample, kq, n_queries)
+    queries = jnp.asarray(queries, jnp.float32)
+
+    bf = BruteForce.build(sample)
+    gt = bf.search(queries, SearchRequest(k=k))
+
+    base = spec_base if spec_base is not None else IndexSpec()
+    trials, metas = [], []
+    # Cheapest builds first: on ties in query work the earlier (cheaper)
+    # trial wins the final sort below.
+    for K, L, beta in sorted(
+            ((K, L, b) for K in Ks for L in Ls for b in betas),
+            key=lambda t: predicted_build_cost(m, t[0], t[1])):
+        spec = dataclasses.replace(
+            base, kind="static", K=K, L=L, c=c, beta_override=beta,
+            Nr=Nr, leaf_size=leaf_size, engine=engine, probe_depth=0)
+        t0 = time.perf_counter()
+        index = api.build(sample, kb, spec)
+        index.search(queries[:1], SearchRequest(k=k))      # build + warmup
+        t_build = time.perf_counter() - t0
+        for pd in probe_depths:
+            req = SearchRequest(k=k, max_rounds=max_rounds, probe_depth=pd)
+            label = f"K{K}-L{L}-b{beta}-p{pd}"
+            pt = measure("det-lsh", label, index, queries, gt.ids, req,
+                         build_seconds=t_build, repeat=repeat,
+                         params=dict(K=K, L=L, beta=beta, probe_depth=pd))
+            trials.append(pt)
+            metas.append((spec, pd))
+
+    ok = [i for i, p in enumerate(trials) if p.recall >= target_recall]
+    achieved = bool(ok)
+    if achieved:
+        # Least query work; ties: fewer trees, then faster measured build.
+        win = min(ok, key=lambda i: (trials[i].work_per_query,
+                                     trials[i].params["L"],
+                                     trials[i].build_seconds))
+    else:
+        win = max(range(len(trials)),
+                  key=lambda i: (trials[i].recall,
+                                 -trials[i].work_per_query))
+    spec, pd = metas[win]
+    best = trials[win]
+    chosen = dataclasses.replace(spec, probe_depth=pd)
+    n_target = n_full if n_full is not None else m
+    return TuneResult(
+        spec=chosen, target_recall=float(target_recall), achieved=achieved,
+        recall=float(best.recall), work_per_query=float(best.work_per_query),
+        qps=float(best.qps), build_seconds=float(best.build_seconds),
+        predicted_build_cost=predicted_build_cost(n_target, chosen.K,
+                                                  chosen.L),
+        k=int(k), n_sample=int(m), trials=tuple(trials))
+
+
+def tune(data, key, target_recall: float = 0.9, *,
+         sample_size: int = 4096, k: int = 10, queries=None,
+         **grid) -> tuple:
+    """target_recall -> a built, tuned index in one call.
+
+    Samples ``sample_size`` rows of ``data`` (without replacement), runs
+    :func:`suggest_params` on the sample, then builds the winning spec on
+    the *full* data.  Extra kwargs forward to ``suggest_params`` (grid
+    axes, c/Nr/leaf_size, ...).  Returns ``(index, TuneResult)``.
+    """
+    from repro import api
+
+    data = jnp.asarray(data, jnp.float32)
+    n = data.shape[0]
+    _check_positive("sample_size", sample_size)
+    ks, kt, kbuild = jax.random.split(key, 3)
+    if sample_size < n:
+        idx = jax.random.choice(ks, n, (sample_size,), replace=False)
+        sample = data[idx]
+    else:
+        sample = data
+    result = suggest_params(sample, target_recall, key=kt, k=k,
+                            queries=queries, n_full=n, **grid)
+    index = api.build(data, kbuild, result.spec)
+    return index, result

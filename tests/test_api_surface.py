@@ -23,21 +23,22 @@ EXPECTED_API_EXPORTS = {
     "SearchRequest", "SearchResult", "SearchStats",
     "Rejected",
     "EngineSpec", "register_engine", "resolve_engine", "available_engines",
-    "get_engine", "build", "load", "save",
+    "get_engine", "build", "tune", "suggest_params", "TuneResult",
+    "load", "save",
     "SnapshotFormatError", "FORMAT_VERSION",
 }
 
 # Field ORDER is part of the surface (positional construction).
 EXPECTED_SEARCH_REQUEST_FIELDS = (
     "k", "r_min", "M", "mode", "engine", "n_active", "max_rounds",
-    "dist_impl", "bounds_impl", "deadline",
+    "dist_impl", "bounds_impl", "deadline", "probe_depth",
 )
 
 EXPECTED_INDEX_SPEC_FIELDS = (
     "kind", "K", "L", "c", "beta_override", "Nr", "leaf_size",
     "breakpoint_method", "project_impl", "encode_impl", "engine",
     "block_q", "block_l", "delta_capacity", "max_segments", "id_capacity",
-    "placement", "build_impl", "build_chunk",
+    "placement", "build_impl", "build_chunk", "probe_depth",
 )
 
 EXPECTED_PLACEMENT_SPEC_FIELDS = ("mesh_shape", "mesh_axes", "data_axes")
@@ -46,6 +47,7 @@ EXPECTED_PLACEMENT_SPEC_FIELDS = ("mesh_shape", "mesh_axes", "data_axes")
 EXPECTED_SEARCH_STATS_FIELDS = (
     "engine", "r_min", "r_min_cached", "rounds", "n_candidates", "final_r",
     "shard_candidates", "psum_rounds", "merge_size", "degraded",
+    "probed_leaves", "probe_candidates",
 )
 
 EXPECTED_PROTOCOL_MEMBERS = {
@@ -67,13 +69,17 @@ def test_api_exports_snapshot():
 def test_top_level_exports_snapshot():
     assert set(repro.__all__) == {"__version__", "api", "DETLSH",
                                   "StreamingDETLSH", "derive_params",
-                                  "decode", "KVCacheIndex"}
+                                  "decode", "KVCacheIndex", "tune",
+                                  "suggest_params", "TuneResult"}
     assert repro.DETLSH is not None
     assert repro.StreamingDETLSH is not None
     assert callable(repro.derive_params)
     assert repro.api.load is not None
     assert repro.KVCacheIndex is not None          # decode pillar (§10)
     assert repro.decode.LSHDecoder is not None
+    assert callable(repro.suggest_params)          # tune pillar (§11)
+    assert repro.TuneResult is repro.tune.TuneResult
+    assert repro.api.tune is repro.tune.tune
 
 
 def test_search_request_fields_snapshot():

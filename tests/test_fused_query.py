@@ -99,16 +99,20 @@ def test_fused_batch_sizes_and_jit(built):
 
 def test_strict_mode_falls_back_to_vmap(built):
     """mode='strict' (unoptimized Alg. 3) is not expressible by the fused
-    kernel's leaf-granular admission; the dispatcher must route it to the
-    vmap engine regardless of cfg.engine."""
-    from repro.core.query import _pick_engine
-    assert _pick_engine(QueryConfig(mode="strict", engine="fused")) == "vmap"
-    assert _pick_engine(QueryConfig(mode="leaf", engine="auto")) == "fused"
-    assert _pick_engine(QueryConfig(mode="leaf", engine="vmap")) == "vmap"
+    kernel's leaf-granular admission; the registry must route it to the
+    vmap engine regardless of the requested engine.  (Engine selection has
+    exactly one home — ``repro.api.registry.resolve_engine``; the old
+    ``core.query._pick_engine`` shim is gone.)"""
+    from repro.api.registry import resolve_engine
+    assert not hasattr(__import__("repro.core.query", fromlist=[""]),
+                       "_pick_engine")
+    assert resolve_engine("fused", mode="strict") == "vmap"
+    assert resolve_engine("auto", mode="leaf") == "fused"
+    assert resolve_engine("vmap", mode="leaf") == "vmap"
     # auto is batch-size aware: tiny batches take the per-query path, but an
     # explicit engine='fused' is honored at any batch size.
-    assert _pick_engine(QueryConfig(engine="auto"), batch=1) == "vmap"
-    assert _pick_engine(QueryConfig(engine="auto"), batch=32) == "fused"
-    assert _pick_engine(QueryConfig(engine="fused"), batch=1) == "fused"
+    assert resolve_engine("auto", batch=1) == "vmap"
+    assert resolve_engine("auto", batch=32) == "fused"
+    assert resolve_engine("fused", batch=1) == "fused"
     with pytest.raises(ValueError):
-        _pick_engine(QueryConfig(engine="warp"))
+        resolve_engine("warp")

@@ -216,6 +216,93 @@ def test_range_rerank_admission_semantics(rng):
 
 
 # ---------------------------------------------------------------------------
+# range_rerank: multi-probe (per-(tree, lane) admission radii + probe ranking)
+# ---------------------------------------------------------------------------
+
+def test_range_rerank_per_tree_radii_match_ref(rng):
+    """2-D r_eff (L, B) — the form the fused engine passes after probe
+    widening — takes the same padding/kernel path as the broadcast 1-D
+    radii and matches the oracle."""
+    L, B, K, nl, ls, d, E = 3, 5, 4, 10, 8, 24, 9
+    q, qp, r, lo, hi, lv, bp, pts, pv = _range_rerank_inputs(
+        rng, L, B, K, nl, ls, d, E)
+    r2 = jnp.broadcast_to(r, (L, B)) + jnp.asarray(
+        np.abs(rng.standard_normal((L, B))).astype(np.float32))
+    r2 = jnp.where(r[None, :] < 0, -1.0, r2)       # keep done lanes done
+    got = ops.range_rerank(q, qp, r2, lo, hi, lv, bp, pts, pv,
+                           leaf_size=ls, interpret=True)
+    want = ref.range_rerank(q, qp, r2, lo, hi, lv, bp, pts, pv,
+                            leaf_size=ls)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5,
+                               atol=1e-5)
+    # per-(tree, lane) radii really differentiate trees: same lane, larger
+    # radius on one tree must admit a superset of the smaller-radius tree
+    base = ops.range_rerank(q, qp, jnp.broadcast_to(r, (L, B)), lo, hi, lv,
+                            bp, pts, pv, leaf_size=ls, interpret=True)
+    assert (np.isfinite(np.asarray(base)) <= np.isfinite(np.asarray(got))
+            ).all()
+
+
+@pytest.mark.parametrize("probe_depth", [1, 3, 16])   # 16 > nl: clamps
+def test_range_rerank_probe_matches_ref(rng, probe_depth):
+    L, B, K, nl, ls, d, E = 2, 5, 4, 12, 8, 16, 9
+    args = _range_rerank_inputs(rng, L, B, K, nl, ls, d, E)
+    got = ops.range_rerank(*args, leaf_size=ls, probe_depth=probe_depth,
+                           interpret=True)
+    want = ref.range_rerank(*args, leaf_size=ls, probe_depth=probe_depth)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_range_rerank_probe_admission_semantics(rng):
+    """probe_depth admits exactly the leaves within the widened radii
+    r_adm = max(r, depth-th smallest outside LB): a superset of the
+    probe_depth=0 admission, >= min(depth, n_outside) extra leaves per
+    active (tree, lane) (ties admit more), and nothing on done lanes."""
+    L, B, K, nl, ls, d, E = 2, 4, 4, 12, 8, 16, 9
+    depth = 3
+    q, qp, r, lo, hi, lv, bp, pts, pv = _range_rerank_inputs(
+        rng, L, B, K, nl, ls, d, E)
+    out0 = np.asarray(ops.range_rerank(q, qp, r, lo, hi, lv, bp, pts, pv,
+                                       leaf_size=ls, interpret=True))
+    outp = np.asarray(ops.range_rerank(q, qp, r, lo, hi, lv, bp, pts, pv,
+                                       leaf_size=ls, probe_depth=depth,
+                                       interpret=True))
+    assert (np.isfinite(out0) <= np.isfinite(outp)).all()   # superset
+    np.testing.assert_allclose(outp[np.isfinite(out0)],
+                               out0[np.isfinite(out0)], rtol=1e-5, atol=1e-5)
+
+    lb = np.asarray(ref.forest_leaf_lb(qp, lo, hi, lv, bp))
+    r_adm, probe_mask = ref.probe_radii_from_lb(lb, r, depth)
+    r_adm, probe_mask = np.asarray(r_adm), np.asarray(probe_mask)
+    rr = np.asarray(r)
+    for l in range(L):
+        # finite entries == points of valid leaves with LB <= widened radius
+        admit = (lb[l] <= r_adm[l][:, None]) & np.asarray(lv[l])[None]
+        admit &= (rr >= 0)[:, None]
+        admit_pts = np.repeat(admit, ls, axis=1) & np.asarray(pv[l])[None]
+        np.testing.assert_array_equal(np.isfinite(outp[l]), admit_pts)
+        for b in range(B):
+            outside = (lb[l, b] > rr[b]) & np.isfinite(lb[l, b])
+            if rr[b] < 0:
+                assert probe_mask[l, b].sum() == 0
+            else:
+                assert probe_mask[l, b].sum() >= min(depth, outside.sum())
+    assert not np.isfinite(outp[:, 0]).any()   # the r=-1 lane stays silent
+
+
+def test_probe_depth_zero_is_identical(rng):
+    """probe_depth=0 must be bit-identical to the unprobed kernel — it is
+    the same call (the widening pre-pass is skipped entirely)."""
+    L, B, K, nl, ls, d, E = 2, 8, 4, 16, 8, 32, 17
+    args = _range_rerank_inputs(rng, L, B, K, nl, ls, d, E)
+    a = np.asarray(ops.range_rerank(*args, leaf_size=ls, interpret=True))
+    b = np.asarray(ops.range_rerank(*args, leaf_size=ls, probe_depth=0,
+                                    interpret=True))
+    np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
 # flash_attention
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,222 @@
+"""Multi-probe DE-Tree queries (probe_depth; docs/DESIGN.md §11).
+
+Contracts under test:
+
+  * probe_depth=0 is bit-identical to the unprobed engines — on both the
+    fused and the vmap path, an explicit probe_depth=0 request produces
+    byte-for-byte the results of a request without the field (property-
+    tested across data seeds and engine configs);
+  * at a fixed radius the probe admission is *nested*: candidates, recall,
+    and the returned k-th distance are monotone in probe_depth;
+  * SearchStats reports the probe counters (zero without probing, positive
+    with it, probe_candidates <= n_candidates);
+  * IndexSpec.probe_depth is the index's search-time default, overridden
+    per-request by SearchRequest.probe_depth;
+  * mode='strict' rejects probing eagerly (QueryConfig and SearchRequest);
+  * engine='pdet' cannot probe (per-shard slack ranking would break the
+    device-count-invariance contract) — explicit pdet raises, auto falls
+    back to the fused engine;
+  * the streaming index probes across segments and merges the counters.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro
+from repro.api import IndexSpec, PlacementSpec, SearchRequest
+from repro.core import DETLSH, derive_params, estimate_r_min
+from repro.core.query import QueryConfig, knn_query_batch
+from tests.conftest import brute_force_knn, make_clustered
+
+
+@pytest.fixture(scope="module")
+def built():
+    rng = np.random.default_rng(11)
+    data = make_clustered(rng, 4096, 24)
+    queries = make_clustered(rng, 12, 24)
+    p = derive_params(K=4, c=1.5, L=4, beta_override=0.1)
+    idx = DETLSH.build(jnp.asarray(data), jax.random.key(5), p, leaf_size=32)
+    r0 = estimate_r_min(idx.data, jnp.asarray(queries), 10, p.c)
+    return idx, data, queries, r0
+
+
+def _run(idx, queries, r0, engine, probe_depth, **kw):
+    cfg = QueryConfig(k=10, M=8, r_min=r0, engine=engine,
+                      probe_depth=probe_depth, **kw)
+    return knn_query_batch(idx.data, idx.forest, idx.A, idx.params,
+                           jnp.asarray(queries), cfg)
+
+
+def _identical(a, b):
+    np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+    np.testing.assert_array_equal(np.asarray(a.dists), np.asarray(b.dists))
+    np.testing.assert_array_equal(np.asarray(a.rounds), np.asarray(b.rounds))
+    np.testing.assert_array_equal(np.asarray(a.n_candidates),
+                                  np.asarray(b.n_candidates))
+    np.testing.assert_array_equal(np.asarray(a.final_r),
+                                  np.asarray(b.final_r))
+
+
+@pytest.mark.parametrize("engine", ["fused", "vmap"])
+def test_probe_depth_zero_bit_identical(built, engine):
+    idx, data, queries, r0 = built
+    base = knn_query_batch(idx.data, idx.forest, idx.A, idx.params,
+                           jnp.asarray(queries),
+                           QueryConfig(k=10, M=8, r_min=r0, engine=engine))
+    probed = _run(idx, queries, r0, engine, 0)
+    _identical(base, probed)
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 10 ** 6), st.sampled_from(["fused", "vmap"]),
+       st.sampled_from([2, 4]))
+def test_property_probe_zero_identity_and_superset(seed, engine, L):
+    """Across data seeds, engines, and forest sizes: probe_depth=0 ==
+    no-probe bitwise, and probe_depth>0 only adds candidates."""
+    rng = np.random.default_rng(seed)
+    data = make_clustered(rng, 1024, 12)
+    queries = make_clustered(rng, 8, 12)
+    p = derive_params(K=4, c=1.5, L=L, beta_override=0.1)
+    idx = DETLSH.build(jnp.asarray(data), jax.random.key(seed % 997), p,
+                       leaf_size=16)
+    r0 = estimate_r_min(idx.data, jnp.asarray(queries), 5, p.c)
+    base = knn_query_batch(idx.data, idx.forest, idx.A, idx.params,
+                           jnp.asarray(queries),
+                           QueryConfig(k=5, M=8, r_min=r0, engine=engine))
+    zero = knn_query_batch(idx.data, idx.forest, idx.A, idx.params,
+                           jnp.asarray(queries),
+                           QueryConfig(k=5, M=8, r_min=r0, engine=engine,
+                                       probe_depth=0))
+    _identical(base, zero)
+    # fixed radius: probing admits a superset per round
+    more = knn_query_batch(idx.data, idx.forest, idx.A, idx.params,
+                           jnp.asarray(queries),
+                           QueryConfig(k=5, M=8, r_min=r0, engine=engine,
+                                       probe_depth=3, max_rounds=1))
+    one = knn_query_batch(idx.data, idx.forest, idx.A, idx.params,
+                          jnp.asarray(queries),
+                          QueryConfig(k=5, M=8, r_min=r0, engine=engine,
+                                      max_rounds=1))
+    assert np.all(np.asarray(more.n_candidates)
+                  >= np.asarray(one.n_candidates))
+
+
+@pytest.mark.parametrize("engine", ["fused", "vmap"])
+def test_recall_monotone_in_probe_depth_at_fixed_radius(built, engine):
+    """At fixed (K, L, r) — explicit r_min, one round — the candidate sets
+    are nested in probe_depth, so candidates/recall/k-th distance are all
+    monotone.  (Across early-terminating multi-round runs the radius
+    schedules differ, so only the fixed-radius form is a theorem.)"""
+    idx, data, queries, r0 = built
+    k = 10
+    gt_i, _ = brute_force_knn(data, queries, k)
+    prev_cand = None
+    prev_recall = -1.0
+    prev_kth = None
+    for pd in (0, 1, 2, 4, 8):
+        res = _run(idx, queries, r0, engine, pd, max_rounds=1)
+        cand = np.asarray(res.n_candidates)
+        ids = np.asarray(res.ids)
+        recall = np.mean([len(set(ids[i]) & set(gt_i[i])) / k
+                          for i in range(len(queries))])
+        kth = np.asarray(res.dists)[:, -1]
+        if prev_cand is not None:
+            assert np.all(cand >= prev_cand), (engine, pd)
+            assert recall >= prev_recall - 1e-12, (engine, pd)
+            assert np.all(kth <= prev_kth + 1e-5), (engine, pd)
+        prev_cand, prev_recall, prev_kth = cand, recall, kth
+    assert prev_cand is not None and np.all(
+        prev_cand >= np.asarray(_run(idx, queries, r0, engine, 0,
+                                     max_rounds=1).n_candidates))
+
+
+@pytest.mark.parametrize("engine", ["fused", "vmap"])
+def test_probe_counters(built, engine):
+    idx, data, queries, r0 = built
+    res0 = _run(idx, queries, r0, engine, 0, max_rounds=1)
+    resp = _run(idx, queries, r0, engine, 4, max_rounds=1)
+    assert np.all(np.asarray(res0.probed_leaves) == 0)
+    assert np.all(np.asarray(res0.probe_candidates) == 0)
+    assert np.asarray(resp.probed_leaves).sum() > 0
+    # probe_candidates counts per-tree probe admissions (work done), while
+    # n_candidates dedups across trees — so the unique extra candidates vs
+    # the unprobed run are a lower bound on the probe work counter.
+    extra = (np.asarray(resp.n_candidates) - np.asarray(res0.n_candidates))
+    assert np.all(extra >= 0)
+    assert np.all(np.asarray(resp.probe_candidates) >= extra)
+
+
+def test_spec_default_and_request_override(tmp_path):
+    rng = np.random.default_rng(3)
+    data = jnp.asarray(make_clustered(rng, 2048, 16))
+    queries = jnp.asarray(make_clustered(rng, 10, 16))
+    spec = IndexSpec(kind="static", K=4, L=3, c=1.5, beta_override=0.1,
+                     leaf_size=32, probe_depth=3)
+    index = repro.api.build(data, jax.random.key(0), spec)
+    # plain request inherits the spec's probe default
+    res = index.search(queries, SearchRequest(k=5))
+    assert np.asarray(res.stats.probed_leaves).sum() > 0
+    # request override wins — probe_depth=0 disables probing
+    res0 = index.search(queries, SearchRequest(k=5, probe_depth=0))
+    assert np.all(np.asarray(res0.stats.probed_leaves) == 0)
+    # and the spec (with its default) round-trips through snapshots
+    index.save(tmp_path / "probed")
+    loaded = repro.api.load(tmp_path / "probed")
+    res2 = loaded.search(queries, SearchRequest(k=5))
+    assert np.asarray(res2.stats.probed_leaves).sum() > 0
+    np.testing.assert_array_equal(np.asarray(res.ids), np.asarray(res2.ids))
+
+
+def test_strict_mode_rejects_probing():
+    with pytest.raises(ValueError, match="strict"):
+        QueryConfig(k=5, probe_depth=2, mode="strict")
+    with pytest.raises(ValueError, match="strict"):
+        SearchRequest(k=5, probe_depth=2, mode="strict")
+    with pytest.raises(ValueError):
+        SearchRequest(k=5, probe_depth=-1)
+    with pytest.raises(ValueError):
+        IndexSpec(probe_depth=-1)
+    # a strict request on an index whose spec defaults to probing must not
+    # inherit the default (strict lowers it to 0), not raise
+    req = SearchRequest(k=5, mode="strict")
+    cfg = req.to_query_config(r_min=1.0, default_probe_depth=3)
+    assert cfg.probe_depth == 0 and cfg.mode == "strict"
+
+
+def test_pdet_rejects_probe_and_auto_falls_back():
+    rng = np.random.default_rng(9)
+    data = jnp.asarray(make_clustered(rng, 2048, 16))
+    queries = jnp.asarray(make_clustered(rng, 10, 16))
+    spec = IndexSpec(kind="static", K=4, L=3, c=1.5, beta_override=0.1,
+                     leaf_size=32, placement=PlacementSpec())
+    index = repro.api.build(data, jax.random.key(0), spec)
+    with pytest.raises(NotImplementedError, match="probe"):
+        index.search(queries, SearchRequest(k=5, engine="pdet",
+                                            probe_depth=2))
+    # unspecified engine (auto-resolves to pdet on a mesh) + probing:
+    # falls back to the fused engine instead of failing
+    res = index.search(queries, SearchRequest(k=5, probe_depth=2))
+    assert res.stats.engine == "fused"
+    assert np.asarray(res.stats.probed_leaves).sum() > 0
+    # and stays pdet (bit-identity contract intact) without probing
+    res0 = index.search(queries, SearchRequest(k=5))
+    assert res0.stats.engine == "pdet"
+
+
+def test_streaming_probe_merges_counters():
+    rng = np.random.default_rng(21)
+    data = jnp.asarray(make_clustered(rng, 3072, 16))
+    queries = jnp.asarray(make_clustered(rng, 10, 16))
+    spec = IndexSpec(kind="streaming", K=4, L=3, c=1.5, beta_override=0.1,
+                     leaf_size=32, probe_depth=2)
+    index = repro.api.build(data[:2048], jax.random.key(0), spec)
+    index.upsert(data[2048:])                            # second segment
+    res = index.search(queries, SearchRequest(k=5))
+    assert np.asarray(res.stats.probed_leaves).sum() > 0
+    res0 = index.search(queries, SearchRequest(k=5, probe_depth=0))
+    assert np.all(np.asarray(res0.stats.probed_leaves) == 0)
+    assert np.all(np.asarray(res.stats.n_candidates)
+                  >= np.asarray(res0.stats.n_candidates))

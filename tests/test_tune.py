@@ -1,0 +1,138 @@
+"""repro.tune: the recall-targeted auto-tuner (docs/DESIGN.md §11).
+
+Contracts under test:
+
+  * ``suggest_params`` returns a ``TuneResult`` whose spec is a plain,
+    buildable ``IndexSpec`` with the winning probe depth baked in, whose
+    trials are ``repro.eval.pareto.CurvePoint``s (one per grid config x
+    probe depth, probe depths sharing a build), and whose selection is
+    the least-work trial among those meeting the target;
+  * ``achieved`` is honest: True implies the winner's measured recall met
+    the target, False returns the best-recall config anyway;
+  * ``TuneResult.request()`` reproduces the winning measurement and
+    ``to_dict()`` is JSON-clean (the BENCH_tune.json payload);
+  * ``repro.tune.tune`` (also exported as ``repro.api.tune``) goes
+    target_recall -> built full-size index in one call;
+  * the grid and targets validate eagerly.
+"""
+
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.api import SearchRequest
+from repro.eval.pareto import CurvePoint
+from repro.tune import (DEFAULT_GRID, TuneResult, predicted_build_cost,
+                        suggest_params, tune)
+from tests.conftest import make_clustered
+
+GRID = dict(Ks=(4,), Ls=(2, 3), betas=(0.1,), probe_depths=(0, 2))
+
+
+@pytest.fixture(scope="module")
+def tuned():
+    rng = np.random.default_rng(17)
+    sample = jnp.asarray(make_clustered(rng, 1024, 16))
+    result = suggest_params(sample, 0.7, key=jax.random.PRNGKey(2), k=5,
+                            n_queries=16, max_rounds=32, repeat=1, **GRID)
+    return sample, result
+
+
+def test_suggest_params_result_shape(tuned):
+    sample, result = tuned
+    assert isinstance(result, TuneResult)
+    assert len(result.trials) == 2 * 2          # (Ls) x (probe_depths)
+    assert all(isinstance(t, CurvePoint) for t in result.trials)
+    assert {(t.params["L"], t.probe_depth) for t in result.trials} \
+        == {(L, pd) for L in GRID["Ls"] for pd in GRID["probe_depths"]}
+    assert 0.0 <= result.recall <= 1.0
+    assert result.work_per_query > 0
+    assert result.n_sample == 1024 and result.k == 5
+    assert result.spec.L in GRID["Ls"]
+    assert result.spec.probe_depth in GRID["probe_depths"]
+    assert result.probe_depth == result.spec.probe_depth
+
+
+def test_selection_is_least_work_meeting_target(tuned):
+    _, result = tuned
+    ok = [t for t in result.trials if t.recall >= result.target_recall]
+    if result.achieved:
+        assert result.recall >= result.target_recall
+        assert ok and result.work_per_query == min(t.work_per_query
+                                                   for t in ok)
+    else:
+        assert not ok
+        assert result.recall == max(t.recall for t in result.trials)
+
+
+def test_spec_is_buildable_and_request_reproduces(tuned):
+    sample, result = tuned
+    index = repro.api.build(sample, jax.random.PRNGKey(7), result.spec)
+    req = result.request()
+    assert req.k == result.k
+    assert req.probe_depth == result.spec.probe_depth
+    res = index.search(sample[:8], req)
+    assert np.asarray(res.ids).shape == (8, result.k)
+    # request(**overrides) forwards
+    assert result.request(k=3).k == 3
+
+
+def test_to_dict_is_json_clean(tuned):
+    _, result = tuned
+    d = result.to_dict()
+    blob = json.loads(json.dumps(d))
+    assert blob["spec"]["probe_depth"] == result.spec.probe_depth
+    assert len(blob["trials"]) == len(result.trials)
+    assert blob["achieved"] == result.achieved
+
+
+def test_predicted_build_cost_model():
+    # linear in L, increasing in K and n
+    assert predicted_build_cost(1000, 4, 8) == 2 * predicted_build_cost(
+        1000, 4, 4)
+    assert predicted_build_cost(1000, 8, 4) > predicted_build_cost(1000, 4, 4)
+    assert predicted_build_cost(2000, 4, 4) > predicted_build_cost(1000, 4, 4)
+
+
+def test_validation():
+    sample = jnp.zeros((32, 4))
+    with pytest.raises(ValueError, match="target_recall"):
+        suggest_params(sample, 0.0)
+    with pytest.raises(ValueError, match="target_recall"):
+        suggest_params(sample, 1.5)
+    with pytest.raises(ValueError, match="grid"):
+        suggest_params(sample, 0.9, Ls=())
+    with pytest.raises(ValueError):
+        suggest_params(sample, 0.9, k=0)
+    assert "Ks" in DEFAULT_GRID and DEFAULT_GRID["probe_depths"][0] == 0
+
+
+def test_tune_builds_full_index():
+    rng = np.random.default_rng(23)
+    data = jnp.asarray(make_clustered(rng, 2048, 16))
+    index, result = tune(data, jax.random.PRNGKey(4), 0.7, sample_size=512,
+                         k=5, max_rounds=32, repeat=1, **GRID)
+    assert index.n_points == 2048            # built on the FULL data
+    assert result.n_sample == 512            # tuned on the sample
+    # predicted cost extrapolates to the full n, not the sample
+    assert result.predicted_build_cost == predicted_build_cost(
+        2048, result.spec.K, result.spec.L)
+    res = index.search(data[:8], result.request())
+    assert np.asarray(res.ids).shape == (8, 5)
+    assert repro.api.tune is tune            # the api-surface alias
+
+
+def test_probe_depths_share_a_build(tuned):
+    """Trials at the same (K, L, beta) report the same build_seconds —
+    the build is done once and every probe depth is a request-time knob."""
+    _, result = tuned
+    by_cfg = {}
+    for t in result.trials:
+        by_cfg.setdefault((t.params["K"], t.params["L"], t.params["beta"]),
+                          set()).add(t.build_seconds)
+    assert all(len(v) == 1 for v in by_cfg.values())
