@@ -1,0 +1,38 @@
+"""jaxlint: trace-safety & bit-identity static analysis for this repo.
+
+Run ``python -m repro.analysis src/ tests/`` (exit 0 = clean) or use the
+library surface::
+
+    from repro.analysis import load_project, run_rules, ALL_RULES
+    report = run_rules(load_project(["src"]), ALL_RULES)
+
+See docs/DESIGN.md §12 for the invariant-to-rule table, the suppression
+policy, and how to add a rule.
+"""
+
+from __future__ import annotations
+
+from repro.analysis.engine import (FIXTURE_SENTINEL, SEVERITY_ERROR,
+                                   SEVERITY_WARNING, Finding, Project,
+                                   Report, Rule, SourceFile, Suppression,
+                                   format_human, format_json, load_project,
+                                   main, run_rules)
+from repro.analysis.rules import ALL_RULES
+
+__all__ = [
+    "ALL_RULES",
+    "FIXTURE_SENTINEL",
+    "Finding",
+    "Project",
+    "Report",
+    "Rule",
+    "SEVERITY_ERROR",
+    "SEVERITY_WARNING",
+    "SourceFile",
+    "Suppression",
+    "format_human",
+    "format_json",
+    "load_project",
+    "main",
+    "run_rules",
+]

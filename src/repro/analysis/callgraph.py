@@ -1,0 +1,403 @@
+"""Trace-region call graph for jaxlint (docs/DESIGN.md §12).
+
+Builds an over-approximate "reachable from a trace entry" set over every
+function in the project.  Trace entries are
+
+  * functions decorated with ``jax.jit`` (directly or through
+    ``functools.partial(jax.jit, ...)``), ``jax.vmap``, ``shard_map`` or any
+    other decorator whose terminal name is in :data:`TRACE_ENTRY_NAMES`;
+  * functions *passed to* a trace-entry call — ``jax.jit(f)``,
+    ``pl.pallas_call(kernel, ...)``, ``shard_map(f, ...)``,
+    ``jax.lax.while_loop(cond, body, ...)``, ``jax.vmap(f)``, … — including
+    nested (closure) functions, lambdas referencing known functions, and the
+    ``fn = functools.partial(known_fn, ...); jax.vmap(fn)`` idiom.
+
+Anything a reachable function references (call or bare function reference —
+references are traced when the value is later called) is reachable too.
+Nested ``def``s are indexed as their own nodes (``module.outer.<locals>.f``)
+so a host-side driver whose *loop bodies* are traced contributes only those
+bodies to the trace region, not its own host statements.
+
+Name resolution is intra-repo only and purely syntactic: module aliases from
+``import``/``from .. import`` tables (collected at any nesting depth — the
+repo imports kernels function-locally), ``self.method`` within a class, and
+module-level names.  Unresolvable references (third-party calls, closure
+variables) contribute no edges.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Iterator, Optional, Union
+
+from repro.analysis.engine import Project, SourceFile
+
+FunctionNode = Union[ast.FunctionDef, ast.AsyncFunctionDef]
+
+#: Terminal attribute/function names whose call arguments enter a trace.
+TRACE_ENTRY_NAMES = frozenset({
+    "jit", "pallas_call", "shard_map", "vmap", "pmap", "grad",
+    "value_and_grad", "while_loop", "fori_loop", "scan", "cond", "switch",
+    "checkpoint", "remat", "custom_jvp", "custom_vjp", "named_call",
+})
+
+#: Decorator terminal names that make the decorated function itself a seed.
+TRACE_DECORATOR_NAMES = frozenset({
+    "jit", "vmap", "pmap", "shard_map", "custom_jvp", "custom_vjp",
+    "checkpoint", "remat",
+})
+
+
+def dotted_parts(node: ast.AST) -> Optional[list[str]]:
+    """``a.b.c`` -> ["a", "b", "c"]; None for non-Name-rooted chains."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return parts[::-1]
+    return None
+
+
+def terminal_name(node: ast.AST) -> Optional[str]:
+    """Last component of a Name/Attribute chain (``jax.lax.scan`` -> scan)."""
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+@dataclasses.dataclass
+class FunctionInfo:
+    """One function (module-level, method, or nested def)."""
+
+    qualname: str
+    module: str
+    file: SourceFile
+    node: FunctionNode
+    cls: Optional[str] = None
+    parent: Optional[str] = None          # enclosing function qualname
+    static_params: frozenset[str] = frozenset()
+    # Local named nested defs: name -> qualname.
+    nested: dict[str, str] = dataclasses.field(default_factory=dict)
+
+
+class ModuleIndex:
+    """Per-module symbol tables: imports, functions, classes."""
+
+    def __init__(self, file: SourceFile) -> None:
+        self.file = file
+        self.name = file.module or file.rel
+        self.import_modules: dict[str, str] = {}      # alias -> dotted module
+        self.import_symbols: dict[str, tuple[str, str]] = {}  # alias->(mod, a)
+        self.functions: dict[str, FunctionInfo] = {}  # local key -> info
+        self.classes: set[str] = set()
+        if file.tree is not None:
+            self._index(file.tree)
+
+    def _index(self, tree: ast.Module) -> None:
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    local = alias.asname or alias.name.split(".")[0]
+                    target = alias.name if alias.asname else \
+                        alias.name.split(".")[0]
+                    self.import_modules[local] = target
+            elif isinstance(node, ast.ImportFrom):
+                if node.level:      # relative imports: not used in-tree
+                    continue
+                base = node.module or ""
+                for alias in node.names:
+                    local = alias.asname or alias.name
+                    self.import_symbols[local] = (base, alias.name)
+        for stmt in tree.body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._add_function(stmt, cls=None, parent=None)
+            elif isinstance(stmt, ast.ClassDef):
+                self.classes.add(stmt.name)
+                for sub in stmt.body:
+                    if isinstance(sub, (ast.FunctionDef,
+                                        ast.AsyncFunctionDef)):
+                        self._add_function(sub, cls=stmt.name, parent=None)
+
+    def _add_function(self, node: FunctionNode, cls: Optional[str],
+                      parent: Optional[str]) -> FunctionInfo:
+        if parent is not None:
+            qual = f"{parent}.<locals>.{node.name}"
+            local_key = qual.split(f"{self.name}.", 1)[-1]
+        elif cls is not None:
+            qual = f"{self.name}.{cls}.{node.name}"
+            local_key = f"{cls}.{node.name}"
+        else:
+            qual = f"{self.name}.{node.name}"
+            local_key = node.name
+        info = FunctionInfo(qualname=qual, module=self.name, file=self.file,
+                            node=node, cls=cls, parent=parent,
+                            static_params=_static_params(node))
+        self.functions[local_key] = info
+        # Index named nested defs (one level of nesting is what the repo
+        # uses: while_loop/vmap bodies defined inside the driver).
+        for sub in ast.walk(node):
+            if sub is node:
+                continue
+            if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                owner = _enclosing_function(node, sub)
+                if owner is node:
+                    child = self._add_function(sub, cls=cls, parent=qual)
+                    info.nested[sub.name] = child.qualname
+        return info
+
+
+def _enclosing_function(root: FunctionNode,
+                        target: FunctionNode) -> Optional[FunctionNode]:
+    """Innermost function of ``root``'s subtree that directly encloses
+    ``target`` (root itself when target is directly nested)."""
+    found: list[FunctionNode] = []
+
+    def visit(node: ast.AST, owner: FunctionNode) -> None:
+        for child in ast.iter_child_nodes(node):
+            if child is target:
+                found.append(owner)
+                return
+            next_owner = owner
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                next_owner = child
+            visit(child, next_owner)
+
+    visit(root, root)
+    return found[0] if found else None
+
+
+def _static_params(node: FunctionNode) -> frozenset[str]:
+    """Parameter names declared static via ``jax.jit(static_argnames=...)``
+    style decorators."""
+    names: set[str] = set()
+    for dec in node.decorator_list:
+        if isinstance(dec, ast.Call):
+            for kw in dec.keywords:
+                if kw.arg == "static_argnames":
+                    names.update(_string_values(kw.value))
+    return frozenset(names)
+
+
+def _string_values(node: ast.AST) -> Iterator[str]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        yield node.value
+    elif isinstance(node, (ast.Tuple, ast.List)):
+        for e in node.elts:
+            yield from _string_values(e)
+
+
+class CallGraph:
+    """Project-wide function index + jit-reachability."""
+
+    def __init__(self) -> None:
+        self.modules: dict[str, ModuleIndex] = {}
+        self.functions: dict[str, FunctionInfo] = {}
+        self.edges: dict[str, set[str]] = {}
+        self.seeds: dict[str, str] = {}          # qualname -> reason
+        self.reachable: dict[str, str] = {}      # qualname -> seed qualname
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def build(cls, project: Project) -> "CallGraph":
+        cg = cls()
+        for f in project.files:
+            mi = ModuleIndex(f)
+            cg.modules[mi.name] = mi
+            for info in mi.functions.values():
+                cg.functions[info.qualname] = info
+        for mi in cg.modules.values():
+            cg._scan_module(mi)
+        cg._propagate()
+        return cg
+
+    def _scan_module(self, mi: ModuleIndex) -> None:
+        if mi.file.tree is None:
+            return
+        for info in mi.functions.values():
+            self._scan_function(mi, info)
+            for dec in info.node.decorator_list:
+                if self._is_trace_decorator(dec):
+                    self.seeds.setdefault(
+                        info.qualname,
+                        f"decorated trace entry at {mi.file.rel}:"
+                        f"{info.node.lineno}")
+        # Module-level trace-entry calls (e.g. ``f = jax.jit(g)``).
+        for node in ast.walk(mi.file.tree):
+            if isinstance(node, ast.Call):
+                self._scan_trace_entry_call(mi, node, owner=None,
+                                            local_refs={})
+
+    @staticmethod
+    def _is_trace_decorator(dec: ast.AST) -> bool:
+        for node in ast.walk(dec):
+            name = terminal_name(node)
+            if name in TRACE_DECORATOR_NAMES:
+                return True
+        return False
+
+    def _scan_function(self, mi: ModuleIndex, info: FunctionInfo) -> None:
+        """Collect reference edges and trace-entry seeds for one function.
+
+        The scan covers the function's own statements only — nested defs are
+        separate nodes reached through their own references/seeds."""
+        refs: set[str] = set()
+        # local name -> known functions referenced in its assignment RHS
+        # (catches ``fn = functools.partial(knn_query, ...)``).
+        local_refs: dict[str, set[str]] = {}
+
+        for node in self._own_nodes(info.node):
+            if isinstance(node, ast.Assign):
+                targets = [t.id for t in node.targets
+                           if isinstance(t, ast.Name)]
+                if targets:
+                    rhs = set(self._known_refs(mi, info, node.value))
+                    for t in targets:
+                        local_refs.setdefault(t, set()).update(rhs)
+            if isinstance(node, (ast.Name, ast.Attribute)):
+                q = self._resolve(mi, info, node)
+                if q is not None:
+                    refs.add(q)
+            if isinstance(node, ast.Call):
+                self._scan_trace_entry_call(mi, node, owner=info,
+                                            local_refs=local_refs)
+        self.edges[info.qualname] = refs
+
+    def _own_nodes(self, fn: FunctionNode) -> Iterator[ast.AST]:
+        """Walk a function's body, excluding nested named-def subtrees."""
+        stack: list[ast.AST] = list(ast.iter_child_nodes(fn))
+        while stack:
+            node = stack.pop()
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            yield node
+            stack.extend(ast.iter_child_nodes(node))
+
+    def _known_refs(self, mi: ModuleIndex, owner: Optional[FunctionInfo],
+                    tree: ast.AST) -> Iterator[str]:
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.Name, ast.Attribute)):
+                q = self._resolve(mi, owner, node)
+                if q is not None:
+                    yield q
+
+    def _scan_trace_entry_call(self, mi: ModuleIndex, call: ast.Call,
+                               owner: Optional[FunctionInfo],
+                               local_refs: dict[str, set[str]]) -> None:
+        if terminal_name(call.func) not in TRACE_ENTRY_NAMES:
+            return
+        where = (f"{mi.file.rel}:{call.lineno}")
+        args: list[ast.expr] = list(call.args) + [
+            kw.value for kw in call.keywords if kw.arg != "static_argnames"]
+        statics = set()
+        for kw in call.keywords:
+            if kw.arg == "static_argnames":
+                statics.update(_string_values(kw.value))
+        for arg in args:
+            for q in self._trace_arg_targets(mi, owner, local_refs, arg):
+                self.seeds.setdefault(q, f"passed to trace entry at {where}")
+                if statics and q in self.functions:
+                    self.functions[q].static_params = frozenset(
+                        self.functions[q].static_params | statics)
+
+    def _trace_arg_targets(self, mi: ModuleIndex,
+                           owner: Optional[FunctionInfo],
+                           local_refs: dict[str, set[str]],
+                           arg: ast.expr) -> Iterator[str]:
+        if isinstance(arg, ast.Name) and arg.id in local_refs:
+            yield from local_refs[arg.id]
+        if isinstance(arg, ast.Lambda):
+            for node in ast.walk(arg.body):
+                if isinstance(node, ast.Name) and node.id in local_refs:
+                    yield from local_refs[node.id]
+                if isinstance(node, (ast.Name, ast.Attribute)):
+                    q = self._resolve(mi, owner, node)
+                    if q is not None:
+                        yield q
+            return
+        if isinstance(arg, (ast.Name, ast.Attribute)):
+            q = self._resolve(mi, owner, arg)
+            if q is not None:
+                yield q
+        elif isinstance(arg, ast.Call):
+            # functools.partial(known_fn, ...) passed inline.
+            yield from self._known_refs(mi, owner, arg)
+
+    # -- name resolution ----------------------------------------------------
+
+    def _resolve(self, mi: ModuleIndex, owner: Optional[FunctionInfo],
+                 node: ast.AST) -> Optional[str]:
+        parts = dotted_parts(node)
+        if parts is None:
+            return None
+        # self.method -> method of the same class.
+        if owner is not None and owner.cls and parts[0] == "self" \
+                and len(parts) == 2:
+            q = f"{mi.name}.{owner.cls}.{parts[1]}"
+            return q if q in self.functions else None
+        # Nested defs of the owning function (while_loop cond/body).
+        if owner is not None and len(parts) == 1 \
+                and parts[0] in owner.nested:
+            return owner.nested[parts[0]]
+        if len(parts) == 1:
+            name = parts[0]
+            if name in mi.functions:
+                return mi.functions[name].qualname
+            if name in mi.import_symbols:
+                smod, sattr = mi.import_symbols[name]
+                return self._resolve_in_module(smod, [sattr])
+            return None
+        head, rest = parts[0], parts[1:]
+        if head in mi.import_modules:
+            return self._resolve_in_module(mi.import_modules[head], rest)
+        if head in mi.import_symbols:
+            smod, sattr = mi.import_symbols[head]
+            sub = f"{smod}.{sattr}"
+            if sub in self.modules:
+                return self._resolve_in_module(sub, rest)
+            return None
+        return None
+
+    def _resolve_in_module(self, module: str,
+                           attrs: list[str]) -> Optional[str]:
+        # Extend the module prefix as far as real modules go.
+        while len(attrs) > 1 and f"{module}.{attrs[0]}" in self.modules:
+            module = f"{module}.{attrs[0]}"
+            attrs = attrs[1:]
+        if module not in self.modules:
+            return None
+        mi = self.modules[module]
+        if len(attrs) == 1 and f"{module}.{attrs[0]}" in self.modules:
+            return None                       # a module reference, not a fn
+        key = ".".join(attrs)
+        if key in mi.functions:
+            return mi.functions[key].qualname
+        return None
+
+    # -- reachability -------------------------------------------------------
+
+    def _propagate(self) -> None:
+        frontier = [q for q in self.seeds if q in self.functions]
+        for q in frontier:
+            self.reachable[q] = q
+        while frontier:
+            q = frontier.pop()
+            seed = self.reachable[q]
+            for tgt in self.edges.get(q, ()):
+                if tgt not in self.reachable and tgt in self.functions:
+                    self.reachable[tgt] = seed
+                    frontier.append(tgt)
+
+    def reach_reason(self, qualname: str) -> str:
+        seed = self.reachable.get(qualname)
+        if seed is None:
+            return "not reachable"
+        if seed == qualname:
+            return self.seeds.get(qualname, "trace entry")
+        return (f"reachable from trace entry '{seed}' "
+                f"({self.seeds.get(seed, '?')})")

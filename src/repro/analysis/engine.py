@@ -1,0 +1,347 @@
+"""jaxlint rule engine (docs/DESIGN.md §12).
+
+The analyzer is a pure-AST pass: no file under analysis is ever imported or
+executed.  ``load_project`` parses every ``.py`` file under the given roots
+into :class:`SourceFile` objects, :class:`Project` groups them (and lazily
+builds the jit-reachability call graph, ``repro.analysis.callgraph``), and
+``run_rules`` applies every :class:`Rule`, filters findings through inline
+suppressions, and returns a :class:`Report`.
+
+Suppressions
+------------
+A finding is suppressed by an inline comment on the finding's line (or on a
+comment-only line directly above it)::
+
+    order = np.argsort(v)  # jaxlint: disable=unstable-sort -- values-only \
+                           #   sort; the permutation is never used
+
+The justification text after ``--`` is REQUIRED: a suppression without one
+is inert and itself reported (rule ``suppression``), so a contract can never
+be waived silently.  Multiple rules separate with commas; ``disable=all``
+suppresses every rule on that line.
+
+Fixture corpora
+---------------
+A directory containing a ``.jaxlint-fixtures`` sentinel file is skipped when
+reached by directory *walking* (so ``python -m repro.analysis tests/`` does
+not flag the known-bad corpus), but is analyzed normally when passed as an
+explicit root (which is how the corpus tests drive the analyzer).
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import os
+import re
+import sys
+from pathlib import Path
+from typing import Iterator, Optional, Protocol, Sequence
+
+FIXTURE_SENTINEL = ".jaxlint-fixtures"
+
+SEVERITY_ERROR = "error"
+SEVERITY_WARNING = "warning"
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*jaxlint:\s*disable=([A-Za-z0-9_,\-]+)"
+    r"(?:\s+--\s*(\S[^#]*))?")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation, anchored to file:line:col."""
+
+    rule: str
+    severity: str
+    path: str
+    line: int
+    col: int
+    message: str
+
+    @property
+    def anchor(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}"
+
+    def to_dict(self) -> dict[str, object]:
+        return {"rule": self.rule, "severity": self.severity,
+                "path": self.path, "line": self.line, "col": self.col,
+                "message": self.message}
+
+
+@dataclasses.dataclass(frozen=True)
+class Suppression:
+    """One ``# jaxlint: disable=...`` comment (attached to a code line)."""
+
+    line: int                 # the code line this suppression governs
+    comment_line: int         # where the comment physically sits
+    rules: tuple[str, ...]    # rule names, or ("all",)
+    justification: str        # text after ``--`` ("" = unjustified, inert)
+
+    def covers(self, rule: str) -> bool:
+        return "all" in self.rules or rule in self.rules
+
+
+class SourceFile:
+    """One parsed source file: text, AST, line table, suppressions."""
+
+    def __init__(self, path: Path, rel: str, module: Optional[str]) -> None:
+        self.path = path
+        self.rel = rel
+        self.module = module
+        self.text = path.read_text(encoding="utf-8")
+        self.lines = self.text.splitlines()
+        self.tree: Optional[ast.Module] = None
+        self.syntax_error: Optional[SyntaxError] = None
+        try:
+            self.tree = ast.parse(self.text, filename=str(path))
+        except SyntaxError as e:  # surfaced as a finding by run_rules
+            self.syntax_error = e
+        self.suppressions: dict[int, list[Suppression]] = {}
+        self._scan_suppressions()
+
+    def _scan_suppressions(self) -> None:
+        for i, raw in enumerate(self.lines, start=1):
+            m = _SUPPRESS_RE.search(raw)
+            if m is None:
+                continue
+            rules = tuple(r.strip() for r in m.group(1).split(",") if r.strip())
+            just = (m.group(2) or "").strip()
+            target = i
+            if raw.lstrip().startswith("#"):
+                # Comment-only line: governs the next non-comment code line.
+                j = i + 1
+                while j <= len(self.lines) and (
+                        not self.lines[j - 1].strip()
+                        or self.lines[j - 1].lstrip().startswith("#")):
+                    j += 1
+                target = j
+            sup = Suppression(line=target, comment_line=i, rules=rules,
+                              justification=just)
+            self.suppressions.setdefault(target, []).append(sup)
+
+    def suppressed(self, rule: str, line: int) -> bool:
+        return any(s.covers(rule) and s.justification
+                   for s in self.suppressions.get(line, ()))
+
+
+class Project:
+    """All files under analysis plus the lazily-built call graph."""
+
+    def __init__(self, files: Sequence[SourceFile]) -> None:
+        self.files = list(files)
+        self.modules: dict[str, SourceFile] = {
+            f.module: f for f in self.files if f.module is not None}
+        self._callgraph: Optional[object] = None
+
+    def callgraph(self) -> "object":
+        if self._callgraph is None:
+            from repro.analysis.callgraph import CallGraph
+            self._callgraph = CallGraph.build(self)
+        return self._callgraph
+
+
+class Rule(Protocol):
+    """One static check.  ``name`` is the suppression token."""
+
+    name: str
+    code: str
+    severity: str
+    doc: str
+
+    def check(self, project: Project) -> Iterator[Finding]:
+        """Yield findings over the whole project (pre-suppression)."""
+        ...  # pragma: no cover - protocol
+
+
+@dataclasses.dataclass(frozen=True)
+class Report:
+    findings: tuple[Finding, ...]
+    files_scanned: int
+
+    @property
+    def errors(self) -> tuple[Finding, ...]:
+        return tuple(f for f in self.findings
+                     if f.severity == SEVERITY_ERROR)
+
+    def to_dict(self) -> dict[str, object]:
+        return {"files_scanned": self.files_scanned,
+                "findings": [f.to_dict() for f in self.findings],
+                "errors": len(self.errors)}
+
+
+# ---------------------------------------------------------------------------
+# File collection
+# ---------------------------------------------------------------------------
+
+_SKIP_DIRS = frozenset({"__pycache__", ".git", ".hypothesis", "node_modules",
+                        ".venv", "venv"})
+
+
+def iter_python_files(roots: Sequence[Path]) -> Iterator[Path]:
+    """Yield ``.py`` files under ``roots``; fixture-sentinel directories are
+    pruned during walking but honored when given as an explicit root."""
+    seen: set[Path] = set()
+    for root in roots:
+        root = root.resolve()
+        if root.is_file():
+            if root.suffix == ".py" and root not in seen:
+                seen.add(root)
+                yield root
+            continue
+        for dirpath, dirnames, filenames in os.walk(root):
+            d = Path(dirpath)
+            dirnames[:] = sorted(
+                name for name in dirnames
+                if name not in _SKIP_DIRS
+                and not (d / name / FIXTURE_SENTINEL).exists())
+            for name in sorted(filenames):
+                if not name.endswith(".py"):
+                    continue
+                p = (d / name).resolve()
+                if p not in seen:
+                    seen.add(p)
+                    yield p
+
+
+def _module_name(path: Path) -> Optional[str]:
+    """Dotted module name: src-layout packages resolve to their import path
+    (``repro.core.query``); anything else gets a unique path-derived
+    pseudo-name so the call graph can index it."""
+    parts = list(path.parts)
+    if "src" in parts:
+        i = len(parts) - 1 - parts[::-1].index("src")
+        rel = parts[i + 1:]
+    else:
+        cwd = Path.cwd().resolve()
+        try:
+            rel = list(path.relative_to(cwd).parts)
+        except ValueError:
+            rel = parts[-3:]
+    if not rel:
+        return None
+    rel = list(rel)
+    rel[-1] = rel[-1][:-3] if rel[-1].endswith(".py") else rel[-1]
+    if rel[-1] == "__init__":
+        rel = rel[:-1]
+    if not rel:
+        return None
+    return ".".join(rel)
+
+
+def load_project(paths: Sequence[str | Path]) -> Project:
+    files = []
+    for p in iter_python_files([Path(p) for p in paths]):
+        try:
+            rel = str(p.relative_to(Path.cwd().resolve()))
+        except ValueError:
+            rel = str(p)
+        files.append(SourceFile(p, rel, _module_name(p)))
+    return Project(files)
+
+
+# ---------------------------------------------------------------------------
+# Running rules + suppression filtering
+# ---------------------------------------------------------------------------
+
+def run_rules(project: Project,
+              rules: Sequence[Rule]) -> Report:
+    known = {"all", "suppression", "syntax-error"}
+    for r in rules:
+        known.add(r.name)
+        known.update(getattr(r, "emits", ()))
+    findings: list[Finding] = []
+
+    for f in project.files:
+        if f.syntax_error is not None:
+            findings.append(Finding(
+                rule="syntax-error", severity=SEVERITY_ERROR, path=f.rel,
+                line=f.syntax_error.lineno or 1,
+                col=(f.syntax_error.offset or 1) - 1,
+                message=f"file does not parse: {f.syntax_error.msg}"))
+        for sups in f.suppressions.values():
+            for s in sups:
+                if not s.justification:
+                    findings.append(Finding(
+                        rule="suppression", severity=SEVERITY_ERROR,
+                        path=f.rel, line=s.comment_line, col=0,
+                        message="suppression without justification is inert: "
+                                "append ' -- <why this is safe>' "
+                                f"(disable={','.join(s.rules)})"))
+                unknown = [r for r in s.rules if r not in known]
+                if unknown:
+                    findings.append(Finding(
+                        rule="suppression", severity=SEVERITY_ERROR,
+                        path=f.rel, line=s.comment_line, col=0,
+                        message="suppression names unknown rule(s) "
+                                f"{unknown}: it disables nothing "
+                                f"(known: {sorted(known - {'all'})})"))
+
+    by_rel = {f.rel: f for f in project.files}
+    for rule in rules:
+        for finding in rule.check(project):
+            src = by_rel.get(finding.path)
+            if src is not None and src.suppressed(finding.rule, finding.line):
+                continue
+            findings.append(finding)
+
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return Report(findings=tuple(findings),
+                  files_scanned=len(project.files))
+
+
+def format_human(report: Report) -> str:
+    out = []
+    for f in report.findings:
+        out.append(f"{f.anchor}: {f.severity} [{f.rule}] {f.message}")
+    n_err = len(report.errors)
+    out.append(f"{len(report.findings)} finding(s) ({n_err} error(s)) "
+               f"in {report.files_scanned} file(s)")
+    return "\n".join(out)
+
+
+def format_json(report: Report) -> str:
+    return json.dumps(report.to_dict(), indent=2, sort_keys=True)
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    import argparse
+
+    from repro.analysis.rules import ALL_RULES
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="jaxlint: trace-safety & bit-identity static analysis "
+                    "(docs/DESIGN.md §12)")
+    ap.add_argument("paths", nargs="*", default=["src", "tests"],
+                    help="files or directories to analyze "
+                         "(default: src tests)")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="machine-readable JSON output")
+    ap.add_argument("--select", default=None,
+                    help="comma-separated rule names to run (default: all)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule battery and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for r in ALL_RULES:
+            print(f"{r.code} {r.name} [{r.severity}] - {r.doc}")
+        return 0
+
+    rules: Sequence[Rule] = ALL_RULES
+    if args.select:
+        wanted = {s.strip() for s in args.select.split(",") if s.strip()}
+        unknown = wanted - {r.name for r in ALL_RULES} - {r.code
+                                                          for r in ALL_RULES}
+        if unknown:
+            print(f"unknown rule(s): {sorted(unknown)}", file=sys.stderr)
+            return 2
+        rules = [r for r in ALL_RULES
+                 if r.name in wanted or r.code in wanted]
+
+    project = load_project(args.paths)
+    report = run_rules(project, rules)
+    print(format_json(report) if args.as_json else format_human(report))
+    return 1 if report.errors else 0

@@ -1,0 +1,57 @@
+"""The jaxlint rule battery (docs/DESIGN.md §12).
+
+``ALL_RULES`` is the default battery run by ``python -m repro.analysis``.
+Rule names double as suppression tokens (``# jaxlint: disable=<name>``);
+codes group related rules (JX1xx trace-safety, JX2xx bit-identity, JX3xx
+narrow storage, JX4xx registry, JX5xx exports, JX6xx refusal guards, JX7xx
+hygiene).
+"""
+
+from __future__ import annotations
+
+from repro.analysis.engine import Rule
+from repro.analysis.rules.exports import ExportDriftRule
+from repro.analysis.rules.hygiene import (PointlessFStringRule,
+                                          UnusedImportRule)
+from repro.analysis.rules.narrow import NarrowWideningRule
+from repro.analysis.rules.probe import PdetProbePlumbingRule
+from repro.analysis.rules.registry_rules import (DeprecatedShimRule,
+                                                 EngineBypassRule)
+from repro.analysis.rules.stability import StableSortRule
+from repro.analysis.rules.trace_safety import TraceSafetyRules
+
+ALL_RULES: tuple[Rule, ...] = (
+    TraceSafetyRules(),
+    StableSortRule(),
+    NarrowWideningRule(),
+    EngineBypassRule(),
+    DeprecatedShimRule(),
+    ExportDriftRule(),
+    PdetProbePlumbingRule(),
+    UnusedImportRule(),
+    PointlessFStringRule(),
+)
+
+#: Suppression tokens accepted by the engine in addition to rule names:
+#: trace-safety emits per-sub-rule names, not its umbrella ``name``.
+EXTRA_RULE_NAMES: tuple[str, ...] = (
+    TraceSafetyRules.RULE_NP,
+    TraceSafetyRules.RULE_COERCE,
+    TraceSafetyRules.RULE_ITEM,
+    TraceSafetyRules.RULE_BRANCH,
+    "syntax-error",
+)
+
+__all__ = [
+    "ALL_RULES",
+    "EXTRA_RULE_NAMES",
+    "DeprecatedShimRule",
+    "EngineBypassRule",
+    "ExportDriftRule",
+    "NarrowWideningRule",
+    "PdetProbePlumbingRule",
+    "PointlessFStringRule",
+    "StableSortRule",
+    "TraceSafetyRules",
+    "UnusedImportRule",
+]

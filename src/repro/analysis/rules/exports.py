@@ -1,0 +1,134 @@
+"""Export-surface drift rule (JX501, docs/DESIGN.md §12).
+
+``repro/__init__`` and ``repro/api/__init__`` use lazy ``__getattr__``
+re-export tables so that importing the package does not pull in JAX.  The
+public surface is therefore spread across three places that must agree:
+
+  * ``__all__`` — the advertised names,
+  * the lazy table(s) read inside ``__getattr__`` (dicts like ``_LAZY`` /
+    ``_EXPORTS`` mapping name -> source module),
+  * eager module-level defs / imports.
+
+Drift between them produces the worst kind of bug: ``from repro import X``
+works interactively (``__getattr__`` resolves it) while ``import *`` /
+tooling that trusts ``__all__`` misses it — or vice versa, ``__all__``
+advertises a name whose lazy entry was deleted and every access raises.
+The rule checks, per ``__init__`` file that defines ``__getattr__``:
+
+  * every ``__all__`` name is resolvable (eager def/import OR lazy key),
+  * every lazy-table key is advertised in ``__all__``.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional
+
+from repro.analysis.engine import (SEVERITY_ERROR, Finding, Project,
+                                   SourceFile)
+
+
+def _string_elts(node: ast.expr) -> Optional[list[tuple[str, int]]]:
+    """(value, lineno) for a list/tuple/set of string constants, else None."""
+    if not isinstance(node, (ast.List, ast.Tuple, ast.Set)):
+        return None
+    out = []
+    for e in node.elts:
+        if isinstance(e, ast.Constant) and isinstance(e.value, str):
+            out.append((e.value, e.lineno))
+        else:
+            return None
+    return out
+
+
+class ExportDriftRule:
+    name = "export-drift"
+    code = "JX501"
+    severity = SEVERITY_ERROR
+    doc = ("__all__, the lazy __getattr__ table, and eager defs must agree "
+           "in every __init__ that uses lazy re-exports — drift makes names "
+           "import-able but invisible to tooling, or advertised but broken")
+
+    def check(self, project: Project) -> Iterator[Finding]:
+        for f in project.files:
+            if f.tree is None or f.path.name != "__init__.py":
+                continue
+            yield from self._check_file(f)
+
+    def _check_file(self, f: SourceFile) -> Iterator[Finding]:
+        assert f.tree is not None
+        tree = f.tree
+
+        getattr_fn: Optional[ast.FunctionDef] = None
+        lazy_dicts: dict[str, list[tuple[str, int]]] = {}
+        all_names: Optional[list[tuple[str, int]]] = None
+        eager: set[str] = set()
+
+        for node in tree.body:
+            if isinstance(node, ast.FunctionDef):
+                if node.name == "__getattr__":
+                    getattr_fn = node
+                eager.add(node.name)
+            elif isinstance(node, ast.ClassDef):
+                eager.add(node.name)
+            elif isinstance(node, ast.Import):
+                for a in node.names:
+                    eager.add(a.asname or a.name.split(".")[0])
+            elif isinstance(node, ast.ImportFrom):
+                for a in node.names:
+                    if a.name != "*":
+                        eager.add(a.asname or a.name)
+            elif isinstance(node, ast.Assign):
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        eager.add(t.id)
+                        if t.id == "__all__":
+                            all_names = _string_elts(node.value)
+                        elif isinstance(node.value, ast.Dict):
+                            keys = []
+                            ok = True
+                            for k in node.value.keys:
+                                if isinstance(k, ast.Constant) \
+                                        and isinstance(k.value, str):
+                                    keys.append((k.value, k.lineno))
+                                else:
+                                    ok = False
+                            if ok and keys:
+                                lazy_dicts[t.id] = keys
+
+        if getattr_fn is None:
+            return                         # eager-only __init__: out of scope
+        if all_names is None:
+            yield Finding(
+                rule=self.name, severity=self.severity, path=f.rel,
+                line=getattr_fn.lineno, col=getattr_fn.col_offset,
+                message="module defines a lazy __getattr__ but no literal "
+                        "__all__; the advertised surface is unauditable")
+            return
+
+        # Which dicts does __getattr__ actually consult?
+        read_names = {n.id for n in ast.walk(getattr_fn)
+                      if isinstance(n, ast.Name)}
+        lazy_keys: dict[str, int] = {}
+        for dict_name, keys in lazy_dicts.items():
+            if dict_name in read_names:
+                for k, line in keys:
+                    lazy_keys.setdefault(k, line)
+
+        advertised = {n for n, _ in all_names}
+        for nm, line in all_names:
+            if nm not in eager and nm not in lazy_keys:
+                yield Finding(
+                    rule=self.name, severity=self.severity, path=f.rel,
+                    line=line, col=0,
+                    message=f"__all__ advertises '{nm}' but it has no eager "
+                            "definition and no lazy __getattr__ entry: "
+                            "accessing it will raise AttributeError")
+        for nm, line in sorted(lazy_keys.items()):
+            if nm not in advertised:
+                yield Finding(
+                    rule=self.name, severity=self.severity, path=f.rel,
+                    line=line, col=0,
+                    message=f"lazy export '{nm}' resolves via __getattr__ "
+                            "but is missing from __all__: tooling and "
+                            "'import *' cannot see it")

@@ -1,0 +1,125 @@
+"""Source-hygiene rules (JX701/JX702).
+
+A pyflakes-lite pair that keeps the tree clean even where CI's ruff step
+cannot run (the local container has no ruff; jaxlint is always available):
+
+  JX701 unused-import     an imported name never referenced in the module
+                          (Name loads, attribute roots, __all__ strings,
+                          and string annotations all count as uses)
+  JX702 pointless-fstring an f-string with no placeholders — usually a
+                          leftover from deleting the interpolation
+
+Both mirror the corresponding ruff rules (F401, F541) so local jaxlint and
+CI ruff agree on the same findings.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterator
+
+from repro.analysis.engine import (SEVERITY_ERROR, Finding, Project,
+                                   SourceFile)
+
+_IDENT_RE = re.compile(r"[A-Za-z_][A-Za-z0-9_]*")
+
+
+class UnusedImportRule:
+    name = "unused-import"
+    code = "JX701"
+    severity = SEVERITY_ERROR
+    doc = ("imported names must be referenced somewhere in the module "
+           "(mirrors ruff F401; 'import x as x' re-exports are exempt)")
+
+    def check(self, project: Project) -> Iterator[Finding]:
+        for f in project.files:
+            if f.tree is None:
+                continue
+            yield from self._check_file(f)
+
+    def _check_file(self, f: SourceFile) -> Iterator[Finding]:
+        assert f.tree is not None
+        imported: list[tuple[str, str, ast.AST]] = []  # (local, what, node)
+        used: set[str] = set()
+
+        # Availability probes: `try: import x / except ImportError:` import
+        # for the side effect of the check, not the binding.
+        probes: set[int] = set()
+        for node in ast.walk(f.tree):
+            if isinstance(node, ast.Try) and any(
+                    h.type is not None
+                    and any(isinstance(t, ast.Name) and t.id in
+                            ("ImportError", "ModuleNotFoundError")
+                            for t in ast.walk(h.type))
+                    for h in node.handlers):
+                probes.update(id(n) for n in ast.walk(node)
+                              if isinstance(n, (ast.Import, ast.ImportFrom)))
+
+        for node in ast.walk(f.tree):
+            if id(node) in probes:
+                continue
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    local = a.asname or a.name.split(".")[0]
+                    if a.asname == a.name:
+                        continue              # explicit re-export idiom
+                    imported.append((local, a.name, node))
+            elif isinstance(node, ast.ImportFrom):
+                if node.module == "__future__":
+                    continue
+                for a in node.names:
+                    if a.name == "*":
+                        continue
+                    local = a.asname or a.name
+                    if a.asname == a.name:
+                        continue              # explicit re-export idiom
+                    what = f"{node.module or ''}.{a.name}".lstrip(".")
+                    imported.append((local, what, node))
+            elif isinstance(node, ast.Name):
+                used.add(node.id)
+            elif isinstance(node, ast.Attribute):
+                pass                          # root Name is walked separately
+            elif isinstance(node, ast.Constant) \
+                    and isinstance(node.value, str):
+                # __all__ entries, quoted annotations, getattr strings.
+                used.update(_IDENT_RE.findall(node.value))
+
+        for local, what, node in imported:
+            if local not in used:
+                yield Finding(
+                    rule=self.name, severity=self.severity, path=f.rel,
+                    line=node.lineno, col=node.col_offset,
+                    message=f"'{local}' (from '{what}') is imported but "
+                            "never used; remove it or re-export explicitly "
+                            "via __all__ / 'import x as x'")
+
+
+class PointlessFStringRule:
+    name = "pointless-fstring"
+    code = "JX702"
+    severity = SEVERITY_ERROR
+    doc = ("f-strings with no placeholders are leftovers from deleted "
+           "interpolations (mirrors ruff F541)")
+
+    def check(self, project: Project) -> Iterator[Finding]:
+        for f in project.files:
+            if f.tree is None:
+                continue
+            assert f.tree is not None
+            # Format specs ({x:06d}) are themselves JoinedStr nodes with no
+            # FormattedValue children; they are not f-strings in the source.
+            specs = {id(n.format_spec) for n in ast.walk(f.tree)
+                     if isinstance(n, ast.FormattedValue)
+                     and n.format_spec is not None}
+            for node in ast.walk(f.tree):
+                if id(node) in specs:
+                    continue
+                if isinstance(node, ast.JoinedStr) and not any(
+                        isinstance(v, ast.FormattedValue)
+                        for v in node.values):
+                    yield Finding(
+                        rule=self.name, severity=self.severity, path=f.rel,
+                        line=node.lineno, col=node.col_offset,
+                        message="f-string without any placeholder: drop the "
+                                "'f' prefix (or restore the interpolation)")

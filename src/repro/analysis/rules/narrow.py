@@ -1,0 +1,107 @@
+"""Narrow-storage widening rule (JX301, docs/DESIGN.md §12).
+
+PR 5 shrank the build artifacts to their information-theoretic widths:
+``codes_sorted`` is uint8 (2^w <= 256 breakpoint ids) and ``leaf_lo`` /
+``leaf_hi`` are int16 (leaf counts < 2^15).  The contract that keeps that
+safe lives at the *use* sites: every consumer widens via
+``.astype(jnp.int32)`` before arithmetic, because uint8/int16 arithmetic
+wraps silently under JAX's default dtype promotion (e.g. ``leaf_hi + 1``
+at 32767, or a uint8 difference of codes).  Until this rule, that contract
+lived only in reviewers' heads.
+
+The rule flags arithmetic (``+ - * // % ** << >>`` and unary ``-``) where a
+*naked* read of a narrow-storage name participates — a bare ``codes_sorted``
+/ ``leaf_lo`` / ``leaf_hi`` name, an attribute whose terminal is one
+(``index.leaf_hi``), or a subscript of either (``leaf_lo[i]``).  A
+``.astype(...)`` call between the read and the arithmetic stops the taint
+(that is the widening), as does any other intervening call (its result is
+the callee's contract, not raw narrow storage).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional
+
+from repro.analysis.engine import (SEVERITY_ERROR, Finding, Project,
+                                   SourceFile)
+
+#: Storage names narrowed in PR 5; see detree.CODE_DTYPE / LEAF_DTYPE.
+NARROW_NAMES = frozenset({"codes_sorted", "leaf_lo", "leaf_hi"})
+
+_ARITH_OPS = (ast.Add, ast.Sub, ast.Mult, ast.FloorDiv, ast.Mod, ast.Pow,
+              ast.LShift, ast.RShift)
+
+
+def _naked_narrow_read(node: ast.expr) -> Optional[str]:
+    """Name of the narrow buffer read *without* an intervening widening
+    cast / call, or None."""
+    if isinstance(node, ast.Name):
+        return node.id if node.id in NARROW_NAMES else None
+    if isinstance(node, ast.Attribute):
+        # index.leaf_hi is a narrow read; leaf_hi.shape is not (metadata).
+        return node.attr if node.attr in NARROW_NAMES else None
+    if isinstance(node, ast.Subscript):
+        return _naked_narrow_read(node.value)
+    if isinstance(node, (ast.UnaryOp,)):
+        return _naked_narrow_read(node.operand)
+    # Calls (including .astype(...)) break the taint: their result carries
+    # the callee's dtype contract.  Everything else is not a raw read.
+    return None
+
+
+def _operands(node: ast.expr) -> Iterator[ast.expr]:
+    if isinstance(node, ast.BinOp):
+        yield node.left
+        yield node.right
+    elif isinstance(node, ast.UnaryOp):
+        yield node.operand
+
+
+class NarrowWideningRule:
+    name = "narrow-arith"
+    code = "JX301"
+    severity = SEVERITY_ERROR
+    doc = ("arithmetic on the narrow build buffers (codes_sorted uint8, "
+           "leaf_lo/leaf_hi int16) requires a prior .astype(jnp.int32) "
+           "widening cast — narrow integer arithmetic wraps silently")
+
+    def check(self, project: Project) -> Iterator[Finding]:
+        for f in project.files:
+            if f.tree is None:
+                continue
+            yield from self._check_file(f)
+
+    def _check_file(self, f: SourceFile) -> Iterator[Finding]:
+        assert f.tree is not None
+        for node in ast.walk(f.tree):
+            if isinstance(node, ast.BinOp) \
+                    and isinstance(node.op, _ARITH_OPS):
+                pass
+            elif isinstance(node, ast.UnaryOp) \
+                    and isinstance(node.op, ast.USub):
+                pass
+            elif isinstance(node, ast.AugAssign) \
+                    and isinstance(node.op, _ARITH_OPS):
+                name = _naked_narrow_read(node.target)
+                if name is None:
+                    name = _naked_narrow_read(node.value)
+                if name is not None:
+                    yield self._finding(f, node, name)
+                continue
+            else:
+                continue
+            for operand in _operands(node):
+                name = _naked_narrow_read(operand)
+                if name is not None:
+                    yield self._finding(f, node, name)
+                    break
+
+    def _finding(self, f: SourceFile, node: ast.AST, name: str) -> Finding:
+        return Finding(
+            rule=self.name, severity=self.severity, path=f.rel,
+            line=node.lineno, col=node.col_offset,
+            message=f"arithmetic on narrow-storage '{name}' without a "
+                    "widening cast: insert .astype(jnp.int32) before the "
+                    "operation (uint8/int16 arithmetic wraps silently; "
+                    "docs/DESIGN.md §12 narrow-storage contract)")

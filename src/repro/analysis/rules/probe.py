@@ -1,0 +1,88 @@
+"""PR 8 refusal guard (JX601, docs/DESIGN.md §12 + ROADMAP follow-on).
+
+PR 8 deliberately *refused* multi-probe on the ``pdet`` engine: probe slack
+ranking is currently per-shard, so plumbing ``probe_depth`` into the
+sharded path would make results depend on device count — breaking the
+PDET==DET bit-identity contract (Theorem 3's quality guarantee only
+transfers because sharding is invisible).  The registry encodes the refusal
+as a capability fallback (pdet + probes -> fused), and ``distributed.py``
+must stay probe-free until a device-count-invariant *global* slack ranking
+lands (see ROADMAP).
+
+This rule keeps the documented refusal from silently eroding: any
+``probe_depth`` plumbing inside ``distributed.py`` — a function parameter,
+a call keyword, or an assignment target — is flagged.  Reading the name to
+*reject* it (e.g. ``if request.probe_depth: raise``) is the sanctioned
+pattern and is not flagged.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.engine import (SEVERITY_ERROR, Finding, Project,
+                                   SourceFile)
+
+_GUARDED_BASENAME = "distributed.py"
+_NAME = "probe_depth"
+
+
+class PdetProbePlumbingRule:
+    name = "pdet-probe-plumbing"
+    code = "JX601"
+    severity = SEVERITY_ERROR
+    doc = ("probe_depth must not be plumbed into the pdet/distributed "
+           "engine until a device-count-invariant global slack ranking "
+           "lands (PR 8 refusal; ROADMAP follow-on) — per-shard probe "
+           "ranking breaks PDET==DET bit-identity")
+
+    def check(self, project: Project) -> Iterator[Finding]:
+        for f in project.files:
+            if f.tree is None or f.path.name != _GUARDED_BASENAME:
+                continue
+            yield from self._check_file(f)
+
+    def _check_file(self, f: SourceFile) -> Iterator[Finding]:
+        assert f.tree is not None
+        for node in ast.walk(f.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                args = node.args
+                for a in (list(args.posonlyargs) + list(args.args)
+                          + list(args.kwonlyargs)):
+                    if a.arg == _NAME:
+                        yield self._finding(
+                            f, a, f"function '{node.name}' takes a "
+                            f"'{_NAME}' parameter")
+            elif isinstance(node, ast.Call):
+                for kw in node.keywords:
+                    if kw.arg == _NAME:
+                        yield self._finding(
+                            f, kw.value,
+                            f"call forwards '{_NAME}=' into the sharded "
+                            "path")
+            elif isinstance(node, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+                targets = (node.targets if isinstance(node, ast.Assign)
+                           else [node.target])
+                for t in targets:
+                    for leaf in ast.walk(t):
+                        if isinstance(leaf, ast.Name) and leaf.id == _NAME:
+                            yield self._finding(
+                                f, leaf,
+                                f"assignment creates a '{_NAME}' binding")
+                        elif isinstance(leaf, ast.Attribute) \
+                                and leaf.attr == _NAME:
+                            yield self._finding(
+                                f, leaf,
+                                f"assignment writes a '.{_NAME}' attribute")
+
+    def _finding(self, f: SourceFile, node: ast.AST, what: str) -> Finding:
+        return Finding(
+            rule=self.name, severity=self.severity, path=f.rel,
+            line=getattr(node, "lineno", 1),
+            col=getattr(node, "col_offset", 0),
+            message=f"{what}: multi-probe on the sharded pdet engine is "
+                    "refused until a device-count-invariant global slack "
+                    "ranking exists (per-shard ranking breaks PDET==DET "
+                    "bit-identity; see ROADMAP follow-on / registry "
+                    "fallback)")

@@ -1,0 +1,151 @@
+"""Registry-discipline rules (JX401/JX402, docs/DESIGN.md §12).
+
+PR 7 centralized engine selection in ``repro.api.registry.resolve_engine``
+so that capability fallbacks (e.g. pdet refusing multi-probe and falling
+back to fused) happen in exactly one place.  Two drift modes erode that:
+
+  JX401 engine-bypass     comparing a variable against engine-name string
+                          literals ("fused"/"vmap"/"pdet"/"auto") outside
+                          the registry module or a function that itself
+                          calls resolve_engine/validate_engine_name — that
+                          is ad-hoc dispatch the registry cannot see
+  JX402 deprecated-shim   calling the legacy ``.query(...)`` shim with its
+                          pre-PR-7 keyword surface (r_min/M/mode/...); the
+                          shim survives for external callers only and emits
+                          DeprecationWarning (an error under this repo's
+                          pytest filterwarnings)
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.engine import (SEVERITY_ERROR, SEVERITY_WARNING, Finding,
+                                   Project, SourceFile)
+
+#: Literals that mark a comparison as engine dispatch.  "auto" is not in
+#: the set: it is also the sentinel for kernel-impl selection
+#: (build_impl/encode_impl) and flags nothing but false positives.
+ENGINE_NAMES = frozenset({"fused", "vmap", "pdet"})
+
+#: Functions whose presence in a body marks it as registry-aware: comparing
+#: engine names immediately around a resolve call is the sanctioned pattern
+#: (the registry itself, and thin wrappers that dispatch on its result).
+_REGISTRY_FNS = frozenset({"resolve_engine", "validate_engine_name",
+                           "resolve", "available_engines"})
+
+#: Keyword surface of the deprecated pre-PR-7 ``query()`` shim.
+_SHIM_KWARGS = frozenset({"r_min", "M", "mode", "max_rounds", "engine",
+                          "n_active"})
+
+
+def _enclosing_bodies(tree: ast.Module) -> Iterator[tuple[ast.AST, bool]]:
+    """Yield (function node, calls_registry) for every def; module level is
+    yielded as (tree, calls_registry_at_module_level)."""
+    def calls_registry(node: ast.AST) -> bool:
+        for n in ast.walk(node):
+            if isinstance(n, ast.Call):
+                fn = n.func
+                name = fn.attr if isinstance(fn, ast.Attribute) else (
+                    fn.id if isinstance(fn, ast.Name) else None)
+                if name in _REGISTRY_FNS:
+                    return True
+        return False
+
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node, calls_registry(node)
+
+
+class EngineBypassRule:
+    name = "engine-bypass"
+    code = "JX401"
+    severity = SEVERITY_ERROR
+    doc = ("engine-name string comparisons outside repro.api.registry (or a "
+           "function that itself calls resolve_engine) are ad-hoc dispatch "
+           "the registry's capability fallbacks cannot see")
+
+    def check(self, project: Project) -> Iterator[Finding]:
+        for f in project.files:
+            if f.tree is None:
+                continue
+            base = f.path.name
+            if base in ("registry.py",):
+                continue                      # the registry compares freely
+            yield from self._check_file(f)
+
+    def _check_file(self, f: SourceFile) -> Iterator[Finding]:
+        assert f.tree is not None
+        allowed_spans: list[tuple[int, int]] = []
+        for fn, ok in _enclosing_bodies(f.tree):
+            if ok:
+                end = getattr(fn, "end_lineno", fn.lineno)
+                allowed_spans.append((fn.lineno, end or fn.lineno))
+
+        # Asserting which engine ran is verification, not dispatch — the
+        # rule targets control flow that *selects* an engine.
+        in_assert = {id(c) for n in ast.walk(f.tree)
+                     if isinstance(n, ast.Assert)
+                     for c in ast.walk(n) if isinstance(c, ast.Compare)}
+
+        for node in ast.walk(f.tree):
+            if not isinstance(node, ast.Compare) or id(node) in in_assert:
+                continue
+            if not any(isinstance(op, (ast.Eq, ast.NotEq, ast.In, ast.NotIn))
+                       for op in node.ops):
+                continue
+            literals = [n for n in [node.left, *node.comparators]
+                        for c in ast.walk(n)
+                        if isinstance(c, ast.Constant)
+                        and c.value in ENGINE_NAMES]
+            if not literals:
+                continue
+            # All-literal comparisons (e.g. parametrized test ids) are not
+            # dispatch: no Name/Attribute means nothing is being selected on.
+            sides = [node.left, *node.comparators]
+            if not any(isinstance(e, (ast.Name, ast.Attribute, ast.Call))
+                       for s in sides for e in ast.walk(s)):
+                continue
+            if any(lo <= node.lineno <= hi for lo, hi in allowed_spans):
+                continue
+            yield Finding(
+                rule=self.name, severity=self.severity, path=f.rel,
+                line=node.lineno, col=node.col_offset,
+                message="engine-name comparison outside the registry: route "
+                        "selection through repro.api.registry.resolve_engine "
+                        "so capability fallbacks stay centralized")
+
+
+class DeprecatedShimRule:
+    name = "deprecated-shim"
+    code = "JX402"
+    severity = SEVERITY_WARNING
+    doc = ("in-tree calls to the legacy .query(...) shim keyword surface "
+           "(r_min/M/mode/max_rounds/engine/n_active) must migrate to "
+           "search()/QueryRequest; the shim exists for external callers "
+           "only and warns DeprecationWarning")
+
+    def check(self, project: Project) -> Iterator[Finding]:
+        for f in project.files:
+            if f.tree is None:
+                continue
+            assert f.tree is not None
+            for node in ast.walk(f.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                fn = node.func
+                if not (isinstance(fn, ast.Attribute) and fn.attr == "query"):
+                    continue
+                shim_kw = sorted(kw.arg for kw in node.keywords
+                                 if kw.arg in _SHIM_KWARGS)
+                if not shim_kw:
+                    continue
+                yield Finding(
+                    rule=self.name, severity=self.severity, path=f.rel,
+                    line=node.lineno, col=node.col_offset,
+                    message=f".query(..., {', '.join(shim_kw)}=...) uses the "
+                            "deprecated pre-registry shim surface; call "
+                            "search()/QueryRequest instead (the shim raises "
+                            "under this repo's DeprecationWarning-as-error "
+                            "pytest config)")

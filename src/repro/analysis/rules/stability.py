@@ -1,0 +1,129 @@
+"""Bit-identity hazard: sorts without an explicit stability contract (JX201).
+
+Every permutation-producing sort in this repo is load-bearing for a
+bit-identity contract (fused==vmap candidate order, fused-build==reference-
+build, PDET==DET merge order — docs/DESIGN.md §8/§12): ties are the common
+case (interleaved integer keys, duplicate ids, equal distances), and an
+unstable sort reorders them differently across backends/versions, silently
+breaking the contract the way dimensionality silently degrades data-oriented
+trees.  The rule requires the stability kwarg to be *explicit* at every
+sort/argsort call site:
+
+  * ``jnp.sort``/``jnp.argsort``      -> ``stable=True`` (or kind='stable')
+  * ``np.sort``/``np.argsort``        -> ``kind='stable'``
+  * ``jax.lax.sort``                  -> ``is_stable=True``
+
+``np.lexsort`` is always stable and passes.  Sorts whose permutation is
+genuinely unused (values-only order statistics) suppress with a
+justification, which is exactly the documentation the contract wants.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional
+
+from repro.analysis.callgraph import dotted_parts
+from repro.analysis.engine import (SEVERITY_ERROR, Finding, Project,
+                                   SourceFile)
+
+_SORT_ATTRS = frozenset({"sort", "argsort"})
+
+
+def _np_aliases(tree: ast.Module) -> tuple[frozenset[str], frozenset[str],
+                                           frozenset[str]]:
+    """(numpy aliases, jax.numpy aliases, jax/jax.lax aliases)."""
+    np_a, jnp_a, jax_a = set(), set(), set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                local = alias.asname or alias.name.split(".")[0]
+                if alias.name == "numpy" or alias.name.startswith("numpy."):
+                    np_a.add(local)
+                elif alias.name == "jax.numpy":
+                    jnp_a.add(local)
+                elif alias.name == "jax" or alias.name.startswith("jax."):
+                    jax_a.add(local)
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            for alias in node.names:
+                local = alias.asname or alias.name
+                if node.module == "jax" and alias.name == "numpy":
+                    jnp_a.add(local)
+                elif node.module == "jax" and alias.name == "lax":
+                    jax_a.add(local)
+    return frozenset(np_a), frozenset(jnp_a), frozenset(jax_a)
+
+
+def _kw(call: ast.Call, name: str) -> Optional[ast.expr]:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def _is_const(node: Optional[ast.expr], value: object) -> bool:
+    return isinstance(node, ast.Constant) and node.value == value
+
+
+class StableSortRule:
+    name = "unstable-sort"
+    code = "JX201"
+    severity = SEVERITY_ERROR
+    doc = ("every sort/argsort call must carry an explicit stability kwarg "
+           "(jnp: stable=True, np: kind='stable', lax.sort: is_stable=True)"
+           " — permutation stability is what makes the bit-identity "
+           "contracts hold")
+
+    def check(self, project: Project) -> Iterator[Finding]:
+        for f in project.files:
+            if f.tree is None:
+                continue
+            yield from self._check_file(f)
+
+    def _check_file(self, f: SourceFile) -> Iterator[Finding]:
+        np_a, jnp_a, jax_a = _np_aliases(f.tree)  # type: ignore[arg-type]
+        assert f.tree is not None
+        for node in ast.walk(f.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            parts = dotted_parts(node.func)
+            if not parts or len(parts) < 2:
+                continue
+            root, attr = parts[0], parts[-1]
+            if attr not in _SORT_ATTRS and attr != "lexsort":
+                continue
+            if root in np_a:
+                if attr == "lexsort":
+                    continue                      # lexsort is always stable
+                kind = _kw(node, "kind")
+                if not (_is_const(kind, "stable")
+                        or _is_const(kind, "mergesort")):
+                    yield self._finding(
+                        f, node,
+                        f"np.{attr} without kind='stable': numpy defaults "
+                        "to an unstable introsort; ties reorder across "
+                        "platforms and break bit-identity")
+            elif root in jnp_a and attr in _SORT_ATTRS:
+                stable = _kw(node, "stable")
+                kind = _kw(node, "kind")
+                if not (_is_const(stable, True)
+                        or _is_const(kind, "stable")):
+                    yield self._finding(
+                        f, node,
+                        f"jnp.{attr} without an explicit stable=True: the "
+                        "stability this contract depends on must be stated "
+                        "at the call site, not inherited from a default")
+            elif root in jax_a and attr == "sort" \
+                    and ("lax" in parts or root == "lax"):
+                if not _is_const(_kw(node, "is_stable"), True):
+                    yield self._finding(
+                        f, node,
+                        "lax.sort without an explicit is_stable=True: the "
+                        "variadic key sort is only bit-identical to the "
+                        "reference double argsort when stable")
+
+    def _finding(self, f: SourceFile, node: ast.AST,
+                 message: str) -> Finding:
+        return Finding(rule=self.name, severity=self.severity, path=f.rel,
+                       line=node.lineno, col=node.col_offset,
+                       message=message)

@@ -1,0 +1,295 @@
+"""Trace-safety rules (docs/DESIGN.md §12, rules JX101-JX104).
+
+Inside any function reachable from a ``jax.jit`` / ``pallas_call`` /
+``shard_map`` / ``lax.*`` trace region (``repro.analysis.callgraph``), the
+following break tracing — either loudly (TracerConversionError) or, worse,
+silently (a host value baked in at trace time that should have been data):
+
+  JX101 trace-np-call      host ``np.*`` call on device-tainted data
+  JX102 trace-scalar-coerce  ``float()``/``int()``/``bool()`` of a device value
+  JX103 trace-item-call    ``.item()`` / ``.tolist()`` on a device value
+  JX104 trace-py-branch    Python ``if``/``while`` on a device value
+
+"Device-tainted" is a per-function syntactic taint: parameters are tainted
+unless their annotation is a plain Python scalar type / a config struct
+(anything not mentioning ``Array``) or they are listed in the enclosing
+jit's ``static_argnames``; every ``jnp.*``/``jax.*`` call result is tainted;
+``.shape``/``.ndim``/``.size``/``.dtype``/``len()`` launder taint (static
+under trace); locals inherit taint from their right-hand sides.  ``np.*``
+calls on purely static values (e.g. precomputed weight tables built at
+trace time from shapes) are fine and not flagged.
+
+An ``if`` statement whose test mentions ``jax.core.Tracer`` (the repo's
+host-fast-path guard idiom, e.g. ``encoding._sort_columns``) exempts its
+entire subtree: the author is explicitly branching on trace-ness, and the
+bit-identity of both branches is covered by dynamic tests.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional
+
+from repro.analysis.callgraph import (CallGraph, FunctionInfo, ModuleIndex,
+                                      dotted_parts, terminal_name)
+from repro.analysis.engine import (SEVERITY_ERROR, Finding, Project)
+
+#: np.* attributes that are safe under trace (dtype objects and dtype
+#: queries — they never touch traced data).
+NP_SAFE_ATTRS = frozenset({
+    "float16", "float32", "float64", "int8", "int16", "int32", "int64",
+    "uint8", "uint16", "uint32", "uint64", "bool_", "dtype", "iinfo",
+    "finfo", "promote_types", "result_type", "errstate", "integer",
+    "floating", "ndarray", "generic",
+})
+
+#: Attribute reads that turn any value static (shape metadata under trace).
+STATIC_ATTRS = frozenset({"shape", "ndim", "size", "dtype", "itemsize"})
+
+_SCALAR_ANNOTATIONS = frozenset({"int", "float", "bool", "str", "bytes",
+                                 "None"})
+
+
+def _module_aliases(mi: ModuleIndex, target: str) -> frozenset[str]:
+    return frozenset(a for a, mod in mi.import_modules.items()
+                     if mod == target or mod.startswith(target + "."))
+
+
+def _annotation_is_static(ann: Optional[ast.expr]) -> Optional[bool]:
+    """True = static, False = device array, None = unannotated."""
+    if ann is None:
+        return None
+    text = ast.dump(ann)
+    if "Array" in text or "ndarray" in text:
+        return False
+    return True
+
+
+def _mentions_tracer(test: ast.expr) -> bool:
+    for node in ast.walk(test):
+        if terminal_name(node) == "Tracer":
+            return True
+    return False
+
+
+#: Taint levels: the rules only fire on DEVICE (definitely a tracer), so an
+#: unannotated parameter (UNKNOWN — often a Python int/config/pytree) never
+#: produces a finding by itself.  Precision over recall: a lint gate that
+#: cries wolf on every config branch gets suppressed wholesale.
+STATIC, UNKNOWN, DEVICE = 0, 1, 2
+
+
+class _FunctionTaint:
+    """Syntactic static/unknown/device taint over one function body."""
+
+    def __init__(self, mi: ModuleIndex, info: FunctionInfo) -> None:
+        self.np_aliases = _module_aliases(mi, "numpy")
+        self.device_call_roots = (
+            _module_aliases(mi, "jax")
+            | frozenset(a for a, m in mi.import_modules.items()
+                        if m.startswith("jax.")))
+        self.levels: dict[str, int] = {}
+        args = info.node.args
+        all_args = (list(args.posonlyargs) + list(args.args)
+                    + list(args.kwonlyargs))
+        if args.vararg:
+            all_args.append(args.vararg)
+        if args.kwarg:
+            all_args.append(args.kwarg)
+        for a in all_args:
+            if a.arg in ("self", "cls") or a.arg in info.static_params:
+                self.levels[a.arg] = STATIC
+                continue
+            static = _annotation_is_static(a.annotation)
+            if static is True:
+                self.levels[a.arg] = STATIC
+            elif static is False:
+                self.levels[a.arg] = DEVICE     # Array-annotated parameter
+            else:
+                self.levels[a.arg] = UNKNOWN    # unannotated: could be either
+
+    # -- expression classification -----------------------------------------
+
+    def level(self, node: ast.expr) -> int:
+        """How device-tainted is evaluating ``node``?"""
+        if isinstance(node, ast.Constant):
+            return STATIC
+        if isinstance(node, ast.Name):
+            return self.levels.get(node.id, STATIC)  # closures: config-like
+        if isinstance(node, ast.Attribute):
+            if node.attr in STATIC_ATTRS:
+                return STATIC                 # .shape etc. launder taint
+            return self.level(node.value)
+        if isinstance(node, ast.Call):
+            fn = node.func
+            tname = terminal_name(fn)
+            if tname in ("len", "isinstance", "range", "enumerate", "zip"):
+                return STATIC
+            parts = dotted_parts(fn)
+            if parts and parts[0] in self.device_call_roots:
+                return DEVICE                 # jnp./jax. result: a tracer
+            levels = ([self.level(fn.value)]
+                      if isinstance(fn, ast.Attribute) else [])
+            levels += [self.level(a) for a in node.args]
+            levels += [self.level(kw.value) for kw in node.keywords]
+            return max(levels, default=STATIC)
+        if isinstance(node, ast.Subscript):
+            return max(self.level(node.value), self.level(node.slice))
+        if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+            return max((self.level(e) for e in node.elts), default=STATIC)
+        if isinstance(node, ast.BinOp):
+            return max(self.level(node.left), self.level(node.right))
+        if isinstance(node, ast.UnaryOp):
+            return self.level(node.operand)
+        if isinstance(node, ast.BoolOp):
+            return max((self.level(v) for v in node.values), default=STATIC)
+        if isinstance(node, ast.Compare):
+            # Identity tests are host-safe on anything ('x is None'), and
+            # string-literal comparisons are trace-time config dispatch.
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+                return STATIC
+            sides = [node.left, *node.comparators]
+            if any(isinstance(s, ast.Constant) and isinstance(s.value, str)
+                   for s in sides):
+                return STATIC
+            return max(self.level(s) for s in sides)
+        if isinstance(node, ast.IfExp):
+            return max(self.level(node.test), self.level(node.body),
+                       self.level(node.orelse))
+        if isinstance(node, ast.Starred):
+            return self.level(node.value)
+        if isinstance(node, ast.JoinedStr):
+            return STATIC
+        # Lambdas, comprehensions, etc.: not a direct device read.
+        return STATIC
+
+    def is_device(self, node: ast.expr) -> bool:
+        return self.level(node) >= DEVICE
+
+    def note_assignment(self, node: ast.stmt) -> None:
+        value: Optional[ast.expr] = None
+        targets: list[ast.expr] = []
+        if isinstance(node, ast.Assign):
+            value, targets = node.value, list(node.targets)
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            value, targets = node.value, [node.target]
+        elif isinstance(node, ast.AugAssign):
+            value, targets = node.value, [node.target]
+        if value is None:
+            return
+        lvl = self.level(value)
+        for t in targets:
+            for leaf in ast.walk(t):
+                if isinstance(leaf, ast.Name):
+                    self.levels[leaf.id] = lvl
+
+
+class TraceSafetyRules:
+    """JX101-JX104 as one pass (they share the call graph and taint)."""
+
+    name = "trace-safety"
+    code = "JX100"
+    severity = SEVERITY_ERROR
+    doc = ("no host np.* calls, scalar coercions, .item()/.tolist(), or "
+           "Python branching on device values inside jit/pallas/shard_map-"
+           "reachable functions")
+
+    RULE_NP = "trace-np-call"
+    RULE_COERCE = "trace-scalar-coerce"
+    RULE_ITEM = "trace-item-call"
+    RULE_BRANCH = "trace-py-branch"
+
+    #: Sub-rule names this pass emits (suppression tokens the engine must
+    #: recognize beyond ``name``).
+    emits = (RULE_NP, RULE_COERCE, RULE_ITEM, RULE_BRANCH)
+
+    def check(self, project: Project) -> Iterator[Finding]:
+        cg = project.callgraph()
+        assert isinstance(cg, CallGraph)
+        for qual, info in sorted(cg.functions.items()):
+            if qual not in cg.reachable:
+                continue
+            mi = cg.modules[info.module]
+            yield from self._check_function(cg, mi, info)
+
+    # -- per-function scan --------------------------------------------------
+
+    def _check_function(self, cg: CallGraph, mi: ModuleIndex,
+                        info: FunctionInfo) -> Iterator[Finding]:
+        taint = _FunctionTaint(mi, info)
+        reason = cg.reach_reason(info.qualname)
+        findings: list[Finding] = []
+
+        def visit(node: ast.AST) -> None:
+            # Nested named defs are separate call-graph nodes with their own
+            # reachability; tracer-guarded subtrees are author-handled.
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                return
+            if isinstance(node, (ast.If, ast.While)) \
+                    and _mentions_tracer(node.test):
+                return
+            if isinstance(node, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+                taint.note_assignment(node)
+            if isinstance(node, (ast.If, ast.While)) \
+                    and taint.is_device(node.test):
+                findings.append(self._finding(
+                    self.RULE_BRANCH, mi, node,
+                    "Python branch on a device value inside a traced "
+                    f"function ('{info.qualname}' is {reason}); use "
+                    "jnp.where/lax.cond, or guard the host path with an "
+                    "isinstance(..., jax.core.Tracer) check"))
+            if isinstance(node, ast.Call):
+                findings.extend(
+                    self._check_call(taint, mi, info, reason, node))
+            for child in ast.iter_child_nodes(node):
+                visit(child)
+
+        for stmt in info.node.body:
+            visit(stmt)
+        yield from findings
+
+    def _check_call(self, taint: _FunctionTaint, mi: ModuleIndex,
+                    info: FunctionInfo, reason: str,
+                    call: ast.Call) -> Iterator[Finding]:
+        fn = call.func
+        parts = dotted_parts(fn)
+        # JX101: np.* on device-tainted arguments.
+        if parts and parts[0] in taint.np_aliases and len(parts) > 1 \
+                and parts[-1] not in NP_SAFE_ATTRS:
+            if any(taint.is_device(a) for a in call.args) or any(
+                    taint.is_device(kw.value) for kw in call.keywords):
+                yield self._finding(
+                    self.RULE_NP, mi, call,
+                    f"host numpy call '{'.'.join(parts)}' on a device value "
+                    f"inside a traced function ('{info.qualname}' is "
+                    f"{reason}); use jnp, or guard the host path with an "
+                    "isinstance(..., jax.core.Tracer) check")
+        # JX102: float()/int()/bool() of a device value.
+        if isinstance(fn, ast.Name) and fn.id in ("float", "int", "bool") \
+                and call.args and taint.is_device(call.args[0]):
+            yield self._finding(
+                self.RULE_COERCE, mi, call,
+                f"Python {fn.id}() coercion of a device value inside a "
+                f"traced function ('{info.qualname}' is {reason}); keep it "
+                "an array (jnp.asarray / astype)")
+        # JX103: .item()/.tolist() on a device value.
+        if isinstance(fn, ast.Attribute) and fn.attr in ("item", "tolist") \
+                and not call.args and taint.is_device(fn.value):
+            yield self._finding(
+                self.RULE_ITEM, mi, call,
+                f".{fn.attr}() forces a host sync and breaks under trace "
+                f"('{info.qualname}' is {reason}); keep the value on device")
+
+    def _finding(self, rule: str, mi: ModuleIndex, node: ast.AST,
+                 message: str) -> Finding:
+        return Finding(rule=rule, severity=self.severity, path=mi.file.rel,
+                       line=getattr(node, "lineno", 1),
+                       col=getattr(node, "col_offset", 0), message=message)
+
+
+def _end_line(node: ast.AST) -> int:
+    end = getattr(node, "end_lineno", None)
+    if isinstance(end, int):
+        return end
+    return max((getattr(n, "lineno", 0) for n in ast.walk(node)),
+               default=getattr(node, "lineno", 1))

@@ -34,6 +34,7 @@ free of import cycles with ``repro.core``.
 from __future__ import annotations
 
 import importlib
+from typing import Any
 
 __all__ = [
     "AnnIndex",
@@ -89,7 +90,7 @@ _EXPORTS = {
 }
 
 
-def build(data, key, spec=None):
+def build(data: Any, key: Any, spec: Any = None) -> Any:
     """Build an index from an ``IndexSpec`` (the one declarative config).
 
     Dispatches on ``spec.kind`` and ``spec.placement``: a static spec
@@ -109,11 +110,11 @@ def build(data, key, spec=None):
     return StreamingDETLSH.from_spec(data, key, spec)
 
 
-def __getattr__(name):
+def __getattr__(name: str) -> Any:
     if name in _EXPORTS:
         return getattr(importlib.import_module(_EXPORTS[name]), name)
     raise AttributeError(f"module 'repro.api' has no attribute {name!r}")
 
 
-def __dir__():
+def __dir__() -> list[str]:
     return sorted(set(__all__) | set(globals()))

@@ -82,12 +82,13 @@ def _forest_dtypes() -> dict:
             "leaf_valid": np.bool_, "breakpoints": np.float32}
 
 
-def _forest_arrays(forest, prefix: str = "forest.") -> dict:
+def _forest_arrays(forest: Any, prefix: str = "forest.") -> dict:
     return {prefix + k: np.asarray(getattr(forest, k))
             for k in _FOREST_KEYS}
 
 
-def _forest_from(arrays, n: int, leaf_size: int, prefix: str = "forest."):
+def _forest_from(arrays: Any, n: int, leaf_size: int,
+                 prefix: str = "forest.") -> Any:
     import jax.numpy as jnp
     from repro.core.detree import DEForest
     dtypes = _forest_dtypes()
@@ -97,12 +98,12 @@ def _forest_from(arrays, n: int, leaf_size: int, prefix: str = "forest."):
                        for k in _FOREST_KEYS})
 
 
-def _plan_arrays(plan, prefix: str = "plan.") -> dict:
+def _plan_arrays(plan: Any, prefix: str = "plan.") -> dict:
     return {prefix + "points_sorted": np.asarray(plan.points_sorted),
             prefix + "inv_perm": np.asarray(plan.inv_perm)}
 
 
-def _plan_from(arrays, prefix: str = "plan."):
+def _plan_from(arrays: Any, prefix: str = "plan.") -> Any:
     import jax.numpy as jnp
     from repro.core.query import FusedPlan
     return FusedPlan(points_sorted=jnp.asarray(arrays[prefix +
@@ -110,7 +111,7 @@ def _plan_from(arrays, prefix: str = "plan."):
                      inv_perm=jnp.asarray(arrays[prefix + "inv_perm"]))
 
 
-def _spec_dict(index) -> Optional[dict]:
+def _spec_dict(index: Any) -> Optional[dict]:
     spec = getattr(index, "spec", None)
     return spec.to_dict() if spec is not None else None
 
@@ -142,11 +143,11 @@ class _SnapshotArrays(dict):
     """Eagerly-read npz contents; a missing key is a format error naming
     the offending file, never a raw ``KeyError`` from deep in a loader."""
 
-    def __init__(self, path: str, values: dict):
+    def __init__(self, path: str, values: dict) -> None:
         super().__init__(values)
         self.path = path
 
-    def __missing__(self, key):
+    def __missing__(self, key: str) -> Any:
         raise SnapshotFormatError(
             f"{self.path!r}: snapshot array {key!r} is missing "
             f"(have: {sorted(self.keys())})")
@@ -177,7 +178,8 @@ def _load_npz(path: str, fname: str) -> _SnapshotArrays:
     return _SnapshotArrays(fpath, values)
 
 
-def _typed_field(mapping, key: str, types, where: str, kind: str):
+def _typed_field(mapping: Any, key: str, types: Any, where: str,
+                 kind: str) -> Any:
     """Manifest field access with a format-error taxonomy: missing keys and
     wrong-type values both raise ``SnapshotFormatError`` naming the path
     and field, never ``KeyError``/``TypeError`` from a loader internals."""
@@ -242,7 +244,7 @@ def _read_manifest(path: str) -> dict:
     return manifest
 
 
-def _params_from(manifest: dict, where: str):
+def _params_from(manifest: dict, where: str) -> Any:
     from repro.core.theory import LSHParams
     d = _dict_field(manifest, "params", where)
     try:
@@ -253,7 +255,7 @@ def _params_from(manifest: dict, where: str):
             f"({type(exc).__name__}: {exc})") from exc
 
 
-def _spec_from(d: Optional[dict]):
+def _spec_from(d: Optional[dict]) -> Any:
     from repro.api.spec import IndexSpec
     return IndexSpec.from_dict(d) if d is not None else None
 
@@ -262,7 +264,7 @@ def _spec_from(d: Optional[dict]):
 # Static index
 # ---------------------------------------------------------------------------
 
-def save_static(index, path: str) -> None:
+def save_static(index: Any, path: str) -> None:
     """Snapshot a ``core.DETLSH``: A, data, forest, fused-plan constants."""
     os.makedirs(path, exist_ok=True)
     arrays = {"A": np.asarray(index.A), "data": np.asarray(index.data)}
@@ -287,7 +289,7 @@ def save_static(index, path: str) -> None:
     })
 
 
-def _load_static(path: str, manifest: dict):
+def _load_static(path: str, manifest: dict) -> Any:
     from repro.core import DETLSH
     arrays = _load_npz(path, "arrays.npz")
     import jax.numpy as jnp
@@ -309,7 +311,7 @@ def _load_static(path: str, manifest: dict):
 # Streaming index
 # ---------------------------------------------------------------------------
 
-def save_streaming(index, path: str) -> None:
+def save_streaming(index: Any, path: str) -> None:
     """Snapshot a ``streaming.StreamingDETLSH``: segments (with tombstone
     bitmaps), memtable survivors, frozen breakpoints, and the manifest —
     a restart resumes serving (and mutating) exactly where it left off."""
@@ -362,7 +364,7 @@ def save_streaming(index, path: str) -> None:
     })
 
 
-def _load_streaming(path: str, manifest: dict):
+def _load_streaming(path: str, manifest: dict) -> Any:
     import jax.numpy as jnp
     from repro.streaming.index import StreamingDETLSH, _DELTA
     from repro.streaming.segment import Segment
@@ -435,7 +437,7 @@ _PDET_POINT_KEYS = ("point_ids", "proj_sorted", "codes_sorted", "valid")
 _PDET_LEAF_KEYS = ("leaf_lo", "leaf_hi", "leaf_valid")
 
 
-def save_pdet(index, path: str) -> None:
+def save_pdet(index: Any, path: str) -> None:
     """Snapshot a ``core.distributed.PDETIndex`` as per-shard files.
 
     One ``shard_<i>.npz`` per layout shard (its data rows + its slice of
@@ -488,7 +490,7 @@ def save_pdet(index, path: str) -> None:
     })
 
 
-def _fit_placement(saved):
+def _fit_placement(saved: Any) -> Any:
     """Reshard-on-load policy: keep the saved placement when this process
     has enough devices for it, else fall back to the widest single-axis
     ('data',) placement — so a pdet snapshot loads anywhere (the layout
@@ -501,7 +503,7 @@ def _fit_placement(saved):
     return PlacementSpec(mesh_shape=(avail,), mesh_axes=("data",))
 
 
-def _load_pdet(path: str, manifest: dict, placement=None):
+def _load_pdet(path: str, manifest: dict, placement: Any = None) -> Any:
     import jax.numpy as jnp
     from repro.api.spec import PlacementSpec
     from repro.core import DETLSH
@@ -555,13 +557,13 @@ def _load_pdet(path: str, manifest: dict, placement=None):
 # Entry points
 # ---------------------------------------------------------------------------
 
-def save(index, path: str) -> None:
+def save(index: Any, path: str) -> None:
     """Snapshot any AnnIndex (dispatch lives on the index: calls
     ``index.save``)."""
     index.save(path)
 
 
-def load(path: str, placement=None) -> Any:
+def load(path: str, placement: Any = None) -> Any:
     """Read a snapshot directory back into a live index.
 
     Returns a ``core.DETLSH``, ``streaming.StreamingDETLSH``, or
@@ -578,6 +580,9 @@ def load(path: str, placement=None) -> Any:
         load_fault_hook(path)          # SNAPSHOT_LOAD injection boundary
     manifest = _read_manifest(path)
     kind = manifest.get("kind")
+    # jaxlint: disable=engine-bypass -- 'kind' is the snapshot FORMAT tag
+    #   (which loader parses the files), not engine dispatch; the engine for
+    #   a loaded index is still resolved through the registry at query time.
     if kind == "pdet":
         return _load_pdet(path, manifest, placement)
     if placement is not None:

@@ -70,7 +70,7 @@ class LegacyIndexAdapter:
     ``query`` implementations (the baselines) are normalized too.
     """
 
-    def __init__(self, index: Any):
+    def __init__(self, index: Any) -> None:
         if not callable(getattr(index, "query", None)):
             raise TypeError(
                 f"{type(index).__name__} is not an AnnIndex and has no "

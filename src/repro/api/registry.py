@@ -39,7 +39,7 @@ built-ins are registered.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Callable, Optional, Sequence
 
 AUTO = "auto"
 
@@ -66,7 +66,8 @@ class EngineSpec:
 _ENGINES: dict = {}
 
 
-def register_engine(name: str, run: Callable, *, modes=("leaf",),
+def register_engine(name: str, run: Callable, *,
+                    modes: Sequence[str] = ("leaf",),
                     min_batch: int = 1, priority: int = 0,
                     doc: str = "", needs_mesh: bool = False) -> EngineSpec:
     """Register (or replace) a query engine under ``name``."""

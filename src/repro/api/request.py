@@ -15,7 +15,7 @@ the deprecation shims and for callers that need the untyped tuple.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, NamedTuple, Optional
+from typing import Any, NamedTuple, Optional, Sequence
 
 from repro.api import registry
 
@@ -23,14 +23,14 @@ MODES = ("leaf", "strict")
 IMPLS = ("auto", "xla", "pallas", "pallas_interpret")
 
 
-def _check_positive(name: str, value, minimum=1) -> None:
+def _check_positive(name: str, value: float, minimum: float = 1) -> None:
     if value < minimum:
         raise ValueError(
             f"{name} must be >= {minimum}, got {value!r} — a non-positive "
             f"{name} would make the round loop return empty/garbage results")
 
 
-def _check_choice(name: str, value: str, choices) -> None:
+def _check_choice(name: str, value: str, choices: Sequence[str]) -> None:
     if value not in choices:
         raise ValueError(f"unknown {name} {value!r}; valid: {choices}")
 
@@ -64,7 +64,7 @@ class SearchRequest:
     # (``IndexSpec.probe_depth``, itself 0 = classic radius rounds).
     probe_depth: Optional[int] = None
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         _check_positive("k", self.k)
         _check_positive("M", self.M)
         _check_positive("max_rounds", self.max_rounds)
@@ -89,7 +89,7 @@ class SearchRequest:
                         r_min: Optional[float] = None,
                         k: Optional[int] = None,
                         block_q: int = 8, block_l: int = 8,
-                        default_probe_depth: int = 0):
+                        default_probe_depth: int = 0) -> Any:
         """Lower to the engine-level ``core.query.QueryConfig``.
 
         ``r_min`` / ``k`` override the request's values — the index fills

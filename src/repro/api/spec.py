@@ -20,7 +20,7 @@ names mapped to mesh axes).  A spec with a placement builds the sharded
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Any, Optional
 
 from repro.api import registry
 from repro.api.request import IMPLS, _check_choice, _check_positive
@@ -52,7 +52,7 @@ class PlacementSpec:
     mesh_axes: tuple = ("data",)
     data_axes: Optional[tuple] = None      # default: all mesh axes
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         shape = tuple(int(s) for s in self.mesh_shape)
         axes = tuple(self.mesh_axes)
         object.__setattr__(self, "mesh_shape", shape)
@@ -167,7 +167,7 @@ class IndexSpec:
     # auto-tuner (repro.tune) bakes into its suggested spec. ---
     probe_depth: int = 0
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         _check_choice("kind", self.kind, KINDS)
         _check_positive("K", self.K)
         _check_positive("L", self.L)
@@ -209,7 +209,7 @@ class IndexSpec:
                     f"sharded PDET index); kind={self.kind!r} cannot be "
                     f"placed on a mesh yet")
 
-    def derive_params(self):
+    def derive_params(self) -> Any:
         """Solve the Lemma 3 system for this spec -> ``LSHParams``."""
         from repro.core.theory import derive_params
         return derive_params(K=self.K, c=self.c, L=self.L,

@@ -33,7 +33,7 @@ class C2LSH:
         n, d = data.shape
         A = jax.random.normal(key, (d, m))
         proj = data @ A                                  # (n, m)
-        order = jnp.argsort(proj, axis=0).T.astype(jnp.int32)   # (m, n)
+        order = jnp.argsort(proj, axis=0, stable=True).T.astype(jnp.int32)  # (m, n)
         proj_sorted = jnp.take_along_axis(proj.T, order, axis=1)
         return cls(data=data, A=A, m=m, w=w,
                    threshold_frac=threshold_frac, proj_sorted=proj_sorted,

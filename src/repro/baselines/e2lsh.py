@@ -52,7 +52,7 @@ class E2LSH:
         order, hashes = [], []
         for i in range(L):
             h = _bucket_hash(codes[:, i * K:(i + 1) * K])
-            o = jnp.argsort(h)
+            o = jnp.argsort(h, stable=True)
             order.append(o.astype(jnp.int32))
             hashes.append(h[o])
         return cls(data=data, A=A, B=B, w=w, K=K, L=L,
@@ -78,7 +78,7 @@ class E2LSH:
             d = jnp.sqrt(jnp.sum((self.data[safe] - q[None, :]) ** 2, -1))
             d = jnp.where(ids < n, d, jnp.inf)
             # dedup by id
-            order = jnp.argsort(ids)
+            order = jnp.argsort(ids, stable=True)
             ids_s, d_s = ids[order], d[order]
             first = jnp.concatenate([jnp.array([True]),
                                      ids_s[1:] != ids_s[:-1]])

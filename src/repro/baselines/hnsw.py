@@ -63,7 +63,7 @@ class HNSW(ProtocolBaseline):
                     lst.append(i)
                     if len(lst) > 2 * M:        # prune by distance
                         dd = np.linalg.norm(data[lst] - data[nb], axis=1)
-                        keep = np.argsort(dd)[:M]
+                        keep = np.argsort(dd, kind="stable")[:M]
                         levels[l][nb] = [lst[j] for j in keep]
                 cur = nbrs[0] if nbrs else cur
             if lvl > obj.max_level:

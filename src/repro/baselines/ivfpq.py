@@ -69,7 +69,7 @@ class IVFPQ(ProtocolBaseline):
                                iters)
             cbs.append(cb)
             codes.append(code)
-        order = jnp.argsort(assign).astype(jnp.int32)
+        order = jnp.argsort(assign, stable=True).astype(jnp.int32)
         sorted_assign = assign[order]
         cell_start = jnp.searchsorted(sorted_assign, jnp.arange(nlist + 1))
         return cls(data=data, coarse=coarse, assign=assign,

@@ -34,4 +34,5 @@ def get_config(arch: str) -> ModelConfig:
 
 
 __all__ = ["get_config", "list_archs", "ModelConfig", "ParallelConfig",
-           "ShapeConfig", "ALL_SHAPES", "param_count", "active_param_count"]
+           "ShapeConfig", "ALL_SHAPES", "LONG_500K", "param_count",
+           "active_param_count"]

@@ -10,7 +10,6 @@ the dry-run (ShapeDtypeStruct, no allocation).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 
 @dataclasses.dataclass(frozen=True)

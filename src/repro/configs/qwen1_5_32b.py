@@ -1,7 +1,6 @@
 """qwen1.5-32b [dense] — full-MHA (kv=40) with QKV bias.
 [hf:Qwen/Qwen1.5 family; hf]"""
 
-import dataclasses
 
 from repro.configs.base import ModelConfig, ParallelConfig
 

@@ -18,13 +18,12 @@ import dataclasses
 import warnings
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from typing import Optional
 
 from repro.core.theory import LSHParams, derive_params, SUCCESS_PROBABILITY
-from repro.core import hashing, encoding, detree, query as query_mod
+from repro.core import hashing, encoding, detree
 from repro.core.detree import DEForest, build_forest
 from repro.core.query import (FusedPlan, QueryConfig, QueryResult,
                               knn_query_batch, make_fused_plan)

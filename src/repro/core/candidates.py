@@ -116,5 +116,5 @@ def canonicalize(n: int, ids: jax.Array, dists: jax.Array
     """Sort a buffer ascending by (distance, id) — the seed merge's output
     order (its top_k tie-broke equal distances by position in id-sorted
     order).  Used for the final extraction and the equivalence tests."""
-    d_s, ids_s = jax.lax.sort((dists, ids), num_keys=2)
+    d_s, ids_s = jax.lax.sort((dists, ids), num_keys=2, is_stable=True)
     return ids_s, d_s

@@ -164,7 +164,7 @@ def det_decode_attention(q: jax.Array, k_cache: jax.Array,
         valid = idv < length
         # positions may repeat across sources; mask repeats per row
         def mask_dups(row_ids, row_valid):
-            order = jnp.argsort(row_ids)
+            order = jnp.argsort(row_ids, stable=True)
             rs = row_ids[order]
             first = jnp.concatenate([jnp.array([True]), rs[1:] != rs[:-1]])
             keep = jnp.zeros_like(row_valid).at[order].set(first)

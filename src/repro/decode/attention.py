@@ -63,7 +63,7 @@ def sparse_decode_attention(q: jax.Array, k_cache: jax.Array,
                        kg.astype(jnp.float32))
 
         def mask_dups(row_ids, row_valid):
-            order = jnp.argsort(row_ids)
+            order = jnp.argsort(row_ids, stable=True)
             rs = row_ids[order]
             first = jnp.concatenate([jnp.array([True]), rs[1:] != rs[:-1]])
             keep = jnp.zeros_like(row_valid).at[order].set(first)

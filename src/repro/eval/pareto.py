@@ -30,7 +30,6 @@ import itertools
 import time
 from typing import Any, Optional, Sequence
 
-import jax
 import numpy as np
 
 from repro.api.request import SearchRequest

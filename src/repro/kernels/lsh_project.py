@@ -10,7 +10,6 @@ ops.py wrapper so every matmul dimension is hardware-aligned.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -9,7 +9,6 @@ Mosaic/TPU custom calls), so they are written to be XLA-memory-sane
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -79,7 +78,10 @@ def leaf_bounds(q: jax.Array, leaf_lo: jax.Array, leaf_hi: jax.Array,
             breakpoints, idx)
 
     b_lo = gather(leaf_lo)
-    b_hi = gather(leaf_hi + 1)
+    # Widen at use even though ops.py already widens at the kernel boundary:
+    # int16 leaf_hi would wrap at 32767 here, and this reference path is
+    # also called directly by the equivalence tests.
+    b_hi = gather(leaf_hi.astype(jnp.int32) + 1)
     d_lo = b_lo - q[None, :]
     d_hi = q[None, :] - b_hi
     lb_dim = jnp.maximum(jnp.maximum(d_lo, d_hi), 0.0)

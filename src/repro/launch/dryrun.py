@@ -29,7 +29,6 @@ Usage:
 """
 
 import argparse
-import dataclasses
 import json
 import re
 import sys
@@ -37,7 +36,6 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config, list_archs
 from repro.configs.base import ALL_SHAPES

@@ -3,14 +3,12 @@
 from __future__ import annotations
 
 import dataclasses
-import math
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
-from repro.sharding.rules import ShardingRules, param_shardings
+from repro.sharding.rules import ShardingRules
 
 
 def apply_mesh_padding(cfg: ModelConfig, rules: ShardingRules) -> ModelConfig:

@@ -20,19 +20,17 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
-import os
 import signal
 import sys
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.configs.base import ALL_SHAPES, ShapeConfig
+from repro.configs.base import ShapeConfig
 from repro.data.pipeline import make_pipeline
 from repro.launch.mesh import make_mesh, make_production_mesh
-from repro.launch.specs import apply_mesh_padding, batch_shardings
+from repro.launch.specs import apply_mesh_padding
 from repro.models import transformer as T
 from repro.sharding.rules import ShardingRules, param_shardings, use_rules
 from repro.train import checkpoint as ckpt

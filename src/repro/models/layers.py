@@ -11,10 +11,8 @@ path — with the Pallas flash kernel as the TPU production path selected by
 
 from __future__ import annotations
 
-import dataclasses
 import functools
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

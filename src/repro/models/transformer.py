@@ -20,8 +20,6 @@ Three entry points per model, matching the assigned shapes:
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp

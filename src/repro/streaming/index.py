@@ -42,7 +42,7 @@ from repro.api import registry as engine_registry
 from repro.core import estimate_r_min, hashing
 from repro.core import candidates as cand
 from repro.core import encoding as enc
-from repro.core.query import QueryConfig, QueryResult, knn_query_batch
+from repro.core.query import QueryResult, knn_query_batch
 from repro.core.theory import LSHParams, derive_params
 from repro.streaming.compactor import merge_segments
 from repro.streaming.manifest import Manifest
@@ -254,7 +254,7 @@ class StreamingDETLSH:
 
         # Last write wins within one call: keep only each gid's final row.
         _, last_rev = np.unique(gids[::-1], return_index=True)
-        keep = np.sort(m - 1 - last_rev)
+        keep = np.sort(m - 1 - last_rev, kind="stable")
         ins_gids, ins_vecs = gids[keep], vecs[keep]
         for gid in ins_gids:                       # overwrite semantics
             if int(gid) in self.locator:

@@ -25,7 +25,6 @@ format is unchanged.  This container is single-process, so gathering is a
 
 from __future__ import annotations
 
-import dataclasses
 import hashlib
 import json
 import os

@@ -9,8 +9,6 @@ Updates are always computed in f32 and cast back.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

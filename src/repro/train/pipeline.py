@@ -13,11 +13,10 @@ FSDP+TP+EP+SP (see DESIGN.md §5) and pipelining is exercised by
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.sharding.compat import shard_map
 

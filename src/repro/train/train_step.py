@@ -8,9 +8,7 @@ next microbatch's compute under XLA latency hiding).
 
 from __future__ import annotations
 
-import dataclasses
 import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp

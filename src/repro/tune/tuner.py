@@ -27,7 +27,6 @@ from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.api.request import SearchRequest, _check_positive
 from repro.api.spec import IndexSpec
@@ -73,7 +72,7 @@ class TuneResult:
     def probe_depth(self) -> int:
         return self.spec.probe_depth
 
-    def request(self, **overrides) -> SearchRequest:
+    def request(self, **overrides: object) -> SearchRequest:
         """A ``SearchRequest`` reproducing the winning measurement."""
         kw = dict(k=self.k, probe_depth=self.spec.probe_depth)
         kw.update(overrides)
@@ -101,9 +100,9 @@ def _default_queries(sample: jax.Array, key: jax.Array,
     return sample[idx] + noise
 
 
-def suggest_params(sample, target_recall: float = 0.9, *,
+def suggest_params(sample: jax.Array, target_recall: float = 0.9, *,
                    key: Optional[jax.Array] = None, k: int = 10,
-                   queries=None, n_queries: int = 32,
+                   queries: Optional[jax.Array] = None, n_queries: int = 32,
                    Ks: Sequence[int] = DEFAULT_GRID["Ks"],
                    Ls: Sequence[int] = DEFAULT_GRID["Ls"],
                    betas: Sequence[Optional[float]] = DEFAULT_GRID["betas"],
@@ -199,9 +198,10 @@ def suggest_params(sample, target_recall: float = 0.9, *,
         k=int(k), n_sample=int(m), trials=tuple(trials))
 
 
-def tune(data, key, target_recall: float = 0.9, *,
-         sample_size: int = 4096, k: int = 10, queries=None,
-         **grid) -> tuple:
+def tune(data: jax.Array, key: jax.Array, target_recall: float = 0.9, *,
+         sample_size: int = 4096, k: int = 10,
+         queries: Optional[jax.Array] = None,
+         **grid: object) -> tuple:
     """target_recall -> a built, tuned index in one call.
 
     Samples ``sample_size`` rows of ``data`` (without replacement), runs

@@ -78,5 +78,5 @@ def make_queries_near(data, rng, nq, noise=0.1):
 
 def brute_force_knn(data, queries, k):
     d2 = ((queries[:, None, :] - data[None, :, :]) ** 2).sum(-1)
-    idx = np.argsort(d2, axis=1)[:, :k]
+    idx = np.argsort(d2, axis=1, kind="stable")[:, :k]
     return idx, np.sqrt(np.take_along_axis(d2, idx, axis=1))

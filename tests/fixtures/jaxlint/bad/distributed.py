@@ -1,0 +1,18 @@
+"""Known-bad corpus for the pdet probe-plumbing guard (JX601).
+
+The file is named ``distributed.py`` on purpose: the rule scopes to the
+sharded-engine module by basename.
+"""
+
+
+def pdet_query(index, q, probe_depth=0):  # EXPECT: pdet-probe-plumbing
+    return index.search(q, probes=probe_depth)
+
+
+def forward_probes(index, q, request):
+    return index.search(q, probe_depth=request.probe_depth)  # EXPECT: pdet-probe-plumbing
+
+
+def stash_probes(request):
+    probe_depth = request.probes  # EXPECT: pdet-probe-plumbing
+    return probe_depth

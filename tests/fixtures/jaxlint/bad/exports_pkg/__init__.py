@@ -1,0 +1,20 @@
+"""Known-bad corpus for the export-drift rule (JX501)."""
+
+import importlib
+
+_LAZY = {
+    "thing": "fixtures.mod_a",
+    "hidden": "fixtures.mod_b",  # EXPECT: export-drift
+}
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        return importlib.import_module(_LAZY[name])
+    raise AttributeError(name)
+
+
+__all__ = [
+    "thing",
+    "ghost",  # EXPECT: export-drift
+]

@@ -1,0 +1,8 @@
+"""Known-bad corpus for the hygiene rules (JX701/JX702)."""
+
+import os  # EXPECT: unused-import
+import numpy as np  # EXPECT: unused-import
+
+
+def banner():
+    return f"no placeholders here"  # EXPECT: pointless-fstring

@@ -1,0 +1,26 @@
+"""Known-bad corpus for the narrow-storage widening rule (JX301)."""
+
+
+def leaf_span(leaf_lo, leaf_hi):
+    return leaf_hi - leaf_lo  # EXPECT: narrow-arith
+
+
+def next_leaf(index):
+    return index.leaf_hi + 1  # EXPECT: narrow-arith
+
+
+def code_shift(codes_sorted):
+    return codes_sorted * 2  # EXPECT: narrow-arith
+
+
+def subscripted(leaf_lo, i):
+    return leaf_lo[i] - 1  # EXPECT: narrow-arith
+
+
+def augmented(leaf_hi):
+    leaf_hi += 1  # EXPECT: narrow-arith
+    return leaf_hi
+
+
+def negated(leaf_lo):
+    return -leaf_lo  # EXPECT: narrow-arith

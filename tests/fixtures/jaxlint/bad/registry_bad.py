@@ -1,0 +1,13 @@
+"""Known-bad corpus for the registry-discipline rules (JX401/JX402)."""
+
+
+def pick_engine(index, engine):
+    if engine == "fused":  # EXPECT: engine-bypass
+        return index.fused_path()
+    if engine in ("vmap", "pdet"):  # EXPECT: engine-bypass
+        return index.other_path()
+    return index.default_path()
+
+
+def legacy_call(index, q):
+    return index.query(q, r_min=1.0, M=8)  # EXPECT: deprecated-shim

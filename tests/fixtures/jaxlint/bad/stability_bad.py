@@ -1,0 +1,25 @@
+"""Known-bad corpus for the unstable-sort rule (JX201)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def order_jnp(v):
+    return jnp.argsort(v)  # EXPECT: unstable-sort
+
+
+def sort_jnp(v):
+    return jnp.sort(v, axis=0)  # EXPECT: unstable-sort
+
+
+def order_np(v):
+    return np.argsort(v)  # EXPECT: unstable-sort
+
+
+def sort_np_wrong_kind(v):
+    return np.sort(v, kind="quicksort")  # EXPECT: unstable-sort
+
+
+def sort_lax(d, i):
+    return jax.lax.sort((d, i), num_keys=2)  # EXPECT: unstable-sort

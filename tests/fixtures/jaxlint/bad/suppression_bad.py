@@ -1,0 +1,15 @@
+"""Known-bad corpus for the suppression mechanics (rule ``suppression``).
+
+An unjustified suppression is inert (the underlying finding still fires)
+and is itself reported; naming an unknown rule is also reported.
+"""
+
+import numpy as np
+
+
+def unjustified(v):
+    return np.argsort(v)  # jaxlint: disable=unstable-sort  # EXPECT: suppression, unstable-sort
+
+
+def unknown_rule(v):
+    return np.argsort(v, kind="stable")  # jaxlint: disable=no-such-rule -- misspelled  # EXPECT: suppression

@@ -1,0 +1,51 @@
+"""Known-bad corpus for the trace-safety rules (JX101-JX104).
+
+Every flagged line carries an ``# EXPECT: <rule>`` marker; the corpus test
+asserts the analyzer reports exactly these (line, rule) pairs.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def bad_np_call(x):
+    y = jnp.abs(x)
+    return np.square(y)  # EXPECT: trace-np-call
+
+
+@jax.jit
+def bad_coerce(x):
+    s = jnp.sum(x)
+    return float(s)  # EXPECT: trace-scalar-coerce
+
+
+@jax.jit
+def bad_item(x):
+    return jnp.max(x).item()  # EXPECT: trace-item-call
+
+
+@jax.jit
+def bad_branch(x):
+    if jnp.any(x > 0):  # EXPECT: trace-py-branch
+        return x
+    return -x
+
+
+def _helper(q):
+    s = jnp.sum(q)
+    return int(s)  # EXPECT: trace-scalar-coerce
+
+
+@jax.jit
+def entry_calls_helper(q):
+    return _helper(q)
+
+
+def _mapped(row):
+    return np.log(jnp.asarray(row))  # EXPECT: trace-np-call
+
+
+def fan_out(batch):
+    return jax.vmap(_mapped)(batch)

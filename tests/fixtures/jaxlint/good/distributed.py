@@ -1,0 +1,10 @@
+"""Known-good corpus for the pdet probe-plumbing guard: *reading* the
+request's probe_depth to refuse it is the sanctioned pattern."""
+
+
+def pdet_query(index, q, request):
+    if request.probe_depth:
+        raise NotImplementedError(
+            "multi-probe on the sharded pdet engine needs a device-count-"
+            "invariant global slack ranking; use the fused engine")
+    return index.search(q)

@@ -1,0 +1,22 @@
+"""Known-good corpus for the export-drift rule: __all__, the lazy table,
+and eager defs agree."""
+
+import importlib
+
+_LAZY = {
+    "thing": "fixtures.mod_a",
+    "other": "fixtures.mod_b",
+}
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        return importlib.import_module(_LAZY[name])
+    raise AttributeError(name)
+
+
+def eager_helper():
+    return None
+
+
+__all__ = ["thing", "other", "eager_helper"]

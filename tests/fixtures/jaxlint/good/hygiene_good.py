@@ -1,0 +1,21 @@
+"""Known-good corpus for the hygiene rules."""
+
+import os
+import numpy as np
+
+try:
+    import hypothesis  # availability probe: exempt inside try/ImportError
+except ImportError:
+    hypothesis = None
+
+
+def where():
+    return os.getcwd()
+
+
+def zeros(n):
+    return np.zeros(n)
+
+
+def banner(name):
+    return f"hello {name}"

@@ -1,0 +1,21 @@
+"""Known-good corpus for the narrow-storage widening rule."""
+
+import jax.numpy as jnp
+
+
+def leaf_span(leaf_lo, leaf_hi):
+    return leaf_hi.astype(jnp.int32) - leaf_lo.astype(jnp.int32)
+
+
+def next_leaf(index):
+    return index.leaf_hi.astype(jnp.int32) + 1
+
+
+def shape_math(leaf_lo):
+    # Metadata reads are not narrow-storage reads.
+    return leaf_lo.shape[0] + 1
+
+
+def plain_read(codes_sorted, order):
+    # Indexing without arithmetic keeps the narrow dtype on purpose.
+    return codes_sorted[order]

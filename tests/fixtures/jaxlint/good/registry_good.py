@@ -1,0 +1,22 @@
+"""Known-good corpus for the registry-discipline rules."""
+
+
+def resolve_engine(request):
+    return "fused" if request.probes else "vmap"
+
+
+def dispatch(index, request):
+    # Comparing the *resolved* engine inside a function that consulted the
+    # registry is the sanctioned thin-wrapper pattern.
+    engine = resolve_engine(request)
+    if engine == "fused":
+        return index.fused_path()
+    return index.vmap_path()
+
+
+def check_outcome(result):
+    assert result.stats.engine == "pdet"  # verification, not dispatch
+
+
+def modern_call(index, request):
+    return index.search(request)

@@ -1,0 +1,35 @@
+"""Known-good corpus for the unstable-sort rule."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def order_jnp(v):
+    return jnp.argsort(v, stable=True)
+
+
+def sort_jnp(v):
+    return jnp.sort(v, axis=0, stable=True)
+
+
+def order_np(v):
+    return np.argsort(v, kind="stable")
+
+
+def sort_np_mergesort(v):
+    return np.sort(v, kind="mergesort")
+
+
+def lex(keys):
+    return np.lexsort(keys)  # lexsort is always stable
+
+
+def sort_lax(d, i):
+    return jax.lax.sort((d, i), num_keys=2, is_stable=True)
+
+
+def values_only(v):
+    # jaxlint: disable=unstable-sort -- values-only order statistics; the
+    #   permutation is never observed, stability cannot matter.
+    return np.sort(v)

@@ -1,0 +1,52 @@
+"""Known-good corpus for the trace-safety rules: every idiom here is
+trace-safe and must produce zero findings."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def shape_is_static(x):
+    # .shape/.ndim/len() launder taint: static under trace.
+    n = x.shape[0]
+    if n > 4:
+        x = x[:4]
+    return float(n) + jnp.sum(x)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def static_argname_branch(x, k):
+    if k > 8:  # k is static under this jit
+        k = 8
+    return jax.lax.top_k(x, k)
+
+
+@jax.jit
+def np_on_static_tables(x):
+    # Trace-time weight table from shapes only: np on static values is fine
+    # (the detree.interleave_keys idiom).
+    w = np.arange(x.shape[-1], dtype=np.int32)
+    return x * jnp.asarray(w)
+
+
+def host_fast_path(sample):
+    # The repo's tracer-guard idiom: branching on trace-ness is explicit
+    # author intent and exempts the guarded subtree.
+    if (not isinstance(sample, jax.core.Tracer)
+            and jax.default_backend() == "cpu"):
+        return jnp.asarray(np.square(np.asarray(sample)))
+    return sample * sample
+
+
+@jax.jit
+def device_branchless(x):
+    y = jnp.sum(x)
+    return jnp.where(y > 0, x, -x)
+
+
+@jax.jit
+def calls_host_path(x):
+    return host_fast_path(x)

@@ -1,0 +1,205 @@
+"""Tests for the jaxlint static analyzer (``repro.analysis``).
+
+Corpus protocol: every known-bad fixture line carries an
+``# EXPECT: rule[, rule...]`` marker, and the corpus test asserts the
+analyzer reports EXACTLY that (line, rule) set per file — so the bad corpus
+also proves the analyzer does not over-report.  The known-good corpus must
+produce zero findings.  The meta-test asserts the real tree is clean.
+"""
+
+import json
+import os
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (ALL_RULES, SourceFile, format_human,
+                            load_project, run_rules)
+
+REPO = Path(__file__).resolve().parent.parent
+FIXTURES = REPO / "tests" / "fixtures" / "jaxlint"
+BAD = FIXTURES / "bad"
+GOOD = FIXTURES / "good"
+
+_EXPECT_RE = re.compile(r"#\s*EXPECT:\s*([a-z\-]+(?:\s*,\s*[a-z\-]+)*)")
+
+
+def _expected_findings(path: Path) -> set[tuple[int, str]]:
+    out = set()
+    for i, line in enumerate(path.read_text().splitlines(), start=1):
+        m = _EXPECT_RE.search(line)
+        if m:
+            for rule in m.group(1).split(","):
+                out.add((i, rule.strip()))
+    return out
+
+
+def _run_dir(path: Path):
+    return run_rules(load_project([path]), ALL_RULES)
+
+
+def _cli(*args: str):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        capture_output=True, text=True, cwd=REPO, env=env)
+
+
+# ---------------------------------------------------------------------------
+# Corpus tests
+# ---------------------------------------------------------------------------
+
+BAD_FILES = sorted(p for p in BAD.rglob("*.py"))
+GOOD_FILES = sorted(p for p in GOOD.rglob("*.py"))
+
+
+def test_corpus_exists():
+    # Tentpole acceptance: >= 5 distinct rule classes, each with bad AND
+    # good fixtures.
+    assert len(BAD_FILES) >= 5 and len(GOOD_FILES) >= 5
+    expected_rules = set()
+    for p in BAD_FILES:
+        expected_rules.update(r for _, r in _expected_findings(p))
+    assert len(expected_rules) >= 8, expected_rules
+
+
+@pytest.mark.parametrize("path", BAD_FILES, ids=lambda p: p.name)
+def test_bad_fixture_flags_exactly_expected(path):
+    report = _run_dir(BAD)
+    rel = str(path.relative_to(REPO))
+    got = {(f.line, f.rule) for f in report.findings if f.path == rel}
+    want = _expected_findings(path)
+    assert want, f"{path} has no EXPECT markers"
+    assert got == want, (
+        f"{rel}: findings != EXPECT markers\n  extra: {sorted(got - want)}"
+        f"\n  missing: {sorted(want - got)}")
+
+
+def test_good_corpus_is_clean():
+    report = _run_dir(GOOD)
+    assert report.findings == (), format_human(report)
+
+
+def test_findings_have_file_line_anchors():
+    report = _run_dir(BAD)
+    assert report.findings
+    for f in report.findings:
+        assert f.anchor == f"{f.path}:{f.line}:{f.col}"
+        assert f.line >= 1 and f.col >= 0
+        assert f.path.startswith("tests/fixtures/jaxlint/bad"), f.path
+        # The anchored line really exists in the file.
+        text = (REPO / f.path).read_text().splitlines()
+        assert f.line <= len(text)
+
+
+def test_rule_battery_metadata():
+    names = [r.name for r in ALL_RULES]
+    assert len(names) == len(set(names))
+    for r in ALL_RULES:
+        assert r.code.startswith("JX")
+        assert r.severity in ("error", "warning")
+        assert r.doc
+
+
+# ---------------------------------------------------------------------------
+# Suppression mechanics
+# ---------------------------------------------------------------------------
+
+# Built by concatenation so the analyzer's line-based suppression scanner
+# never sees a directive in THIS file's raw source when it walks tests/.
+_DIRECTIVE = "# jax" + "lint: disable="
+
+
+def _parse(tmp_path, text):
+    p = tmp_path / "x.py"
+    p.write_text(text)
+    return SourceFile(p, "x.py", None)
+
+
+def test_justified_suppression_suppresses(tmp_path):
+    src = _parse(tmp_path,
+                 "import numpy as np\n"
+                 f"o = np.argsort(v)  {_DIRECTIVE}unstable-sort"
+                 " -- permutation unused\n")
+    assert src.suppressed("unstable-sort", 2)
+    assert not src.suppressed("trace-np-call", 2)
+
+
+def test_unjustified_suppression_is_inert(tmp_path):
+    src = _parse(tmp_path,
+                 "import numpy as np\n"
+                 f"o = np.argsort(v)  {_DIRECTIVE}unstable-sort\n")
+    assert not src.suppressed("unstable-sort", 2)
+
+
+def test_comment_line_suppression_governs_next_code_line(tmp_path):
+    src = _parse(tmp_path,
+                 f"{_DIRECTIVE}unstable-sort -- values only\n"
+                 "#   (continued)\n"
+                 "o = np.argsort(v)\n")
+    assert src.suppressed("unstable-sort", 3)
+
+
+def test_disable_all(tmp_path):
+    src = _parse(tmp_path,
+                 f"o = np.argsort(v)  {_DIRECTIVE}all -- generated\n")
+    assert src.suppressed("unstable-sort", 1)
+    assert src.suppressed("narrow-arith", 1)
+
+
+def test_suppression_findings_reported():
+    report = _run_dir(BAD)
+    rules = {f.rule for f in report.findings
+             if "suppression_bad" in f.path}
+    assert "suppression" in rules          # unjustified + unknown-rule
+    assert "unstable-sort" in rules        # the inert suppression suppressed nothing
+
+
+# ---------------------------------------------------------------------------
+# CLI / exit codes
+# ---------------------------------------------------------------------------
+
+def test_cli_exits_nonzero_on_bad_corpus():
+    r = _cli("tests/fixtures/jaxlint/bad")
+    assert r.returncode == 1, r.stdout + r.stderr
+    assert re.search(r"bad/\w+\.py:\d+:\d+: error", r.stdout)
+
+
+def test_cli_exits_zero_on_repo_tree():
+    # Meta-test: the real tree must stay jaxlint-clean.
+    r = _cli("src", "tests")
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "0 error(s)" in r.stdout
+
+
+def test_cli_json_output():
+    r = _cli("--json", "tests/fixtures/jaxlint/bad")
+    assert r.returncode == 1
+    payload = json.loads(r.stdout)
+    assert payload["errors"] > 0
+    assert {"rule", "severity", "path", "line", "col", "message"} <= set(
+        payload["findings"][0])
+
+
+def test_cli_list_rules():
+    r = _cli("--list-rules")
+    assert r.returncode == 0
+    assert "unstable-sort" in r.stdout and "JX201" in r.stdout
+
+
+def test_cli_select_single_rule():
+    r = _cli("--select", "unstable-sort", "tests/fixtures/jaxlint/bad")
+    assert r.returncode == 1
+    assert "unstable-sort" in r.stdout
+    assert "narrow-arith" not in r.stdout
+
+
+def test_fixture_corpus_pruned_from_directory_walks():
+    # Walking tests/ must not flag the known-bad corpus (sentinel pruning),
+    # which is exactly why test_cli_exits_zero_on_repo_tree can pass.
+    report = run_rules(load_project([REPO / "tests"]), ALL_RULES)
+    assert not any("fixtures/jaxlint" in f.path for f in report.findings)

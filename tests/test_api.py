@@ -11,7 +11,7 @@ import repro
 from repro.api import (AnnIndex, IndexSpec, LegacyIndexAdapter,
                        MutableAnnIndex, SearchRequest, as_ann_index,
                        available_engines, resolve_engine)
-from repro.core import DETLSH, derive_params
+from repro.core import DETLSH
 from repro.core.query import QueryConfig
 from tests.conftest import make_clustered, make_queries_near
 

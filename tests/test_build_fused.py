@@ -24,7 +24,7 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 import repro.api
-from repro.core import DETLSH, derive_params, detree
+from repro.core import DETLSH, derive_params
 from repro.core.detree import (CODE_DTYPE, LEAF_DTYPE, assemble_sorted_forest,
                                build_forest, code_sort_orders,
                                interleave_keys, _sort_by_code)

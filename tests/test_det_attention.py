@@ -47,7 +47,7 @@ def test_mips_augmentation_monotone(rng):
     d2 = jnp.sum((aug - qa[None]) ** 2, -1)
     ip = keys @ q
     # distances and inner products must be inversely rank-correlated
-    assert np.all(np.argsort(np.asarray(d2)) == np.argsort(-np.asarray(ip)))
+    assert np.all(np.argsort(np.asarray(d2), kind="stable") == np.argsort(-np.asarray(ip), kind="stable"))
 
 
 def test_seed_shims_warn_with_migration_target(rng):

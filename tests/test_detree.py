@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core import detree, encoding as enc, hashing
+from repro.core import hashing
 from repro.core.detree import build_forest, leaf_bounds
 
 
@@ -30,7 +30,7 @@ def test_forest_shapes_and_permutation():
         ids = np.asarray(forest.point_ids[l])
         valid = np.asarray(forest.valid[l])
         assert valid.sum() == n
-        real = np.sort(ids[valid])
+        real = np.sort(ids[valid], kind="stable")
         np.testing.assert_array_equal(real, np.arange(n))
         assert np.all(ids[~valid] == n)
 

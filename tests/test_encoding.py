@@ -3,7 +3,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import encoding as enc
@@ -81,7 +80,7 @@ def test_encode_monotone_in_coordinate():
     coords = rng.standard_normal((2048, 1)).astype(np.float32)
     bp = enc.select_breakpoints(jnp.asarray(coords), 256, method="full_sort")
     codes = np.asarray(enc.encode(jnp.asarray(coords), bp))[:, 0]
-    order = np.argsort(coords[:, 0])
+    order = np.argsort(coords[:, 0], kind="stable")
     assert np.all(np.diff(codes[order]) >= 0)
 
 

@@ -6,7 +6,6 @@ oracle — which itself is validated against a naive formulation where one
 exists (attention).
 """
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -43,7 +42,7 @@ def test_lsh_project_matches_ref(rng, n, d, m, dtype):
                                     (64, 4, 16), (1024, 128, 256)])
 def test_encode_bins_matches_ref(rng, n, D, Nr):
     coords = _rand(rng, (n, D), scale=3.0)
-    bp = jnp.sort(_rand(rng, (D, Nr + 1), scale=3.0), axis=1)
+    bp = jnp.sort(_rand(rng, (D, Nr + 1), scale=3.0), axis=1, stable=True)
     got = ops.encode_bins(coords, bp, interpret=True)
     want = ref.encode_bins(coords, bp)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
@@ -67,7 +66,7 @@ def test_encode_bins_matches_core_encoding(rng):
                                       (64, 16, 1, 16), (1024, 2, 4, 128)])
 def test_encode_pack_matches_ref(rng, n, K, L, Nr):
     coords = _rand(rng, (n, L * K), scale=3.0)
-    bp = jnp.sort(_rand(rng, (L * K, Nr + 1), scale=3.0), axis=1)
+    bp = jnp.sort(_rand(rng, (L * K, Nr + 1), scale=3.0), axis=1, stable=True)
     got = ops.encode_pack(coords, bp, K=K, L=L, interpret=True, block_n=128)
     want = ref.encode_pack(coords, bp, K=K, L=L)
     for g, w, name in zip(got, want, ("proj_t", "codes_t", "key_hi",
@@ -83,7 +82,7 @@ def test_encode_pack_codes_match_encode_bins(rng):
     from repro.core.detree import interleave_keys
     K, L, Nr, n = 4, 3, 32, 200
     coords = _rand(rng, (n, L * K), scale=2.0)
-    bp = jnp.sort(_rand(rng, (L * K, Nr + 1), scale=2.0), axis=1)
+    bp = jnp.sort(_rand(rng, (L * K, Nr + 1), scale=2.0), axis=1, stable=True)
     proj_t, codes_t, key_hi, key_lo = ops.encode_pack(
         coords, bp, K=K, L=L, interpret=True, block_n=64)
     codes_flat = ops.encode_bins(coords, bp, interpret=True)
@@ -101,7 +100,7 @@ def test_encode_pack_codes_match_encode_bins(rng):
 def test_project_encode_pack_matches_ref(rng, n, d, K, L, Nr):
     x = _rand(rng, (n, d))
     a = _rand(rng, (d, L * K))
-    bp = jnp.sort(_rand(rng, (L * K, Nr + 1), scale=3.0), axis=1)
+    bp = jnp.sort(_rand(rng, (L * K, Nr + 1), scale=3.0), axis=1, stable=True)
     got = ops.project_encode_pack(x, a, bp, K=K, L=L, interpret=True,
                                   block_n=64)
     want = ref.project_encode_pack(x, a, bp, K=K, L=L)
@@ -120,7 +119,7 @@ def test_project_encode_pack_matches_ref(rng, n, d, K, L, Nr):
 @pytest.mark.parametrize("nl,K,Nr", [(256, 4, 256), (300, 16, 64),
                                      (17, 2, 16), (512, 8, 128)])
 def test_leaf_bounds_matches_ref(rng, nl, K, Nr):
-    bp = jnp.sort(_rand(rng, (K, Nr + 1), scale=3.0), axis=1)
+    bp = jnp.sort(_rand(rng, (K, Nr + 1), scale=3.0), axis=1, stable=True)
     lo = jnp.asarray(rng.integers(0, Nr, (nl, K)), jnp.int32)
     hi = jnp.clip(lo + jnp.asarray(rng.integers(0, 8, (nl, K)), jnp.int32),
                   0, Nr - 1)
@@ -169,7 +168,7 @@ def _range_rerank_inputs(rng, L, B, K, nl, ls, d, E):
     qp = _rand(rng, (L, B, K))
     r = jnp.asarray(np.abs(rng.standard_normal(B)).astype(np.float32) * 2.0)
     r = r.at[0].set(-1.0)                      # an inactive (done) lane
-    bp = jnp.sort(_rand(rng, (L, K, E), scale=3.0), axis=2)
+    bp = jnp.sort(_rand(rng, (L, K, E), scale=3.0), axis=2, stable=True)
     lo = jnp.asarray(rng.integers(0, E - 1, (L, nl, K)), jnp.int32)
     hi = jnp.clip(lo + jnp.asarray(rng.integers(0, 4, (L, nl, K)), jnp.int32),
                   0, E - 2)

@@ -4,7 +4,6 @@ dominance gate, and a tiny end-to-end run through the protocol."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.eval import (CurvePoint, dominates_at_recall, pareto_front,
                         run_pareto)

@@ -39,7 +39,7 @@ def _oracle(view, queries, k):
     """Brute-force top-k over the pinned epoch's surviving union."""
     vecs, gids = view.survivors()
     d2 = ((queries[:, None, :] - vecs[None, :, :]) ** 2).sum(-1)
-    sel = np.argsort(d2, axis=1)[:, :k]
+    sel = np.argsort(d2, axis=1, kind="stable")[:, :k]
     return gids[sel], np.sqrt(np.take_along_axis(d2, sel, axis=1))
 
 

@@ -15,7 +15,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-import repro.api
 from repro.api import SearchRequest
 from repro.core import derive_params
 from repro.serving import (Answer, LatencyModel, LatencyRing, MicroBatcher,

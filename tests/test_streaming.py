@@ -20,7 +20,7 @@ from repro.core import DETLSH, derive_params
 from repro.streaming import StreamingDETLSH, merge_segments
 from repro.streaming.compactor import interleave_keys64, \
     stable_merge_positions
-from tests.conftest import brute_force_knn, make_clustered
+from tests.conftest import make_clustered
 
 D = 16
 SAT = dict(r_min=1e6, M=10**6)         # saturating query: admit everything
@@ -41,7 +41,7 @@ def survivors_bf(idx, queries, k):
     """Brute-force exact top-k (gids, dists) over the surviving union."""
     vecs, gids = idx._survivors()
     d2 = ((queries[:, None, :] - vecs[None, :, :]) ** 2).sum(-1)
-    sel = np.argsort(d2, axis=1)[:, :k]
+    sel = np.argsort(d2, axis=1, kind="stable")[:, :k]
     return gids[sel], np.sqrt(np.take_along_axis(d2, sel, axis=1))
 
 
@@ -166,8 +166,8 @@ def test_compaction_merges_sorted_and_drops_tombstones():
 def test_stable_merge_positions_is_a_permutation():
     rng = np.random.default_rng(7)
     for _ in range(20):
-        a = np.sort(rng.integers(0, 40, rng.integers(0, 30)).astype(np.uint64))
-        b = np.sort(rng.integers(0, 40, rng.integers(0, 30)).astype(np.uint64))
+        a = np.sort(rng.integers(0, 40, rng.integers(0, 30)).astype(np.uint64), kind="stable")
+        b = np.sort(rng.integers(0, 40, rng.integers(0, 30)).astype(np.uint64), kind="stable")
         pa, pb = stable_merge_positions(a, b)
         merged = np.empty(len(a) + len(b), np.uint64)
         merged[pa] = a
@@ -202,7 +202,7 @@ def test_merge_segments_equals_survivor_union():
         np.testing.assert_array_equal(ka, kb)      # same sorted key sequence
         ga = merged.gids[np.asarray(merged.forest.point_ids[l])[va]]
         gb = rebuilt.gids[np.asarray(rebuilt.forest.point_ids[l])[vb]]
-        np.testing.assert_array_equal(np.sort(ga), np.sort(gb))
+        np.testing.assert_array_equal(np.sort(ga, kind="stable"), np.sort(gb, kind="stable"))
 
 
 def test_clip_fraction_and_requantile():

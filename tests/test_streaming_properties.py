@@ -72,7 +72,7 @@ def test_mutation_sequence_equals_fresh_build(seed, ops):
         return
     k = min(5, len(gids))
     d2 = ((queries[:, None, :] - vecs[None, :, :]) ** 2).sum(-1)
-    sel = np.argsort(d2, axis=1)[:, :k]
+    sel = np.argsort(d2, axis=1, kind="stable")[:, :k]
     gt_gids = gids[sel]
     gt_d = np.sqrt(np.take_along_axis(d2, sel, axis=1))
 

@@ -2,7 +2,6 @@
 data pipeline, gradient compression, end-to-end loss descent + resume."""
 
 import os
-import shutil
 import subprocess
 import sys
 
@@ -17,7 +16,7 @@ from repro.data.pipeline import PipelineConfig, SyntheticLM, make_pipeline
 from repro.models import transformer as T
 from repro.train import checkpoint as ckpt
 from repro.train import quant
-from repro.train.compression import compress_psum, init_residuals
+from repro.train.compression import compress_psum
 from repro.train.optimizer import (AdamWConfig, adamw_init, adamw_update,
                                    schedule)
 from repro.train.train_step import make_train_step

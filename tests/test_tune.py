@@ -16,7 +16,6 @@ Contracts under test:
   * the grid and targets validate eagerly.
 """
 
-import dataclasses
 import json
 
 import jax
@@ -25,7 +24,6 @@ import numpy as np
 import pytest
 
 import repro
-from repro.api import SearchRequest
 from repro.eval.pareto import CurvePoint
 from repro.tune import (DEFAULT_GRID, TuneResult, predicted_build_cost,
                         suggest_params, tune)
