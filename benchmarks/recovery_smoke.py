@@ -1,0 +1,131 @@
+"""Durability smoke: WAL ingest overhead + crash-recovery time (CI gate).
+
+Ingests the same upsert/delete stream into a plain ``StreamingDETLSH``
+(WAL off) and a ``DurableIndex`` (WAL on, ``fsync='interval'``), kills
+the durable one without a final checkpoint, recovers it, and measures:
+
+  * ingest parity — WAL-on points/s must stay >= 0.5x WAL-off (the log
+    is a few framed appends per op; it must never dominate ingest);
+  * recovery time and the number of WAL records replayed;
+  * bitwise identity — the recovered index answers exactly like the
+    pre-crash one on both engines (and ``state_digest`` matches).
+
+Writes BENCH_recovery.json at the repo root; run.py --smoke enforces the
+parity and identity gates.
+
+  PYTHONPATH=src python -m benchmarks.run --smoke
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Table, make_dataset, make_queries
+
+SMOKE = dict(n=2048, n_stream=1024, chunk=128, k=10, batch=32)
+
+
+def _build(data):
+    from repro.core import derive_params
+    from repro.streaming import StreamingDETLSH
+    p = derive_params(K=4, c=1.5, L=4, beta_override=0.1)
+    return StreamingDETLSH.build(jnp.asarray(data), jax.random.key(0), p,
+                                 Nr=64, leaf_size=32, delta_capacity=256,
+                                 max_segments=4)
+
+
+def _ingest(index, stream, chunk):
+    """Drive the same mutation schedule into either wrapper; returns
+    points/s over the upserted rows."""
+    t0 = time.perf_counter()
+    for i in range(0, len(stream), chunk):
+        gids = index.upsert(stream[i: i + chunk])
+        if i // chunk % 3 == 2:
+            index.delete(np.asarray(gids)[::7])
+    sec = time.perf_counter() - t0
+    return len(stream) / sec, sec
+
+
+def run_recovery_smoke(cfg=None, json_path: str = "BENCH_recovery.json",
+                       out_dir: str = "benchmarks/out") -> Table:
+    from repro.api import SearchRequest
+    from repro.durability import DurableIndex, recover
+
+    cfg = dict(SMOKE, **(cfg or {}))
+    data = make_dataset("deep-like", cfg["n"], seed=0)
+    base, stream = data[: cfg["n"] - cfg["n_stream"]], \
+        data[cfg["n"] - cfg["n_stream"]:]
+    queries = jnp.asarray(make_queries(data, cfg["batch"], seed=1))
+    root = os.path.join(out_dir, "smoke_recovery")
+    shutil.rmtree(root, ignore_errors=True)
+
+    # Warmup: pay every seal/merge JIT compile once, untimed, so the
+    # parity ratio below compares steady-state ingest, not compile time.
+    _ingest(_build(base), stream, cfg["chunk"])
+
+    # WAL off: the plain index is the ingest baseline
+    plain = _build(base)
+    pps_off, _ = _ingest(plain, stream, cfg["chunk"])
+
+    # WAL on: same schedule through the durable wrapper
+    durable = DurableIndex.create(_build(base), root, fsync="interval")
+    pps_on, _ = _ingest(durable, stream, cfg["chunk"])
+    digest_pre = durable.state_digest()
+    answers_pre = {}
+    for engine in ("fused", "vmap"):
+        req = SearchRequest(k=cfg["k"], engine=engine)
+        res = durable.search(queries, req)
+        answers_pre[engine] = (np.asarray(res.ids), np.asarray(res.dists))
+    wal_stats = durable.durability_stats()
+    durable.wal._f.close()                 # kill: no checkpoint of the tail
+
+    t0 = time.perf_counter()
+    recovered = recover(root)
+    recovery_s = time.perf_counter() - t0
+    replayed = recovered.last_recovery.n_replayed
+
+    identical = recovered.state_digest() == digest_pre
+    for engine in ("fused", "vmap"):
+        req = SearchRequest(k=cfg["k"], engine=engine)
+        res = recovered.search(queries, req)
+        identical &= bool(np.array_equal(answers_pre[engine][0],
+                                         np.asarray(res.ids)))
+        identical &= bool(np.array_equal(answers_pre[engine][1],
+                                         np.asarray(res.dists)))
+    recovered.close()
+
+    ratio = pps_on / pps_off
+    table = Table("recovery_smoke",
+                  ["metric", "wal_off", "wal_on", "derived"])
+    table.add("ingest_pps", f"{pps_off:.0f}", f"{pps_on:.0f}",
+              f"ratio={ratio:.2f}")
+    table.add("recovery", "-", f"{recovery_s * 1e3:.1f}ms",
+              f"replayed={replayed}")
+    table.add("identical", "-", str(identical),
+              f"wal_bytes={wal_stats['wal_bytes']}")
+
+    payload = dict(bench="recovery_smoke", workload=cfg,
+                   backend=jax.default_backend(),
+                   ingest_pps_wal_off=pps_off, ingest_pps_wal_on=pps_on,
+                   ingest_ratio=ratio, recovery_s=recovery_s,
+                   replayed=replayed, identical=identical,
+                   wal=wal_stats)
+    with open(json_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    if not identical:
+        raise AssertionError(
+            f"recovery not bit-identical to the pre-crash index: {payload}")
+    table.emit(out_dir)
+    return table
+
+
+def recovery_smoke() -> Table:
+    """run.py --smoke entry point."""
+    return run_recovery_smoke()

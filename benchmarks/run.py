@@ -53,9 +53,10 @@ def main(argv=None) -> None:
                          "round-trip, PDET worker scaling, the serving-"
                          "runtime mixed-load check, LSH-decode vs full "
                          "attention, the recall/QPS Pareto sweep on "
-                         "small indexes, and the auto-tuner shrink-L check; "
+                         "small indexes, the auto-tuner shrink-L check, "
+                         "and the WAL ingest/recovery check; "
                          "writes BENCH_{query,build,snapshot,parallel,"
-                         "serving,decode,pareto,tune}.json and the "
+                         "serving,decode,pareto,tune,recovery}.json and the "
                          "benchmarks/out/smoke_snapshot artifact")
     ap.add_argument("--only", default="")
     ap.add_argument("--out-dir", default="benchmarks/out")
@@ -67,13 +68,14 @@ def main(argv=None) -> None:
         from benchmarks import parallel_scaling as P
         from benchmarks import pareto_smoke as PS
         from benchmarks import query_throughput as Q
+        from benchmarks import recovery_smoke as R
         from benchmarks import serving_load as V
         from benchmarks import snapshot_smoke as S
         from benchmarks import tune_smoke as T
         figures = [Q.query_throughput_smoke, B.build_throughput_smoke,
                    S.snapshot_smoke, P.parallel_scaling_smoke,
                    V.serving_load, D.decode_throughput_smoke,
-                   PS.pareto_smoke, T.tune_smoke]
+                   PS.pareto_smoke, T.tune_smoke, R.recovery_smoke]
     else:
         figures = _figures(args.fast)
 
@@ -176,6 +178,19 @@ def _enforce_smoke_gates(failed, ran) -> None:
               f"{tg['tuned_recall']:.3f} at {tg['tuned_work']:.0f} "
               f"candidates/query vs static L={tg['baseline_L']} at "
               f"{tg['baseline_work']:.0f}")
+    if "recovery_smoke" in ran:
+        with open("BENCH_recovery.json") as f:
+            rec = json.load(f)
+        if not rec["identical"]:
+            raise SystemExit("[bench] recovery gate: recovered index not "
+                             "bit-identical to the pre-crash one")
+        if not rec["ingest_ratio"] >= 0.5:
+            raise SystemExit(f"[bench] recovery gate: WAL-on ingest "
+                             f"{rec['ingest_ratio']:.2f}x of WAL-off "
+                             f"(< 0.5x parity floor)")
+        print(f"[bench] recovery gates OK: bit-identical after replaying "
+              f"{rec['replayed']} records in {rec['recovery_s'] * 1e3:.0f}ms,"
+              f" WAL ingest parity {rec['ingest_ratio']:.2f}x")
     if "build_throughput_smoke" not in ran:
         print("[bench] build speedup gate skipped (build figure not run)")
         return

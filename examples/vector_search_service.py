@@ -6,9 +6,11 @@ disappear while queries run, sealing delta segments and triggering
 compaction; hopeless deadlines are shed with an explicit ``Rejected``;
 injected engine and compaction faults recover with bit-identical answers.
 The finale snapshots the live index and restarts the service from the
-snapshot — no rebuild — and a last phase serves the *sharded* PDET index
-on a forced 4-device host mesh, bit-identical to its single-device twin
-(docs/DESIGN.md §7).
+snapshot — no rebuild; a durability phase serves a WAL-backed
+``DurableIndex``, kills it with an un-checkpointed tail, and recovers it
+bit-identically (docs/DESIGN.md §13); and a last phase serves the
+*sharded* PDET index on a forced 4-device host mesh, bit-identical to
+its single-device twin (docs/DESIGN.md §7).
 
   PYTHONPATH=src python examples/vector_search_service.py
 """
@@ -142,8 +144,67 @@ def main():
         assert np.array_equal(before.dists, after.dists)
         print("restarted service answers bit-identically from the snapshot")
 
-    # Phase 3: the sharded PDET index, served through the same runtime.
+    # Phase 3: durability — serve a WAL-backed index, kill it mid-flight,
+    # recover the root, and keep serving with bit-identical answers.
+    kill_and_recover_phase(draw, base_req)
+
+    # Phase 4: the sharded PDET index, served through the same runtime.
     serve_pdet(data, draw)
+
+
+def kill_and_recover_phase(draw, base_req):
+    """DurableIndex lifecycle (docs/DESIGN.md §13): WAL-logged mutations,
+    a kill with an un-checkpointed tail, and bit-identical recovery."""
+    from repro.core import derive_params
+    from repro.durability import DurableIndex, recover
+    from repro.streaming import StreamingDETLSH
+
+    rng = np.random.default_rng(13)
+    base = draw(4000)
+    p = derive_params(K=4, c=1.5, L=8, beta_override=0.05)
+    idx = StreamingDETLSH.build(jnp.asarray(base), jax.random.key(5), p,
+                                delta_capacity=1024, max_segments=3)
+
+    with tempfile.TemporaryDirectory() as tmp:
+        root = os.path.join(tmp, "durable")
+        durable = DurableIndex.create(idx, root, checkpoint_bytes=1 << 22)
+        rt = ServingRuntime(durable, k=10, max_batch=32, pad_to=32,
+                            request=base_req)
+        t0 = time.perf_counter()
+        for _ in range(3):
+            gids = rt.upsert(draw(600))
+            rt.delete(gids[::9])
+        s = rt.stats.summary()
+        print(f"\ndurability phase: {time.perf_counter() - t0:.2f}s of "
+              f"WAL-logged churn (wal_bytes={s['wal_bytes']}, "
+              f"fsyncs={s['fsyncs']}, checkpoints={s['checkpoints']})")
+
+        probes = np.stack([draw(1)[0] for _ in range(16)])
+        before = durable.search(jnp.asarray(probes), base_req)
+        digest = durable.state_digest()
+        durable.wal._f.close()       # the kill: no flush, no final snapshot
+
+        t0 = time.perf_counter()
+        recovered = recover(root)
+        report = recovered.last_recovery
+        print(f"recovered in {time.perf_counter() - t0:.2f}s from "
+              f"{report.checkpoint}, replayed {report.n_replayed} WAL "
+              f"records (torn_bytes={report.torn_bytes})")
+        assert recovered.state_digest() == digest
+        after = recovered.search(jnp.asarray(probes), base_req)
+        assert np.array_equal(np.asarray(before.ids), np.asarray(after.ids))
+        assert np.array_equal(np.asarray(before.dists),
+                              np.asarray(after.dists))
+
+        # ...and the recovered index serves + mutates like nothing happened
+        rt2 = ServingRuntime(recovered, k=10, max_batch=32, pad_to=32,
+                             request=base_req)
+        assert rt2.stats.summary()["recovery_replayed"] == report.n_replayed
+        rt2.upsert(draw(64))
+        out = rt2.serve((time.perf_counter(), q) for q in probes)
+        assert all(isinstance(o, Answer) for o in out)
+        recovered.close()
+        print("recovered index answers bit-identically and keeps serving")
 
 
 def fault_recovery_phase(rt, index, plan, queries, stream, base_req):

@@ -23,14 +23,17 @@ import importlib
 
 __version__ = "1.0.0"
 
-__all__ = ["__version__", "api", "decode", "tune", "DETLSH",
-           "StreamingDETLSH", "derive_params", "KVCacheIndex",
-           "suggest_params", "TuneResult"]
+__all__ = ["__version__", "api", "decode", "durability", "tune", "DETLSH",
+           "StreamingDETLSH", "derive_params", "DurableIndex", "recover",
+           "KVCacheIndex", "suggest_params", "TuneResult"]
 
 _LAZY = {
     "api": ("repro.api", None),
     "decode": ("repro.decode", None),
+    "durability": ("repro.durability", None),
     "tune": ("repro.tune", None),
+    "DurableIndex": ("repro.durability", "DurableIndex"),
+    "recover": ("repro.durability", "recover"),
     "DETLSH": ("repro.core", "DETLSH"),
     "StreamingDETLSH": ("repro.streaming", "StreamingDETLSH"),
     "derive_params": ("repro.core.theory", "derive_params"),

@@ -60,6 +60,7 @@ __all__ = [
     "load",
     "save",
     "SnapshotFormatError",
+    "SnapshotIntegrityError",
     "FORMAT_VERSION",
 ]
 
@@ -86,6 +87,7 @@ _EXPORTS = {
     "load": "repro.api.persist",
     "save": "repro.api.persist",
     "SnapshotFormatError": "repro.api.persist",
+    "SnapshotIntegrityError": "repro.api.persist",
     "FORMAT_VERSION": "repro.api.persist",
 }
 

@@ -29,37 +29,60 @@ device-count invariant by construction — DESIGN.md §7).
 
 ``load`` refuses snapshots whose ``format_version`` it does not understand
 (``SnapshotFormatError``), so a format change can never be silently
-misread as garbage arrays.  Version 2 added the sharded ``pdet`` kind.
+misread as garbage arrays.  Version 2 added the sharded ``pdet`` kind;
+version 3 (docs/DESIGN.md §13) made every save *atomic* (files are staged
+into a temp sibling directory, fsynced, and published with ``os.replace``,
+so a crashed save can never shadow a previously valid snapshot) and added
+per-file sha256 ``digests`` to MANIFEST.json, verified on load — a
+silently bit-flipped file raises ``SnapshotIntegrityError`` naming it.
+Pre-digest snapshots (version <= 2) still load, with a warning.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import io
 import json
 import os
+import shutil
+import tempfile
+import warnings
 from typing import Any, Optional
 
 import numpy as np
 
 FORMAT_NAME = "repro-ann-snapshot"
-FORMAT_VERSION = 2
-# The stamp records the version that defined the kind's *layout*: the
-# static/streaming layouts are unchanged since version 1 (so previous
-# releases keep reading snapshots this build writes), while version 2
-# added the sharded 'pdet' kind.  Reading accepts the supported set, so
-# upgrading in either direction never forces the rebuild the persistence
-# feature exists to avoid; anything else is a SnapshotFormatError.
-SUPPORTED_FORMAT_VERSIONS = (1, 2)
-_KIND_FORMAT_VERSIONS = {"static": 1, "streaming": 1, "pdet": 2}
+FORMAT_VERSION = 3
+# The stamp records the version that defined the kind's *layout*.  Every
+# kind stamps 3 now: version 3 added the manifest 'digests' map (integral
+# to the integrity contract — a reader that ignored it would also skip
+# verification, so older builds refusing v3 is correct).  Reading accepts
+# the whole supported set, so an upgrade never forces the rebuild the
+# persistence feature exists to avoid.
+SUPPORTED_FORMAT_VERSIONS = (1, 2, 3)
+_KIND_FORMAT_VERSIONS = {"static": 3, "streaming": 3, "pdet": 3}
+# First version whose manifests must carry digests; earlier snapshots
+# load with a warning instead of an integrity error.
+DIGEST_FORMAT_VERSION = 3
 
 
 class SnapshotFormatError(ValueError):
     """The directory is not a snapshot this build can read."""
 
 
+class SnapshotIntegrityError(SnapshotFormatError):
+    """A snapshot file's bytes do not match the digest its MANIFEST
+    recorded at save time — bit rot, truncation, or tampering."""
+
+
 # Test seam (serving/faults.py): when set, called with the snapshot path at
 # the top of ``load`` — the SNAPSHOT_LOAD fault-injection boundary.
 load_fault_hook = None
+
+# Test seam (serving/faults.py): when set, called with each staged file
+# name during a save — the SNAPSHOT_WRITE fault-injection boundary.
+write_fault_hook = None
 
 
 # ---------------------------------------------------------------------------
@@ -124,19 +147,144 @@ def _rmin_load(d: dict) -> dict:
     return {int(k): float(v) for k, v in (d or {}).items()}
 
 
+def _atomic_write_bytes(fpath: str, data: bytes) -> None:
+    """Temp file + fsync + ``os.replace``: a reader of ``fpath`` sees the
+    old bytes or the new bytes, never a torn write."""
+    tmp = fpath + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(data)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, fpath)
+
+
+def _fsync_dir(path: str) -> None:
+    """Directory fsync (commits renames/creates on POSIX); best-effort on
+    platforms whose directories cannot be opened."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
 def _write_manifest(path: str, manifest: dict) -> None:
-    with open(os.path.join(path, "MANIFEST.json"), "w") as f:
-        json.dump(manifest, f, indent=1, sort_keys=True)
+    """Atomic manifest write (temp + ``os.replace``): a crash mid-write
+    can orphan a temp file, never truncate MANIFEST.json itself."""
+    _atomic_write_bytes(
+        os.path.join(path, "MANIFEST.json"),
+        json.dumps(manifest, indent=1, sort_keys=True).encode())
 
 
-def _drop_stale_npz(path: str, keep: set) -> None:
-    """Re-saving into an existing snapshot directory must not leave .npz
-    files a previous save wrote but the new manifest no longer references
-    (e.g. pre-compaction segments, a dropped plan.npz) — the directory
-    would grow without bound and mislead readers."""
-    for fname in os.listdir(path):
-        if fname.endswith(".npz") and fname not in keep:
-            os.remove(os.path.join(path, fname))
+def _npz_bytes(arrays: dict) -> bytes:
+    """One snapshot .npz, staged in memory so its sha256 digest can be
+    recorded in MANIFEST.json before any byte reaches disk."""
+    buf = io.BytesIO()
+    np.savez(buf, **arrays)
+    return buf.getvalue()
+
+
+def _sha256_hex(data: bytes) -> str:
+    return "sha256:" + hashlib.sha256(data).hexdigest()
+
+
+def _publish_snapshot(path: str, files: dict, manifest: dict) -> None:
+    """Write a snapshot directory *atomically* (docs/DESIGN.md §13).
+
+    The files — plus MANIFEST.json carrying their sha256 digests — are
+    staged into a temp sibling directory, fsynced, and published with
+    ``os.replace``: a crash at any point leaves either the old directory
+    or the new one, never a mix, and stale files from an earlier save
+    cannot survive (the published directory is always freshly built).
+    Re-publishing over an existing snapshot swaps via a second rename
+    (a directory cannot atomically replace a non-empty directory): the
+    old tree moves aside, the staged tree renames in, the old tree is
+    removed — the only non-atomic window is between the two renames, and
+    by then the staged tree is already complete and durable on disk.
+    The SNAPSHOT_WRITE fault site fires once per staged file, before its
+    bytes are written.
+    """
+    path = os.fspath(path)
+    manifest = dict(manifest)
+    manifest["digests"] = {fname: _sha256_hex(data)
+                           for fname, data in sorted(files.items())}
+    parent = os.path.dirname(os.path.abspath(path))
+    os.makedirs(parent, exist_ok=True)
+    tmp = tempfile.mkdtemp(prefix=os.path.basename(path) + ".stage-",
+                           dir=parent)
+    try:
+        for fname in sorted(files):
+            if write_fault_hook is not None:
+                write_fault_hook(fname)    # SNAPSHOT_WRITE boundary
+            _atomic_write_bytes(os.path.join(tmp, fname), files[fname])
+        if write_fault_hook is not None:
+            write_fault_hook("MANIFEST.json")
+        _write_manifest(tmp, manifest)
+        _fsync_dir(tmp)
+        if os.path.isdir(path):
+            old = tmp + ".old"
+            os.rename(path, old)
+            try:
+                os.replace(tmp, path)
+            except BaseException:
+                os.rename(old, path)       # restore the prior snapshot
+                raise
+            _fsync_dir(parent)
+            shutil.rmtree(old, ignore_errors=True)
+        else:
+            os.replace(tmp, path)
+            _fsync_dir(parent)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+
+
+def _verify_digests(path: str, manifest: dict) -> None:
+    """Check every file against the manifest's recorded sha256 before any
+    loader touches it.  Pre-digest snapshots (format_version < 3) warn;
+    a v3 manifest *without* digests is malformed."""
+    digests = manifest.get("digests")
+    if digests is None:
+        ver = manifest.get("format_version")
+        if isinstance(ver, int) and ver >= DIGEST_FORMAT_VERSION:
+            raise SnapshotFormatError(
+                f"{path!r}: format_version {ver} snapshot carries no "
+                f"'digests' map — the manifest is malformed")
+        warnings.warn(
+            f"{path!r}: pre-digest snapshot (format_version {ver!r}) — "
+            f"file integrity cannot be verified; re-save to record sha256 "
+            f"digests", UserWarning, stacklevel=3)
+        return
+    if not isinstance(digests, dict):
+        raise SnapshotFormatError(
+            f"{path!r}: manifest field 'digests' must be an object, got "
+            f"{type(digests).__name__}")
+    for fname in sorted(digests):
+        want = digests[fname]
+        if not isinstance(want, str):
+            raise SnapshotFormatError(
+                f"{path!r}: digest for {fname!r} must be a string, got "
+                f"{type(want).__name__}")
+        fpath = os.path.join(path, fname)
+        if not os.path.isfile(fpath):
+            raise SnapshotIntegrityError(
+                f"{fpath!r}: snapshot file is missing (the manifest's "
+                f"digests reference it — the directory is incomplete or "
+                f"was partially copied)")
+        h = hashlib.sha256()
+        with open(fpath, "rb") as f:
+            for chunk in iter(lambda: f.read(1 << 20), b""):
+                h.update(chunk)
+        got = "sha256:" + h.hexdigest()
+        if got != want:
+            raise SnapshotIntegrityError(
+                f"{fpath!r}: snapshot file is truncated or corrupt on "
+                f"disk — sha256 {got} != recorded {want}")
 
 
 class _SnapshotArrays(dict):
@@ -265,18 +413,15 @@ def _spec_from(d: Optional[dict]) -> Any:
 # ---------------------------------------------------------------------------
 
 def save_static(index: Any, path: str) -> None:
-    """Snapshot a ``core.DETLSH``: A, data, forest, fused-plan constants."""
-    os.makedirs(path, exist_ok=True)
+    """Snapshot a ``core.DETLSH``: A, data, forest, fused-plan constants.
+    Published atomically with per-file digests (``_publish_snapshot``)."""
     arrays = {"A": np.asarray(index.A), "data": np.asarray(index.data)}
     arrays.update(_forest_arrays(index.forest))
-    np.savez(os.path.join(path, "arrays.npz"), **arrays)
+    files = {"arrays.npz": _npz_bytes(arrays)}
     has_plan = index._plan is not None
     if has_plan:
-        np.savez(os.path.join(path, "plan.npz"),
-                 **_plan_arrays(index._plan))
-    _drop_stale_npz(path, {"arrays.npz"} | ({"plan.npz"} if has_plan
-                                            else set()))
-    _write_manifest(path, {
+        files["plan.npz"] = _npz_bytes(_plan_arrays(index._plan))
+    _publish_snapshot(path, files, {
         "format": FORMAT_NAME,
         "format_version": _KIND_FORMAT_VERSIONS["static"],
         "kind": "static",
@@ -311,13 +456,16 @@ def _load_static(path: str, manifest: dict) -> Any:
 # Streaming index
 # ---------------------------------------------------------------------------
 
-def save_streaming(index: Any, path: str) -> None:
+def save_streaming(index: Any, path: str,
+                   extra: Optional[dict] = None) -> None:
     """Snapshot a ``streaming.StreamingDETLSH``: segments (with tombstone
     bitmaps), memtable survivors, frozen breakpoints, and the manifest —
-    a restart resumes serving (and mutating) exactly where it left off."""
-    os.makedirs(path, exist_ok=True)
-    np.savez(os.path.join(path, "common.npz"),
-             A=np.asarray(index.A), bp_all=np.asarray(index.bp_all))
+    a restart resumes serving (and mutating) exactly where it left off.
+    ``extra`` merges additional top-level manifest keys (the durability
+    subsystem records its checkpoint lsn there; loaders ignore keys they
+    do not know)."""
+    files = {"common.npz": _npz_bytes(
+        {"A": np.asarray(index.A), "bp_all": np.asarray(index.bp_all)})}
     seg_entries = []
     for seg in index.manifest.segments:
         fname = f"segment_{seg.seg_id:06d}.npz"
@@ -328,7 +476,7 @@ def save_streaming(index: Any, path: str) -> None:
         has_plan = seg._plan is not None
         if has_plan:
             arrays.update(_plan_arrays(seg._plan))
-        np.savez(os.path.join(path, fname), **arrays)
+        files[fname] = _npz_bytes(arrays)
         seg_entries.append({
             "seg_id": seg.seg_id, "file": fname,
             "clip_fraction": seg.clip_fraction,
@@ -337,16 +485,14 @@ def save_streaming(index: Any, path: str) -> None:
             "has_plan": has_plan,
         })
     mt = index.memtable
-    np.savez(os.path.join(path, "memtable.npz"),
-             vecs=mt.vecs, gids=mt.gids, live=mt.live)
-    _drop_stale_npz(path, {"common.npz", "memtable.npz"}
-                    | {e["file"] for e in seg_entries})
+    files["memtable.npz"] = _npz_bytes(
+        {"vecs": mt.vecs, "gids": mt.gids, "live": mt.live})
     # Only persist the r_min cache when it is current for this structure —
     # a stale (pre-mutation) cache must not be resurrected as fresh.
     rmin_tag, rmin_entries = index._rmin_cache
     if rmin_tag != (index.manifest.version, mt.version):
         rmin_entries = {}
-    _write_manifest(path, {
+    _publish_snapshot(path, files, {**(extra or {}), **{
         "format": FORMAT_NAME,
         "format_version": _KIND_FORMAT_VERSIONS["streaming"],
         "kind": "streaming",
@@ -361,7 +507,7 @@ def save_streaming(index: Any, path: str) -> None:
                      "count": mt.count},
         "spec": _spec_dict(index),
         "r_min_cache": _rmin_dump(rmin_entries),
-    })
+    }})
 
 
 def _load_streaming(path: str, manifest: dict) -> Any:
@@ -444,7 +590,6 @@ def save_pdet(index: Any, path: str) -> None:
     every position/leaf-sharded forest array) plus the shard map in
     MANIFEST.json — each file is one device's working set, so a shard
     never has to be materialized whole on another host to be written."""
-    os.makedirs(path, exist_ok=True)
     forest = index.forest
     S = index.placement.n_shards
     n = index.data.shape[0]
@@ -454,9 +599,9 @@ def save_pdet(index: Any, path: str) -> None:
     # multiple at build); data rows may not — split as evenly as possible.
     pos, leaves = n_pad // S, n_leaves // S
     row_bounds = [round(s * n / S) for s in range(S + 1)]
-    np.savez(os.path.join(path, "common.npz"),
-             A=np.asarray(index.A),
-             breakpoints=np.asarray(forest.breakpoints))
+    files = {"common.npz": _npz_bytes(
+        {"A": np.asarray(index.A),
+         "breakpoints": np.asarray(forest.breakpoints)})}
     shard_entries = []
     for s in range(S):
         fname = f"shard_{s:05d}.npz"
@@ -468,16 +613,14 @@ def save_pdet(index: Any, path: str) -> None:
         for k in _PDET_LEAF_KEYS:
             arrays[k] = np.asarray(
                 getattr(forest, k)[:, s * leaves:(s + 1) * leaves])
-        np.savez(os.path.join(path, fname), **arrays)
+        files[fname] = _npz_bytes(arrays)
         shard_entries.append({
             "shard": s, "file": fname,
             "rows": [row_bounds[s], row_bounds[s + 1]],
             "positions": [s * pos, (s + 1) * pos],
             "leaves": [s * leaves, (s + 1) * leaves],
         })
-    _drop_stale_npz(path, {"common.npz"}
-                    | {e["file"] for e in shard_entries})
-    _write_manifest(path, {
+    _publish_snapshot(path, files, {
         "format": FORMAT_NAME,
         "format_version": _KIND_FORMAT_VERSIONS["pdet"],
         "kind": "pdet",
@@ -568,7 +711,10 @@ def load(path: str, placement: Any = None) -> Any:
 
     Returns a ``core.DETLSH``, ``streaming.StreamingDETLSH``, or
     ``core.distributed.PDETIndex`` according to the manifest's ``kind``;
-    raises ``SnapshotFormatError`` on any format/version mismatch.
+    raises ``SnapshotFormatError`` on any format/version mismatch and
+    ``SnapshotIntegrityError`` when a file's bytes no longer match the
+    sha256 digest recorded at save time (pre-digest snapshots, version
+    <= 2, load with a warning instead).
 
     ``placement`` applies to sharded (pdet) snapshots only: it overrides
     the reshard-on-load policy (default: the saved placement when it fits
@@ -579,6 +725,7 @@ def load(path: str, placement: Any = None) -> Any:
     if load_fault_hook is not None:
         load_fault_hook(path)          # SNAPSHOT_LOAD injection boundary
     manifest = _read_manifest(path)
+    _verify_digests(os.fspath(path), manifest)
     kind = manifest.get("kind")
     # jaxlint: disable=engine-bypass -- 'kind' is the snapshot FORMAT tag
     #   (which loader parses the files), not engine dispatch; the engine for

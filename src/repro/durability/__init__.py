@@ -1,0 +1,15 @@
+"""Process-crash durability for the streaming index (docs/DESIGN.md §13):
+a checksummed segmented write-ahead log, atomic verified checkpoints, and
+bit-identical ``recover(root)``."""
+
+from repro.durability.durable import (DurableIndex, RecoveryError,
+                                      RecoveryReport, recover)
+from repro.durability.wal import (FSYNC_ALWAYS, FSYNC_INTERVAL, FSYNC_OFF,
+                                  FSYNC_POLICIES, WalError, WalRecord,
+                                  WalScan, WriteAheadLog, scan_wal)
+
+__all__ = [
+    "DurableIndex", "RecoveryError", "RecoveryReport", "recover",
+    "FSYNC_ALWAYS", "FSYNC_INTERVAL", "FSYNC_OFF", "FSYNC_POLICIES",
+    "WalError", "WalRecord", "WalScan", "WriteAheadLog", "scan_wal",
+]

@@ -1,0 +1,504 @@
+"""DurableIndex: WAL + checkpoint durability for StreamingDETLSH
+(docs/DESIGN.md §13).
+
+Layout::
+
+    <root>/
+      wal/                      segmented write-ahead log (wal.py)
+      checkpoints/
+        ckpt_00000000/          full atomic snapshot (api/persist.py) whose
+        ckpt_00000001/          MANIFEST carries {"durability": {"wal_lsn",
+        ...                     "checkpoint_id"}}
+
+Discipline:
+
+  * **log-before-apply** for the ops that change the answer set — upsert
+    (with *resolved* gids, so replay never re-allocates), delete, and
+    grow_id_capacity.  The WAL_APPEND fault site fires before any byte is
+    written, so an op that crashed inside ``append`` was neither logged
+    nor applied.
+  * **log-after-success** for answer-preserving reorganizations — seal and
+    compact.  A crash between apply and log loses only the reorganization
+    (the recovered index answers identically; it just re-seals/compacts
+    later).  ``requantile`` draws fresh breakpoints (optionally from a PRNG
+    key), so it is made durable by an immediate checkpoint instead of a
+    log record.
+  * **checkpoints never overwrite** — each one publishes atomically into a
+    fresh numbered directory, and the previous checkpoint is deleted only
+    after the new one is durable and its WAL commit record is fsynced.  At
+    every injectable crash boundary at least one valid checkpoint exists.
+
+Recovery (``recover(root)``): load the newest checkpoint that passes
+digest verification (skipping partial/corrupt ones), repair the WAL's torn
+tail, and re-apply every record with ``lsn > checkpoint.wal_lsn``.  Every
+logged op is deterministic given its logged inputs (resolved gids, frozen
+breakpoints, host-side merges), and checkpoint load is bit-identical by
+the persistence contract — so recovery is bit-identical to the pre-crash
+index over the acked ops (the crash-matrix property test asserts this on
+both engines).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import json
+import math
+import os
+import re
+import shutil
+import time
+from typing import Any, Dict, Iterator, Optional, Tuple
+
+import numpy as np
+
+from repro.durability.wal import (FSYNC_INTERVAL, WalRecord, WriteAheadLog,
+                                  scan_wal)
+
+_CKPT_RE = re.compile(r"^ckpt_(\d{8})$")
+
+
+class RecoveryError(RuntimeError):
+    """``recover`` cannot produce an index from what is on disk."""
+
+
+@dataclasses.dataclass(frozen=True)
+class RecoveryReport:
+    """What one ``recover`` call did — which checkpoint it stood on, which
+    WAL records it replayed, and what the torn-tail repair discarded."""
+
+    checkpoint: str                      # directory name used
+    checkpoint_id: int
+    checkpoint_lsn: int                  # ops with lsn <= this were skipped
+    replayed: Tuple[Tuple[int, str], ...]   # (lsn, op) actually re-applied
+    skipped_checkpoints: Tuple[Tuple[str, str], ...]  # (name, why)
+    torn_bytes: int                      # WAL bytes the repair truncated
+    dropped_wal_segments: int
+
+    @property
+    def n_replayed(self) -> int:
+        return len(self.replayed)
+
+
+def _apply_record(index: Any, record: WalRecord) -> None:
+    """Replay one WAL record onto a loaded index.  Each branch re-invokes
+    the exact mutation the original process ran, with the logged inputs."""
+    op = record.op
+    if op == "upsert":
+        index.upsert(record.arrays["vecs"], record.arrays["gids"])
+    elif op == "delete":
+        index.delete(record.arrays["gids"])
+    elif op == "seal":
+        index.seal()
+    elif op == "compact":
+        index.compact()
+    elif op == "grow":
+        index.grow_id_capacity(int(record.fields["capacity"]))
+    elif op == "checkpoint":
+        pass                             # a marker, not a mutation
+    else:
+        raise RecoveryError(
+            f"unknown WAL op {op!r} at lsn {record.lsn} — the log was "
+            f"written by a newer build; upgrade before recovering")
+
+
+class DurableIndex:
+    """Write-ahead-logged wrapper around a ``StreamingDETLSH``.
+
+    Satisfies ``repro.api.MutableAnnIndex`` (mutations are logged, reads
+    delegate) — construct with ``DurableIndex.create(index, root)`` for a
+    fresh directory or ``repro.durability.recover(root)`` after a crash.
+    Attributes not defined here (``manifest``, ``pin_state``, ``spec``,
+    ``stats``, ...) delegate to the wrapped index, so the serving runtime
+    treats a DurableIndex exactly like the index it wraps.
+    """
+
+    def __init__(self, index: Any, root: str, *, wal: WriteAheadLog,
+                 next_checkpoint_id: int,
+                 checkpoint_bytes: int = 1 << 20,
+                 checkpoint_age_s: float = math.inf,
+                 keep_checkpoints: int = 2,
+                 fault_plan: Any = None,
+                 last_recovery: Optional[RecoveryReport] = None):
+        if keep_checkpoints < 1:
+            raise ValueError(f"keep_checkpoints must be >= 1, "
+                             f"got {keep_checkpoints}")
+        self._index = index
+        self.root = os.fspath(root)
+        self.wal = wal
+        self.checkpoint_bytes = int(checkpoint_bytes)
+        self.checkpoint_age_s = float(checkpoint_age_s)
+        self.keep_checkpoints = int(keep_checkpoints)
+        self._plan = fault_plan
+        self.last_recovery = last_recovery
+        self._next_ckpt_id = int(next_checkpoint_id)
+        self._ckpt_dir = os.path.join(self.root, "checkpoints")
+        self.checkpoints_written = 0
+        self.last_checkpoint_path: Optional[str] = None
+        self._last_ckpt_bytes = wal.appended_bytes
+        self._last_ckpt_time = time.monotonic()
+        self._last_ckpt_lsn = wal.next_lsn - 1
+
+    # ------------------------------------------------------------------
+    # Construction
+    # ------------------------------------------------------------------
+
+    @classmethod
+    def create(cls, index: Any, root: str, *,
+               fsync: str = FSYNC_INTERVAL,
+               fsync_interval_bytes: int = 1 << 20,
+               segment_bytes: int = 1 << 22,
+               checkpoint_bytes: int = 1 << 20,
+               checkpoint_age_s: float = math.inf,
+               keep_checkpoints: int = 2,
+               fault_plan: Any = None) -> "DurableIndex":
+        """Wrap ``index`` with a fresh durability root: writes checkpoint 0
+        (the current state, made durable immediately) and an empty WAL.
+        ``root`` must not already hold a durability layout — recover an
+        existing one with ``repro.durability.recover(root)`` instead."""
+        root = os.fspath(root)
+        ckpts = os.path.join(root, "checkpoints")
+        if os.path.isdir(ckpts) and any(
+                _CKPT_RE.match(n) for n in os.listdir(ckpts)):
+            raise ValueError(
+                f"{root!r} already holds checkpoints — use "
+                f"repro.durability.recover(root) to resume it")
+        os.makedirs(root, exist_ok=True)
+        wal = WriteAheadLog(os.path.join(root, "wal"), fsync=fsync,
+                            fsync_interval_bytes=fsync_interval_bytes,
+                            segment_bytes=segment_bytes,
+                            fault_plan=fault_plan)
+        durable = cls(index, root, wal=wal, next_checkpoint_id=0,
+                      checkpoint_bytes=checkpoint_bytes,
+                      checkpoint_age_s=checkpoint_age_s,
+                      keep_checkpoints=keep_checkpoints,
+                      fault_plan=fault_plan)
+        durable.checkpoint()
+        return durable
+
+    # ------------------------------------------------------------------
+    # Logged mutations (MutableAnnIndex)
+    # ------------------------------------------------------------------
+
+    def upsert(self, vectors: Any, gids: Any = None) -> np.ndarray:
+        """Validate → log (with resolved gids) → apply.  Validation runs
+        first so a rejected op (gid exhaustion, negative gids) is neither
+        logged nor applied — replay never has to reproduce a failure."""
+        vecs = np.asarray(vectors, np.float32)
+        if vecs.ndim == 1:
+            vecs = vecs[None, :]
+        m = len(vecs)
+        if gids is None:
+            gids = np.arange(self._index.next_gid,
+                             self._index.next_gid + m, dtype=np.int64)
+        else:
+            gids = np.asarray(gids, np.int64).reshape(-1)
+            if len(gids) != m:
+                raise ValueError(f"{len(gids)} gids for {m} vectors")
+        if m == 0:
+            return gids.astype(np.int32)
+        self._index.check_upsert(gids)
+        self.wal.append("upsert", arrays={"gids": gids, "vecs": vecs})
+        return self._index.upsert(vecs, gids)
+
+    def delete(self, gids: Any) -> int:
+        g = np.atleast_1d(np.asarray(gids, np.int64)).reshape(-1)
+        self.wal.append("delete", arrays={"gids": g})
+        return self._index.delete(g)
+
+    def grow_id_capacity(self, new_capacity: int) -> None:
+        new_capacity = int(new_capacity)
+        if new_capacity < self._index.id_capacity:
+            raise ValueError(f"cannot shrink id_capacity ({new_capacity} "
+                             f"< {self._index.id_capacity})")
+        self.wal.append("grow", {"capacity": new_capacity})
+        self._index.grow_id_capacity(new_capacity)
+
+    def seal(self) -> Any:
+        """Apply-then-log: sealing preserves answers, so a crash between
+        the two loses only the reorganization, never a row."""
+        seg = self._index.seal()
+        if seg is not None:
+            self.wal.append("seal")
+        return seg
+
+    flush = seal
+
+    def compact(self) -> bool:
+        did = self._index.compact()
+        if did:
+            self.wal.append("compact")
+        return did
+
+    def maybe_compact(self) -> bool:
+        did = self._index.maybe_compact()
+        if did:
+            self.wal.append("compact")
+        return did
+
+    def requantile(self, key: Any = None) -> None:
+        """Rebuild with fresh breakpoints, then checkpoint immediately —
+        the new quantization is not a replayable delta (it may depend on a
+        PRNG key), so durability comes from the snapshot, not the log."""
+        self._index.requantile(key)
+        self.checkpoint()
+
+    # ------------------------------------------------------------------
+    # Checkpoints
+    # ------------------------------------------------------------------
+
+    @contextlib.contextmanager
+    def _snapshot_faults(self) -> Iterator[None]:
+        if self._plan is None:
+            yield
+            return
+        with self._plan.installed_on_save():
+            yield
+
+    def checkpoint(self) -> str:
+        """Write an atomic snapshot of the current state into a *fresh*
+        numbered directory, commit it with a fsynced WAL marker, then
+        truncate covered WAL segments and GC old checkpoints.
+
+        Crash-safety by construction: the new directory publishes via
+        temp + ``os.replace`` (never partially visible), and nothing that
+        was valid before is touched until after the commit record is
+        durable — so no crash point can leave the root without a loadable
+        checkpoint.  CHECKPOINT_INSTALL fires twice: before publish and
+        before commit (``FaultPlan.arm(..., skip=1)`` targets the second).
+        """
+        from repro.api import persist
+        cid = self._next_ckpt_id
+        covers = self.wal.next_lsn - 1
+        name = f"ckpt_{cid:08d}"
+        target = os.path.join(self._ckpt_dir, name)
+        if self._plan is not None:
+            from repro.serving import faults as flt
+            self._plan.fire(flt.CHECKPOINT_INSTALL, f"{name}:publish")
+        with self._snapshot_faults():
+            persist.save_streaming(
+                self._index, target,
+                extra={"durability": {"checkpoint_id": cid,
+                                      "wal_lsn": covers}})
+        if self._plan is not None:
+            from repro.serving import faults as flt
+            self._plan.fire(flt.CHECKPOINT_INSTALL, f"{name}:commit")
+        self._next_ckpt_id = cid + 1
+        self.wal.rotate()
+        self.wal.append("checkpoint",
+                        {"checkpoint_id": cid, "covers_lsn": covers})
+        self.wal.sync()
+        self._gc_checkpoints(keep_from=cid)
+        # Truncate only through the OLDEST retained checkpoint's covered
+        # lsn: records above it are still needed if recovery ever has to
+        # fall back past the newest checkpoint (digest failure).
+        self.wal.truncate_through(self._retained_covers(covers))
+        self.checkpoints_written += 1
+        self.last_checkpoint_path = target
+        self._last_ckpt_bytes = self.wal.appended_bytes
+        self._last_ckpt_time = time.monotonic()
+        self._last_ckpt_lsn = covers
+        return target
+
+    def maybe_checkpoint(self) -> bool:
+        """Background checkpoint policy: checkpoint when enough WAL bytes
+        accumulated since the last one, or it is old enough — and there is
+        at least one new record to cover.  Returns whether it ran."""
+        if self.wal.next_lsn - 1 <= self._last_ckpt_lsn:
+            return False
+        due = (self.wal.appended_bytes - self._last_ckpt_bytes
+               >= self.checkpoint_bytes
+               or time.monotonic() - self._last_ckpt_time
+               >= self.checkpoint_age_s)
+        if not due:
+            return False
+        self.checkpoint()
+        return True
+
+    def _retained_covers(self, newest_covers: int) -> int:
+        """The smallest covered lsn over the retained, *readable*
+        checkpoints.  Unreadable ones contribute nothing — recovery would
+        skip them too, so their records need not be kept."""
+        lo = newest_covers
+        for name in _checkpoint_names(self._ckpt_dir):
+            try:
+                meta = _durability_meta(os.path.join(self._ckpt_dir, name))
+            except (RecoveryError, OSError, json.JSONDecodeError):
+                continue
+            lo = min(lo, meta["wal_lsn"])
+        return lo
+
+    def _gc_checkpoints(self, keep_from: int) -> None:
+        """Remove checkpoints older than the retention window.  Runs only
+        after the new checkpoint is durable; a crash mid-removal leaves a
+        partial old directory, which recovery skips (it never gets that
+        far — the newer checkpoint verifies first)."""
+        keep = set(range(max(0, keep_from - self.keep_checkpoints + 1),
+                         keep_from + 1))
+        for fname in os.listdir(self._ckpt_dir):
+            m = _CKPT_RE.match(fname)
+            if m and int(m.group(1)) not in keep:
+                shutil.rmtree(os.path.join(self._ckpt_dir, fname),
+                              ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    # Read path / AnnIndex delegation
+    # ------------------------------------------------------------------
+
+    def search(self, queries: Any, request: Any = None, *,
+               view: Any = None) -> Any:
+        return self._index.search(queries, request, view=view)
+
+    def r_min_for(self, k: int, queries: Any = None) -> float:
+        return self._index.r_min_for(k, queries)
+
+    def pin_state(self) -> Any:
+        return self._index.pin_state()
+
+    def save(self, path: Any) -> None:
+        """A plain (non-checkpoint) snapshot of the wrapped index."""
+        with self._snapshot_faults():
+            self._index.save(path)
+
+    def index_size_bytes(self) -> int:
+        return self._index.index_size_bytes()
+
+    def state_digest(self) -> str:
+        return self._index.state_digest()
+
+    @property
+    def n_points(self) -> int:
+        return self._index.n_points
+
+    @property
+    def index(self) -> Any:
+        """The wrapped ``StreamingDETLSH``."""
+        return self._index
+
+    def __getattr__(self, name: str) -> Any:
+        if name.startswith("_"):
+            raise AttributeError(name)
+        return getattr(self._index, name)
+
+    # ------------------------------------------------------------------
+    # Introspection / lifecycle
+    # ------------------------------------------------------------------
+
+    def durability_stats(self) -> dict:
+        return {
+            "wal_bytes": self.wal.appended_bytes,
+            "wal_records": self.wal.appended_records,
+            "wal_size_bytes": self.wal.size_bytes(),
+            "fsyncs": self.wal.fsyncs,
+            "checkpoints_written": self.checkpoints_written,
+            "last_checkpoint": self.last_checkpoint_path,
+            "recovery_replayed": (self.last_recovery.n_replayed
+                                  if self.last_recovery else 0),
+        }
+
+    def close(self) -> None:
+        self.wal.close()
+
+
+# ---------------------------------------------------------------------------
+# Recovery
+# ---------------------------------------------------------------------------
+
+def _checkpoint_names(ckpt_dir: str) -> list:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    return sorted(n for n in os.listdir(ckpt_dir) if _CKPT_RE.match(n))
+
+
+def _durability_meta(path: str) -> Dict[str, int]:
+    """The {"wal_lsn", "checkpoint_id"} section a checkpoint's MANIFEST
+    carries.  Raises ``RecoveryError`` when absent — a plain snapshot is
+    not a checkpoint (there is no lsn to anchor replay on)."""
+    with open(os.path.join(path, "MANIFEST.json")) as f:
+        manifest = json.load(f)
+    meta = manifest.get("durability")
+    if (not isinstance(meta, dict) or "wal_lsn" not in meta
+            or "checkpoint_id" not in meta):
+        raise RecoveryError(
+            f"{path!r}: snapshot carries no 'durability' section — it is "
+            f"a plain save, not a DurableIndex checkpoint")
+    return {"wal_lsn": int(meta["wal_lsn"]),
+            "checkpoint_id": int(meta["checkpoint_id"])}
+
+
+def recover(root: str, *, fsync: str = FSYNC_INTERVAL,
+            fsync_interval_bytes: int = 1 << 20,
+            segment_bytes: int = 1 << 22,
+            checkpoint_bytes: int = 1 << 20,
+            checkpoint_age_s: float = math.inf,
+            keep_checkpoints: int = 2,
+            fault_plan: Any = None) -> DurableIndex:
+    """Rebuild a ``DurableIndex`` from ``root`` after a crash (or a clean
+    shutdown — the two are indistinguishable and both must work).
+
+    Loads the newest checkpoint that passes sha256 verification (corrupt
+    or partially-installed ones are skipped, and recorded in the report),
+    repairs the WAL's torn tail, replays every record past the
+    checkpoint's covered lsn, and returns a ``DurableIndex`` ready to
+    serve and mutate.  ``index.last_recovery`` holds the
+    ``RecoveryReport``.
+
+    Raises ``RecoveryError`` when no valid checkpoint exists: WAL records
+    are deltas against a checkpoint base, so a WAL alone cannot rebuild
+    an index.
+    """
+    from repro.api import persist
+    root = os.fspath(root)
+    ckpt_dir = os.path.join(root, "checkpoints")
+    names = _checkpoint_names(ckpt_dir)
+    if not names:
+        raise RecoveryError(
+            f"{root!r}: no checkpoints found — a WAL alone cannot rebuild "
+            f"the index (records are deltas against a checkpoint base); "
+            f"was DurableIndex.create() ever run on this root?")
+    skipped = []
+    index = None
+    meta: Dict[str, int] = {}
+    used = ""
+    for name in reversed(names):
+        path = os.path.join(ckpt_dir, name)
+        try:
+            index = persist.load(path)
+            meta = _durability_meta(path)
+            used = name
+            break
+        except (persist.SnapshotFormatError, RecoveryError, OSError,
+                json.JSONDecodeError) as exc:
+            skipped.append((name, f"{type(exc).__name__}: {exc}"))
+    if index is None:
+        detail = "; ".join(f"{n}: {why}" for n, why in skipped)
+        raise RecoveryError(
+            f"{root!r}: no checkpoint passed verification ({detail})")
+
+    scan = scan_wal(os.path.join(root, "wal"), repair=True)
+    covers = meta["wal_lsn"]
+    replayed = []
+    for record in scan.records:
+        if record.lsn <= covers or record.op == "checkpoint":
+            continue
+        _apply_record(index, record)
+        replayed.append((record.lsn, record.op))
+
+    report = RecoveryReport(
+        checkpoint=used, checkpoint_id=meta["checkpoint_id"],
+        checkpoint_lsn=covers, replayed=tuple(replayed),
+        skipped_checkpoints=tuple(skipped),
+        torn_bytes=scan.truncated_bytes,
+        dropped_wal_segments=scan.dropped_segments)
+    wal = WriteAheadLog(os.path.join(root, "wal"), fsync=fsync,
+                        fsync_interval_bytes=fsync_interval_bytes,
+                        segment_bytes=segment_bytes,
+                        start_lsn=max(covers, scan.last_lsn) + 1,
+                        fault_plan=fault_plan)
+    next_cid = max(int(_CKPT_RE.match(n).group(1))  # type: ignore[union-attr]
+                   for n in names) + 1
+    return DurableIndex(index, root, wal=wal, next_checkpoint_id=next_cid,
+                        checkpoint_bytes=checkpoint_bytes,
+                        checkpoint_age_s=checkpoint_age_s,
+                        keep_checkpoints=keep_checkpoints,
+                        fault_plan=fault_plan, last_recovery=report)

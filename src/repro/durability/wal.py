@@ -1,0 +1,375 @@
+"""Segmented, checksummed write-ahead log (docs/DESIGN.md §13).
+
+The WAL is a directory of append-only segment files::
+
+    <root>/wal/
+      seg_00000000.wal
+      seg_00000001.wal
+      ...
+
+Each segment starts with a 16-byte header (magic ``RWAL``, format version,
+first lsn) followed by length-framed records::
+
+    +----------------+----------------+-----------------------------+
+    | crc32(payload) | len(payload)   | payload                     |
+    | u32 LE         | u32 LE         | len(payload) bytes          |
+    +----------------+----------------+-----------------------------+
+
+    payload := u32 LE header_len | header JSON | raw array bytes...
+
+The JSON header carries ``{"lsn", "op", "fields", "arrays"}`` where
+``arrays`` lists ``[name, dtype, shape]`` for each raw-byte block that
+follows (in name-sorted order) — so a record round-trips numpy arrays
+bit-exactly without pickling.
+
+Torn-tail discipline: ``scan_wal`` walks segments in order and stops at the
+*first* bad record (short frame, short payload, CRC mismatch, undecodable
+header).  With ``repair=True`` it truncates the torn file at that offset
+and deletes every later segment — a crash mid-append loses at most the
+record being written, never the ability to recover.
+
+Fsync policy: ``always`` syncs after every append, ``interval`` after every
+``fsync_interval_bytes`` of unsynced appends, ``off`` only on explicit
+``sync()``.  Every append ``flush()``\\ es regardless, so an in-process
+crash (exception, injected fault) never loses buffered records — fsync
+policy only bounds what a *power* loss can take.
+
+Fault injection (serving/faults.py): ``WAL_APPEND`` fires *before* any
+byte of the record is written (a crashed append is never in the log);
+``WAL_FSYNC`` fires before ``os.fsync`` (the record is already written and
+flushed, so it survives an in-process crash).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import os
+import re
+import struct
+import zlib
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+WAL_MAGIC = b"RWAL"
+WAL_VERSION = 1
+_SEG_HEADER = struct.Struct("<4sIQ")     # magic, version, first lsn
+_FRAME = struct.Struct("<II")            # crc32(payload), len(payload)
+_U32 = struct.Struct("<I")
+
+FSYNC_ALWAYS = "always"
+FSYNC_INTERVAL = "interval"
+FSYNC_OFF = "off"
+FSYNC_POLICIES = (FSYNC_ALWAYS, FSYNC_INTERVAL, FSYNC_OFF)
+
+_SEG_RE = re.compile(r"^seg_(\d{8})\.wal$")
+
+
+class WalError(ValueError):
+    """The write-ahead log was configured or used incorrectly."""
+
+
+@dataclasses.dataclass(frozen=True)
+class WalRecord:
+    """One logged event: a monotonically increasing ``lsn``, the op name,
+    JSON-able scalar ``fields``, and bit-exact numpy ``arrays``."""
+
+    lsn: int
+    op: str
+    fields: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    arrays: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+
+
+def encode_record(record: WalRecord) -> bytes:
+    """Frame one record (crc + length + payload); see module docstring."""
+    meta = []
+    chunks = []
+    for name in sorted(record.arrays):
+        a = np.ascontiguousarray(record.arrays[name])
+        meta.append([name, a.dtype.str, list(a.shape)])
+        chunks.append(a.tobytes())
+    header = json.dumps({"lsn": record.lsn, "op": record.op,
+                         "fields": record.fields, "arrays": meta},
+                        sort_keys=True).encode()
+    payload = _U32.pack(len(header)) + header + b"".join(chunks)
+    return _FRAME.pack(zlib.crc32(payload) & 0xFFFFFFFF,
+                       len(payload)) + payload
+
+
+def decode_payload(payload: bytes) -> WalRecord:
+    """Inverse of ``encode_record``'s payload part.  Raises ``ValueError``
+    on any structural mismatch (the scanner treats that as a torn tail —
+    CRC already vouched for the bytes, so a failure here means a framing
+    bug or a CRC collision, and stopping is the safe answer either way)."""
+    if len(payload) < _U32.size:
+        raise ValueError("payload shorter than its header-length field")
+    (hlen,) = _U32.unpack_from(payload, 0)
+    if _U32.size + hlen > len(payload):
+        raise ValueError("payload shorter than its declared header")
+    header = json.loads(payload[_U32.size:_U32.size + hlen])
+    off = _U32.size + hlen
+    arrays: Dict[str, np.ndarray] = {}
+    for name, dtype, shape in header["arrays"]:
+        dt = np.dtype(dtype)
+        nbytes = dt.itemsize * math.prod(shape)
+        if off + nbytes > len(payload):
+            raise ValueError(f"array {name!r} extends past the payload")
+        arrays[name] = np.frombuffer(
+            payload, dtype=dt, count=math.prod(shape), offset=off
+        ).reshape(shape).copy()
+        off += nbytes
+    if off != len(payload):
+        raise ValueError(f"{len(payload) - off} trailing payload bytes")
+    return WalRecord(lsn=int(header["lsn"]), op=str(header["op"]),
+                     fields=dict(header["fields"]), arrays=arrays)
+
+
+@dataclasses.dataclass
+class WalScan:
+    """Result of walking a WAL directory: every valid record in lsn order,
+    plus what the torn-tail pass found (and, with ``repair=True``, fixed)."""
+
+    records: List[WalRecord] = dataclasses.field(default_factory=list)
+    segments: List[Tuple[int, str]] = dataclasses.field(default_factory=list)
+    truncated_bytes: int = 0         # bytes cut from the torn segment
+    dropped_segments: int = 0        # whole segments after the torn point
+    torn: bool = False
+
+    @property
+    def last_lsn(self) -> int:
+        return self.records[-1].lsn if self.records else -1
+
+
+def _segment_files(path: str) -> List[Tuple[int, str]]:
+    if not os.path.isdir(path):
+        return []
+    out = []
+    for fname in os.listdir(path):
+        m = _SEG_RE.match(fname)
+        if m:
+            out.append((int(m.group(1)), fname))
+    out.sort()
+    return out
+
+
+def _scan_segment(data: bytes) -> Tuple[List[WalRecord], int, bool]:
+    """(records, first_bad_offset, clean) for one segment's bytes."""
+    if (len(data) < _SEG_HEADER.size
+            or data[:4] != WAL_MAGIC
+            or _SEG_HEADER.unpack_from(data)[1] != WAL_VERSION):
+        return [], 0, False
+    records: List[WalRecord] = []
+    off = _SEG_HEADER.size
+    while off < len(data):
+        if off + _FRAME.size > len(data):
+            return records, off, False
+        crc, ln = _FRAME.unpack_from(data, off)
+        start = off + _FRAME.size
+        if start + ln > len(data):
+            return records, off, False
+        payload = data[start:start + ln]
+        if zlib.crc32(payload) & 0xFFFFFFFF != crc:
+            return records, off, False
+        try:
+            records.append(decode_payload(payload))
+        except (ValueError, KeyError, TypeError, json.JSONDecodeError):
+            return records, off, False
+        off = start + ln
+    return records, off, True
+
+
+def scan_wal(path: str, repair: bool = False) -> WalScan:
+    """Read every segment in order, stopping at the first bad record.
+
+    ``repair=True`` additionally truncates the torn segment at the bad
+    record's offset (or removes it outright when its own header is bad)
+    and deletes every later segment — after which a re-scan is clean.
+    """
+    scan = WalScan()
+    files = _segment_files(path)
+    for i, (seq, fname) in enumerate(files):
+        fpath = os.path.join(path, fname)
+        with open(fpath, "rb") as f:
+            data = f.read()
+        records, good_off, clean = _scan_segment(data)
+        scan.records.extend(records)
+        if clean:
+            scan.segments.append((seq, fname))
+            continue
+        scan.torn = True
+        scan.truncated_bytes += len(data) - good_off
+        later = files[i + 1:]
+        scan.dropped_segments = len(later)
+        for _, lname in later:
+            lpath = os.path.join(path, lname)
+            scan.truncated_bytes += os.path.getsize(lpath)
+            if repair:
+                os.remove(lpath)
+        if repair:
+            if good_off == 0:
+                os.remove(fpath)
+            else:
+                with open(fpath, "r+b") as f:
+                    f.truncate(good_off)
+                scan.segments.append((seq, fname))
+        break
+    return scan
+
+
+class WriteAheadLog:
+    """Appender over a WAL directory (one writer at a time).
+
+    Opening always repairs any torn tail (``scan_wal(repair=True)``) and
+    starts a *fresh* segment, so an append never continues a file a crash
+    may have left mid-frame.  ``start_lsn`` must be greater than every lsn
+    already on disk (recovery passes ``last replayed + 1``).
+    """
+
+    def __init__(self, path: str, *, fsync: str = FSYNC_INTERVAL,
+                 fsync_interval_bytes: int = 1 << 20,
+                 segment_bytes: int = 1 << 22,
+                 start_lsn: int = 0,
+                 fault_plan: Any = None):
+        if fsync not in FSYNC_POLICIES:
+            raise WalError(f"unknown fsync policy {fsync!r}; "
+                           f"valid: {FSYNC_POLICIES}")
+        self.path = os.fspath(path)
+        self.fsync_policy = fsync
+        self.fsync_interval_bytes = int(fsync_interval_bytes)
+        self.segment_bytes = int(segment_bytes)
+        self._plan = fault_plan
+        os.makedirs(self.path, exist_ok=True)
+        scan = scan_wal(self.path, repair=True)
+        self.next_lsn = max(int(start_lsn), scan.last_lsn + 1)
+        # closed segments: seq -> [fname, first_lsn|None, last_lsn|None]
+        self._closed: Dict[int, list] = {
+            seq: [fname, None, None] for seq, fname in scan.segments}
+        self._index_closed()
+        last_seq = max((s for s, _ in scan.segments), default=-1)
+        self._seq = last_seq + 1
+        self._open_segment()
+        # counters (docs/DESIGN.md §13): bytes/records appended since open,
+        # fsync syscalls issued — RuntimeStats mirrors these
+        self.appended_bytes = 0
+        self.appended_records = 0
+        self.fsyncs = 0
+        self._unsynced = 0
+
+    # ------------------------------------------------------------------
+    # Segment bookkeeping
+    # ------------------------------------------------------------------
+
+    def _index_closed(self) -> None:
+        """Record each closed segment's (first, last) lsn range by reading
+        its records — cheap (files are bounded by segment_bytes) and only
+        runs once at open; ``truncate_through`` needs the ranges."""
+        for seq, entry in self._closed.items():
+            fpath = os.path.join(self.path, entry[0])
+            with open(fpath, "rb") as f:
+                records, _, _ = _scan_segment(f.read())
+            if records:
+                entry[1], entry[2] = records[0].lsn, records[-1].lsn
+
+    def _open_segment(self) -> None:
+        self._cur_fname = f"seg_{self._seq:08d}.wal"
+        fpath = os.path.join(self.path, self._cur_fname)
+        self._f = open(fpath, "wb")
+        self._f.write(_SEG_HEADER.pack(WAL_MAGIC, WAL_VERSION,
+                                       max(self.next_lsn, 0)))
+        self._f.flush()
+        self._size = _SEG_HEADER.size
+        self._first: Optional[int] = None
+        self._last: Optional[int] = None
+
+    def rotate(self) -> None:
+        """Close the current segment and start the next one."""
+        self._f.flush()
+        if self.fsync_policy != FSYNC_OFF:
+            self._do_fsync()
+        self._f.close()
+        self._closed[self._seq] = [self._cur_fname, self._first, self._last]
+        self._seq += 1
+        self._open_segment()
+
+    def truncate_through(self, lsn: int) -> int:
+        """Delete every *closed* segment whose records are all <= ``lsn``
+        (checkpoint truncation); returns how many files were removed.
+        Empty closed segments (no records) are removed too — nothing can
+        ever replay from them."""
+        removed = 0
+        for seq in sorted(self._closed):
+            fname, _, last = self._closed[seq]
+            if last is not None and last > lsn:
+                continue
+            os.remove(os.path.join(self.path, fname))
+            del self._closed[seq]
+            removed += 1
+        return removed
+
+    # ------------------------------------------------------------------
+    # Append path
+    # ------------------------------------------------------------------
+
+    def append(self, op: str, fields: Optional[Dict[str, Any]] = None,
+               arrays: Optional[Dict[str, np.ndarray]] = None) -> int:
+        """Durably (per policy) log one record; returns its lsn.
+
+        The WAL_APPEND fault site fires before any byte is written, so a
+        crashed append is never in the log — callers apply the op only
+        after ``append`` returns (log-before-apply)."""
+        lsn = self.next_lsn
+        record = WalRecord(lsn=lsn, op=op, fields=dict(fields or {}),
+                           arrays=dict(arrays or {}))
+        blob = encode_record(record)
+        if self._plan is not None:
+            from repro.serving import faults as flt
+            self._plan.fire(flt.WAL_APPEND, f"{op}@lsn={lsn}")
+        if self._size + len(blob) > self.segment_bytes and \
+                self._first is not None:
+            self.rotate()
+        self._f.write(blob)
+        self._f.flush()
+        self._size += len(blob)
+        if self._first is None:
+            self._first = lsn
+        self._last = lsn
+        self.next_lsn = lsn + 1
+        self.appended_bytes += len(blob)
+        self.appended_records += 1
+        self._unsynced += len(blob)
+        if self.fsync_policy == FSYNC_ALWAYS or (
+                self.fsync_policy == FSYNC_INTERVAL
+                and self._unsynced >= self.fsync_interval_bytes):
+            self._do_fsync()
+        return lsn
+
+    def _do_fsync(self) -> None:
+        if self._plan is not None:
+            from repro.serving import faults as flt
+            self._plan.fire(flt.WAL_FSYNC, self._cur_fname)
+        os.fsync(self._f.fileno())
+        self.fsyncs += 1
+        self._unsynced = 0
+
+    def sync(self) -> None:
+        """Explicit durability barrier: flush + fsync under *every* policy
+        (checkpoint commit calls this even with ``fsync='off'``)."""
+        self._f.flush()
+        self._do_fsync()
+
+    def size_bytes(self) -> int:
+        """Total on-disk WAL bytes (all segments)."""
+        total = self._size
+        for fname, _, _ in self._closed.values():
+            total += os.path.getsize(os.path.join(self.path, fname))
+        return total
+
+    def close(self) -> None:
+        if self._f.closed:
+            return
+        self._f.flush()
+        if self.fsync_policy != FSYNC_OFF:
+            self._do_fsync()
+        self._f.close()

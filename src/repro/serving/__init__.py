@@ -6,8 +6,10 @@ snapshot pinning, deadline-aware micro-batching with admission control,
 fault injection + retry, and lock-free metrics (docs/DESIGN.md §9).
 """
 
-from repro.serving.faults import (COMPACTION_SWAP, ENGINE_CALL,
-                                  SNAPSHOT_LOAD, FaultPlan, InjectedFault)
+from repro.serving.faults import (CHECKPOINT_INSTALL, COMPACTION_SWAP,
+                                  ENGINE_CALL, SNAPSHOT_LOAD,
+                                  SNAPSHOT_WRITE, WAL_APPEND, WAL_FSYNC,
+                                  FaultPlan, InjectedFault)
 from repro.serving.lsh_service import LSHService, ServiceStats
 from repro.serving.runtime import (Epoch, EpochManager, LatencyRing,
                                    RuntimeStats, ServingRuntime)
@@ -21,4 +23,5 @@ __all__ = [
     "MicroBatcher", "LatencyModel", "Request", "Answer", "Rejected",
     "FaultPlan", "InjectedFault",
     "ENGINE_CALL", "COMPACTION_SWAP", "SNAPSHOT_LOAD",
+    "WAL_APPEND", "WAL_FSYNC", "SNAPSHOT_WRITE", "CHECKPOINT_INSTALL",
 ]

@@ -15,10 +15,25 @@ the recovery paths instead of asserting them:
     while the plan is installed there (``installed_on_load``), modelling
     an unreadable snapshot store.
 
+Durability sites (docs/DESIGN.md §13 — the crash-point injection matrix):
+
+  * ``WAL_APPEND``       — fired by ``durability.WriteAheadLog.append``
+    *before* any byte is written, so a crashed append was never logged.
+  * ``WAL_FSYNC``        — fired before each ``os.fsync`` of the log; the
+    record is already written + flushed, so it survives the crash.
+  * ``SNAPSHOT_WRITE``   — fired by ``persist._publish_snapshot`` once per
+    staged file while ``installed_on_save`` holds the plan, before the
+    file's bytes are written.
+  * ``CHECKPOINT_INSTALL`` — fired by ``DurableIndex.checkpoint`` twice:
+    before publishing the snapshot and before the WAL commit record
+    (``arm(..., skip=1)`` targets the second crossing).
+
 The plan is deliberately deterministic: ``arm(site, times=n)`` makes the
 next ``n`` fires at that site raise ``InjectedFault`` and every fire
 (raising or not) is counted in ``fired``, so a test can assert both that
-the fault happened and that the runtime's recovery consumed it.
+the fault happened and that the runtime's recovery consumed it.  Arming
+an unknown site raises ``ValueError`` naming the valid set — a typo'd
+site must fail the test loudly, not silently never fire.
 """
 
 from __future__ import annotations
@@ -30,8 +45,13 @@ from typing import Dict, Optional, Type
 ENGINE_CALL = "engine_call"
 COMPACTION_SWAP = "compaction_swap"
 SNAPSHOT_LOAD = "snapshot_load"
+WAL_APPEND = "wal_append"
+WAL_FSYNC = "wal_fsync"
+SNAPSHOT_WRITE = "snapshot_write"
+CHECKPOINT_INSTALL = "checkpoint_install"
 
-SITES = (ENGINE_CALL, COMPACTION_SWAP, SNAPSHOT_LOAD)
+SITES = (ENGINE_CALL, COMPACTION_SWAP, SNAPSHOT_LOAD, WAL_APPEND,
+         WAL_FSYNC, SNAPSHOT_WRITE, CHECKPOINT_INSTALL)
 
 
 class InjectedFault(RuntimeError):
@@ -50,6 +70,7 @@ class FaultPlan:
     def __init__(self):
         self._lock = threading.Lock()
         self._armed: Dict[str, int] = {}
+        self._skip: Dict[str, int] = {}
         self._exc: Dict[str, Type[BaseException]] = {}
         # every fire() call per site, whether or not it raised — the
         # "did the boundary actually get exercised" observability counter
@@ -60,14 +81,33 @@ class FaultPlan:
         if site not in SITES:
             raise ValueError(f"unknown fault site {site!r}; valid: {SITES}")
 
-    def arm(self, site: str, times: int = 1,
+    def arm(self, site: str, times: int = 1, skip: int = 0,
             exc: Optional[Type[BaseException]] = None) -> "FaultPlan":
-        """Make the next ``times`` fires at ``site`` raise (chainable)."""
+        """Make the next ``times`` fires at ``site`` raise (chainable).
+
+        ``times`` counts *crossings of that one site*, not operations —
+        sites nested inside a larger op consume one charge per crossing.
+        Concretely: ``times=2`` on ENGINE_CALL spans the original dispatch
+        and its vmap retry; one checkpoint crosses CHECKPOINT_INSTALL
+        twice (publish, then commit) and SNAPSHOT_WRITE once per staged
+        file; one multi-record flush crosses WAL_APPEND once per record.
+
+        ``skip`` lets the first ``skip`` crossings through unharmed before
+        the armed charges start raising — ``arm(CHECKPOINT_INSTALL,
+        skip=1)`` crashes the commit crossing while letting the publish
+        crossing pass, and ``skip=k`` on WAL_APPEND kills the (k+1)-th
+        logged op of an interleaving.  Skips are only consumed while the
+        site is armed.
+        """
         self._check_site(site)
         if times < 1:
             raise ValueError(f"times must be >= 1, got {times}")
+        if skip < 0:
+            raise ValueError(f"skip must be >= 0, got {skip}")
         with self._lock:
             self._armed[site] = self._armed.get(site, 0) + int(times)
+            if skip:
+                self._skip[site] = self._skip.get(site, 0) + int(skip)
             if exc is not None:
                 self._exc[site] = exc
         return self
@@ -86,6 +126,9 @@ class FaultPlan:
             self.fired[site] += 1
             remaining = self._armed.get(site, 0)
             if remaining <= 0:
+                return
+            if self._skip.get(site, 0) > 0:
+                self._skip[site] -= 1
                 return
             self._armed[site] = remaining - 1
             self.raised[site] += 1
@@ -107,3 +150,17 @@ class FaultPlan:
             yield self
         finally:
             persist.load_fault_hook = prev
+
+    @contextlib.contextmanager
+    def installed_on_save(self):
+        """Install this plan at the snapshot-write boundary
+        (``repro.api.persist._publish_snapshot`` fires SNAPSHOT_WRITE
+        before each staged file's bytes are written)."""
+        from repro.api import persist
+        prev = persist.write_fault_hook
+        persist.write_fault_hook = lambda fname: self.fire(SNAPSHOT_WRITE,
+                                                           str(fname))
+        try:
+            yield self
+        finally:
+            persist.write_fault_hook = prev

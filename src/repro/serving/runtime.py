@@ -118,6 +118,13 @@ class RuntimeStats:
     epochs_pinned: int = 0
     epochs_retired: int = 0
     max_queue_depth: int = 0
+    # durability counters (docs/DESIGN.md §13) — zero unless the served
+    # index is a durability.DurableIndex; mirrored from its WAL
+    wal_bytes: int = 0
+    fsyncs: int = 0
+    checkpoints: int = 0
+    checkpoint_failures: int = 0
+    recovery_replayed: int = 0  # WAL records replayed by recovery-on-start
     shed: Dict[str, int] = dataclasses.field(
         default_factory=lambda: {"deadline": 0, "queue_full": 0,
                                  "engine_failure": 0})
@@ -147,6 +154,10 @@ class RuntimeStats:
             "epochs_pinned": self.epochs_pinned,
             "epochs_retired": self.epochs_retired,
             "max_queue_depth": self.max_queue_depth,
+            "wal_bytes": self.wal_bytes, "fsyncs": self.fsyncs,
+            "checkpoints": self.checkpoints,
+            "checkpoint_failures": self.checkpoint_failures,
+            "recovery_replayed": self.recovery_replayed,
             "p50_ms": self.percentile(50.0),
             "p99_ms": self.percentile(99.0),
             "p999_ms": self.percentile(99.9),
@@ -277,6 +288,12 @@ class ServingRuntime:
             self._index.manifest.swap_hook = \
                 lambda: self.plan.fire(flt.COMPACTION_SWAP)
         self.last_compaction_error: Optional[BaseException] = None
+        self.last_checkpoint_error: Optional[BaseException] = None
+        # recovery-on-start: a recovered DurableIndex carries its report
+        recovery = getattr(self._index, "last_recovery", None)
+        if recovery is not None:
+            self.stats.recovery_replayed = recovery.n_replayed
+        self._sync_durability_stats()
 
     # ------------------------------------------------------------------
     # Query path
@@ -436,6 +453,7 @@ class ServingRuntime:
         self.epochs.advance()
         if self._maybe_compact():
             self.stats.compactions += 1
+        self._maybe_checkpoint()
         return out
 
     def delete(self, gids) -> int:
@@ -450,6 +468,7 @@ class ServingRuntime:
         self.epochs.advance()
         if self._maybe_compact():
             self.stats.compactions += 1
+        self._maybe_checkpoint()
         return removed
 
     def compact(self, force: bool = True) -> bool:
@@ -479,6 +498,37 @@ class ServingRuntime:
             return False
         if did:
             self.epochs.advance()
+        return did
+
+    # ------------------------------------------------------------------
+    # Durability (docs/DESIGN.md §13) — active when the served index is a
+    # durability.DurableIndex; a no-op otherwise
+    # ------------------------------------------------------------------
+
+    def _sync_durability_stats(self) -> None:
+        wal = getattr(self._index, "wal", None)
+        if wal is not None:
+            self.stats.wal_bytes = wal.appended_bytes
+            self.stats.fsyncs = wal.fsyncs
+
+    def _maybe_checkpoint(self) -> bool:
+        """Background checkpoint policy: let the index decide (WAL bytes /
+        age thresholds).  A checkpoint failure is recorded and served
+        around, like a compaction crash — the WAL still has every op, so
+        durability degrades to a longer replay, not data loss."""
+        mc = getattr(self._index, "maybe_checkpoint", None)
+        if mc is None:
+            return False
+        try:
+            did = bool(mc())
+        except Exception as exc:
+            self.stats.checkpoint_failures += 1
+            self.last_checkpoint_error = exc
+            self._sync_durability_stats()
+            return False
+        if did:
+            self.stats.checkpoints += 1
+        self._sync_durability_stats()
         return did
 
     # ------------------------------------------------------------------

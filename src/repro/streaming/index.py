@@ -31,6 +31,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import hashlib
 import warnings
 from typing import Dict, List, NamedTuple, Optional, Tuple
 
@@ -242,15 +243,7 @@ class StreamingDETLSH:
         if m == 0:
             return gids.astype(np.int32)
         # Validate before mutating any state so the caller can recover.
-        if gids.min() < 0:
-            raise ValueError(f"gids must be non-negative, got {gids.min()}")
-        new_next = max(self.next_gid, int(gids.max()) + 1)
-        if new_next > self.id_capacity:
-            raise ValueError(
-                f"gid space exhausted ({new_next} > id_capacity="
-                f"{self.id_capacity}); call grow_id_capacity() (one-time "
-                f"recompile of the combine step) or build a larger index")
-        self.next_gid = new_next
+        self.next_gid = self.check_upsert(gids)
 
         # Last write wins within one call: keep only each gid's final row.
         _, last_rev = np.unique(gids[::-1], return_index=True)
@@ -276,6 +269,24 @@ class StreamingDETLSH:
         if self.memtable.full:
             self.seal()
         return gids.astype(np.int32)
+
+    def check_upsert(self, gids) -> int:
+        """Validate an upsert's global ids *without mutating anything*;
+        returns the post-insert ``next_gid``.  Shared by ``upsert`` and by
+        write-ahead wrappers (durability/durable.py) that must know an op
+        will be accepted before logging it."""
+        gids = np.asarray(gids, np.int64).reshape(-1)
+        if len(gids) == 0:
+            return self.next_gid
+        if gids.min() < 0:
+            raise ValueError(f"gids must be non-negative, got {gids.min()}")
+        new_next = max(self.next_gid, int(gids.max()) + 1)
+        if new_next > self.id_capacity:
+            raise ValueError(
+                f"gid space exhausted ({new_next} > id_capacity="
+                f"{self.id_capacity}); call grow_id_capacity() (one-time "
+                f"recompile of the combine step) or build a larger index")
+        return new_next
 
     def delete(self, gids) -> int:
         """Tombstone points by global id; returns how many existed."""
@@ -715,6 +726,43 @@ class StreamingDETLSH:
     def index_size_bytes(self) -> int:
         return (sum(s.forest.size_bytes() for s in self.manifest.segments)
                 + self.A.size * 4)
+
+    def state_digest(self) -> str:
+        """sha256 fingerprint of the complete *logical* state: every array
+        and counter that determines answers or future mutations (segments
+        with their tombstone bitmaps and forests, memtable buffers, id
+        allocation, frozen breakpoints).  Caches and version counters are
+        excluded — they are performance state.  Equal digests mean two
+        indexes are bit-identical; this is the recovered ≡ pre-crash
+        oracle in tests/test_durability*.py (docs/DESIGN.md §13)."""
+        h = hashlib.sha256()
+
+        def put(a, dtype=None):
+            x = np.asarray(a)
+            if dtype is not None:
+                x = x.astype(dtype)
+            h.update(np.ascontiguousarray(x).tobytes())
+
+        for v in (self.next_gid, self._next_seg_id, self.id_capacity,
+                  self.Nr, self.leaf_size, self.memtable.count):
+            h.update(int(v).to_bytes(8, "little", signed=True))
+        put(self.A, np.float32)
+        put(self.bp_all, np.float32)
+        for seg in sorted(self.manifest.segments, key=lambda s: s.seg_id):
+            h.update(int(seg.seg_id).to_bytes(8, "little", signed=True))
+            h.update(np.float64(seg.clip_fraction).tobytes())
+            put(seg.data, np.float32)
+            put(seg.gids, np.int64)
+            put(seg.live, np.uint8)
+            for name in ("point_ids", "proj_sorted", "codes_sorted",
+                         "valid", "leaf_lo", "leaf_hi", "leaf_valid",
+                         "breakpoints"):
+                put(getattr(seg.forest, name))
+        mt = self.memtable
+        put(mt.vecs, np.float32)
+        put(mt.gids, np.int64)
+        put(mt.live, np.uint8)
+        return h.hexdigest()
 
     def stats(self) -> dict:
         return {

@@ -25,7 +25,7 @@ EXPECTED_API_EXPORTS = {
     "EngineSpec", "register_engine", "resolve_engine", "available_engines",
     "get_engine", "build", "tune", "suggest_params", "TuneResult",
     "load", "save",
-    "SnapshotFormatError", "FORMAT_VERSION",
+    "SnapshotFormatError", "SnapshotIntegrityError", "FORMAT_VERSION",
 }
 
 # Field ORDER is part of the surface (positional construction).
@@ -69,7 +69,8 @@ def test_api_exports_snapshot():
 def test_top_level_exports_snapshot():
     assert set(repro.__all__) == {"__version__", "api", "DETLSH",
                                   "StreamingDETLSH", "derive_params",
-                                  "decode", "KVCacheIndex", "tune",
+                                  "decode", "durability", "DurableIndex",
+                                  "recover", "KVCacheIndex", "tune",
                                   "suggest_params", "TuneResult"}
     assert repro.DETLSH is not None
     assert repro.StreamingDETLSH is not None
@@ -80,6 +81,8 @@ def test_top_level_exports_snapshot():
     assert callable(repro.suggest_params)          # tune pillar (§11)
     assert repro.TuneResult is repro.tune.TuneResult
     assert repro.api.tune is repro.tune.tune
+    assert repro.DurableIndex is repro.durability.DurableIndex   # §13
+    assert repro.recover is repro.durability.recover
 
 
 def test_search_request_fields_snapshot():

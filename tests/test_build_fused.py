@@ -16,6 +16,7 @@ n/K/leaf_size.
 """
 
 import dataclasses
+import json
 
 import jax
 import jax.numpy as jnp
@@ -230,12 +231,19 @@ def test_snapshot_roundtrip_fused_build_and_old_widths(rng, tmp_path):
     _search_pair(idx, loaded, queries, "fused")
 
     # Simulate an old-format snapshot: widen the stored forest arrays the
-    # way the pre-narrowing code wrote them (codes/bounds int32).
+    # way the pre-narrowing code wrote them (codes/bounds int32), and mark
+    # the manifest pre-digest (format_version 2) as that era's saver did.
     arrs = dict(np.load(path / "arrays.npz"))
     for k in ("forest.codes_sorted", "forest.leaf_lo", "forest.leaf_hi"):
         arrs[k] = arrs[k].astype(np.int32)
     np.savez(path / "arrays.npz", **arrs)
-    wide = repro.api.load(path)
+    manifest = json.load(open(path / "MANIFEST.json"))
+    del manifest["digests"]
+    manifest["format_version"] = 2
+    with open(path / "MANIFEST.json", "w") as f:
+        json.dump(manifest, f)
+    with pytest.warns(UserWarning, match="pre-digest"):
+        wide = repro.api.load(path)
     assert wide.forest.codes_sorted.dtype == CODE_DTYPE
     assert wide.forest.leaf_lo.dtype == LEAF_DTYPE
     _assert_forests_equal(idx.forest, wide.forest, msg="old-width ")

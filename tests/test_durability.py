@@ -1,0 +1,461 @@
+"""Durability subsystem unit + edge-case tests (docs/DESIGN.md §13).
+
+WAL mechanics (framing, torn-tail repair, rotation, checkpoint
+truncation, fsync policies), atomic checkpoints, and the recovery edge
+cases the crash matrix doesn't reach: empty WAL, WAL without a
+checkpoint, checkpoint with an empty tail, duplicate replay after a
+crash during checkpoint install, and a corrupt newest checkpoint falling
+back to the previous one.  The randomized crash-point matrix itself
+lives in test_durability_crash.py.
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.api import SearchRequest
+from repro.core import derive_params
+from repro.durability import (DurableIndex, FSYNC_ALWAYS, FSYNC_INTERVAL,
+                              FSYNC_OFF, RecoveryError, WalError, WalRecord,
+                              WriteAheadLog, recover, scan_wal)
+from repro.durability.wal import encode_record
+from repro.serving import CHECKPOINT_INSTALL, FaultPlan, InjectedFault
+from repro.streaming import StreamingDETLSH
+
+D = 8
+SAT = dict(r_min=1e6, M=10**6)
+PARAMS = derive_params(K=2, c=1.5, L=2, beta_override=0.1)
+KW = dict(Nr=8, leaf_size=8, delta_capacity=16, max_segments=2)
+
+
+def make_index(rng, n=48):
+    data = rng.standard_normal((n, D)).astype(np.float32)
+    return StreamingDETLSH.build(jnp.asarray(data), jax.random.key(0),
+                                 PARAMS, **KW)
+
+
+# ---------------------------------------------------------------------------
+# WAL mechanics
+# ---------------------------------------------------------------------------
+
+def test_wal_append_scan_roundtrip(tmp_path):
+    wal = WriteAheadLog(str(tmp_path / "wal"))
+    a = np.arange(12, dtype=np.int64).reshape(3, 4)
+    b = np.linspace(0, 1, 5, dtype=np.float32)
+    lsn0 = wal.append("upsert", {"note": "x"}, {"gids": a, "vecs": b})
+    lsn1 = wal.append("seal")
+    assert (lsn0, lsn1) == (0, 1)
+    wal.close()
+
+    scan = scan_wal(str(tmp_path / "wal"))
+    assert not scan.torn and scan.last_lsn == 1
+    r0, r1 = scan.records
+    assert r0.op == "upsert" and r0.fields == {"note": "x"}
+    np.testing.assert_array_equal(r0.arrays["gids"], a)
+    np.testing.assert_array_equal(r0.arrays["vecs"], b)
+    assert r0.arrays["gids"].dtype == np.int64
+    assert r0.arrays["vecs"].dtype == np.float32
+    assert r1.op == "seal" and r1.fields == {} and r1.arrays == {}
+
+
+def test_wal_reopen_continues_lsn(tmp_path):
+    wal = WriteAheadLog(str(tmp_path / "wal"))
+    wal.append("seal")
+    wal.append("seal")
+    wal.close()
+    wal2 = WriteAheadLog(str(tmp_path / "wal"))
+    assert wal2.append("seal") == 2        # continues after what's on disk
+    wal2.close()
+    assert [r.lsn for r in scan_wal(str(tmp_path / "wal")).records] == \
+        [0, 1, 2]
+
+
+@pytest.mark.parametrize("cut", [1, 4, 9, 17])
+def test_wal_torn_tail_truncated_to_record_boundary(tmp_path, cut):
+    """Chopping ``cut`` bytes off the tail loses at most the last record;
+    repair truncates to the boundary and a re-scan is clean."""
+    wal = WriteAheadLog(str(tmp_path / "wal"))
+    for i in range(4):
+        wal.append("delete", arrays={"gids": np.array([i], np.int64)})
+    wal.close()
+    [fname] = os.listdir(tmp_path / "wal")
+    fpath = tmp_path / "wal" / fname
+    size = os.path.getsize(fpath)
+    with open(fpath, "r+b") as f:
+        f.truncate(size - cut)
+
+    scan = scan_wal(str(tmp_path / "wal"), repair=True)
+    assert scan.torn and scan.truncated_bytes > 0
+    assert 3 <= len(scan.records) <= 4 and scan.records[0].lsn == 0
+    lsns = [r.lsn for r in scan.records]
+    assert lsns == list(range(len(lsns)))  # a prefix, never a gap
+    assert not scan_wal(str(tmp_path / "wal")).torn   # repair healed it
+
+
+def test_wal_corrupt_record_drops_it_and_later_segments(tmp_path):
+    """A bit flip inside segment k invalidates its tail AND every later
+    segment (their lsns would leave a gap) — repair removes them."""
+    wal = WriteAheadLog(str(tmp_path / "wal"), segment_bytes=200)
+    for i in range(6):                     # small cap => multiple segments
+        wal.append("delete", arrays={"gids": np.arange(8, dtype=np.int64)})
+    wal.close()
+    segs = sorted(os.listdir(tmp_path / "wal"))
+    assert len(segs) >= 3
+    target = tmp_path / "wal" / segs[1]
+    blob = bytearray(open(target, "rb").read())
+    blob[len(blob) // 2] ^= 0x40
+    with open(target, "wb") as f:
+        f.write(bytes(blob))
+
+    scan = scan_wal(str(tmp_path / "wal"), repair=True)
+    assert scan.torn and scan.dropped_segments == len(segs) - 2
+    lsns = [r.lsn for r in scan.records]
+    assert lsns == list(range(len(lsns))) and len(lsns) < 6
+    after = scan_wal(str(tmp_path / "wal"))
+    assert not after.torn
+    assert [r.lsn for r in after.records] == lsns
+
+
+def test_wal_rotation_and_truncate_through(tmp_path):
+    wal = WriteAheadLog(str(tmp_path / "wal"), segment_bytes=200)
+    for i in range(6):
+        wal.append("delete", arrays={"gids": np.arange(8, dtype=np.int64)})
+    n_files = len(os.listdir(tmp_path / "wal"))
+    assert n_files >= 3                    # the cap forced rotations
+    removed = wal.truncate_through(2)      # covers lsns 0..2
+    assert removed >= 1
+    wal.close()
+    scan = scan_wal(str(tmp_path / "wal"))
+    assert not scan.torn
+    assert all(r.lsn > 2 for r in scan.records)     # covered ones are gone
+    assert {r.lsn for r in scan.records} == {3, 4, 5}
+
+
+def test_wal_fsync_policies(tmp_path):
+    with pytest.raises(WalError, match="unknown fsync policy"):
+        WriteAheadLog(str(tmp_path / "w0"), fsync="sometimes")
+
+    always = WriteAheadLog(str(tmp_path / "w1"), fsync=FSYNC_ALWAYS)
+    for _ in range(3):
+        always.append("seal")
+    assert always.fsyncs == 3              # one per append
+    always.close()
+
+    off = WriteAheadLog(str(tmp_path / "w2"), fsync=FSYNC_OFF)
+    for _ in range(3):
+        off.append("seal")
+    assert off.fsyncs == 0
+    off.sync()                             # explicit barrier always syncs
+    assert off.fsyncs == 1
+    off.close()
+    assert off.fsyncs == 1                 # close honors 'off'
+
+    interval = WriteAheadLog(str(tmp_path / "w3"), fsync=FSYNC_INTERVAL,
+                             fsync_interval_bytes=150)
+    interval.append("seal")                # ~60B: below the interval
+    assert interval.fsyncs == 0
+    for _ in range(2):
+        interval.append("seal")            # crosses 150B
+    assert interval.fsyncs == 1
+    interval.close()
+
+
+def test_wal_record_roundtrip_rejects_trailing_garbage():
+    blob = encode_record(WalRecord(lsn=0, op="seal"))
+    from repro.durability.wal import decode_payload
+    payload = blob[8:]                     # strip the crc+len frame
+    assert decode_payload(payload).op == "seal"
+    with pytest.raises(ValueError, match="trailing"):
+        decode_payload(payload + b"x")
+
+
+# ---------------------------------------------------------------------------
+# Recovery edge cases
+# ---------------------------------------------------------------------------
+
+def test_recover_empty_root_raises(tmp_path):
+    with pytest.raises(RecoveryError, match="no checkpoints"):
+        recover(str(tmp_path / "nothing"))
+
+
+def test_recover_wal_only_raises(tmp_path):
+    """A WAL with no checkpoint base cannot rebuild an index — recovery
+    must say so, not return something empty."""
+    root = tmp_path / "root"
+    wal = WriteAheadLog(str(root / "wal"))
+    wal.append("delete", arrays={"gids": np.array([1], np.int64)})
+    wal.close()
+    with pytest.raises(RecoveryError, match="WAL alone cannot rebuild"):
+        recover(str(root))
+
+
+def test_recover_checkpoint_only_empty_tail(tmp_path, rng):
+    """Clean shutdown right after a checkpoint: recovery stands on the
+    checkpoint, replays nothing, and is bit-identical."""
+    dix = DurableIndex.create(make_index(rng), str(tmp_path / "root"))
+    dix.upsert(rng.standard_normal((8, D)).astype(np.float32))
+    dix.checkpoint()
+    d0 = dix.state_digest()
+    dix.close()
+
+    rec = recover(str(tmp_path / "root"))
+    assert rec.last_recovery.n_replayed == 0
+    assert rec.last_recovery.checkpoint == "ckpt_00000001"
+    assert rec.state_digest() == d0
+    rec.close()
+
+
+def test_recover_replays_tail_bit_identically(tmp_path, rng):
+    dix = DurableIndex.create(make_index(rng), str(tmp_path / "root"))
+    X = rng.standard_normal((40, D)).astype(np.float32)
+    dix.upsert(X[:20])
+    dix.seal()
+    dix.upsert(X[20:])
+    dix.delete(np.arange(5))
+    d0 = dix.state_digest()
+    n0 = dix.n_points
+    dix.close()                            # crash: tail never checkpointed
+
+    rec = recover(str(tmp_path / "root"))
+    assert [op for _, op in rec.last_recovery.replayed] == \
+        ["upsert", "seal", "upsert", "delete"]
+    assert rec.state_digest() == d0 and rec.n_points == n0
+    # and the recovered index keeps working: search + further mutation
+    q = rng.standard_normal((2, D)).astype(np.float32)
+    req = SearchRequest(k=3, **SAT)
+    r1 = dix.search(q, request=req)
+    r2 = rec.search(q, request=req)
+    np.testing.assert_array_equal(np.asarray(r1.ids), np.asarray(r2.ids))
+    rec.upsert(rng.standard_normal((4, D)).astype(np.float32))
+    rec.close()
+
+
+def test_grow_id_capacity_logged_and_replayed(tmp_path, rng):
+    dix = DurableIndex.create(make_index(rng), str(tmp_path / "root"))
+    cap = dix.index.id_capacity
+    dix.grow_id_capacity(cap * 2)
+    with pytest.raises(ValueError, match="cannot shrink"):
+        dix.grow_id_capacity(cap)          # rejected => must NOT be logged
+    d0 = dix.state_digest()
+    dix.close()
+
+    rec = recover(str(tmp_path / "root"))
+    assert [op for _, op in rec.last_recovery.replayed] == ["grow"]
+    assert rec.index.id_capacity == cap * 2
+    assert rec.state_digest() == d0
+    rec.close()
+
+
+def test_create_refuses_existing_durability_root(tmp_path, rng):
+    root = str(tmp_path / "root")
+    DurableIndex.create(make_index(rng), root).close()
+    with pytest.raises(ValueError, match="already holds checkpoints"):
+        DurableIndex.create(make_index(rng), root)
+
+
+def test_corrupt_newest_checkpoint_falls_back(tmp_path, rng):
+    """Digest-failing newest checkpoint => recovery silently stands on the
+    previous one and replays a LONGER tail — same final state."""
+    dix = DurableIndex.create(make_index(rng), str(tmp_path / "root"),
+                              keep_checkpoints=2)
+    dix.upsert(rng.standard_normal((8, D)).astype(np.float32))
+    dix.checkpoint()                       # ckpt_1 (ckpt_0 retained)
+    dix.delete(np.arange(3))
+    d0 = dix.state_digest()
+    dix.close()
+
+    newest = os.path.join(str(tmp_path / "root"), "checkpoints",
+                          "ckpt_00000001", "common.npz")
+    blob = bytearray(open(newest, "rb").read())
+    blob[len(blob) // 2] ^= 0x01
+    with open(newest, "wb") as f:
+        f.write(bytes(blob))
+
+    rec = recover(str(tmp_path / "root"))
+    assert rec.last_recovery.checkpoint == "ckpt_00000000"
+    assert [n for n, _ in rec.last_recovery.skipped_checkpoints] == \
+        ["ckpt_00000001"]
+    assert "sha256" in rec.last_recovery.skipped_checkpoints[0][1]
+    # The retention window keeps the WAL records the fallback base needs
+    # (truncation only goes through the OLDEST retained checkpoint's
+    # covered lsn), so the longer replay lands on the identical state.
+    assert [op for _, op in rec.last_recovery.replayed] == \
+        ["upsert", "delete"]
+    assert rec.state_digest() == d0
+    rec.close()
+
+
+def test_duplicate_replay_after_checkpoint_publish_crash(tmp_path, rng):
+    """Crash BEFORE the new checkpoint publishes: the old checkpoint must
+    still anchor a full-tail replay (nothing applied twice)."""
+    plan = FaultPlan()
+    dix = DurableIndex.create(make_index(rng), str(tmp_path / "root"),
+                              fault_plan=plan)
+    dix.upsert(rng.standard_normal((8, D)).astype(np.float32))
+    d0 = dix.state_digest()
+    plan.arm(CHECKPOINT_INSTALL)           # first crossing = publish
+    with pytest.raises(InjectedFault):
+        dix.checkpoint()
+    dix.close()
+
+    rec = recover(str(tmp_path / "root"))
+    assert rec.last_recovery.checkpoint == "ckpt_00000000"
+    assert [op for _, op in rec.last_recovery.replayed] == ["upsert"]
+    assert rec.state_digest() == d0 and rec.n_points == dix.n_points
+    rec.close()
+
+
+def test_duplicate_replay_after_checkpoint_commit_crash(tmp_path, rng):
+    """Crash AFTER publish but BEFORE the WAL commit record: the new
+    checkpoint is valid and newest, and the stale WAL records (lsn <=
+    covered) must be skipped, not applied twice."""
+    plan = FaultPlan()
+    dix = DurableIndex.create(make_index(rng), str(tmp_path / "root"),
+                              fault_plan=plan)
+    dix.upsert(rng.standard_normal((8, D)).astype(np.float32))
+    d0 = dix.state_digest()
+    n0 = dix.n_points
+    plan.arm(CHECKPOINT_INSTALL, skip=1)   # second crossing = commit
+    with pytest.raises(InjectedFault):
+        dix.checkpoint()
+    dix.close()
+
+    rec = recover(str(tmp_path / "root"))
+    assert rec.last_recovery.checkpoint == "ckpt_00000001"
+    assert rec.last_recovery.n_replayed == 0       # lsn <= covered: skipped
+    assert rec.state_digest() == d0 and rec.n_points == n0
+    rec.close()
+
+
+def test_recovered_root_keeps_checkpointing(tmp_path, rng):
+    """next_checkpoint_id resumes past every on-disk directory — recovery
+    then checkpointing must never overwrite an existing checkpoint."""
+    dix = DurableIndex.create(make_index(rng), str(tmp_path / "root"))
+    dix.upsert(rng.standard_normal((4, D)).astype(np.float32))
+    dix.checkpoint()
+    dix.close()
+    rec = recover(str(tmp_path / "root"))
+    rec.upsert(rng.standard_normal((4, D)).astype(np.float32))
+    path = rec.checkpoint()
+    assert os.path.basename(path) == "ckpt_00000002"
+    rec.close()
+
+
+# ---------------------------------------------------------------------------
+# DurableIndex policy + stats
+# ---------------------------------------------------------------------------
+
+def test_maybe_checkpoint_policy(tmp_path, rng):
+    dix = DurableIndex.create(make_index(rng), str(tmp_path / "root"),
+                              checkpoint_bytes=1)   # any record is enough
+    assert not dix.maybe_checkpoint()      # no new records since ckpt 0
+    dix.upsert(rng.standard_normal((4, D)).astype(np.float32))
+    assert dix.maybe_checkpoint()          # bytes due + new record
+    assert not dix.maybe_checkpoint()      # nothing new again
+    assert dix.checkpoints_written == 2    # create() + the policy one
+    dix.close()
+
+
+def test_durability_stats_and_delegation(tmp_path, rng):
+    dix = DurableIndex.create(make_index(rng), str(tmp_path / "root"))
+    dix.upsert(rng.standard_normal((4, D)).astype(np.float32))
+    s = dix.durability_stats()
+    assert s["wal_records"] >= 2           # checkpoint marker + upsert
+    assert s["wal_bytes"] > 0 and s["checkpoints_written"] == 1
+    assert s["recovery_replayed"] == 0
+    # MutableAnnIndex surface + delegation to the wrapped index
+    assert dix.n_points == dix.index.n_points
+    assert dix.index_size_bytes() > 0
+    assert dix.r_min_for(3) > 0
+    assert dix.manifest is dix.index.manifest      # __getattr__ delegation
+    with pytest.raises(AttributeError):
+        dix._not_a_real_attribute
+    dix.close()
+
+
+def test_top_level_exports():
+    assert repro.DurableIndex is DurableIndex
+    assert repro.recover is recover
+    assert repro.durability.WriteAheadLog is WriteAheadLog
+
+
+# ---------------------------------------------------------------------------
+# ServingRuntime integration (docs/DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.timeout(300)
+def test_runtime_durability_counters_and_auto_checkpoint(tmp_path, rng):
+    """Serving a DurableIndex: mutations hit the WAL, RuntimeStats mirrors
+    the durability counters, and the background checkpoint policy fires
+    once enough WAL bytes accumulate."""
+    import time
+    from repro.serving import Answer, ServingRuntime
+    dix = DurableIndex.create(make_index(rng), str(tmp_path / "root"),
+                              checkpoint_bytes=256)   # tiny: upserts trip it
+    rt = ServingRuntime(dix, k=3, max_batch=4, pad_to=4,
+                        request=SearchRequest(k=3, **SAT))
+    rt.upsert(rng.standard_normal((8, D)).astype(np.float32))
+    rt.delete(np.arange(2))
+    s = rt.stats.summary()
+    assert s["wal_bytes"] > 0 and s["fsyncs"] >= 0
+    assert s["checkpoints"] >= 1           # the 256-byte policy tripped
+    assert s["checkpoint_failures"] == 0
+    assert s["recovery_replayed"] == 0     # fresh root, not a recovery
+    assert dix.checkpoints_written >= 2    # create() + the background one
+    # the runtime still answers correctly through the wrapper
+    q = rng.standard_normal((2, D)).astype(np.float32)
+    out = rt.serve([(time.perf_counter(), qq) for qq in q])
+    assert len(out) == 2 and all(isinstance(o, Answer) for o in out)
+    dix.close()
+
+
+@pytest.mark.timeout(300)
+def test_runtime_recovery_on_start(tmp_path, rng):
+    """Kill a served DurableIndex, recover the root, serve the recovered
+    index: stats report the replayed tail and answers are bit-identical."""
+    import time
+    from repro.serving import ServingRuntime
+    dix = DurableIndex.create(make_index(rng), str(tmp_path / "root"))
+    rt = ServingRuntime(dix, k=3, max_batch=4, pad_to=4,
+                        request=SearchRequest(k=3, **SAT))
+    rt.upsert(rng.standard_normal((8, D)).astype(np.float32))
+    rt.delete(np.arange(2))
+    q = rng.standard_normal((2, D)).astype(np.float32)
+    before = rt.serve([(time.perf_counter(), qq) for qq in q])
+    dix.wal._f.close()                     # kill without checkpointing
+
+    rec = recover(str(tmp_path / "root"))
+    rt2 = ServingRuntime(rec, k=3, max_batch=4, pad_to=4,
+                         request=SearchRequest(k=3, **SAT))
+    assert rt2.stats.summary()["recovery_replayed"] == \
+        rec.last_recovery.n_replayed >= 2
+    after = rt2.serve([(time.perf_counter(), qq) for qq in q])
+    for a, b in zip(before, after):
+        np.testing.assert_array_equal(a.ids, b.ids)
+        np.testing.assert_allclose(a.dists, b.dists, rtol=0, atol=0)
+    rec.close()
+
+
+def test_runtime_checkpoint_failure_is_recorded_not_fatal(tmp_path, rng):
+    """An injected SNAPSHOT_WRITE fault inside the background checkpoint
+    is counted and served around — mutations keep landing in the WAL."""
+    from repro.serving import SNAPSHOT_WRITE, ServingRuntime
+    plan = FaultPlan()
+    dix = DurableIndex.create(make_index(rng), str(tmp_path / "root"),
+                              checkpoint_bytes=256, fault_plan=plan)
+    rt = ServingRuntime(dix, k=3, max_batch=4, pad_to=4,
+                        request=SearchRequest(k=3, **SAT))
+    plan.arm(SNAPSHOT_WRITE)
+    rt.upsert(rng.standard_normal((8, D)).astype(np.float32))
+    s = rt.stats.summary()
+    assert s["checkpoint_failures"] == 1
+    assert isinstance(rt.last_checkpoint_error, InjectedFault)
+    # durability is degraded (longer replay), never lost: recovery works
+    dix.wal._f.close()
+    rec = recover(str(tmp_path / "root"))
+    assert any(op == "upsert" for _, op in rec.last_recovery.replayed)
+    rec.close()

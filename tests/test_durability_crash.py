@@ -1,0 +1,257 @@
+"""Crash-point injection matrix (docs/DESIGN.md §13).
+
+Hypothesis-generated interleavings of {upsert, delete, seal, compact,
+checkpoint} are killed mid-flight at each durability boundary
+(WAL_APPEND / WAL_FSYNC / SNAPSHOT_WRITE / CHECKPOINT_INSTALL, with a
+skip offset choosing *which* crossing dies), and recovery must be
+bit-identical to the pre-crash index over the acked ops:
+
+  * the recovered index's saturating answers equal brute force over the
+    expected survivor set, on BOTH engines;
+  * a from-scratch static rebuild (and, in a fixed case, a
+    PDET-resharded rebuild) over the same survivors answers identically;
+  * no crash point leaves the root without a loadable checkpoint.
+
+The expected survivor set is deterministic per crash site: a WAL_APPEND
+crash fires before any byte is logged (the in-flight op never happened);
+a WAL_FSYNC crash fires after the record is written + flushed (an
+in-process kill keeps it, so replay applies it); snapshot/checkpoint
+crossings never touch the answer set.  Run with ``pytest -m crash``.
+"""
+
+import os
+import shutil
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import repro.api
+from repro.api import IndexSpec, PlacementSpec, SearchRequest, persist
+from repro.core import DETLSH, derive_params
+from repro.durability import DurableIndex, FSYNC_ALWAYS, recover
+from repro.serving import (CHECKPOINT_INSTALL, FaultPlan, InjectedFault,
+                           SNAPSHOT_WRITE, WAL_APPEND, WAL_FSYNC)
+from repro.streaming import StreamingDETLSH
+
+pytestmark = pytest.mark.crash
+
+D = 8
+K_NN = 4
+SAT = dict(r_min=1e6, M=10**6)
+PARAMS = derive_params(K=2, c=1.5, L=2, beta_override=0.1)
+KW = dict(Nr=8, leaf_size=8, delta_capacity=16, max_segments=2)
+CRASH_SITES = (WAL_APPEND, WAL_FSYNC, SNAPSHOT_WRITE, CHECKPOINT_INSTALL)
+
+
+def _expected_answers(expected, queries, k):
+    """Brute-force exact top-k over the expected survivor map."""
+    gids = np.array(sorted(expected), dtype=np.int64)
+    vecs = np.stack([expected[g] for g in gids])
+    d2 = ((queries[:, None, :] - vecs[None, :, :]) ** 2).sum(-1)
+    sel = np.argsort(d2, axis=1, kind="stable")[:, :k]
+    return gids[sel], np.sqrt(np.take_along_axis(d2, sel, axis=1))
+
+
+def _check_answers(index, expected, queries, tag):
+    gt_gids, gt_d = _expected_answers(expected, queries, K_NN)
+    for engine in ("fused", "vmap"):
+        res = index.search(jnp.asarray(queries),
+                           SearchRequest(k=K_NN, engine=engine, **SAT))
+        ids = np.asarray(res.ids)[:, :K_NN]
+        np.testing.assert_allclose(np.asarray(res.dists)[:, :K_NN], gt_d,
+                                   rtol=1e-4, atol=1e-4,
+                                   err_msg=f"{tag}:{engine}")
+        for b in range(len(queries)):      # same ids up to distance ties
+            assert set(ids[b].tolist()) == set(gt_gids[b].tolist()), \
+                (tag, engine, b)
+
+
+def _drive(root, rng, ops, site, skip):
+    """Run ``ops`` against a DurableIndex with ``site`` armed (after the
+    first ``skip`` crossings), killing the process model at the injected
+    fault.  Returns the expected survivor map and whether a fault fired."""
+    data = rng.standard_normal((32, D)).astype(np.float32)
+    idx = StreamingDETLSH.build(jnp.asarray(data), jax.random.key(0),
+                                PARAMS, **KW)
+    plan = FaultPlan()
+    dix = DurableIndex.create(idx, root, fsync=FSYNC_ALWAYS,
+                              keep_checkpoints=2, fault_plan=plan)
+    expected = {g: data[g] for g in range(len(data))}
+    plan.arm(site, times=1, skip=skip)     # armed only after create()
+
+    crashed = None
+    for kind, arg in ops:
+        try:
+            if kind == "upsert":
+                vecs = rng.standard_normal((arg, D)).astype(np.float32)
+                gids = np.arange(dix.next_gid, dix.next_gid + arg,
+                                 dtype=np.int64)
+                pending = ("upsert", dict(zip(gids.tolist(), vecs)))
+                dix.upsert(vecs, gids)
+                expected.update(pending[1])
+            elif kind == "delete":
+                live = sorted(expected)
+                gids = np.array(live[:: max(1, len(live) // arg)][:arg],
+                                dtype=np.int64)
+                pending = ("delete", gids.tolist())
+                dix.delete(gids)
+                for g in pending[1]:
+                    expected.pop(g, None)
+            elif kind == "seal":
+                pending = ("seal", None)
+                dix.seal()
+            elif kind == "compact":
+                pending = ("compact", None)
+                dix.compact()
+            else:
+                pending = ("checkpoint", None)
+                dix.checkpoint()
+        except InjectedFault:
+            crashed = pending
+            break
+
+    # A WAL_FSYNC crash fires AFTER the record hit the (flushed) log, so
+    # replay applies the in-flight data op; every other site's crash
+    # happens before the op is logged, or in an answer-preserving one.
+    if crashed is not None and site == WAL_FSYNC:
+        op, detail = crashed
+        if op == "upsert":
+            expected.update(detail)
+        elif op == "delete":
+            for g in detail:
+                expected.pop(g, None)
+    dix.wal._f.close()                     # the kill: no flush, no fsync
+    return expected, crashed is not None
+
+
+def _static_rebuild_answers(expected, queries):
+    """Exact answers from a from-scratch static build over the survivors
+    (gids remapped: a static build numbers rows 0..n-1)."""
+    gids = np.array(sorted(expected), dtype=np.int64)
+    vecs = np.stack([expected[g] for g in gids]).astype(np.float32)
+    st_idx = DETLSH.build(jnp.asarray(vecs), jax.random.key(7), PARAMS,
+                          Nr=8, leaf_size=8)
+    res = st_idx.search(jnp.asarray(queries),
+                        SearchRequest(k=K_NN, **SAT))
+    return gids[np.asarray(res.ids)[:, :K_NN]], \
+        np.asarray(res.dists)[:, :K_NN]
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(min_value=0, max_value=2 ** 31 - 1),
+       st.lists(st.tuples(st.sampled_from(["upsert", "delete", "seal",
+                                           "compact", "checkpoint"]),
+                          st.integers(min_value=1, max_value=8)),
+                min_size=3, max_size=7),
+       st.sampled_from(CRASH_SITES),
+       st.integers(min_value=0, max_value=2))
+@pytest.mark.timeout(600)
+def test_crash_matrix_recovery_is_bit_identical(seed, ops, site, skip):
+    rng = np.random.default_rng(seed)
+    tmp = tempfile.mkdtemp(prefix="crash-matrix-")
+    try:
+        root = os.path.join(tmp, "root")
+        expected, fired = _drive(root, rng, ops, site, skip)
+        queries = rng.standard_normal((3, D)).astype(np.float32)
+
+        rec = recover(root)
+        try:
+            assert rec.n_points == len(expected), (site, skip, fired)
+            _check_answers(rec, expected, queries, (site, skip, fired))
+            # and a from-scratch static rebuild over the survivors agrees
+            st_gids, st_d = _static_rebuild_answers(expected, queries)
+            gt_gids, gt_d = _expected_answers(expected, queries, K_NN)
+            np.testing.assert_allclose(st_d, gt_d, rtol=1e-4, atol=1e-4)
+            for b in range(len(queries)):
+                assert set(st_gids[b].tolist()) == set(gt_gids[b].tolist())
+        finally:
+            rec.close()
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+@pytest.mark.parametrize("site", CRASH_SITES)
+@pytest.mark.parametrize("skip", [0, 1])
+@pytest.mark.timeout(600)
+def test_crash_each_site_deterministic(tmp_path, site, skip):
+    """Every site × {first, second} crossing on one fixed interleaving —
+    guarantees full matrix coverage independent of hypothesis choices."""
+    rng = np.random.default_rng(0xC0FFEE)
+    ops = [("upsert", 6), ("seal", 1), ("checkpoint", 1), ("delete", 3),
+           ("upsert", 4), ("compact", 1), ("checkpoint", 1)]
+    root = str(tmp_path / "root")
+    expected, fired = _drive(root, rng, ops, site, skip)
+    assert fired                           # this interleaving crosses all
+    queries = rng.standard_normal((3, D)).astype(np.float32)
+    rec = recover(root)
+    try:
+        assert rec.n_points == len(expected)
+        _check_answers(rec, expected, queries, (site, skip))
+    finally:
+        rec.close()
+
+
+@pytest.mark.timeout(600)
+def test_no_crash_leaves_valid_checkpoint_unloadable(tmp_path):
+    """After a kill at EVERY boundary of a checkpoint-heavy interleaving,
+    at least one checkpoint under the root must still pass digest
+    verification and load — the acceptance bar of §13."""
+    for i, site in enumerate(CRASH_SITES):
+        for skip in (0, 1, 2):
+            rng = np.random.default_rng(i * 31 + skip)
+            root = str(tmp_path / f"root_{site}_{skip}")
+            ops = [("upsert", 4), ("checkpoint", 1), ("delete", 2),
+                   ("checkpoint", 1), ("upsert", 3), ("checkpoint", 1)]
+            _drive(root, rng, ops, site, skip)
+            ckpt_dir = os.path.join(root, "checkpoints")
+            names = sorted(n for n in os.listdir(ckpt_dir)
+                           if n.startswith("ckpt_"))
+            loaded = 0
+            for name in names:
+                try:
+                    persist.load(os.path.join(ckpt_dir, name))
+                    loaded += 1
+                except persist.SnapshotFormatError:
+                    pass                   # partial publish: skippable
+            assert loaded >= 1, (site, skip, names)
+
+
+@pytest.mark.timeout(600)
+def test_pdet_resharded_rebuild_matches_recovery(tmp_path):
+    """A PDET-sharded from-scratch build over the recovered survivors
+    answers identically to the recovered streaming index (the §13
+    resharding acceptance case; 1-device mesh in tier-1, 4 in the
+    multidevice CI job)."""
+    rng = np.random.default_rng(11)
+    ops = [("upsert", 8), ("seal", 1), ("delete", 3), ("checkpoint", 1),
+           ("upsert", 5)]
+    root = str(tmp_path / "root")
+    expected, _ = _drive(root, rng, ops, WAL_APPEND, 2)
+    queries = rng.standard_normal((3, D)).astype(np.float32)
+
+    rec = recover(root)
+    try:
+        _check_answers(rec, expected, queries, "pdet-pre")
+        gids = np.array(sorted(expected), dtype=np.int64)
+        vecs = np.stack([expected[g] for g in gids]).astype(np.float32)
+        spec = IndexSpec(kind="static", K=2, L=2, c=1.5, beta_override=0.1,
+                         Nr=8, leaf_size=8,
+                         placement=PlacementSpec(
+                             mesh_shape=(len(jax.devices()),),
+                             mesh_axes=("data",)))
+        pdet = repro.api.build(jnp.asarray(vecs), jax.random.key(3), spec)
+        res = pdet.search(jnp.asarray(queries),
+                          SearchRequest(k=K_NN, **SAT))
+        gt_gids, gt_d = _expected_answers(expected, queries, K_NN)
+        np.testing.assert_allclose(np.asarray(res.dists)[:, :K_NN], gt_d,
+                                   rtol=1e-4, atol=1e-4)
+        ids = gids[np.asarray(res.ids)[:, :K_NN]]
+        for b in range(len(queries)):
+            assert set(ids[b].tolist()) == set(gt_gids[b].tolist())
+    finally:
+        rec.close()

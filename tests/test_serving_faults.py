@@ -89,6 +89,45 @@ def test_fault_plan_custom_exception_type():
         plan.fire(COMPACTION_SWAP)
 
 
+def test_fault_plan_unknown_site_names_valid_set():
+    """A typo'd site must fail loudly at arm() time, naming the valid
+    sites — not silently never fire (docstring contract)."""
+    from repro.serving import faults
+    plan = FaultPlan()
+    with pytest.raises(ValueError) as e:
+        plan.arm("wal_apend")                    # the classic typo
+    for site in faults.SITES:
+        assert site in str(e.value)
+    with pytest.raises(ValueError, match="unknown fault site"):
+        plan.fire("wal_apend")
+    with pytest.raises(ValueError, match="unknown fault site"):
+        plan.armed("wal_apend")
+
+
+def test_fault_plan_durability_sites_registered():
+    from repro.serving import faults
+    from repro.serving import (CHECKPOINT_INSTALL, SNAPSHOT_WRITE,
+                               WAL_APPEND, WAL_FSYNC)
+    assert {WAL_APPEND, WAL_FSYNC, SNAPSHOT_WRITE,
+            CHECKPOINT_INSTALL} <= set(faults.SITES)
+
+
+def test_fault_plan_skip_defers_armed_charges():
+    """skip=k lets the first k crossings through unharmed, so a test can
+    target the (k+1)-th crossing of a nested site (e.g. the *commit*
+    crossing of CHECKPOINT_INSTALL)."""
+    from repro.serving import WAL_APPEND
+    plan = FaultPlan().arm(WAL_APPEND, times=1, skip=2)
+    plan.fire(WAL_APPEND)                        # skipped
+    plan.fire(WAL_APPEND)                        # skipped
+    with pytest.raises(InjectedFault):
+        plan.fire(WAL_APPEND)                    # the targeted crossing
+    plan.fire(WAL_APPEND)                        # charges consumed
+    assert plan.fired[WAL_APPEND] == 4 and plan.raised[WAL_APPEND] == 1
+    with pytest.raises(ValueError, match="skip must be"):
+        plan.arm(WAL_APPEND, skip=-1)
+
+
 # ---------------------------------------------------------------------------
 # Engine-call failures
 # ---------------------------------------------------------------------------

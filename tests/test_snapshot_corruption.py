@@ -7,6 +7,7 @@ deleted files, wrong-type MANIFEST fields, invalid JSON) and asserts both
 the error type and that the message points at what broke.
 """
 
+import hashlib
 import json
 import os
 
@@ -16,7 +17,8 @@ import numpy as np
 import pytest
 
 import repro.api
-from repro.api import IndexSpec, PlacementSpec, SnapshotFormatError
+from repro.api import (IndexSpec, PlacementSpec, SnapshotFormatError,
+                       SnapshotIntegrityError)
 from repro.core import derive_params
 from repro.streaming import StreamingDETLSH
 from tests.conftest import make_clustered
@@ -34,6 +36,17 @@ def _edit_manifest(snap, **fields):
     mpath = os.path.join(snap, "MANIFEST.json")
     manifest = json.load(open(mpath))
     manifest.update(fields)
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+
+
+def _redigest(snap, fname):
+    """Re-record ``fname``'s sha256 so only the *semantic* damage remains."""
+    digest = hashlib.sha256(
+        open(os.path.join(snap, fname), "rb").read()).hexdigest()
+    mpath = os.path.join(snap, "MANIFEST.json")
+    manifest = json.load(open(mpath))
+    manifest["digests"][fname] = f"sha256:{digest}"
     with open(mpath, "w") as f:
         json.dump(manifest, f)
 
@@ -140,7 +153,67 @@ def test_npz_with_missing_array_raises_format_error(corruptible):
     with np.load(fpath) as npz:
         arrays = {k: npz[k] for k in npz.files if k != "A"}
     np.savez(fpath, **arrays)
+    _redigest(corruptible, "arrays.npz")   # only the missing key remains
     with pytest.raises(SnapshotFormatError, match="'A' is missing"):
+        repro.api.load(corruptible)
+
+
+# ---------------------------------------------------------------------------
+# Digest verification (format_version 3)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("corruptible,fname", [
+    ("static_snap", "arrays.npz"),
+    ("streaming_snap", "common.npz"),
+    ("streaming_snap", "memtable.npz"),
+    ("pdet_snap", "shard_00000.npz"),
+], indirect=["corruptible"])
+def test_single_bit_flip_raises_integrity_error(corruptible, fname):
+    """One flipped bit anywhere in a payload file must be caught by the
+    sha256 digest — not slip through as silently wrong arrays."""
+    fpath = os.path.join(corruptible, fname)
+    blob = bytearray(open(fpath, "rb").read())
+    blob[len(blob) // 2] ^= 0x01
+    with open(fpath, "wb") as f:
+        f.write(bytes(blob))
+    with pytest.raises(SnapshotIntegrityError, match="sha256") as e:
+        repro.api.load(corruptible)
+    assert fname in str(e.value)                  # names the offending file
+    assert issubclass(SnapshotIntegrityError, SnapshotFormatError)
+
+
+@pytest.mark.parametrize("corruptible", ["streaming_snap"], indirect=True)
+def test_pre_digest_snapshot_loads_with_warning(corruptible):
+    """format_version <= 2 snapshots predate digests: they must keep
+    loading (compat), but with a warning nudging a re-save."""
+    mpath = os.path.join(corruptible, "MANIFEST.json")
+    manifest = json.load(open(mpath))
+    del manifest["digests"]
+    manifest["format_version"] = 2
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+    with pytest.warns(UserWarning, match="pre-digest"):
+        idx = repro.api.load(corruptible)
+    assert idx.n_points > 0
+
+
+@pytest.mark.parametrize("corruptible", ["static_snap"], indirect=True)
+def test_v3_without_digests_raises_format_error(corruptible):
+    """A version-3 manifest claiming digests but carrying none is damage,
+    not compat: refuse it."""
+    mpath = os.path.join(corruptible, "MANIFEST.json")
+    manifest = json.load(open(mpath))
+    del manifest["digests"]
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+    with pytest.raises(SnapshotFormatError, match="digests"):
+        repro.api.load(corruptible)
+
+
+@pytest.mark.parametrize("corruptible", ["static_snap"], indirect=True)
+def test_wrong_type_digests_raises_format_error(corruptible):
+    _edit_manifest(corruptible, digests=["not", "a", "dict"])
+    with pytest.raises(SnapshotFormatError, match="digests"):
         repro.api.load(corruptible)
 
 
